@@ -1,0 +1,81 @@
+"""Paper Fig. 3/8/9: OSSH validation — hit rate of calibration-predefined
+outlier channels against runtime outliers across fine-tuning iterations,
+non-uniform vs uniform budget allocation."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import outliers as OUT
+from repro.data.pipeline import Loader
+from repro.models import layers as LAY
+from repro.models import model as M
+from repro.models.config import TrainConfig
+from repro.train import calibrate as C
+from repro.train import steps as S
+
+
+def _hitrate(pre_idx: np.ndarray, live: np.ndarray, ratio: float = 20.0):
+    hits = total = 0
+    for layer in range(pre_idx.shape[0]):
+        st = live[layer]
+        runtime = np.nonzero(st > ratio * np.maximum(
+            np.median(st), 1e-8))[0]
+        total += len(runtime)
+        hits += len(set(runtime.tolist()) & set(pre_idx[layer].tolist()))
+    return (hits / total) if total else 1.0
+
+
+def run(steps: int = 12, uniform: bool = False) -> list:
+    dcfg = common.data_cfg()
+    budgets = ({k: 0.02 for k in OUT.DEFAULT_BUDGETS} if uniform else None)
+    cfg0 = common.micro_phi3("fp32")
+    if budgets:
+        cfg0 = dataclasses.replace(cfg0, quant=dataclasses.replace(
+            cfg0.quant, budgets=budgets))
+    frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg0)
+    from repro.data.pipeline import calibration_batches
+    stats = C.capture_stats(frozen, adapters, qstate, cfg0,
+                            calibration_batches(dcfg, 4))
+    fz, qs = C.convert(frozen, stats, cfg0, "quaff")
+    cfg = dataclasses.replace(cfg0, quant=dataclasses.replace(
+        cfg0.quant, mode="quaff"))
+
+    tcfg = TrainConfig(microbatches=1, remat=False, learning_rate=2e-3)
+    state = S.init_train_state(adapters, qs, tcfg)
+    step = jax.jit(S.build_train_step(cfg, tcfg))
+    loader = Loader(dcfg)
+
+    pre = {name: np.asarray(fz["blocks"]["ffn"][name]["w"].outlier_idx)
+           for name in ("down", "up")}
+    pre["wo"] = np.asarray(fz["blocks"]["attn"]["wo"]["w"].outlier_idx)
+
+    rows = []
+    for i in range(steps):
+        state, _ = step(fz, state, jax.tree.map(jnp.asarray, loader.batch(i)))
+        if i % 4 == 3:
+            with LAY.capture_stats():
+                _, live, _, _ = M.forward(
+                    fz, state.adapters, state.quant,
+                    jnp.asarray(loader.batch(1000 + i)["tokens"]), cfg)
+            hr_down = _hitrate(pre["down"], np.asarray(live["ffn"]["down"]))
+            hr_o = _hitrate(pre["wo"], np.asarray(live["attn"]["wo"]))
+            tag = "uniform" if uniform else "nonuniform"
+            rows.append((f"fig3_hitrate_{tag}_down_step{i}", 0.0,
+                         f"{hr_down:.3f}"))
+            rows.append((f"fig3_hitrate_{tag}_oproj_step{i}", 0.0,
+                         f"{hr_o:.3f}"))
+    return rows
+
+
+def main():
+    for r in run(uniform=False) + run(uniform=True):
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+
+
+if __name__ == "__main__":
+    main()

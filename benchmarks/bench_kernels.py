@@ -1,0 +1,57 @@
+"""Kernel-path timing + accuracy: Pallas (interpret) vs jnp oracle vs XLA
+fp32 GEMM. On CPU the interpret-mode timing is NOT a perf claim (the TPU
+roofline lives in EXPERIMENTS.md); accuracy parity is the deliverable."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.quaff_linear import prepare_quaff_weights, quaff_matmul
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list:
+    key = jax.random.PRNGKey(0)
+    t, k, n = 128, 512, 256
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (t, k)).at[:, 7].mul(90.0)
+    w = jax.random.normal(k2, (k, n)) * 0.05
+    idx = jnp.array([7, 100, 300], jnp.int32)
+    qw, st = prepare_quaff_weights(w, idx)
+    s = jnp.array([8.0, 1.0, 1.0])
+
+    us_core = _time(lambda: quaff_matmul(x, qw, s)[0])
+    us_kernel = _time(lambda: ops.quaff_forward_pallas(
+        x, qw, s, interpret=True, block_t=64, block_n=128, block_k=128)[0])
+    us_fp = _time(lambda: x @ w)
+
+    y_k, _ = ops.quaff_forward_pallas(x, qw, s, interpret=True,
+                                      block_t=64, block_n=128, block_k=128)
+    y_c, _ = quaff_matmul(x, qw, s)
+    max_diff = float(jnp.max(jnp.abs(y_k - y_c)))
+    return [
+        ("kernel_quaff_core_jnp", us_core, "oracle"),
+        ("kernel_quaff_pallas_interpret", us_kernel,
+         f"max_diff_vs_core={max_diff:.2e}"),
+        ("kernel_fp32_gemm", us_fp, "reference"),
+    ]
+
+
+def main():
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+
+
+if __name__ == "__main__":
+    main()

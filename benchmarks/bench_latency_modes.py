@@ -1,0 +1,33 @@
+"""Paper Tab. 1/2 + Fig. 4: per-step latency, parameter memory footprint and
+task metrics for every WAQ mode under LoRA fine-tuning (CPU micro-scale
+stand-in for Phi3-3.8B; ordering is what reproduces — Smooth_D and LLM.int8
+pay per-step weight handling, Quaff doesn't)."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(steps: int = 8) -> list:
+    dcfg = common.data_cfg()
+    rows = []
+    for mode in common.MODES:
+        cfg, frozen, adapters, qstate = common.build_mode_model(mode, "lora",
+                                                                dcfg)
+        us, losses, state = common.timed_train(cfg, frozen, adapters, qstate,
+                                               dcfg, steps=steps)
+        metrics = common.eval_model(cfg, frozen, state.adapters, state.quant,
+                                    dcfg)
+        mem = common.param_footprint_bytes(frozen) / 1e6
+        rows.append((f"tab1_latency_{mode}", us,
+                     f"mem_mb={mem:.2f};loss={metrics['loss']:.4f};"
+                     f"ppl={metrics['ppl']:.3f};acc={metrics['acc']:.4f}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+
+
+if __name__ == "__main__":
+    main()

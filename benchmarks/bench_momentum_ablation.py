@@ -1,0 +1,35 @@
+"""Paper Tab. 3: Quaff vs Quaff-without-momentum (gamma such that s stays at
+its initial value vs Eq. 7 updates) across PEFT strategies."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks import common
+from repro.models.config import TrainConfig
+
+
+def run(steps: int = 10) -> list:
+    dcfg = common.data_cfg()
+    rows = []
+    for peft in ("lora", "prompt", "ptuning", "ia3"):
+        for variant, gamma in (("quaff", 0.2), ("quaff_no_momentum", 1.0)):
+            cfg, frozen, adapters, qstate = common.build_mode_model(
+                "quaff", peft, dcfg)
+            cfg = dataclasses.replace(cfg, quant=dataclasses.replace(
+                cfg.quant, gamma=gamma))
+            us, losses, state = common.timed_train(
+                cfg, frozen, adapters, qstate, dcfg, steps=steps, lr=2e-3)
+            m = common.eval_model(cfg, frozen, state.adapters, state.quant,
+                                  dcfg)
+            rows.append((f"tab3_{variant}_{peft}", us,
+                         f"loss={m['loss']:.4f};acc={m['acc']:.4f}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+
+
+if __name__ == "__main__":
+    main()

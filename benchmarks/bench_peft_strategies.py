@@ -1,0 +1,30 @@
+"""Paper Fig. 5: accuracy + fine-tuning cost across PEFT strategies
+(LoRA / Prompt / P-tuning / IA3) x quant modes on the synthetic task."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(steps: int = 10) -> list:
+    dcfg = common.data_cfg()
+    rows = []
+    for peft in ("lora", "prompt", "ptuning", "ia3"):
+        for mode in ("fp32", "naive", "smooth_static", "quaff"):
+            cfg, frozen, adapters, qstate = common.build_mode_model(
+                mode, peft, dcfg)
+            us, losses, state = common.timed_train(
+                cfg, frozen, adapters, qstate, dcfg, steps=steps, lr=2e-3)
+            m = common.eval_model(cfg, frozen, state.adapters, state.quant,
+                                  dcfg)
+            rows.append((f"fig5_{peft}_{mode}", us,
+                         f"loss={m['loss']:.4f};acc={m['acc']:.4f}"))
+    return rows
+
+
+def main():
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Shared benchmark scaffolding: micro model builders (CPU-scale stand-ins
+for Phi3-3.8B — the paper's default), per-mode conversion via the real
+calibration pipeline, timed step loops, CSV emission."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.peft import PEFTConfig
+from repro.data.pipeline import DataConfig, Loader, calibration_batches
+from repro.models import model as M
+from repro.models.config import ModelConfig, QuantConfig, TrainConfig
+from repro.train import calibrate as C
+from repro.train import steps as S
+
+MODES = ["fp32", "llm_int8", "smooth_dynamic", "naive", "smooth_static",
+         "quaff"]
+
+
+def micro_phi3(mode: str = "fp32", peft: str = "lora") -> ModelConfig:
+    """Phi3-family reduced config (dense, MHA kv==heads, SwiGLU)."""
+    return ModelConfig(
+        name="phi3-micro", family="dense", n_layers=4, d_model=128,
+        n_heads=8, n_kv_heads=8, d_ff=256, vocab_size=512, head_dim=16,
+        quant=QuantConfig(mode=mode),
+        peft=PEFTConfig(method=peft, lora_rank=16, lora_alpha=16.0))
+
+
+def data_cfg(batch=8, seq=64, vocab=512, noise=0.1, seed=1234) -> DataConfig:
+    return DataConfig(vocab_size=vocab, seq_len=seq, batch_size=batch,
+                      noise=noise, seed=seed)
+
+
+def build_mode_model(mode: str, peft: str = "lora", dcfg: Optional[DataConfig]
+                     = None, calib_batches: int = 4, seed: int = 0):
+    """FP32-init + real calibration + conversion to ``mode``.
+    Returns (cfg, frozen, adapters, quant_state)."""
+    dcfg = dcfg or data_cfg()
+    cfg0 = micro_phi3("fp32", peft)
+    frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(seed), cfg0)
+    if mode == "fp32":
+        return cfg0, frozen, adapters, qstate
+    stats = C.capture_stats(frozen, adapters, qstate, cfg0,
+                            calibration_batches(dcfg, calib_batches))
+    fz, qs = C.convert(frozen, stats, cfg0, mode)
+    cfg = dataclasses.replace(cfg0, quant=dataclasses.replace(
+        cfg0.quant, mode=mode))
+    return cfg, fz, adapters, qs
+
+
+def timed_train(cfg, frozen, adapters, qstate, dcfg: DataConfig,
+                steps: int = 10, warmup: int = 2, lr: float = 2e-4,
+                tcfg: Optional[TrainConfig] = None):
+    """Returns (us_per_step, losses, final_state)."""
+    tcfg = tcfg or TrainConfig(microbatches=1, remat=False, learning_rate=lr)
+    state = S.init_train_state(adapters, qstate, tcfg)
+    step = jax.jit(S.build_train_step(cfg, tcfg))
+    loader = Loader(dcfg)
+    losses: List[float] = []
+    t0 = None
+    for i in range(steps + warmup):
+        batch = jax.tree.map(jnp.asarray, loader.batch(i))
+        state, metrics = step(frozen, state, batch)
+        losses.append(float(metrics["loss"]))
+        if i + 1 == warmup:
+            jax.block_until_ready(metrics["loss"])
+            t0 = time.perf_counter()
+    jax.block_until_ready(metrics["loss"])
+    us = (time.perf_counter() - t0) / steps * 1e6
+    return us, losses[warmup:], state
+
+
+def eval_model(cfg, frozen, adapters, qstate, dcfg: DataConfig,
+               n_batches: int = 4) -> Dict[str, float]:
+    ev = jax.jit(S.build_eval_step(cfg))
+    loader = Loader(dataclasses.replace(dcfg, seed=dcfg.seed + 555))
+    out = {"loss": 0.0, "ppl": 0.0, "acc": 0.0}
+    for i in range(n_batches):
+        m = ev(frozen, adapters, qstate, jax.tree.map(jnp.asarray,
+                                                      loader.batch(i)))
+        for k in out:
+            out[k] += float(m[k]) / n_batches
+    return out
+
+
+def param_footprint_bytes(frozen) -> int:
+    return sum(np.asarray(l).nbytes for l in jax.tree.leaves(frozen))
+
+
+def emit(rows: List[Tuple]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,112 @@
+"""Regenerates the data tables in EXPERIMENTS.md from experiments/dryrun/*
+artifacts. The prose sections (§Perf narrative) live in EXPERIMENTS.md and
+are not touched — this emits markdown to stdout for the table sections.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_md > experiments/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+from benchmarks.roofline import DRYRUN_DIR, terms
+
+
+def load(pattern):
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}TB"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}GB"
+    return f"{b/1e6:.1f}MB"
+
+
+def dryrun_table(cells):
+    print("| arch | shape | mesh | mb | args/dev | temp/dev | int8 GEMM FLOPs "
+          "| fp GEMM FLOPs | collectives (AG/AR/RS/A2A/CP) | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in cells:
+        h = r["hlo"]
+        cb = h["collective_bytes"]
+        coll = "/".join(fmt_bytes(cb.get(k, 0)) for k in
+                        ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {r['microbatches']} "
+              f"| {fmt_bytes(r['memory']['argument_bytes'])} "
+              f"| {fmt_bytes(r['memory']['temp_bytes'])} "
+              f"| {h['dot_flops_int8']:.2e} | {h['dot_flops_float']:.2e} "
+              f"| {coll} | {r['compile_s']:.0f} |")
+
+
+def roofline_table(cells):
+    print("| arch | shape | compute s | memory s (model/upper) | collective s "
+          "| dominant | MODEL/HLO flops | roofline frac | bottleneck lever |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    levers = {
+        ("compute",): "int8-ify remaining fp GEMMs (logits), remat=dots",
+        ("memory",): "larger microbatches / fused epilogues / bf16 logits",
+        ("collective",): "int8 payloads (FSDP gather, EP a2a, bwd dx)",
+    }
+    for r in cells:
+        t = terms(r)
+        lever = levers.get((t["dominant"],), "")
+        print(f"| {t['arch']} | {t['shape']} | {t['compute_s']:.3f} "
+              f"| {t['memory_s']:.3f} / {t['memory_upper_s']:.3f} "
+              f"| {t['collective_s']:.3f} | **{t['dominant']}** "
+              f"| {t['useful_ratio']:.3f} | {t['roofline_frac']:.3f} "
+              f"| {lever} |")
+
+
+def variant_table(arch, shape):
+    cells = [r for r in load(f"{arch}__{shape}__1pod*.json")]
+    if not cells:
+        return
+    print(f"\n#### {arch} x {shape} variants\n")
+    print("| variant | compute s | memory s | collective s | dominant | "
+          "frac | Δ dominant vs baseline |")
+    print("|---|---|---|---|---|---|---|")
+    base = None
+    for r in cells:
+        t = terms(r)
+        v = r.get("variant", "baseline")
+        dom_val = {"compute": t["compute_s"], "memory": t["memory_s"],
+                   "collective": t["collective_s"]}[t["dominant"]]
+        if v == "baseline":
+            base = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        delta = f"{(1 - bound/base)*100:+.1f}%" if base else "—"
+        print(f"| {v} | {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+              f"| {t['collective_s']:.3f} | {t['dominant']} "
+              f"| {t['roofline_frac']:.3f} | {delta} |")
+
+
+def main():
+    base_1pod = [r for r in load("*__1pod.json")]
+    base_2pod = [r for r in load("*__2pod.json")]
+    print(f"## §Dry-run ({len(base_1pod)} cells x 16x16, "
+          f"{len(base_2pod)} cells x 2x16x16 — all compiled)\n")
+    print("### Single-pod (16x16 = 256 chips)\n")
+    dryrun_table(base_1pod)
+    print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+    dryrun_table(base_2pod)
+    print("\n## §Roofline (single-pod, per-device terms)\n")
+    roofline_table(base_1pod)
+    print("\n## §Perf variant measurements\n")
+    for arch, shape in (("qwen2-7b", "train_4k"),
+                        ("kimi-k2-1t-a32b", "train_4k"),
+                        ("qwen2-7b", "decode_32k")):
+        variant_table(arch, shape)
+
+
+if __name__ == "__main__":
+    main()

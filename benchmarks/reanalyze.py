@@ -1,0 +1,36 @@
+"""Re-run the HLO analysis over saved .hlo.zst artifacts (no recompilation)
+and update the JSON records in place. Used when launch/hloparse.py improves."""
+import glob
+import json
+import os
+import sys
+
+import zstandard
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.launch import hloparse  # noqa: E402
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def main():
+    for jpath in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        hpath = jpath.replace(".json", ".hlo.zst")
+        if not os.path.exists(hpath):
+            print(f"skip (no hlo): {os.path.basename(jpath)}")
+            continue
+        txt = zstandard.ZstdDecompressor().decompress(
+            open(hpath, "rb").read(), max_output_size=2 ** 32).decode()
+        s = hloparse.analyze(txt)
+        with open(jpath) as f:
+            rec = json.load(f)
+        rec["hlo"] = s.to_json()
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"reanalyzed {os.path.basename(jpath)}: "
+              f"int8={s.dot_flops_int8:.2e} fp={s.dot_flops_float:.2e}")
+
+
+if __name__ == "__main__":
+    main()

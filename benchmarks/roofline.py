@@ -1,0 +1,88 @@
+"""Roofline table generator (EXPERIMENTS.md §Roofline): reads the dry-run
+JSONs and derives the three terms per (arch x shape x mesh) cell.
+
+  compute   = int8_flops/394T + float_flops/197T   (per device, s)
+  memory    = hbm_bytes / 819 GB/s                 (per device, s)
+  collective= collective_bytes / (4 links x 50 GB/s)
+
+Hardware: TPU v5e — 197 TFLOP/s bf16 per chip (int8 MXU at 2x = 394 TOPS),
+819 GB/s HBM, ~50 GB/s/link ICI with 4 links usable per chip for the 2D
+torus (conservative; per-axis collectives use 2).
+
+MODEL_FLOPS = 6*N_active*D analog computed from the architecture itself
+(launch/specs.model_flops_per_token); the ratio MODEL_FLOPS / HLO_dot_FLOPs
+flags remat/redundant compute (ratio < 1) or undercounting (> 1).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_BF16 = 197e12
+PEAK_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 4 * 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells(pattern: str = "*.json") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def terms(rec: Dict) -> Dict:
+    hlo = rec["hlo"]
+    compute = (hlo["dot_flops_int8"] / PEAK_INT8
+               + hlo["dot_flops_float"] / PEAK_BF16)
+    # TPU-fusion-aware memory model (see launch/hloparse.py); the raw
+    # CPU-fusion-boundary figure is reported as memory_upper_s.
+    memory = hlo.get("hbm_bytes_model", hlo["hbm_bytes"]) / HBM_BW
+    memory_upper = hlo["hbm_bytes"] / HBM_BW
+    coll = sum(hlo["collective_bytes"].values()) / ICI_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", coll), key=lambda kv: kv[1])
+    total_hlo_flops = hlo["dot_flops_int8"] + hlo["dot_flops_float"]
+    model_flops = rec.get(
+        "model_flops_per_step",
+        rec["model_flops_per_token"] * rec["tokens_per_step"])
+    n_dev = rec["n_devices"]
+    bound = max(compute, memory, coll)
+    mfu = (model_flops / n_dev / PEAK_BF16) / bound if bound else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute, "memory_s": memory, "collective_s": coll,
+        "memory_upper_s": memory_upper,
+        "dominant": dominant[0],
+        "useful_ratio": (model_flops / n_dev) / max(total_hlo_flops, 1.0),
+        "roofline_frac": min(1.0, mfu),
+        "mem_gb": (rec["memory"]["argument_bytes"]
+                   + rec["memory"]["temp_bytes"]) / 1e9,
+        "mb": rec.get("microbatches", 1),
+    }
+
+
+def main() -> None:
+    rows = [terms(r) for r in load_cells()]
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    print("name,us_per_call,derived")
+    for r in rows:
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        print(f"{name},{us:.1f},"
+              f"dom={r['dominant']};frac={r['roofline_frac']:.3f};"
+              f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+              f"coll_s={r['collective_s']:.4f};"
+              f"mem_upper_s={r['memory_upper_s']:.4f};"
+              f"useful={r['useful_ratio']:.3f};"
+              f"mem_gb={r['mem_gb']:.1f};mb={r['mb']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV rows (per the assignment contract).
+
+  bench_quant_error          Fig. 2(c)  static vs momentum scaling error
+  bench_hitrate              Fig. 3/8/9 OSSH hit-rate, budget allocation
+  bench_latency_modes        Tab. 1/2 + Fig. 4  latency/memory/metrics per mode
+  bench_momentum_ablation    Tab. 3     momentum on/off x PEFT
+  bench_budget               Tab. 7     outlier budget sweep
+  bench_peft_strategies      Fig. 5     PEFT x mode
+  bench_convergence          Fig. 6     steps-to-loss
+  bench_calibration_transfer Tab. 5     cross-domain calibration
+  bench_kernels              kernel parity/timing
+  roofline                   §Roofline  (from dry-run artifacts, if present)
+"""
+import io
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.bench_quant_error",
+    "benchmarks.bench_budget",
+    "benchmarks.bench_kernels",
+    "benchmarks.bench_latency_modes",
+    "benchmarks.bench_convergence",
+    "benchmarks.bench_momentum_ablation",
+    "benchmarks.bench_peft_strategies",
+    "benchmarks.bench_hitrate",
+    "benchmarks.bench_calibration_transfer",
+    "benchmarks.roofline",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for modname in MODULES:
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            buf = io.StringIO()
+            stdout = sys.stdout
+            sys.stdout = buf
+            try:
+                mod.main()
+            finally:
+                sys.stdout = stdout
+            for line in buf.getvalue().splitlines():
+                if line and not line.startswith("name,"):
+                    print(line, flush=True)
+        except Exception:
+            print(f"{modname},0.0,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""End-to-end driver: Quaff LoRA fine-tuning of a ~100M-parameter dense LM
+for a few hundred steps, with calibration, checkpointing, crash-resume and
+a baseline comparison (quaff vs naive WAQ) at the end.
+
+    PYTHONPATH=src python examples/finetune_100m.py [--steps 200]
+
+~100M params: 12L x d_model 768 x d_ff 2048, vocab 8192 -> 98.7M.
+On the CPU container this takes a few minutes; the identical code drives
+the production configs via repro.launch.train.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.peft import PEFTConfig
+from repro.data.pipeline import DataConfig, Loader, SyntheticLM, calibration_batches
+from repro.models import model as M
+from repro.models.config import ModelConfig, QuantConfig, TrainConfig
+from repro.train import calibrate, steps
+
+
+def build(mode: str):
+    cfg = ModelConfig(
+        name="lm-100m", family="dense", n_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=4, d_ff=2048, vocab_size=8192, head_dim=64,
+        quant=QuantConfig(mode="fp32"),
+        peft=PEFTConfig(method="lora", lora_rank=16))
+    data = DataConfig(vocab_size=8192, seq_len=128, batch_size=8, noise=0.05)
+    frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(frozen))
+    print(f"[{mode}] base model: {n_params/1e6:.1f}M params (frozen)")
+    if mode != "fp32":
+        stats = calibrate.capture_stats(frozen, adapters, qstate, cfg,
+                                        calibration_batches(data, 2))
+        frozen, qstate = calibrate.convert(frozen, stats, cfg, mode)
+        cfg = dataclasses.replace(cfg, quant=dataclasses.replace(
+            cfg.quant, mode=mode))
+    return cfg, frozen, adapters, qstate, data
+
+
+def train(mode: str, n_steps: int, ckpt_dir: str):
+    cfg, frozen, adapters, qstate, data = build(mode)
+    tcfg = TrainConfig(learning_rate=2e-3, microbatches=2, remat=True)
+    state = steps.init_train_state(adapters, qstate, tcfg)
+    mgr = CheckpointManager(f"{ckpt_dir}/{mode}", keep=2)
+    start = 0
+    if mgr.latest_step() is not None:
+        state, meta = mgr.restore(state)
+        start = meta["step"]
+        print(f"[{mode}] resumed from step {start}")
+    step_fn = jax.jit(steps.build_train_step(cfg, tcfg))
+    loader = Loader(data)
+    t0 = time.perf_counter()
+    losses = []
+    for i in range(start, n_steps):
+        state, metrics = step_fn(frozen, state,
+                                 jax.tree.map(jnp.asarray, loader.batch(i)))
+        losses.append(float(metrics["loss"]))
+        if i % 20 == 0:
+            print(f"[{mode}] step {i:4d} loss {losses[-1]:.4f} "
+                  f"({(time.perf_counter()-t0)/(i-start+1)*1e3:.0f} ms/step)")
+        if (i + 1) % 50 == 0:
+            mgr.save(i + 1, state)
+    mgr.save(n_steps, state)
+    mgr.wait()
+    ev = jax.jit(steps.build_eval_step(cfg))
+    m = ev(frozen, state.adapters, state.quant,
+           jax.tree.map(jnp.asarray, loader.batch(10_000)))
+    floor = SyntheticLM(data).entropy_floor()
+    print(f"[{mode}] final loss {float(m['loss']):.4f} "
+          f"(entropy floor {floor:.4f})  ppl {float(m['ppl']):.2f}  "
+          f"acc {float(m['acc']):.3f}")
+    return float(m["loss"])
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="checkpoints/finetune_100m")
+    ap.add_argument("--modes", default="quaff,naive")
+    args = ap.parse_args()
+    results = {}
+    for mode in args.modes.split(","):
+        results[mode] = train(mode, args.steps, args.ckpt_dir)
+    print("\nsummary:", {k: round(v, 4) for k, v in results.items()})

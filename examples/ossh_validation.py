@@ -1,0 +1,14 @@
+"""OSSH validation experiment (paper Fig. 3): measure the hit rate of
+calibration-predefined outlier channels against runtime outliers across
+fine-tuning iterations, with the paper's non-uniform budget allocation.
+
+    PYTHONPATH=src python examples/ossh_validation.py
+"""
+from benchmarks import bench_hitrate
+
+print("OSSH hit-rate during fine-tuning (non-uniform per-layer budgets)")
+for name, _, val in bench_hitrate.run(steps=12, uniform=False):
+    print(f"  {name}: {val}")
+print("uniform budgets (paper Fig. 9 — expected to be worse on volatile layers)")
+for name, _, val in bench_hitrate.run(steps=12, uniform=True):
+    print(f"  {name}: {val}")

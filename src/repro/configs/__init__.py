@@ -1,0 +1,32 @@
+"""Config registry: get_config("<arch-id>") for every assigned architecture
+(+ phi3, the paper's own model). IDs match the assignment table."""
+from importlib import import_module
+from typing import Dict, List
+
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig  # noqa: F401
+
+_MODULES: Dict[str, str] = {
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "qwen1.5-110b": "repro.configs.qwen15_110b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1_1b",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+    "xlstm-350m": "repro.configs.xlstm_350m",
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "phi3-3.8b": "repro.configs.phi3_3_8b",
+}
+
+ASSIGNED: List[str] = [k for k in _MODULES if k != "phi3-3.8b"]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_MODULES)}")
+    return import_module(_MODULES[name]).get_config()
+
+
+def list_archs() -> List[str]:
+    return list(_MODULES)

@@ -1,0 +1,16 @@
+"""gemma3-27b — 5:1 local:global sliding window, 128k context
+[hf:google/gemma-3-1b-pt; unverified]: 62L d_model=5376 32H (GQA kv=16)
+d_ff=21504 vocab=262144. head_dim=128 per the gemma3 release (q_dim 4096 !=
+d_model; our attention supports rectangular projections)."""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-27b", family="dense",
+        n_layers=62, d_model=5376, n_heads=32, n_kv_heads=16, head_dim=128,
+        d_ff=21504, vocab_size=262144,
+        sliding_window=1024, global_every=6,
+        act_dtype="bfloat16", param_dtype="bfloat16",
+        source="hf:google/gemma-3-1b-pt; unverified",
+    )

@@ -1,0 +1,18 @@
+"""kimi-k2-1t-a32b — Kimi K2 trillion-param MoE (paper-table)
+[arXiv:2501.kimi2; unverified]: 61L d_model=7168 64H (GQA kv=8) d_ff=2048
+vocab=163840, MoE 384 experts top-8.
+
+Simplifications vs the real release (documented in DESIGN.md): no first
+dense layer / shared expert; head_dim = d_model/heads = 112."""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b", family="moe",
+        n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8,
+        d_ff=2048, vocab_size=163840,
+        n_experts=384, top_k=8, capacity_factor=1.25,
+        act_dtype="bfloat16", param_dtype="bfloat16",
+        source="arXiv:2501.kimi2; unverified",
+    )

@@ -1,0 +1,14 @@
+"""olmoe-1b-7b — 64 experts top-8 [arXiv:2409.02060; hf]:
+16L d_model=2048 16H (GQA kv=16) d_ff=1024 vocab=50304, MoE 64e top-8."""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b", family="moe",
+        n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+        d_ff=1024, vocab_size=50304,
+        n_experts=64, top_k=8, capacity_factor=1.25,
+        act_dtype="bfloat16", param_dtype="bfloat16",
+        source="arXiv:2409.02060; hf",
+    )

@@ -1,0 +1,14 @@
+"""phi3-3.8b-mini — the paper's default model (Abdin et al., 2024):
+32L d_model=3072 32H (GQA kv=32) d_ff=8192 vocab=32064. Used by the paper
+benchmarks (Tables 1-4, Figs 3-7); not part of the assigned 10-arch pool."""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-3.8b", family="dense",
+        n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32,
+        d_ff=8192, vocab_size=32064,
+        act_dtype="bfloat16", param_dtype="bfloat16",
+        source="arXiv:2404.14219",
+    )

@@ -1,0 +1,16 @@
+"""pixtral-12b — pixtral-ViT + mistral-nemo backbone
+[hf:mistralai/Pixtral-12B-2409; unverified]: 40L d_model=5120 32H (GQA kv=8)
+d_ff=14336 vocab=131072. The ViT frontend is a STUB per the assignment:
+input_specs provides precomputed patch embeddings (B, n_image_tokens, D)
+prepended to the text stream. head_dim=128 per the Nemo release."""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="pixtral-12b", family="vlm",
+        n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, head_dim=128,
+        d_ff=14336, vocab_size=131072, n_image_tokens=256,
+        act_dtype="bfloat16", param_dtype="bfloat16",
+        source="hf:mistralai/Pixtral-12B-2409; unverified",
+    )

@@ -1,0 +1,13 @@
+"""qwen1.5-110b — dense, QKV bias [hf:Qwen/Qwen1.5-0.5B; hf]:
+80L d_model=8192 64H (GQA kv=8) d_ff=49152 vocab=152064."""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-110b", family="dense",
+        n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+        d_ff=49152, vocab_size=152064, qkv_bias=True,
+        act_dtype="bfloat16", param_dtype="bfloat16",
+        source="hf:Qwen/Qwen1.5-0.5B; hf",
+    )

@@ -1,0 +1,19 @@
+"""whisper-large-v3 — enc-dec, conv frontend stub [arXiv:2212.04356;
+unverified]: 32L(dec)+32L(enc) d_model=1280 20H d_ff=5120 vocab=51866.
+Frames arrive as precomputed embeddings (B, 1500, D) per the assignment.
+GELU FFN, sinusoidal positions (no RoPE). Decode shapes exercise the
+decoder serve_step; 32k decoder positions exceed Whisper's 448 cap but the
+backbone supports them architecturally (DESIGN.md)."""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3", family="encdec",
+        n_layers=32, n_encoder_layers=32, encoder_seq=1500,
+        d_model=1280, n_heads=20, n_kv_heads=20,
+        d_ff=5120, vocab_size=51866,
+        use_rope=False, ffn_type="gelu",
+        act_dtype="bfloat16", param_dtype="bfloat16",
+        source="arXiv:2212.04356; unverified",
+    )

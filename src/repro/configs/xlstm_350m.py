@@ -1,0 +1,14 @@
+"""xlstm-350m — sLSTM + mLSTM blocks [arXiv:2405.04517; unverified]:
+24L d_model=1024 4H d_ff=0 vocab=50304. 7:1 mLSTM:sLSTM ratio
+(slstm_every=8 -> 3 stages of 7 mLSTM + 1 sLSTM)."""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-350m", family="ssm",
+        n_layers=24, d_model=1024, n_heads=4, n_kv_heads=4,
+        d_ff=0, vocab_size=50304, slstm_every=8,
+        act_dtype="bfloat16", param_dtype="bfloat16",
+        source="arXiv:2405.04517; unverified",
+    )

@@ -1,0 +1,17 @@
+"""zamba2-1.2b — Mamba2 + shared attention blocks [arXiv:2411.15242; hf]:
+38L(blocks) d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=32000 ssm_state=64.
+Layout: 5 stages x (6 mamba2 + 1 SHARED attn) + 3 trailing mamba = 38.
+d_inner=4096, ssm head_dim 64 (64 SSM heads). The Zamba concat-reproject
+after shared attn is simplified to a residual add (DESIGN.md)."""
+from repro.models.config import ModelConfig
+
+
+def get_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-1.2b", family="hybrid",
+        n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32,
+        d_ff=8192, vocab_size=32000,
+        ssm_state=64, d_inner=4096, ssm_head_dim=64, attn_every=6,
+        act_dtype="bfloat16", param_dtype="bfloat16",
+        source="arXiv:2411.15242; hf",
+    )

@@ -1,0 +1,9 @@
+"""Quaff core: quantization primitives, outlier identification, momentum
+scaling, the decoupled Quaff linear, WAQ baselines, and PEFT adapters."""
+from repro.core.baselines import QuantMode, qlinear, prepare  # noqa: F401
+from repro.core.quaff_linear import (  # noqa: F401
+    QuaffWeights,
+    prepare_quaff_weights,
+    quaff_matmul,
+)
+from repro.core.scaling import ScaleState, momentum_update  # noqa: F401

@@ -1,0 +1,170 @@
+"""WAQ baselines the paper compares against (§4.1, App. A), all behind one
+``QuantMode`` dispatcher so every model in the zoo can run every mode.
+
+  fp32            : plain fp GEMM (paper's FP32 row).
+  naive           : per-token / per-OC INT8 WAQ, Eq. 2.
+  llm_int8        : LLM.int8 mixed-precision decomposition (Eq. 10). Runtime
+                    outlier columns (|x| > threshold) are computed in fp
+                    against the RETAINED fp weights; the rest in INT8. The fp
+                    weight residency is the point — it is the memory cost the
+                    paper measures. XLA needs static shapes, so the split is a
+                    mask, not a gather (faithful cost, identical math).
+  smooth_static   : SmoothQuant with calibration-fixed s on ALL channels; W is
+                    pre-scaled+quantized once. Cheap but drifts (Fig. 11).
+  smooth_dynamic  : s recomputed from live activations each call; forces a
+                    per-step rescale + requantize of the FP weights (Eq. 3) —
+                    the coupling bottleneck Quaff removes.
+  quaff           : the paper's method (core/quaff_linear.py).
+"""
+from __future__ import annotations
+
+import enum
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.quaff_linear import QuaffWeights, quaff_matmul
+
+
+class QuantMode(str, enum.Enum):
+    FP32 = "fp32"
+    NAIVE = "naive"
+    LLM_INT8 = "llm_int8"
+    SMOOTH_STATIC = "smooth_static"
+    SMOOTH_DYNAMIC = "smooth_dynamic"
+    QUAFF = "quaff"
+
+
+class FPWeights(NamedTuple):
+    w: jnp.ndarray
+    bias: Optional[jnp.ndarray] = None
+
+
+class NaiveWeights(NamedTuple):
+    w_int: jnp.ndarray
+    w_delta: jnp.ndarray
+    bias: Optional[jnp.ndarray] = None
+
+
+class LLMInt8Weights(NamedTuple):
+    w_int: jnp.ndarray
+    w_delta: jnp.ndarray
+    w_fp: jnp.ndarray              # full fp weights retained (the memory cost)
+    bias: Optional[jnp.ndarray] = None
+
+
+class SmoothStaticWeights(NamedTuple):
+    w_int: jnp.ndarray             # Q(s * W), pre-scaled at calibration
+    w_delta: jnp.ndarray
+    s_inv: jnp.ndarray             # (c_in,) 1/s from calibration
+    bias: Optional[jnp.ndarray] = None
+
+
+class SmoothDynamicWeights(NamedTuple):
+    w_fp: jnp.ndarray              # fp weights retained for per-step rescale
+    w_absmax: jnp.ndarray          # (c_in,) max|W_i| (precomputed)
+    bias: Optional[jnp.ndarray] = None
+
+
+LLM_INT8_THRESHOLD = 6.0  # paper App. A sigma
+SMOOTH_ALPHA = 0.5        # SmoothQuant migration strength
+
+
+def prepare(mode: QuantMode, w, bias=None, *, calib_absmax=None, bits: int = 8):
+    """Build the per-mode frozen weight pytree from fp W (c_in, c_out).
+
+    calib_absmax: (c_in,) calibration-time max|X_i| (smooth_static needs it).
+    """
+    if mode == QuantMode.FP32:
+        return FPWeights(w, bias)
+    if mode == QuantMode.NAIVE:
+        w_int, w_delta = quant.quantize(w, axis=0, bits=bits)
+        return NaiveWeights(w_int, w_delta, bias)
+    if mode == QuantMode.LLM_INT8:
+        w_int, w_delta = quant.quantize(w, axis=0, bits=bits)
+        return LLMInt8Weights(w_int, w_delta, w, bias)
+    if mode == QuantMode.SMOOTH_STATIC:
+        assert calib_absmax is not None, "smooth_static needs calibration stats"
+        w_absmax = jnp.maximum(jnp.max(jnp.abs(w), axis=1), 1e-8)
+        s = jnp.maximum(
+            (calib_absmax ** SMOOTH_ALPHA) / (w_absmax ** (1 - SMOOTH_ALPHA)), 1e-4
+        )
+        w_int, w_delta = quant.quantize(s[:, None] * w, axis=0, bits=bits)
+        return SmoothStaticWeights(w_int, w_delta, 1.0 / s, bias)
+    if mode == QuantMode.SMOOTH_DYNAMIC:
+        w_absmax = jnp.maximum(jnp.max(jnp.abs(w), axis=1), 1e-8)
+        return SmoothDynamicWeights(w, w_absmax, bias)
+    raise ValueError(f"prepare() does not handle {mode}; use prepare_quaff_weights")
+
+
+def _add_bias(y, bias, dtype):
+    return y if bias is None else y + bias.astype(dtype)
+
+
+def fp32_linear(x, wts: FPWeights):
+    y = x @ wts.w.astype(x.dtype)
+    return _add_bias(y, wts.bias, x.dtype)
+
+
+def naive_linear(x, wts: NaiveWeights, bits: int = 8):
+    y = quant.quantized_matmul(x, wts.w_int, wts.w_delta, bits)
+    return _add_bias(y, wts.bias, x.dtype)
+
+
+def llm_int8_linear(x, wts: LLMInt8Weights, bits: int = 8,
+                    threshold: float = LLM_INT8_THRESHOLD):
+    x2d = x.reshape((-1, x.shape[-1]))
+    col_max = jnp.max(jnp.abs(jax.lax.stop_gradient(x2d)), axis=0)  # (c_in,)
+    is_out = (col_max > threshold).astype(x.dtype)                  # dynamic O
+    x_in = x2d * (1.0 - is_out)[None, :]
+    x_out = x2d * is_out[None, :]
+    y_q = quant.quantized_matmul(x_in, wts.w_int, wts.w_delta, bits)
+    y_fp = x_out @ wts.w_fp.astype(x.dtype)   # fp path, needs resident fp W
+    y = (y_q + y_fp).reshape(x.shape[:-1] + (wts.w_int.shape[-1],))
+    return _add_bias(y, wts.bias, x.dtype)
+
+
+def smooth_static_linear(x, wts: SmoothStaticWeights, bits: int = 8):
+    x_hat = x * wts.s_inv.astype(x.dtype)[None, :]
+    y = quant.quantized_matmul(x_hat, wts.w_int, wts.w_delta, bits)
+    return _add_bias(y, wts.bias, x.dtype)
+
+
+def smooth_dynamic_linear(x, wts: SmoothDynamicWeights, bits: int = 8):
+    """Per-call: s from live stats, rescale + requantize W (the cost), then
+    INT8 GEMM. Requantization is inside the step = the paper's Smooth_D row."""
+    x2d = x.reshape((-1, x.shape[-1]))
+    x_absmax = jnp.maximum(
+        jnp.max(jnp.abs(jax.lax.stop_gradient(x2d)), axis=0), 1e-8
+    )
+    s = jnp.maximum(
+        (x_absmax ** SMOOTH_ALPHA) / (wts.w_absmax ** (1 - SMOOTH_ALPHA)), 1e-4
+    )
+    w_int, w_delta = quant.quantize(s[:, None] * wts.w_fp, axis=0, bits=bits)
+    x_hat = x2d * (1.0 / s).astype(x.dtype)[None, :]
+    y = quant.quantized_matmul(x_hat, w_int, w_delta, bits)
+    y = y.reshape(x.shape[:-1] + (wts.w_fp.shape[-1],))
+    return _add_bias(y, wts.bias, x.dtype)
+
+
+def qlinear(x, wts, mode: QuantMode, s: Optional[jnp.ndarray] = None,
+            bits: int = 8, bwd_int8: bool = True
+            ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    """Unified dispatch. Returns (y, stats-or-None). ``s`` only for QUAFF."""
+    if mode == QuantMode.QUAFF:
+        assert isinstance(wts, QuaffWeights)
+        return quaff_matmul(x, wts, s, bits, bwd_int8)
+    if mode == QuantMode.FP32:
+        return fp32_linear(x, wts), None
+    if mode == QuantMode.NAIVE:
+        return naive_linear(x, wts, bits), None
+    if mode == QuantMode.LLM_INT8:
+        return llm_int8_linear(x, wts, bits), None
+    if mode == QuantMode.SMOOTH_STATIC:
+        return smooth_static_linear(x, wts, bits), None
+    if mode == QuantMode.SMOOTH_DYNAMIC:
+        return smooth_dynamic_linear(x, wts, bits), None
+    raise ValueError(mode)

@@ -1,0 +1,136 @@
+"""Outlier channel identification (paper §3.3, Eq. 6) with non-uniform
+per-layer-type budgets (§4.1, App. B).
+
+The paper's criterion counts, over calibration samples, how often a channel's
+max magnitude exceeds ``ratio`` x the typical magnitude of the sample:
+
+    xi_o = sum_i 1[ max|X^i_{:,o}| > ratio * typical(|X^i|) ]        (Eq. 6)
+
+(The paper writes ``100 * max(|X^i|)`` which is a typo — a channel max can
+never exceed the global max; the cited outlier literature (LLM.int8,
+SmoothQuant) defines outliers as ~100x the *typical* magnitude. We use the
+per-sample mean absolute value as "typical" and keep ``ratio`` configurable.)
+
+Budgets are per layer *type* (q/k/v/up: 0.03%, o_proj: 4%, down_proj: 10%)
+with reallocation so the model-wide overhead stays < ``total_budget`` (5%).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# paper §4.1 budgets, fraction of c_in per layer type
+DEFAULT_BUDGETS: Dict[str, float] = {
+    "q_proj": 0.0003,
+    "k_proj": 0.0003,
+    "v_proj": 0.0003,
+    "up_proj": 0.0003,
+    "gate_proj": 0.0003,
+    "o_proj": 0.04,
+    "down_proj": 0.10,
+}
+DEFAULT_BUDGET_FALLBACK = 0.01  # layer types the paper does not name
+TOTAL_BUDGET = 0.05
+
+
+@dataclasses.dataclass(frozen=True)
+class OutlierSpec:
+    """Static outlier-channel set for one linear layer (fixed before FT)."""
+
+    indices: Tuple[int, ...]  # sorted channel indices, len == n_outliers
+
+    @property
+    def count(self) -> int:
+        return len(self.indices)
+
+
+def budget_for(layer_type: str, budgets: Optional[Mapping[str, float]] = None) -> float:
+    budgets = budgets or DEFAULT_BUDGETS
+    for key, frac in budgets.items():
+        if key in layer_type:
+            return frac
+    return DEFAULT_BUDGET_FALLBACK
+
+
+def outlier_scores(acts: jnp.ndarray, ratio: float = 20.0) -> jnp.ndarray:
+    """xi per channel from calibration activations (n_samples, tokens, c_in).
+
+    Counts samples whose channel max exceeds ratio x the sample's mean |X|.
+    Ties broken by mean channel magnitude so top-k selection is stable.
+    """
+    a = jnp.abs(acts)
+    chan_max = jnp.max(a, axis=1)  # (n, c_in)
+    typical = jnp.mean(a, axis=(1, 2), keepdims=False)[:, None]  # (n, 1)
+    hits = (chan_max > ratio * typical).astype(jnp.float32)
+    xi = jnp.sum(hits, axis=0)
+    # small tiebreaker keeps argsort deterministic and favours hot channels
+    mag = jnp.mean(chan_max, axis=0)
+    return xi + mag / (jnp.max(mag) + 1e-9)
+
+
+def identify_outliers(
+    acts: jnp.ndarray,
+    layer_type: str,
+    *,
+    ratio: float = 20.0,
+    budgets: Optional[Mapping[str, float]] = None,
+    min_count: int = 1,
+) -> OutlierSpec:
+    """Pick the top-``budget * c_in`` channels by xi score for one layer."""
+    c_in = acts.shape[-1]
+    frac = budget_for(layer_type, budgets)
+    k = max(min_count, int(round(frac * c_in)))
+    k = min(k, c_in)
+    xi = np.asarray(outlier_scores(acts, ratio))
+    idx = np.argsort(-xi)[:k]
+    return OutlierSpec(indices=tuple(sorted(int(i) for i in idx)))
+
+
+def reallocate_budgets(
+    layer_dims: Mapping[str, int],
+    budgets: Optional[Mapping[str, float]] = None,
+    total_budget: float = TOTAL_BUDGET,
+) -> Dict[str, int]:
+    """Global budget check (paper: reallocate from outlier-poor layers like
+    q_proj to outlier-rich ones like down_proj, keeping sum < 5% of all c_in).
+
+    layer_dims: layer_name -> c_in. Returns layer_name -> channel count.
+    If the per-type budgets already satisfy the total, they are returned
+    as-is; otherwise counts are scaled down proportionally (largest first).
+    """
+    counts = {
+        name: max(1, int(round(budget_for(name, budgets) * c_in)))
+        for name, c_in in layer_dims.items()
+    }
+    cap = int(total_budget * sum(layer_dims.values()))
+    excess = sum(counts.values()) - cap
+    if excess > 0:
+        # shave proportionally from the biggest consumers
+        order = sorted(counts, key=lambda n: -counts[n])
+        total = sum(counts.values())
+        for name in order:
+            take = min(counts[name] - 1, int(np.ceil(excess * counts[name] / total)))
+            counts[name] -= take
+            excess -= take
+            if excess <= 0:
+                break
+    return counts
+
+
+def hit_rate(
+    predefined: Sequence[int], acts: jnp.ndarray, ratio: float = 20.0
+) -> float:
+    """Fraction of *runtime* outlier channels covered by the predefined set
+    (paper Fig. 3 metric). acts: (tokens, c_in) from one step."""
+    a = jnp.abs(acts)
+    chan_max = jnp.max(a, axis=0)
+    typical = jnp.mean(a)
+    runtime = np.nonzero(np.asarray(chan_max > ratio * typical))[0]
+    if runtime.size == 0:
+        return 1.0
+    pre = set(int(i) for i in predefined)
+    return float(sum(1 for i in runtime if int(i) in pre)) / float(runtime.size)

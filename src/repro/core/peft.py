@@ -1,0 +1,121 @@
+"""PEFT methods evaluated in the paper (§4.1): LoRA, IA3, Prompt tuning,
+P-tuning. Adapters are the ONLY trainable parameters — base weights are the
+frozen quantized pytrees from core/baselines.py / core/quaff_linear.py.
+
+Everything is functional: `init_*` builds a param pytree, `apply` combines
+with the base layer output. Model code owns placement (which projections get
+LoRA, where virtual tokens are injected).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PEFTConfig:
+    method: str = "lora"         # lora | ia3 | prompt | ptuning | none
+    lora_rank: int = 16          # paper App. E
+    lora_alpha: float = 16.0
+    lora_dropout: float = 0.1    # applied only when deterministic=False
+    n_virtual_tokens: int = 20   # paper App. E (prompt / p-tuning)
+    ptuning_hidden: int = 128    # prompt-encoder MLP width
+
+
+# ----------------------------- LoRA ---------------------------------------
+class LoRAParams(NamedTuple):
+    a: jnp.ndarray  # (c_in, r)
+    b: jnp.ndarray  # (r, c_out)
+
+
+def init_lora(key, c_in: int, c_out: int, rank: int, dtype=jnp.float32) -> LoRAParams:
+    # Kaiming-uniform A, zero B (standard LoRA init: adapter starts as no-op)
+    bound = 1.0 / math.sqrt(c_in)
+    a = jax.random.uniform(key, (c_in, rank), dtype, -bound, bound)
+    b = jnp.zeros((rank, c_out), dtype)
+    return LoRAParams(a, b)
+
+
+def apply_lora(x: jnp.ndarray, p: LoRAParams, alpha: float, rank: int,
+               dropout: float = 0.0, key=None) -> jnp.ndarray:
+    h = x
+    if dropout > 0.0 and key is not None:
+        keep = jax.random.bernoulli(key, 1.0 - dropout, x.shape)
+        h = jnp.where(keep, x / (1.0 - dropout), 0.0).astype(x.dtype)
+    return (h @ p.a.astype(x.dtype)) @ p.b.astype(x.dtype) * (alpha / rank)
+
+
+# ----------------------------- IA3 ----------------------------------------
+class IA3Params(NamedTuple):
+    """Learned rescaling vectors: l_k, l_v on attention keys/values and l_ff
+    on the FFN intermediate activation (Liu et al., 2022)."""
+    l_k: jnp.ndarray   # (kv_dim,)
+    l_v: jnp.ndarray   # (kv_dim,)
+    l_ff: jnp.ndarray  # (d_ff,)
+
+
+def init_ia3(kv_dim: int, d_ff: int, dtype=jnp.float32) -> IA3Params:
+    return IA3Params(jnp.ones((kv_dim,), dtype), jnp.ones((kv_dim,), dtype),
+                     jnp.ones((max(d_ff, 1),), dtype))
+
+
+def apply_ia3(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return x * scale.astype(x.dtype)
+
+
+# ------------------------- Prompt tuning -----------------------------------
+class PromptParams(NamedTuple):
+    embeddings: jnp.ndarray  # (n_virtual, d_model)
+
+
+def init_prompt(key, n_virtual: int, d_model: int, dtype=jnp.float32) -> PromptParams:
+    return PromptParams(jax.random.normal(key, (n_virtual, d_model), dtype) * 0.02)
+
+
+def apply_prompt(input_embeds: jnp.ndarray, p: PromptParams) -> jnp.ndarray:
+    """Prepend virtual tokens: (B, S, D) -> (B, S + n_virtual, D)."""
+    b = input_embeds.shape[0]
+    virt = jnp.broadcast_to(
+        p.embeddings.astype(input_embeds.dtype)[None],
+        (b,) + p.embeddings.shape,
+    )
+    return jnp.concatenate([virt, input_embeds], axis=1)
+
+
+# --------------------------- P-tuning --------------------------------------
+class PTuningParams(NamedTuple):
+    """Continuous prompts produced by a small MLP prompt-encoder (Liu et al.,
+    2021). The encoder is trainable; raw embeddings are its input."""
+    raw: jnp.ndarray   # (n_virtual, d_model)
+    w1: jnp.ndarray    # (d_model, hidden)
+    b1: jnp.ndarray
+    w2: jnp.ndarray    # (hidden, d_model)
+    b2: jnp.ndarray
+
+
+def init_ptuning(key, n_virtual: int, d_model: int, hidden: int,
+                 dtype=jnp.float32) -> PTuningParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return PTuningParams(
+        raw=jax.random.normal(k1, (n_virtual, d_model), dtype) * 0.02,
+        w1=jax.random.normal(k2, (d_model, hidden), dtype) / math.sqrt(d_model),
+        b1=jnp.zeros((hidden,), dtype),
+        w2=jax.random.normal(k3, (hidden, d_model), dtype) / math.sqrt(hidden),
+        b2=jnp.zeros((d_model,), dtype),
+    )
+
+
+def apply_ptuning(input_embeds: jnp.ndarray, p: PTuningParams) -> jnp.ndarray:
+    h = jnp.tanh(p.raw @ p.w1 + p.b1)
+    virt = (h @ p.w2 + p.b2).astype(input_embeds.dtype)
+    b = input_embeds.shape[0]
+    virt = jnp.broadcast_to(virt[None], (b,) + virt.shape)
+    return jnp.concatenate([virt, input_embeds], axis=1)
+
+
+def n_prefix_tokens(cfg: PEFTConfig) -> int:
+    return cfg.n_virtual_tokens if cfg.method in ("prompt", "ptuning") else 0

@@ -1,0 +1,190 @@
+"""Quaff decoupled quantized linear (paper Eq. 4/5/9).
+
+    Y = X_hat @ W  +  x_hat @ w_hat
+      X_hat = X * s_inv          (s_inv == 1 outside outlier channels O)
+      x_hat = X_hat[:, O]
+      w_hat = (s_O - 1) * W[O, :]
+
+Quantized (Eq. 9):
+
+    Y ~= Dx * (X_hat_int @ W_int) * Dw  +  Dx * (x_hat_int @ w_hat_int) * Dw_hat
+
+where Dx is the shared per-token step of X_hat and x_hat_int is a column
+gather of X_hat_int (no second quantization). W_int / Dw are computed ONCE
+before fine-tuning and never touched again — this is the decoupling that
+removes SmoothQuant-dynamic's per-step weight requantization.
+
+The forward also emits max|X_:,O| — the statistic the momentum update (Eq. 7)
+consumes — for free (the column slab is already materialized).
+
+Gradients: W is frozen (PEFT), s is a state (non-diff). Only dX flows:
+    dX = (dY @ W_eff^T) * s_inv,   W_eff = W + scatter_O(w_hat)
+computed with one more INT8 GEMM (per-OC scale folded into dY) plus the tiny
+fp outlier-correction GEMM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.scaling import ScaleState
+
+
+class QuaffWeights(NamedTuple):
+    """Preprocessed frozen weights for one linear layer (pytree).
+
+    May carry a leading stack dim (L, ...) for scan-over-layers and/or an
+    expert dim (E, ...) for MoE — the math is vmapped over leading dims.
+    """
+
+    w_int: jnp.ndarray       # (c_in, c_out) int8
+    w_delta: jnp.ndarray     # (1, c_out) fp32, per output channel
+    w_outlier: jnp.ndarray   # (n_o, c_out) fp32 — full-precision W_O rows
+    outlier_idx: jnp.ndarray  # (n_o,) int32 — static channel indices
+    bias: Optional[jnp.ndarray] = None  # (c_out,) fp32 or None
+
+    @property
+    def c_in(self) -> int:
+        return self.w_int.shape[-2]
+
+    @property
+    def c_out(self) -> int:
+        return self.w_int.shape[-1]
+
+
+def prepare_quaff_weights(
+    w: jnp.ndarray,
+    outlier_idx: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    bits: int = 8,
+) -> Tuple[QuaffWeights, ScaleState]:
+    """One-time preprocessing (paper §3.3 'weights preprocessing'):
+    quantize W per-OC, stash fp rows W_O, init momentum state from max|W_O|."""
+    w_int, w_delta = quant.quantize(w, axis=0, bits=bits)
+    w_outlier = jnp.take(w, outlier_idx, axis=0)
+    weights = QuaffWeights(
+        w_int=w_int,
+        w_delta=w_delta.astype(jnp.float32),
+        w_outlier=w_outlier.astype(jnp.float32),
+        outlier_idx=outlier_idx.astype(jnp.int32),
+        bias=None if bias is None else bias.astype(jnp.float32),
+    )
+    return weights, ScaleState.init(w_outlier)
+
+
+def _scatter_s_inv(s: jnp.ndarray, idx: jnp.ndarray, c_in: int, dtype) -> jnp.ndarray:
+    """Full (c_in,) vector of 1/s with ones off the outlier set."""
+    s_inv = jnp.ones((c_in,), dtype=dtype)
+    return s_inv.at[idx].set((1.0 / s).astype(dtype))
+
+
+def _quaff_forward_impl(x2d, weights: QuaffWeights, s, bits: int):
+    c_in = weights.w_int.shape[0]
+    s = jnp.maximum(s, 1.0)
+    s_inv = _scatter_s_inv(s, weights.outlier_idx, c_in, x2d.dtype)
+
+    x_hat = x2d * s_inv[None, :]
+    x_int, x_delta = quant.quantize(x_hat, axis=-1, bits=bits)
+
+    # main INT8 GEMM against the never-rescaled W_int
+    base = quant.int_matmul(x_int, weights.w_int).astype(jnp.float32)
+    base = base * x_delta.astype(jnp.float32) * weights.w_delta
+
+    # outlier correction: x_hat_int gather (Eq. 9: shares Dx, no requant)
+    x_o_int = jnp.take(x_int, weights.outlier_idx, axis=1)  # (t, n_o) int8
+    w_hat = (s - 1.0)[:, None] * weights.w_outlier          # (n_o, c_out)
+    w_hat_int, w_hat_delta = quant.quantize(w_hat, axis=0, bits=bits)
+    corr = quant.int_matmul(x_o_int, w_hat_int).astype(jnp.float32)
+    corr = corr * x_delta.astype(jnp.float32) * w_hat_delta
+
+    y = (base + corr).astype(x2d.dtype)
+    if weights.bias is not None:
+        y = y + weights.bias.astype(x2d.dtype)
+
+    # OSSH statistic: max|X| on outlier channels of the *unscaled* input
+    x_o = jnp.take(x2d, weights.outlier_idx, axis=1)
+    stats = jnp.max(jnp.abs(x_o.astype(jnp.float32)), axis=0)  # (n_o,)
+    return y, stats
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _quaff_matmul_2d(
+    x2d: jnp.ndarray, weights: QuaffWeights, s: jnp.ndarray, bits: int = 8,
+    bwd_int8: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    return _quaff_forward_impl(x2d, weights, s, bits)
+
+
+def _quaff_fwd(x2d, weights, s, bits, bwd_int8):
+    out = _quaff_matmul_2d(x2d, weights, s, bits, bwd_int8)
+    return out, (weights, jnp.maximum(s, 1.0))
+
+
+def _quaff_bwd(bits, bwd_int8, res, cts):
+    weights, s = res
+    g, _ = cts  # gradient w.r.t. stats is discarded (state, not loss path)
+
+    if bwd_int8:
+        # dX_hat = g @ W^T (INT8: fold per-OC w_delta into g, transpose GEMM)
+        g2d = g.astype(jnp.float32)
+        g_scaled = g2d * weights.w_delta
+        g_int, g_delta = quant.quantize(g_scaled, axis=-1, bits=bits)
+        dx_hat = (quant.int_matmul(g_int, weights.w_int.T).astype(jnp.float32)
+                  * g_delta)
+    else:
+        # bf16 backward: dequantized transposed GEMM — the TP all-reduce of
+        # dx moves bf16 instead of s32 (EXPERIMENTS.md SPerf iteration)
+        g2d = g
+        w_fp = quant.dequantize(weights.w_int, weights.w_delta, g.dtype)
+        dx_hat = g @ w_fp.T
+
+    # + outlier-correction backward (tiny fp GEMM, n_o columns)
+    w_hat = ((s - 1.0)[:, None] * weights.w_outlier).astype(g2d.dtype)
+    dx_o = g2d @ w_hat.T  # (t, n_o)
+    dx_hat = dx_hat.at[:, weights.outlier_idx].add(dx_o.astype(dx_hat.dtype))
+
+    c_in = weights.w_int.shape[0]
+    s_inv = _scatter_s_inv(s, weights.outlier_idx, c_in, jnp.float32)
+    dx = (dx_hat * s_inv[None, :].astype(dx_hat.dtype)).astype(g.dtype)
+    return dx, None, None
+
+
+_quaff_matmul_2d.defvjp(_quaff_fwd, _quaff_bwd)
+
+
+def quaff_matmul(
+    x: jnp.ndarray, weights: QuaffWeights, s: jnp.ndarray, bits: int = 8,
+    bwd_int8: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (..., c_in) -> (y: (..., c_out), stats: (n_o,) max|X_:,O|)."""
+    x2d = x.reshape((-1, x.shape[-1]))
+    y, stats = _quaff_matmul_2d(x2d, weights, s, bits, bwd_int8)
+    return y.reshape(x.shape[:-1] + (y.shape[-1],)), stats
+
+
+# ---------------------------------------------------------------------------
+# MoE variant: weights carry a leading expert dim (E, ...). The activation
+# batch arrives pre-dispatched as (E, cap, c_in); s / outlier set are shared
+# across experts of a layer (activation statistics are a property of the
+# hidden stream, not of the expert — validated in tests/test_moe.py).
+# ---------------------------------------------------------------------------
+def quaff_matmul_experts(
+    x: jnp.ndarray, weights: QuaffWeights, s: jnp.ndarray, bits: int = 8
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (E, cap, c_in), weights.*: (E, ...) except outlier_idx (n_o,).
+
+    Returns (y: (E, cap, c_out), stats: (n_o,) max over experts)."""
+    def per_expert(xe, w_int, w_delta, w_outlier, bias):
+        we = QuaffWeights(w_int, w_delta, w_outlier, weights.outlier_idx, bias)
+        return quaff_matmul(xe, we, s, bits)
+
+    y, stats = jax.vmap(per_expert)(
+        x, weights.w_int, weights.w_delta, weights.w_outlier,
+        weights.bias if weights.bias is not None else jnp.zeros(
+            (weights.w_int.shape[0], weights.w_int.shape[-1]), jnp.float32),
+    )
+    return y, jnp.max(stats, axis=0)

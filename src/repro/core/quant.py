@@ -1,0 +1,158 @@
+"""Symmetric round-to-nearest quantization primitives (paper Eq. 1, App. F).
+
+Granularities:
+  per-tensor : one Delta for the whole matrix.
+  per-token  : Delta per row of an activation matrix  (axis=-1 reduced).
+  per-oc     : Delta per output channel of a weight matrix (axis=0 reduced
+               for a (c_in, c_out) weight).
+
+All quantizers are differentiable via a straight-through estimator (STE):
+the backward pass treats quantize->dequantize as identity, which is the
+standard QAT treatment and what the paper's fine-tuning relies on.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+INT4_MAX = 7.0
+
+_EPS = 1e-8
+
+
+def qmax_for_bits(bits: int) -> float:
+    return float(2 ** (bits - 1) - 1)
+
+
+def _absmax(x: jnp.ndarray, axis: Optional[int]) -> jnp.ndarray:
+    """max(|x|) with keepdims over the reduction axis (None = full tensor)."""
+    if axis is None:
+        return jnp.max(jnp.abs(x))
+    return jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+
+
+def compute_delta(x: jnp.ndarray, axis: Optional[int], bits: int = 8) -> jnp.ndarray:
+    """Quantization step size Delta = max|X| / (2^{N-1}-1)  (Eq. 1)."""
+    return jnp.maximum(_absmax(x, axis), _EPS) / qmax_for_bits(bits)
+
+
+def quantize(
+    x: jnp.ndarray, axis: Optional[int], bits: int = 8
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize x -> (x_int, delta) so that x ~= x_int * delta.
+
+    x_int is int8 for bits<=8. delta keeps reduced dims (keepdims=True) so
+    x_int * delta broadcasts back to x's shape.
+    """
+    delta = compute_delta(x, axis, bits)
+    qm = qmax_for_bits(bits)
+    x_int = jnp.clip(jnp.round(x / delta), -qm, qm).astype(jnp.int8)
+    return x_int, delta
+
+
+def dequantize(x_int: jnp.ndarray, delta: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    return x_int.astype(dtype) * delta.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable fake-quant (STE) — used when a quantized value sits on the
+# autodiff path (activations). Forward computes the real rounded value;
+# backward passes gradients straight through (clipped to the representable
+# range so saturated entries get zero gradient, the standard LSQ/STE rule).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def fake_quant(x: jnp.ndarray, axis: Optional[int], bits: int = 8) -> jnp.ndarray:
+    x_int, delta = quantize(x, axis, bits)
+    return dequantize(x_int, delta, x.dtype)
+
+
+def _fake_quant_fwd(x, axis, bits):
+    delta = compute_delta(x, axis, bits)
+    qm = qmax_for_bits(bits)
+    scaled = x / delta
+    y = jnp.clip(jnp.round(scaled), -qm, qm) * delta
+    mask = (jnp.abs(scaled) <= qm).astype(x.dtype)
+    return y.astype(x.dtype), mask
+
+
+def _fake_quant_bwd(axis, bits, mask, g):
+    return (g * mask,)
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+def int_matmul(x_int: jnp.ndarray, w_int: jnp.ndarray) -> jnp.ndarray:
+    """int8 x int8 -> int32 matmul. On TPU this hits the MXU at 2x bf16 rate;
+    the CPU backend upcasts but keeps integer semantics (exact)."""
+    return jax.lax.dot_general(
+        x_int,
+        w_int,
+        dimension_numbers=(((x_int.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _quantized_matmul_2d(
+    x2d: jnp.ndarray,
+    w_int: jnp.ndarray,
+    w_delta: jnp.ndarray,
+    bits: int = 8,
+    bwd_int8: bool = True,
+) -> jnp.ndarray:
+    x_int, x_delta = quantize(x2d, axis=-1, bits=bits)
+    return (
+        int_matmul(x_int, w_int).astype(x2d.dtype)
+        * x_delta.astype(x2d.dtype)
+        * w_delta.reshape((1, -1)).astype(x2d.dtype)
+    )
+
+
+def _qmm_fwd(x2d, w_int, w_delta, bits, bwd_int8):
+    return (_quantized_matmul_2d(x2d, w_int, w_delta, bits, bwd_int8),
+            (w_int, w_delta))
+
+
+def _qmm_bwd(bits, bwd_int8, res, g):
+    w_int, w_delta = res
+    if not bwd_int8:
+        # bf16 backward: dequantized transposed GEMM. Half the MXU rate of
+        # int8 but the TP all-reduce of dx moves bf16 instead of s32 (4x
+        # fewer wire bytes) — see EXPERIMENTS.md SPerf.
+        w_fp = dequantize(w_int, w_delta, g.dtype)
+        return g @ w_fp.T, None, None
+    # Fold the per-OC weight scale into g so the contraction over c_out is
+    # scale-free, then run the transposed GEMM in INT8 as well.
+    g_scaled = g.astype(jnp.float32) * w_delta.reshape((1, -1))
+    g_int, g_delta = quantize(g_scaled, axis=-1, bits=bits)
+    dx = int_matmul(g_int, w_int.T).astype(g.dtype) * g_delta.astype(g.dtype)
+    return dx, None, None
+
+
+_quantized_matmul_2d.defvjp(_qmm_fwd, _qmm_bwd)
+
+
+def quantized_matmul(
+    x: jnp.ndarray,
+    w_int: jnp.ndarray,
+    w_delta: jnp.ndarray,
+    bits: int = 8,
+    bwd_int8: bool = True,
+) -> jnp.ndarray:
+    """Naive WAQ forward (paper Eq. 2): per-token quantize x, int GEMM, dequant.
+
+    ``w_delta`` has shape (1, c_out) (per-OC keepdims) or scalar. One INT8 GEMM
+    forward, one INT8 GEMM backward (gradient w.r.t. x; W is frozen):
+
+        dx = quant_per_token(g * w_delta) @ W_int^T * g_delta
+
+    which is exact in the same sense as the forward (STE through the rounding).
+    """
+    x2d = x.reshape((-1, x.shape[-1]))
+    y = _quantized_matmul_2d(x2d, w_int, w_delta, bits, bwd_int8)
+    return y.reshape(x.shape[:-1] + (w_int.shape[-1],))

@@ -1,0 +1,48 @@
+"""Targeted momentum scaling (paper Eq. 7/8).
+
+The per-layer scale state lives in a pytree (``ScaleState``) threaded through
+``train_step`` functionally:
+
+    s_t = gamma * s_{t-1} + (1 - gamma) * beta_t                     (Eq. 7)
+    beta_i = max(1, sqrt(max|X_:,i| / max|W_i|))   for i in O        (Eq. 8)
+
+Only the |O| outlier channels carry state — non-outlier channels are
+implicitly s == 1 (never stored), which is what makes the mechanism cheap.
+``w_absmax`` (max|W_i| over the outlier rows) is precomputed at quantization
+time and folded into the state so the runtime update touches activations only.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+DEFAULT_GAMMA = 0.2  # paper App. E
+
+
+class ScaleState(NamedTuple):
+    """Momentum scale state for one Quaff linear layer."""
+
+    s: jnp.ndarray          # (n_outliers,) current scale factors, >= 1
+    w_absmax: jnp.ndarray   # (n_outliers,) max|W_i| over outlier rows (static)
+
+    @classmethod
+    def init(cls, w_outlier_rows: jnp.ndarray) -> "ScaleState":
+        """w_outlier_rows: (n_outliers, c_out) fp rows of W at O."""
+        w_absmax = jnp.maximum(jnp.max(jnp.abs(w_outlier_rows), axis=-1), 1e-8)
+        return cls(s=jnp.ones_like(w_absmax), w_absmax=w_absmax)
+
+
+def beta_from_stats(x_absmax_outlier: jnp.ndarray, w_absmax: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 8 on the outlier channels only (non-outliers are identically 1)."""
+    return jnp.maximum(1.0, jnp.sqrt(x_absmax_outlier / jnp.maximum(w_absmax, 1e-8)))
+
+
+def momentum_update(
+    state: ScaleState, x_absmax_outlier: jnp.ndarray, gamma: float = DEFAULT_GAMMA
+) -> ScaleState:
+    """One Eq. 7 step. ``x_absmax_outlier``: (n_outliers,) max|X_:,O| observed
+    in the current step's forward (emitted as a side output of the matmul)."""
+    beta = beta_from_stats(x_absmax_outlier, state.w_absmax)
+    s_new = gamma * state.s + (1.0 - gamma) * beta
+    return state._replace(s=s_new)

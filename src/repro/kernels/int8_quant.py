@@ -1,0 +1,83 @@
+"""Pallas TPU kernels for the activation-quantization pipeline:
+
+  rowmax_kernel     : per-token absmax over channel chunks (two-pass per-token
+                      quantization needs the full row max; a (BT, K) slab may
+                      not fit VMEM for K up to 49152, so the grid iterates
+                      channel chunks and max-accumulates into the output —
+                      the TPU grid is sequential, revisiting an output block
+                      is the standard reduction idiom).
+  scale_quant_kernel: fused X * s_inv (Quaff outlier suppression) + round to
+                      INT8 against the per-token step. Emitting the scaled
+                      int8 activations in one pass over X is what replaces
+                      the GPU paper's separate scale + quantize kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INT8_MAX = 127.0
+
+
+def _rowmax_kernel(x_ref, out_ref):
+    k = pl.program_id(1)
+    blockmax = jnp.max(jnp.abs(x_ref[...].astype(jnp.float32)), axis=-1,
+                       keepdims=True)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = blockmax
+
+    @pl.when(k > 0)
+    def _acc():
+        out_ref[...] = jnp.maximum(out_ref[...], blockmax)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_k",
+                                             "interpret"))
+def rowmax(x: jnp.ndarray, *, block_t: int = 256, block_k: int = 2048,
+           interpret: bool = False) -> jnp.ndarray:
+    """x: (T, K) -> (T, 1) fp32 row absmax."""
+    t, k = x.shape
+    bt, bk = min(block_t, t), min(block_k, k)
+    assert t % bt == 0 and k % bk == 0
+    return pl.pallas_call(
+        _rowmax_kernel,
+        grid=(t // bt, k // bk),
+        in_specs=[pl.BlockSpec((bt, bk), lambda i, kk: (i, kk))],
+        out_specs=pl.BlockSpec((bt, 1), lambda i, kk: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, 1), jnp.float32),
+        interpret=interpret,
+    )(x)
+
+
+def _scale_quant_kernel(x_ref, sinv_ref, delta_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32) * sinv_ref[...].astype(jnp.float32)
+    q = jnp.round(x / delta_ref[...])
+    out_ref[...] = jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_k",
+                                             "interpret"))
+def scale_quant(x: jnp.ndarray, s_inv: jnp.ndarray, delta: jnp.ndarray, *,
+                block_t: int = 256, block_k: int = 2048,
+                interpret: bool = False) -> jnp.ndarray:
+    """x: (T, K), s_inv: (K,), delta: (T, 1) -> int8 (T, K)."""
+    t, k = x.shape
+    bt, bk = min(block_t, t), min(block_k, k)
+    assert t % bt == 0 and k % bk == 0
+    return pl.pallas_call(
+        _scale_quant_kernel,
+        grid=(t // bt, k // bk),
+        in_specs=[
+            pl.BlockSpec((bt, bk), lambda i, kk: (i, kk)),
+            pl.BlockSpec((1, bk), lambda i, kk: (0, kk)),
+            pl.BlockSpec((bt, 1), lambda i, kk: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, bk), lambda i, kk: (i, kk)),
+        out_shape=jax.ShapeDtypeStruct((t, k), jnp.int8),
+        interpret=interpret,
+    )(x, s_inv.reshape(1, -1), delta)

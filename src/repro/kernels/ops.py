@@ -1,0 +1,87 @@
+"""Jit'd wrappers orchestrating the Pallas kernels into the full Quaff
+forward (the kernel-level counterpart of core/quaff_linear.quaff_matmul):
+
+  1. rowmax        — per-token absmax of the scaled activations
+  2. scale_quant   — fused s_inv scaling + INT8 rounding
+  3. quaff_matmul_fused — W8A8 GEMM + dequant + outlier correction
+
+On this CPU container the kernels run with interpret=True (Python
+execution of the kernel body); on a real TPU the same code compiles to
+Mosaic. ``quaff_forward_pallas`` is validated against the pure-jnp oracle
+(core path) in tests/test_kernels.py across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.quaff_linear import QuaffWeights, _scatter_s_inv
+from repro.kernels import int8_quant, quaff_matmul, ref
+
+INT8_MAX = 127.0
+
+
+def quaff_forward_pallas(
+    x: jnp.ndarray,           # (T, K) float
+    weights: QuaffWeights,
+    s: jnp.ndarray,           # (n_o,) momentum scales
+    *,
+    interpret: bool = True,
+    block_t: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full kernel-path Quaff linear. Returns (y (T, N) f32, stats (n_o,))."""
+    t, k = x.shape
+    s = jnp.maximum(s, 1.0)
+    s_inv = _scatter_s_inv(s, weights.outlier_idx, k, jnp.float32)
+
+    # pass 1: per-token absmax of X*s_inv — fold s_inv into the max
+    xmax = int8_quant.rowmax(x * s_inv[None, :].astype(x.dtype),
+                             interpret=interpret)
+    delta = jnp.maximum(xmax, 1e-8) / INT8_MAX
+
+    # pass 2: fused scale + quantize
+    x_int = int8_quant.scale_quant(x, s_inv, delta, interpret=interpret)
+
+    # outlier slab (gather of already-quantized columns — Eq. 9 shares Dx)
+    xo_int = jnp.take(x_int, weights.outlier_idx, axis=1)
+    w_hat = (s - 1.0)[:, None] * weights.w_outlier
+    wo_int, wo_delta = quant.quantize(w_hat, axis=0)
+
+    # pass 3: fused dual-GEMM + epilogue
+    o = xo_int.shape[1]
+    o_pad = -o % 8  # MXU-friendly outlier slab
+    if o_pad:
+        xo_int = jnp.pad(xo_int, ((0, 0), (0, o_pad)))
+        wo_int = jnp.pad(wo_int, ((0, o_pad), (0, 0)))
+    y = quaff_matmul.quaff_matmul_fused(
+        x_int, weights.w_int, delta, weights.w_delta.reshape(1, -1),
+        xo_int, wo_int, wo_delta.reshape(1, -1),
+        block_t=block_t, block_n=block_n, block_k=block_k,
+        interpret=interpret)
+    if weights.bias is not None:
+        y = y + weights.bias[None, :]
+
+    stats = jnp.max(jnp.abs(
+        jnp.take(x, weights.outlier_idx, axis=1).astype(jnp.float32)), axis=0)
+    return y, stats
+
+
+def naive_forward_pallas(x, w_int, w_delta, *, interpret: bool = True):
+    """Kernel-path naive WAQ (zero outlier channels)."""
+    t, k = x.shape
+    xmax = int8_quant.rowmax(x, interpret=interpret)
+    delta = jnp.maximum(xmax, 1e-8) / INT8_MAX
+    x_int = int8_quant.scale_quant(x, jnp.ones((k,), jnp.float32), delta,
+                                   interpret=interpret)
+    zero_o = jnp.zeros((t, 8), jnp.int8)
+    zero_w = jnp.zeros((8, w_int.shape[1]), jnp.int8)
+    zero_d = jnp.zeros((1, w_int.shape[1]), jnp.float32)
+    return quaff_matmul.quaff_matmul_fused(
+        x_int, w_int, delta, w_delta.reshape(1, -1), zero_o, zero_w, zero_d,
+        interpret=interpret)

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: fused W8A8 GEMM with per-token x per-OC dequant
+epilogue AND the Quaff outlier-correction GEMM in the same block loop.
+
+TPU adaptation of the paper's bitsandbytes INT8 path (DESIGN.md §4):
+  * both GEMMs hit the MXU as s8xs8->s32 (2x bf16 throughput);
+  * the (T, O) outlier slab and (O, N) corrected weights are small
+    (O <= 10% K by the paper's budget) and stay resident in VMEM across the
+    K-loop, so the correction costs no extra HBM reads of X;
+  * the dequant epilogue (x_delta * w_delta) and the correction are applied
+    once per (BT, BN) output block on the final K step — on GPU the paper
+    issues two cuBLAS calls plus a separate dequant kernel; here it is one
+    fused pass.
+
+Grid (T/BT, N/BN, K/BK), K innermost; int32 accumulator in VMEM scratch.
+Block defaults (128, 128, 512) keep the working set
+  BT*BK + BK*BN (int8) + BT*BN*4 (acc) + BT*O + O*BN
+well under 16 MB VMEM for O <= 1024.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, xd_ref, wd_ref, xo_ref, wo_ref, wod_ref,
+            out_ref, acc_ref, *, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        corr = jax.lax.dot_general(
+            xo_ref[...], wo_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+        base = acc_ref[...].astype(jnp.float32)
+        y = (base * wd_ref[...] + corr * wod_ref[...]) * xd_ref[...]
+        out_ref[...] = y.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_n", "block_k",
+                                             "interpret"))
+def quaff_matmul_fused(
+    x_int: jnp.ndarray,    # (T, K) int8
+    w_int: jnp.ndarray,    # (K, N) int8
+    x_delta: jnp.ndarray,  # (T, 1) f32
+    w_delta: jnp.ndarray,  # (1, N) f32
+    xo_int: jnp.ndarray,   # (T, O) int8
+    wo_int: jnp.ndarray,   # (O, N) int8
+    wo_delta: jnp.ndarray,  # (1, N) f32
+    *,
+    block_t: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    t, k = x_int.shape
+    _, n = w_int.shape
+    o = xo_int.shape[1]
+    bt, bn, bk = min(block_t, t), min(block_n, n), min(block_k, k)
+    assert t % bt == 0 and n % bn == 0 and k % bk == 0, (t, n, k, bt, bn, bk)
+    grid = (t // bt, n // bn, k // bk)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bk), lambda i, j, kk: (i, kk)),   # x
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),   # w
+            pl.BlockSpec((bt, 1), lambda i, j, kk: (i, 0)),     # x_delta
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),     # w_delta
+            pl.BlockSpec((bt, o), lambda i, j, kk: (i, 0)),     # xo (resident)
+            pl.BlockSpec((o, bn), lambda i, j, kk: (0, j)),     # wo
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),     # wo_delta
+        ],
+        out_specs=pl.BlockSpec((bt, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bt, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_int, w_int, x_delta, w_delta, xo_int, wo_int, wo_delta)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels. Every kernel test sweeps shapes
+and dtypes against these references (integer math is exact, so comparisons
+are tight)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def rowmax_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (T, K) -> (T, 1) row absmax (fp32)."""
+    return jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+
+
+def scale_quant_ref(x: jnp.ndarray, s_inv: jnp.ndarray, delta: jnp.ndarray):
+    """Fused scale-by-s_inv + per-token INT8 quantization.
+    x: (T, K); s_inv: (K,); delta: (T, 1) fp32 (precomputed from the scaled
+    row max). Returns x_int (T, K) int8."""
+    x_hat = x.astype(jnp.float32) * s_inv.astype(jnp.float32)[None, :]
+    q = jnp.round(x_hat / delta)
+    return jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+
+
+def quaff_matmul_ref(
+    x_int: jnp.ndarray,    # (T, K) int8 — quantized scaled activations
+    w_int: jnp.ndarray,    # (K, N) int8 — frozen base weights
+    x_delta: jnp.ndarray,  # (T, 1) fp32 — per-token step
+    w_delta: jnp.ndarray,  # (1, N) fp32 — per-OC step
+    xo_int: jnp.ndarray,   # (T, O) int8 — outlier columns of x_int
+    wo_int: jnp.ndarray,   # (O, N) int8 — quantized (s-1)*W_O
+    wo_delta: jnp.ndarray,  # (1, N) fp32
+) -> jnp.ndarray:
+    """Paper Eq. 9: Dx (X_int W_int Dw + xo_int wo_int Dwo)."""
+    base = jax.lax.dot_general(
+        x_int, w_int, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32).astype(jnp.float32)
+    corr = jax.lax.dot_general(
+        xo_int, wo_int, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32).astype(jnp.float32)
+    return (base * w_delta + corr * wo_delta) * x_delta
+
+
+def int8_matmul_ref(x_int, w_int, x_delta, w_delta):
+    """Naive WAQ GEMM + dequant epilogue (no outlier term)."""
+    acc = jax.lax.dot_general(
+        x_int, w_int, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32).astype(jnp.float32)
+    return acc * x_delta * w_delta

@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init). Everything below is the multi-pod dry-run driver:
+# lower + compile every (architecture x input-shape x mesh) cell, print
+# memory_analysis/cost_analysis, and record roofline inputs to JSON.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+#   python -m repro.launch.dryrun --arch ... --shape ... --multi-pod
+#   python -m repro.launch.dryrun --all [--multi-pod] [--jobs 1]
+#   python -m repro.launch.dryrun --all --both   # 1-pod and 2-pod passes
+#
+# --all re-execs itself one subprocess per cell so each compile starts from
+# a clean XLA state (and a crash in one cell cannot take down the sweep —
+# the sweep is restartable: finished cells are skipped via their JSON).
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import jax
+import numpy as np
+
+from repro.configs import ASSIGNED, get_config
+from repro.launch import hloparse, shardings, specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.models.config import SHAPES, TrainConfig
+from repro.runtime.pspec import use_rules
+from repro.train import steps as STEPS
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def cell_list(multi_pod: bool):
+    cells = []
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            if sname == "long_500k" and not M.supports_long_context(cfg):
+                continue  # full-attention archs skip long-context decode
+            cells.append((arch, sname))
+    return cells
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             seq_shard: bool = False, microbatches: int = 0,
+             bwd_bf16: bool = False, logits_bf16: bool = False,
+             remat_policy: str = "nothing", int8_dispatch: bool = False,
+             kv_batch_only: bool = False, tag: str = "") -> dict:
+    import math
+
+    from repro.launch.mesh import axis_size, dp_axes
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if cfg.n_experts:
+        # GShard grouping: one routing group per data shard
+        dp_total = math.prod(axis_size(mesh, a) for a in dp_axes(mesh))
+        cfg = dataclasses.replace(cfg, moe_groups=dp_total)
+    if bwd_bf16:
+        cfg = dataclasses.replace(cfg, quant=dataclasses.replace(
+            cfg.quant, bwd_int8=False))
+    if logits_bf16:
+        cfg = dataclasses.replace(cfg, logits_fp32=False)
+    if int8_dispatch:
+        cfg = dataclasses.replace(cfg, moe_int8_dispatch=True)
+    t0 = time.time()
+
+    mb = microbatches or specs.default_microbatches(cfg, shape, mesh)
+    tcfg = TrainConfig(microbatches=mb, remat=True, remat_policy=remat_policy)
+    rules = shardings.build_rules(cfg, mesh, shape, seq_shard=seq_shard,
+                                  kv_batch_only=kv_batch_only)
+
+    frozen_a, adapters_a, qstate_a = specs.model_specs(cfg)
+    frozen_sh = shardings.frozen_shardings(frozen_a, cfg, mesh)
+
+    with jax.set_mesh(mesh), use_rules(rules):
+        if shape.kind == "train":
+            state_a = specs.state_specs(adapters_a, qstate_a, tcfg)
+            state_sh = shardings.replicated_shardings(state_a, mesh)
+            batch_a = specs.batch_specs(cfg, shape, with_labels=True)
+            batch_sh = shardings.batch_shardings(batch_a, mesh)
+            step = STEPS.build_train_step(cfg, tcfg)
+            jitted = jax.jit(step, in_shardings=(frozen_sh, state_sh, batch_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(frozen_a, state_a, batch_a)
+        elif shape.kind == "prefill":
+            batch_a = specs.batch_specs(cfg, shape, with_labels=False)
+            batch_sh = shardings.batch_shardings(batch_a, mesh)
+            repl = shardings.replicated_shardings
+            step = STEPS.build_prefill(cfg)
+            jitted = jax.jit(step, in_shardings=(
+                frozen_sh, repl(adapters_a, mesh), repl(qstate_a, mesh),
+                batch_sh))
+            lowered = jitted.lower(frozen_a, adapters_a, qstate_a, batch_a)
+        else:  # decode
+            d = specs.decode_specs(cfg, shape)
+            cache_sh = shardings.cache_shardings(d["caches"], cfg, mesh,
+                                                 kv_batch_only)
+            repl = shardings.replicated_shardings
+            step = STEPS.build_decode(cfg)
+            jitted = jax.jit(step, in_shardings=(
+                frozen_sh, repl(adapters_a, mesh), repl(qstate_a, mesh),
+                cache_sh,
+                shardings.batch_shardings(d["token"], mesh),
+                jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())),
+                donate_argnums=(3,))
+            lowered = jitted.lower(frozen_a, adapters_a, qstate_a,
+                                   d["caches"], d["token"], d["pos"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    print(f"memory_analysis: args={mem.argument_size_in_bytes/1e9:.3f}GB "
+          f"out={mem.output_size_in_bytes/1e9:.3f}GB "
+          f"temp={mem.temp_size_in_bytes/1e9:.3f}GB "
+          f"alias={mem.alias_size_in_bytes/1e9:.3f}GB  (per device)")
+    ca = compiled.cost_analysis() or {}
+    print(f"cost_analysis: flops={ca.get('flops', 0):.3e} "
+          f"bytes={ca.get('bytes accessed', 0):.3e} (per device, no trip counts)")
+
+    hlo_text = compiled.as_text()
+    summary = hloparse.analyze(hlo_text)
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "kind": shape.kind,
+        "microbatches": mb,
+        "seq_shard": seq_shard,
+        "variant": tag or "baseline",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "cost_analysis": {k: ca.get(k) for k in ("flops", "bytes accessed")},
+        "hlo": summary.to_json(),
+        "param_bytes_total": specs.param_bytes(frozen_a),
+        "model_flops_per_token": specs.model_flops_per_token(
+            cfg, shape.kind == "train"),
+        "model_flops_per_step": specs.model_flops_per_step(cfg, shape),
+        "tokens_per_step": (shape.global_batch * shape.seq_len
+                            if shape.kind != "decode" else shape.global_batch),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "2pod" if multi_pod else "1pod"
+    suffix = f"__{tag}" if tag else ("__ss" if seq_shard else "")
+    path = os.path.join(out_dir,
+                        f"{arch}__{shape_name}__{mesh_tag}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    try:
+        import zstandard
+        with open(path.replace(".json", ".hlo.zst"), "wb") as f:
+            f.write(zstandard.ZstdCompressor(level=9).compress(
+                hlo_text.encode()))
+    except Exception:
+        pass
+    print(f"wrote {path}")
+    print(f"collectives: { {k: f'{v/1e9:.3f}GB' for k, v in summary.collective_bytes.items()} }")
+    print(f"dot flops int8={summary.dot_flops_int8:.3e} "
+          f"float={summary.dot_flops_float:.3e} hbm={summary.hbm_bytes:.3e}B")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true",
+                    help="with --all: run 1-pod and 2-pod passes")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--bwd-bf16", action="store_true")
+    ap.add_argument("--logits-bf16", action="store_true")
+    ap.add_argument("--int8-dispatch", action="store_true")
+    ap.add_argument("--kv-batch-only", action="store_true")
+    ap.add_argument("--remat-policy", default="nothing")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3000)
+    args = ap.parse_args()
+
+    if args.all:
+        pods = [False, True] if args.both else [args.multi_pod]
+        failures = []
+        for mp in pods:
+            for arch, sname in cell_list(mp):
+                tag = "2pod" if mp else "1pod"
+                path = os.path.join(args.out, f"{arch}__{sname}__{tag}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"skip {arch} {sname} {tag} (done)")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", sname, "--out", args.out]
+                if mp:
+                    cmd.append("--multi-pod")
+                print(f"=== {arch} x {sname} [{tag}] ===", flush=True)
+                try:
+                    r = subprocess.run(cmd, timeout=args.timeout)
+                    if r.returncode != 0:
+                        failures.append((arch, sname, tag, r.returncode))
+                except subprocess.TimeoutExpired:
+                    failures.append((arch, sname, tag, "timeout"))
+        print(f"\nDONE. failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    run_cell(args.arch, args.shape, args.multi_pod, args.out,
+             seq_shard=args.seq_shard, microbatches=args.microbatches,
+             bwd_bf16=args.bwd_bf16, logits_bf16=args.logits_bf16,
+             remat_policy=args.remat_policy, int8_dispatch=args.int8_dispatch,
+             kv_batch_only=args.kv_batch_only, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,336 @@
+"""Post-partitioning HLO analysis for the roofline.
+
+Why not compiled.cost_analysis()? It does NOT multiply while-loop bodies by
+their trip counts (verified: a 4-iteration lax.scan of matmuls reports 1
+matmul of flops), and every model here is scan-over-layers — the numbers
+would be ~n_layers too small. This module parses ``compiled.as_text()``,
+builds the computation call graph, detects scan trip counts from loop
+conditions, and aggregates with execution multiplicity:
+
+  * dot FLOPs, split int8 vs float (the MXU runs s8xs8->s32 at 2x bf16 rate
+    — exactly Quaff's win — so the compute roofline uses different peaks);
+  * HBM byte traffic ~ result bytes of non-fused ops + dot operand reads
+    (fusion interiors are excluded: fused intermediates never hit HBM);
+  * collective bytes by type (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), result-shape sized.
+
+All numbers are PER DEVICE (the module is the SPMD-partitioned per-device
+program). Verified against hand-computed shardings in
+tests/test_roofline_terms.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # text after the opcode's opening paren
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    types: Dict[str, str]  # op name -> result type
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+
+
+def _parse_op_line(line: str) -> Optional[Op]:
+    m = _DEF_RE.match(line)
+    if not m:
+        return None
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        type_str, rest2 = rest[: i + 1], rest[i + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest2 = rest[:sp], rest[sp + 1:]
+    m2 = re.match(r"([\w\-]+)\(", rest2)
+    if not m2:
+        return None
+    return Op(m.group(1), type_str, m2.group(1), rest2[m2.end():])
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        if cur is None:
+            mc = _COMP_RE.match(line.strip())
+            if mc:
+                cur = Computation(mc.group(1), [], {})
+                if line.strip().startswith("ENTRY"):
+                    entry_name = mc.group(1)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        op = _parse_op_line(line)
+        if op is not None:
+            cur.ops.append(op)
+            cur.types[op.name] = op.type_str
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _operand_names(rest: str) -> List[str]:
+    # operands are the %names inside the top-level parens of the op call
+    depth = 1
+    out = []
+    token = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        token += ch
+    return re.findall(r"%([\w.\-]+)", token)
+
+
+def _called_comps(op: Op) -> List[str]:
+    tail = op.rest
+    out = []
+    for key in ("condition", "body", "calls", "to_apply"):
+        for m in re.finditer(key + r"=%?([\w.\-]+)", tail):
+            out.append((key, m.group(1)))
+    m = re.search(r"branch_computations=\{([^}]*)\}", tail)
+    if m:
+        for name in re.findall(r"%?([\w.\-]+)", m.group(1)):
+            out.append(("branch", name))
+    return out
+
+
+def _trip_count(cond: Computation) -> int:
+    """Scan loops compare the induction var against a constant bound."""
+    consts = []
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.match(r"\s*(\d+)\s*\)", op.rest)
+            if m:
+                consts.append(int(m.group(1)))
+    # heuristic: the largest integer constant in the condition is the bound
+    return max(consts) if consts else 1
+
+
+_INT_TYPES = ("s8", "u8", "s4", "u4")
+
+
+def _src_type(comp: "Computation", name: str, op_by_name=None) -> str:
+    """Operand type, looking THROUGH a convert (XLA-CPU upcasts bf16->f32
+    before GEMMs; the TPU program keeps bf16 — counting the pre-convert type
+    gives the TPU-accurate byte/dtype view)."""
+    t = comp.types.get(name, "")
+    if op_by_name is not None:
+        src = op_by_name.get(name)
+        if src is not None and src.opcode == "convert":
+            inner = _operand_names(src.rest)
+            if inner:
+                return comp.types.get(inner[0], t)
+    return t
+
+
+def _dot_flops(op: Op, types: Dict[str, str], comp=None, op_by_name=None
+               ) -> Tuple[float, bool]:
+    """2 * prod(result dims) * prod(contracting dim sizes of lhs)."""
+    operands = _operand_names(op.rest)
+    rdtype, rdims = _shape_dims(op.type_str)
+    n_out = 1
+    for d in rdims:
+        n_out *= d
+    if comp is not None:
+        lhs_type = _src_type(comp, operands[0], op_by_name) if operands else ""
+    else:
+        lhs_type = types.get(operands[0], "") if operands else ""
+    ldtype, ldims = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    contract = 1
+    if m and m.group(1):
+        for i in m.group(1).split(","):
+            if int(i) < len(ldims):
+                contract *= ldims[int(i)]
+    # int dots emit s32 accumulators; classify by result OR src operand
+    is_int = rdtype == "s32" or ldtype in _INT_TYPES
+    return 2.0 * n_out * contract, is_int
+
+
+@dataclasses.dataclass
+class HloSummary:
+    dot_flops_float: float = 0.0
+    dot_flops_int8: float = 0.0
+    # Two HBM-traffic estimates (see EXPERIMENTS.md §Roofline method):
+    #   hbm_bytes       — upper bound: every non-fused op's result + GEMM
+    #                     operand reads, at CPU-backend fusion boundaries.
+    #                     A TPU fuses the elementwise chains this counts.
+    #   hbm_bytes_model — TPU-fusion-aware model: GEMM operands+results,
+    #                     gather/dynamic-slice results, scatter/DUS updates,
+    #                     reduce inputs, collective payloads. This is the
+    #                     traffic that CANNOT fuse away (our Pallas kernels
+    #                     demonstrate the quantize prologue/epilogue fusion
+    #                     that removes the rest).
+    hbm_bytes: float = 0.0
+    hbm_bytes_model: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_count: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_flops(self) -> float:
+        return self.dot_flops_float + self.dot_flops_int8
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def to_json(self) -> Dict:
+        return {
+            "dot_flops_float": self.dot_flops_float,
+            "dot_flops_int8": self.dot_flops_int8,
+            "hbm_bytes": self.hbm_bytes,
+            "hbm_bytes_model": self.hbm_bytes_model,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_count": dict(self.collective_count),
+        }
+
+
+def analyze(text: str) -> HloSummary:
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return HloSummary()
+    summary = HloSummary()
+
+    def visit(comp: Computation, mult: float, in_fusion: bool):
+        op_by_name = {o.name: o for o in comp.ops}
+        for op in comp.ops:
+            oc = op.opcode
+            operands = None
+            if oc == "dot":
+                flops, is_int = _dot_flops(op, comp.types, comp, op_by_name)
+                if is_int:
+                    summary.dot_flops_int8 += mult * flops
+                else:
+                    summary.dot_flops_float += mult * flops
+                # GEMM operand reads + result write always hit HBM; types are
+                # looked up THROUGH converts (TPU keeps bf16/int8 end-to-end
+                # where XLA-CPU upcasts to f32)
+                operands = _operand_names(op.rest)
+                src_types = [_src_type(comp, n, op_by_name)
+                             for n in operands[:2]]
+                b = sum(mult * _type_bytes(t) for t in src_types)
+                rdtype, rdims = _shape_dims(op.type_str)
+                n_out = 1
+                for d in rdims:
+                    n_out *= d
+                if rdtype == "f32" and all(
+                        _shape_dims(t)[0] == "bf16" for t in src_types if t):
+                    b += mult * n_out * 2  # TPU emits bf16 out of a bf16 GEMM
+                else:
+                    b += mult * _type_bytes(op.type_str)
+                summary.hbm_bytes += b
+                summary.hbm_bytes_model += b
+            elif oc in ("gather", "dynamic-slice"):
+                summary.hbm_bytes_model += mult * _type_bytes(op.type_str)
+            elif oc in ("dynamic-update-slice", "scatter"):
+                operands = _operand_names(op.rest)
+                upd_idx = 1 if oc == "dynamic-update-slice" else 2
+                if len(operands) > upd_idx:
+                    summary.hbm_bytes_model += mult * _type_bytes(
+                        comp.types.get(operands[upd_idx], ""))
+            elif oc == "reduce":
+                operands = _operand_names(op.rest)
+                if operands:
+                    summary.hbm_bytes_model += mult * _type_bytes(
+                        comp.types.get(operands[0], ""))
+            coll = next((c for c in _COLLECTIVES if oc == c or
+                         oc == c + "-start"), None)
+            if coll:
+                b = mult * _type_bytes(op.type_str)
+                summary.collective_bytes[coll] += b
+                summary.collective_count[coll] += int(mult)
+                summary.hbm_bytes_model += b
+            if not in_fusion and oc not in ("parameter", "constant", "tuple",
+                                            "get-tuple-element", "bitcast",
+                                            "dot"):
+                summary.hbm_bytes += mult * _type_bytes(op.type_str)
+
+            for kind, cname in _called_comps(op):
+                child = comps.get(cname)
+                if child is None:
+                    continue
+                if oc == "while":
+                    if kind == "body":
+                        cond_name = dict(_called_comps(op)).get("condition")
+                        # find trip from the condition computation
+                        trip = 1
+                        for k2, c2 in _called_comps(op):
+                            if k2 == "condition" and c2 in comps:
+                                trip = _trip_count(comps[c2])
+                        visit(child, mult * trip, in_fusion)
+                elif oc == "fusion":
+                    visit(child, mult, True)
+                elif kind in ("calls", "to_apply") and oc in ("call",
+                                                              "custom-call"):
+                    visit(child, mult, in_fusion)
+                elif kind == "branch":
+                    visit(child, mult, in_fusion)
+                # reduce/scatter/sort to_apply bodies: negligible, skipped
+
+    visit(entry, 1.0, False)
+    return summary

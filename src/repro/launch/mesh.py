@@ -1,0 +1,45 @@
+"""Production mesh builders. A FUNCTION, not a module-level constant, so
+importing this module never touches jax device state (required for smoke
+tests that must see 1 device)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod ("data","model"); 2 pods = 512 chips with a
+    leading "pod" axis. Requires XLA_FLAGS=--xla_force_host_platform_device_count=512
+    to be set before jax initializes (dryrun.py does this on lines 1-2)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax")
+    return jax.make_mesh(
+        shape, axes, devices=devices[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape: Tuple[int, ...] = (2, 2),
+                   axes: Tuple[str, ...] = ("data", "model")):
+    """Small mesh for in-process sharding tests (8 forced host devices)."""
+    n = math.prod(shape)
+    return jax.make_mesh(
+        shape, axes, devices=jax.devices()[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """Batch-parallel axes: everything except "model"."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]

@@ -1,0 +1,230 @@
+"""Sharding policy: PartitionSpec assignment for every leaf of the frozen
+model, train state, batch and caches, plus the activation ShardingRules the
+models consume via runtime.pspec hints.
+
+Policy summary (mesh ("pod")×("data","model"); dp = non-model axes):
+  * batch dims              -> dp axes (when divisible)
+  * frozen dense weights    -> (c_in: "data"[FSDP], c_out: "model"[TP]);
+    the INT8 payload makes the per-layer FSDP all-gather 4x cheaper than
+    fp32 FSDP — a Quaff-specific distributed win (see EXPERIMENTS.md §Perf)
+  * MoE expert weights      -> (E: "data"[EP], c_out: "model"[TP])
+  * vocab/lm_head           -> "model"
+  * adapters/opt/quant state-> replicated (tiny by construction: PEFT)
+  * KV caches               -> heads over "model" when divisible, else
+    sequence over "model" (+ dp when batch is unshardable, e.g. long_500k)
+Every rule degrades to replication when a dim is not divisible — compile
+success is never hostage to an odd vocab (whisper's 51866).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import axis_size, dp_axes
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.runtime.pspec import ShardingRules
+from repro.runtime.treepath import path_str
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _dp_if(mesh, n: int):
+    """dp axes tuple if the dim divides the full dp extent, else None."""
+    dp = dp_axes(mesh)
+    size = math.prod(axis_size(mesh, a) for a in dp)
+    return dp if _div(n, size) else None
+
+
+def _model_if(mesh, n: int):
+    return "model" if _div(n, axis_size(mesh, "model")) else None
+
+
+def _data_if(mesh, n: int):
+    return "data" if _div(n, axis_size(mesh, "data")) else None
+
+
+# ---------------------------------------------------------------------------
+# Frozen parameter specs
+# ---------------------------------------------------------------------------
+def _frozen_leaf_spec(path_s: str, shape: Tuple[int, ...], cfg: ModelConfig,
+                      mesh) -> P:
+    nd = len(shape)
+    lead = (None,) * max(0, nd - 2)
+    last = shape[-1] if nd else 1
+
+    if path_s.endswith("embed/tokens"):
+        return P(_model_if(mesh, shape[0]), None)
+    if path_s.endswith("lm_head/w"):
+        return P(None, _model_if(mesh, shape[1]))
+    if path_s.endswith("/router"):
+        return P(*(None,) * (nd - 1), _model_if(mesh, last))
+
+    is_expert = "/experts/" in path_s
+    # Megatron pairing: o/down projections are ROW-parallel (c_in over
+    # "model"); q/k/v/up/gate are COLUMN-parallel (c_out over "model").
+    is_row = (any(t in path_s for t in ("/down/", "/wo/", "/out_proj/",
+                                        "/w_out/"))
+              and not is_expert)
+    if path_s.endswith(("/w_int", "/w_fp")) or path_s.endswith("/w/w"):
+        c_in, c_out = shape[-2], shape[-1]
+        if is_expert:
+            # (L, E, c_in, c_out): EP over "data", TP over "model"
+            e_axis = _data_if(mesh, shape[-3])
+            if is_row:
+                return P(*(None,) * (nd - 3), e_axis,
+                         _model_if(mesh, c_in), None)
+            return P(*(None,) * (nd - 3), e_axis, None,
+                     _model_if(mesh, c_out))
+        if is_row:
+            return P(*lead, _model_if(mesh, c_in), _data_if(mesh, c_out))
+        return P(*lead, _data_if(mesh, c_in), _model_if(mesh, c_out))
+    if path_s.endswith(("/w_delta", "/w_outlier")):
+        if is_expert:
+            return P(*(None,) * (nd - 3), _data_if(mesh, shape[-3]), None,
+                     _model_if(mesh, last))
+        return P(*lead, None, _model_if(mesh, last))
+    if path_s.endswith("/bias"):
+        if is_expert and nd >= 2:
+            return P(*(None,) * (nd - 2), _data_if(mesh, shape[-2]),
+                     _model_if(mesh, last))
+        return P(*(None,) * (nd - 1), _model_if(mesh, last))
+    if path_s.endswith("/w_og") or path_s.endswith("/w_if"):
+        return P(*lead, None, _model_if(mesh, last))
+    # norms, conv, gates, s_inv, outlier_idx, a_log, ... : replicated
+    return P(*(None,) * nd)
+
+
+def frozen_shardings(frozen_abstract, cfg: ModelConfig, mesh):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(frozen_abstract)
+    out = []
+    for path, leaf in flat:
+        spec = _frozen_leaf_spec(path_str(path), tuple(leaf.shape), cfg, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated_shardings(tree_abstract, mesh):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, P(*(None,) * len(leaf.shape))),
+        tree_abstract)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+def batch_shardings(batch_abstract, mesh):
+    def spec(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        b = leaf.shape[0]
+        return NamedSharding(mesh, P(_dp_if(mesh, b), *(None,) * (nd - 1)))
+    return jax.tree.map(spec, batch_abstract)
+
+
+def _cache_leaf_spec(path_s: str, shape, cfg: ModelConfig, mesh,
+                     kv_batch_only: bool = False) -> P:
+    nd = len(shape)
+    if path_s.endswith("/pos") or nd <= 1:
+        return P(*(None,) * nd)
+    model = axis_size(mesh, "model")
+    if path_s.endswith(("/k", "/v")) and nd >= 4:
+        # (stack..., B, S, KH, hd)
+        lead = (None,) * (nd - 4)
+        b, s, kh, hd = shape[-4], shape[-3], shape[-2], shape[-1]
+        b_axis = _dp_if(mesh, b)
+        if kv_batch_only:
+            # SPerf variant: replicate over "model" so the decode-step
+            # dynamic-update-slice is shard-local (no cache all-gather);
+            # costs model-axis memory replication.
+            return P(*lead, b_axis, None, None, None)
+        if _div(kh, model):
+            return P(*lead, b_axis, None, "model", None)
+        # heads unshardable: shard sequence — over model, plus dp when the
+        # batch is idle (long_500k batch=1)
+        seq_axes: Tuple = ("model",)
+        if b_axis is None:
+            full = dp_axes(mesh) + ("model",)
+            size = math.prod(axis_size(mesh, a) for a in full)
+            if _div(s, size):
+                seq_axes = full
+        if _div(s, math.prod(axis_size(mesh, a) for a in seq_axes)):
+            return P(*lead, b_axis, seq_axes, None, None)
+        return P(*lead, b_axis, None, None, None)
+    if path_s.endswith("/h") and nd >= 4:
+        # mamba state (stack..., B, H, P, N)
+        lead = (None,) * (nd - 4)
+        b, h = shape[-4], shape[-3]
+        return P(*lead, _dp_if(mesh, b), _model_if(mesh, h), None, None)
+    if path_s.endswith("/conv") and nd >= 3:
+        lead = (None,) * (nd - 3)
+        return P(*lead, _dp_if(mesh, shape[-3]), None, None)
+    if path_s.endswith("/C") and nd >= 4:  # mLSTM matrix memory
+        lead = (None,) * (nd - 4)
+        return P(*lead, _dp_if(mesh, shape[-4]),
+                 _model_if(mesh, shape[-3]), None, None)
+    if nd >= 3:  # mLSTM n / sLSTM states (stack..., B, H, P)
+        lead = (None,) * (nd - 3)
+        return P(*lead, _dp_if(mesh, shape[-3]), None, None)
+    return P(*(None,) * nd)
+
+
+def cache_shardings(cache_abstract, cfg: ModelConfig, mesh,
+                    kv_batch_only: bool = False):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abstract)
+    out = []
+    for path, leaf in flat:
+        spec = _cache_leaf_spec(path_str(path), tuple(leaf.shape), cfg, mesh,
+                                kv_batch_only)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Activation rules (runtime.pspec hints)
+# ---------------------------------------------------------------------------
+def build_rules(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                *, seq_shard: bool = False,
+                kv_batch_only: bool = False) -> ShardingRules:
+    dp = _dp_if(mesh, shape.global_batch)
+    model = axis_size(mesh, "model")
+    seq = shape.seq_len
+    kh_ax = _model_if(mesh, cfg.n_kv_heads)
+    table = {
+        # FSDP weight-use constraints (per-layer INT8 all-gather over "data"):
+        "weight_use2": P(None, "model"),
+        "weight_use2_row": P("model", None),
+        "weight_use3": P("data", None, "model"),
+        "weight_use3_row": P("data", "model", None),
+        "act_btd": P(dp, ("model" if seq_shard and _div(seq, model) else None),
+                     None),
+        "act_btf": P(dp, None, _model_if(mesh, max(cfg.d_ff, 1))),
+        "act_heads": P(dp, None, _model_if(mesh, cfg.n_heads), None),
+        # attention tensors: shard KV heads over "model" when divisible,
+        # otherwise REPLICATE over "model" (attention computed data-parallel
+        # only) — prevents GSPMD partial-summing (S,S) score matrices when
+        # the head split doesn't align with the mesh (EXPERIMENTS.md §Perf).
+        "attn_q": P(dp, None, kh_ax, None, None),
+        "attn_kv": P(dp, None, kh_ax, None),
+        "logits": P(dp, None, _model_if(mesh, cfg.vocab_size)),
+        "kv_cache": _cache_leaf_spec(
+            "/k", (shape.global_batch, seq, cfg.n_kv_heads, cfg.head_dim),
+            cfg, mesh, kv_batch_only),
+    }
+    if cfg.n_experts:
+        e_ax = _data_if(mesh, cfg.n_experts)
+        pod_ax = "pod" if "pod" in mesh.axis_names else None
+        table["moe_tokens"] = P(dp, None, None)               # (G, Tg, D)
+        table["moe_group_buf"] = P(dp, None, None, None)      # (G, E, cap, D)
+        table["moe_expert_buf"] = P(e_ax, pod_ax, None, None)  # (E, G, cap, D)
+        table["moe_buffer"] = P(e_ax, pod_ax, None)           # (E, G*cap, D)
+        table["moe_buffer_f"] = P(e_ax, pod_ax,
+                                  _model_if(mesh, max(cfg.d_ff, 1)))
+    return ShardingRules(table=table)

@@ -1,0 +1,158 @@
+"""Abstract input specs for the dry-run: ShapeDtypeStruct stand-ins for
+every (architecture x shape) cell — weak-type-correct, shardable, zero
+allocation. Also the microbatch policy (gradient-accumulation depth per
+cell, bounding per-device activation memory)."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import axis_size, dp_axes
+from repro.models import model as M
+from repro.models.config import ModelConfig, ShapeConfig, TrainConfig
+from repro.train import steps as STEPS
+
+SDS = jax.ShapeDtypeStruct
+
+# hillclimbed overrides (arch, shape) -> microbatches; see EXPERIMENTS.md §Perf
+MICROBATCH_OVERRIDES: Dict[Tuple[str, str], int] = {}
+
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    if shape.kind != "train":
+        return 1
+    if (cfg.name, shape.name) in MICROBATCH_OVERRIDES:
+        return MICROBATCH_OVERRIDES[(cfg.name, shape.name)]
+    dp = math.prod(axis_size(mesh, a) for a in dp_axes(mesh))
+    b, s = shape.global_batch, shape.seq_len
+    target = 8192 if cfg.d_model >= 4096 else 32768
+    valid = [mb for mb in (1, 2, 4, 8, 16, 32, 64)
+             if b % mb == 0 and (b // mb) % dp == 0]
+    for mb in valid:
+        if b * s / (mb * dp) <= target:
+            return mb
+    return valid[-1] if valid else 1
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *, with_labels: bool):
+    """Training/prefill batch ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    act = jnp.dtype(cfg.act_dtype)
+    if cfg.family == "vlm":
+        n_text = s - cfg.n_image_tokens
+        out = {"tokens": SDS((b, n_text), jnp.int32)}
+        if with_labels:
+            out["labels"] = SDS((b, n_text), jnp.int32)
+        out["embeds"] = SDS((b, cfg.n_image_tokens, cfg.d_model), act)
+        return out
+    if cfg.family == "encdec":
+        out = {"tokens": SDS((b, s), jnp.int32),
+               "embeds": SDS((b, cfg.encoder_seq, cfg.d_model), act)}
+        if with_labels:
+            out["labels"] = SDS((b, s), jnp.int32)
+        return out
+    out = {"tokens": SDS((b, s), jnp.int32)}
+    if with_labels:
+        out["labels"] = SDS((b, s), jnp.int32)
+    return out
+
+
+def model_specs(cfg: ModelConfig):
+    """Abstract (frozen, adapters, quant_state) via eval_shape — no alloc."""
+    return jax.eval_shape(
+        functools.partial(_init, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def _init(key, cfg: ModelConfig):
+    return M.init_params(key, cfg)
+
+
+def state_specs(adapters_a, qstate_a, tcfg: TrainConfig):
+    return jax.eval_shape(
+        lambda a, q: STEPS.init_train_state(a, q, tcfg), adapters_a, qstate_a)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Decode-shape caches at seq_len occupancy (KV buffers of that size)."""
+    return jax.eval_shape(
+        lambda: M.init_caches(cfg, shape.global_batch, shape.seq_len))
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig):
+    return {
+        "caches": cache_specs(cfg, shape),
+        "token": SDS((shape.global_batch, 1), jnp.int32),
+        "pos": SDS((), jnp.int32),
+    }
+
+
+def param_bytes(tree) -> int:
+    return sum(
+        math.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+        for l in jax.tree.leaves(tree))
+
+
+def model_flops_per_token(cfg: ModelConfig, train: bool) -> float:
+    """6*N_active*D analog: per-token useful GEMM flops.
+    2*N_active per forward token, x3 for fwd+bwd in training."""
+    d, hd = cfg.d_model, cfg.head_dim
+    per_layer = 0.0
+    attn = d * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * d
+    if cfg.family == "moe":
+        ffn = cfg.top_k * 3 * d * cfg.d_ff
+    elif cfg.family in ("hybrid", "ssm"):
+        di = cfg.d_inner or 2 * d
+        ffn = 0.0
+        attn = 0.0  # counted per block type below
+    else:
+        n_mat = 3 if cfg.ffn_type == "swiglu" else 2
+        ffn = n_mat * d * cfg.d_ff
+
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import zamba_layout
+        ns, per, trail = zamba_layout(cfg)
+        di = cfg.d_inner
+        n_state = cfg.ssm_state
+        h = di // cfg.ssm_head_dim
+        mamba = d * (2 * di + 2 * n_state + h) + di * d
+        attn_blk = d * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * d
+        total = (ns * per + trail) * mamba + ns * attn_blk
+    elif cfg.family == "ssm":
+        from repro.models.hybrid import xlstm_layout
+        ns, per_m, trail = xlstm_layout(cfg)
+        mlstm = 4 * d * d + d * 2 * cfg.n_heads + d * d
+        slstm = d * 4 * d + d * d
+        total = (ns * per_m + trail) * mlstm + ns * slstm
+    elif cfg.family == "encdec":
+        dec = attn * 2 + ffn  # self + cross attention
+        total = cfg.n_layers * dec
+    else:
+        total = cfg.n_layers * (attn + ffn)
+    total += d * cfg.vocab_size  # lm head
+    flops_fwd = 2.0 * total
+    return flops_fwd * (3.0 if train else 1.0)
+
+
+def model_flops_per_step(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Whole-step useful GEMM flops (the 6*N_active*D analog).
+
+    Adds the encoder pass for enc-dec (runs once per step; its backward is
+    dead-code — no trainable params upstream of the decoder cross-attn) and
+    the VLM image positions. Attention score/context flops (O(S^2)) are NOT
+    counted, matching the 6ND convention — noted in EXPERIMENTS.md."""
+    train = shape.kind == "train"
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind != "decode" else shape.global_batch)
+    total = model_flops_per_token(cfg, train) * tokens
+    if cfg.family == "encdec" and shape.kind != "decode":
+        d = cfg.d_model
+        attn = d * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * d
+        n_mat = 3 if cfg.ffn_type == "swiglu" else 2
+        enc_layer = attn + n_mat * d * cfg.d_ff
+        enc_tokens = shape.global_batch * cfg.encoder_seq
+        total += 2.0 * cfg.n_encoder_layers * enc_layer * enc_tokens
+    return total

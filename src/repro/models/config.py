@@ -1,0 +1,163 @@
+"""Model / quantization / training configuration dataclasses.
+
+Every assigned architecture is expressed as a ``ModelConfig``; the reduced
+smoke variants use ``ModelConfig.reduced()``. Field semantics follow the
+assignment table (arch id comments in repro/configs/<id>.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+from repro.core.peft import PEFTConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    mode: str = "quaff"          # QuantMode value
+    bits: int = 8
+    gamma: float = 0.2           # momentum (paper App. E)
+    outlier_ratio: float = 20.0  # xi criterion threshold
+    bwd_int8: bool = True        # INT8 backward GEMMs (paper-faithful); False
+                                 # = bf16 backward (collective-lean, SPerf)
+    total_budget: float = 0.05   # < 5% overall overhead
+    # per-layer-type budget fractions of c_in (paper §4.1)
+    budgets: Optional[Mapping[str, float]] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    use_rope: bool = True
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    ffn_type: str = "swiglu"      # swiglu | gelu
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_aux_weight: float = 0.01
+    # GShard grouping: tokens are routed within ``moe_groups`` independent
+    # groups (= data shards) so dispatch scatters stay shard-local and the
+    # group->expert transpose lowers to one all-to-all. The launcher sets
+    # this to the dp extent; 1 (default) is fine on a single device.
+    moe_groups: int = 1
+
+    # sliding-window attention (gemma3: 5 local : 1 global)
+    sliding_window: int = 0     # 0 = all layers full attention
+    global_every: int = 0       # every Nth layer is global
+
+    # SSM / hybrid
+    ssm_state: int = 0
+    d_inner: int = 0            # mamba inner width (0 -> 2*d_model)
+    ssm_head_dim: int = 64
+    conv_kernel: int = 4
+    attn_every: int = 0         # zamba2: shared attn after every N mamba blocks
+    slstm_every: int = 0        # xlstm: every Nth block is sLSTM
+
+    # encoder-decoder (whisper)
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500     # precomputed frame embeddings (stub frontend)
+
+    # VLM (pixtral): prepended precomputed patch embeddings (stub frontend)
+    n_image_tokens: int = 0
+
+    # dtypes as strings so configs stay hashable/serializable
+    act_dtype: str = "float32"
+    param_dtype: str = "float32"
+    logits_fp32: bool = True     # False: unembed in act_dtype (SPerf knob)
+    moe_int8_dispatch: bool = False  # INT8-compressed EP all-to-all (SPerf)
+
+    quant: QuantConfig = QuantConfig()
+    peft: PEFTConfig = PEFTConfig()
+
+    # metadata
+    source: str = ""
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+        if self.family in ("hybrid", "ssm") and self.d_inner == 0:
+            object.__setattr__(self, "d_inner", 2 * self.d_model)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        small: Dict[str, Any] = dict(
+            n_layers=min(self.n_layers, 4),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            head_dim=32,
+            d_ff=256,
+            vocab_size=512,
+        )
+        if self.n_experts:
+            small.update(n_experts=8, top_k=2)
+        if self.sliding_window:
+            small.update(sliding_window=16, global_every=self.global_every)
+        if self.family in ("hybrid", "ssm"):
+            small.update(ssm_state=16, d_inner=256, ssm_head_dim=32,
+                         attn_every=2 if self.attn_every else 0,
+                         slstm_every=2 if self.slstm_every else 0)
+        if self.n_encoder_layers:
+            small.update(n_encoder_layers=2, encoder_seq=32)
+        if self.n_image_tokens:
+            small.update(n_image_tokens=8)
+        small.update(act_dtype="float32", param_dtype="float32")
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str                   # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 2e-4   # paper App. E
+    beta1: float = 0.9
+    beta2: float = 0.999
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    microbatches: int = 1         # gradient-accumulation steps inside train_step
+    remat: bool = True
+    remat_policy: str = "nothing"  # nothing | dots (checkpoint_dots)
+    grad_compression: bool = False  # INT8 all-reduce of LoRA grads w/ error feedback
+    seed: int = 0

@@ -1,0 +1,201 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a STUB per the
+assignment: ``input_specs`` provides precomputed frame embeddings of shape
+(B, encoder_seq, d_model), standing in for the conv1d+mel frontend).
+
+Encoder: bidirectional self-attn + GELU FFN, sinusoidal positions.
+Decoder: causal self-attn + cross-attn to encoder output + GELU FFN.
+Decode-time caches: per-layer self-attn KV (growing) + cross-attn KV
+(precomputed at prefill, static afterwards).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import peft as PEFT
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.runtime.pspec import hint
+
+
+def _init_encdec_block(key, cfg: ModelConfig, param_dtype, *, cross: bool):
+    ks = jax.random.split(key, 3)
+    attn_p, attn_s = L.init_attention(ks[0], cfg, cfg.quant, param_dtype)
+    params = {
+        "attn": attn_p,
+        "norm1": L.init_rmsnorm(cfg.d_model),
+        "norm2": L.init_rmsnorm(cfg.d_model),
+    }
+    states = {"attn": attn_s}
+    if cross:
+        xattn_p, xattn_s = L.init_attention(ks[1], cfg, cfg.quant, param_dtype)
+        params["xattn"] = xattn_p
+        params["norm_x"] = L.init_rmsnorm(cfg.d_model)
+        states["xattn"] = xattn_s
+    ffn_p, ffn_s = L.init_ffn(ks[2], cfg, cfg.quant, param_dtype)
+    params["ffn"] = ffn_p
+    states["ffn"] = ffn_s
+    return params, states
+
+
+def init_params(key, cfg: ModelConfig):
+    param_dtype = L.dt(cfg.param_dtype)
+    keys = jax.random.split(key, 5)
+    frozen: Dict[str, Any] = {
+        "embed": L.init_embedding(keys[0], cfg.vocab_size, cfg.d_model, param_dtype)
+    }
+    qstate: Dict[str, Any] = {}
+    frozen["enc_blocks"], qstate["enc_blocks"] = jax.vmap(
+        lambda k: _init_encdec_block(k, cfg, param_dtype, cross=False)
+    )(jax.random.split(keys[1], cfg.n_encoder_layers))
+    frozen["dec_blocks"], qstate["dec_blocks"] = jax.vmap(
+        lambda k: _init_encdec_block(k, cfg, param_dtype, cross=True)
+    )(jax.random.split(keys[2], cfg.n_layers))
+    frozen["enc_norm"] = L.init_rmsnorm(cfg.d_model)
+    frozen["final_norm"] = L.init_rmsnorm(cfg.d_model)
+    frozen["lm_head"] = {
+        "w": jax.random.normal(keys[3], (cfg.d_model, cfg.vocab_size),
+                               param_dtype) * 0.02}
+
+    adapters: Dict[str, Any] = {}
+    p = cfg.peft
+    if p.method == "lora":
+        def init_ad(k):
+            k1, k2 = jax.random.split(k)
+            return {"lora_q": PEFT.init_lora(k1, cfg.d_model, cfg.q_dim, p.lora_rank),
+                    "lora_v": PEFT.init_lora(k2, cfg.d_model, cfg.kv_dim, p.lora_rank)}
+        adapters["dec_blocks"] = jax.vmap(init_ad)(
+            jax.random.split(keys[4], cfg.n_layers))
+    elif p.method == "ia3":
+        adapters["dec_blocks"] = jax.vmap(
+            lambda k: {"ia3": PEFT.init_ia3(cfg.kv_dim, cfg.d_ff)}
+        )(jax.random.split(keys[4], cfg.n_layers))
+    elif p.method in ("prompt", "ptuning"):
+        adapters["prompt"] = (
+            PEFT.init_prompt(keys[4], p.n_virtual_tokens, cfg.d_model)
+            if p.method == "prompt"
+            else PEFT.init_ptuning(keys[4], p.n_virtual_tokens, cfg.d_model,
+                                   p.ptuning_hidden))
+    return frozen, adapters, qstate
+
+
+def encode(frozen, quant_state, frames: jnp.ndarray, cfg: ModelConfig,
+           remat: bool = False):
+    """frames: (B, encoder_seq, D) precomputed embeddings (stub frontend)."""
+    act_dtype = L.dt(cfg.act_dtype)
+    x = frames.astype(act_dtype)
+    x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(act_dtype)[None]
+    x = hint(x, "act_btd")
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(carry, xs):
+        h = carry
+        block, qs = xs
+        a_in = L.rmsnorm(h, block["norm1"], cfg.norm_eps)
+        a_out, _, a_st = L.attention(a_in, block["attn"], qs["attn"], cfg,
+                                     positions=positions, causal=False)
+        h = hint(h + a_out, "act_btd")
+        f_in = L.rmsnorm(h, block["norm2"], cfg.norm_eps)
+        f_out, f_st = L.ffn(f_in, block["ffn"], qs["ffn"], cfg)
+        h = hint(h + f_out, "act_btd")
+        return h, {"attn": a_st, "ffn": f_st}
+
+    body = L.remat_wrap(body, remat)
+    x, enc_stats = jax.lax.scan(body, x, (frozen["enc_blocks"],
+                                          quant_state["enc_blocks"]))
+    return L.rmsnorm(x, frozen["enc_norm"], cfg.norm_eps), enc_stats
+
+
+def forward(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
+            input_embeds=None, caches=None, positions=None, remat=False,
+            enc_out=None):
+    """Decoder forward. ``input_embeds`` is the encoder frame input (stub);
+    pass ``enc_out`` directly to skip re-encoding (decode steps), or
+    ``caches`` with precomputed cross-KV."""
+    act_dtype = L.dt(cfg.act_dtype)
+    stats: Dict[str, Any] = {}
+    if enc_out is None and input_embeds is not None:
+        enc_out, stats["enc_blocks"] = encode(frozen, quant_state, input_embeds,
+                                              cfg, remat)
+
+    x = L.embed(tokens, frozen["embed"], act_dtype)
+    if positions is None:
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(
+            act_dtype)[None]
+    else:
+        # decode: absolute sinusoidal position looked up from a static table
+        pe = L.sinusoidal_positions(65536, cfg.d_model)
+        x = x + jnp.take(pe, positions, axis=0).astype(act_dtype)[None]
+    if "prompt" in adapters:
+        x = (PEFT.apply_prompt(x, adapters["prompt"])
+             if isinstance(adapters["prompt"], PEFT.PromptParams)
+             else PEFT.apply_ptuning(x, adapters["prompt"]))
+    x = hint(x, "act_btd")
+    s_len = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(s_len, dtype=jnp.int32)
+
+    dec_ad = adapters.get("dec_blocks")
+
+    def body(carry, xs):
+        h = carry
+        block, qs, ad, cache = xs
+        self_cache = None if cache is None else cache["self"]
+        a_in = L.rmsnorm(h, block["norm1"], cfg.norm_eps)
+        a_out, new_self, a_st = L.attention(
+            a_in, block["attn"], qs["attn"], cfg, positions=positions,
+            cache=self_cache, adapters=ad)
+        h = hint(h + a_out, "act_btd")
+        x_in = L.rmsnorm(h, block["norm_x"], cfg.norm_eps)
+        new_cross = None
+        if cache is not None and enc_out is None:
+            # decode: cross K/V were cached at prefill
+            x_out, _, x_st = L.attention(
+                x_in, block["xattn"], qs["xattn"], cfg, positions=positions,
+                causal=False, cross_kv=(cache["cross"]["k"],
+                                        cache["cross"]["v"]))
+            new_cross = cache["cross"]
+        else:
+            x_out, _, x_st = L.attention(
+                x_in, block["xattn"], qs["xattn"], cfg, positions=positions,
+                causal=False, kv_override=enc_out)
+            if cache is not None:
+                # prefill: populate the cross-KV cache for later decode steps
+                kh, hd = cfg.n_kv_heads, cfg.head_dim
+                xk, _ = L.apply_qlinear(enc_out, block["xattn"]["wk"],
+                                        cfg.quant, qs["xattn"].get("wk"))
+                xv, _ = L.apply_qlinear(enc_out, block["xattn"]["wv"],
+                                        cfg.quant, qs["xattn"].get("wv"))
+                new_cross = {
+                    "k": xk.reshape(xk.shape[0], xk.shape[1], kh, hd),
+                    "v": xv.reshape(xv.shape[0], xv.shape[1], kh, hd),
+                }
+        h = hint(h + x_out, "act_btd")
+        f_in = L.rmsnorm(h, block["norm2"], cfg.norm_eps)
+        f_out, f_st = L.ffn(f_in, block["ffn"], qs["ffn"], cfg)
+        h = hint(h + f_out, "act_btd")
+        new_cache = None if cache is None else {"self": new_self,
+                                                "cross": new_cross}
+        return h, ({"attn": a_st, "xattn": x_st, "ffn": f_st}, new_cache)
+
+    body = L.remat_wrap(body, remat)
+    xs = (frozen["dec_blocks"], quant_state["dec_blocks"], dec_ad, caches)
+    x, (dec_stats, new_caches) = jax.lax.scan(body, x, xs)
+    stats["dec_blocks"] = dec_stats
+
+    x = L.rmsnorm(x, frozen["final_norm"], cfg.norm_eps)
+    logits = L.unembed(x, frozen["lm_head"], act_dtype, cfg.logits_fp32)
+    return logits, stats, new_caches, jnp.zeros((), jnp.float32)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    act_dtype = L.dt(cfg.act_dtype)
+    kv = L.init_kv_cache(cfg, batch, max_len, act_dtype)
+    cross_shape = (batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim)
+    one = {"self": kv,
+           "cross": {"k": jnp.zeros(cross_shape, act_dtype),
+                     "v": jnp.zeros(cross_shape, act_dtype)}}
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape).copy(), one)

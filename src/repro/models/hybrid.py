@@ -1,0 +1,318 @@
+"""Hybrid (zamba2: Mamba2 + shared attention) and xLSTM (mLSTM + sLSTM)
+model wrappers. Same interface as models/transformer.py.
+
+zamba2 layer layout (total n_layers blocks):
+    n_stages x [ attn_every mamba blocks -> ONE SHARED attention block ]
+    + trailing mamba blocks
+    n_stages = n_layers // (attn_every + 1)
+The attention block's parameters are shared across all applications (the
+Zamba trick); its Quaff scale state is also shared — per-application stats
+are max-reduced before the momentum update.
+
+xLSTM layout: n_stages x [ (slstm_every - 1) mLSTM -> 1 sLSTM ] + trailing
+mLSTM, n_stages = n_layers // slstm_every (0 => pure mLSTM stack).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import peft as PEFT
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.runtime.pspec import hint
+
+
+def zamba_layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    per = cfg.attn_every
+    if per <= 0:
+        return 0, 0, cfg.n_layers
+    n_stages = cfg.n_layers // (per + 1)
+    trailing = cfg.n_layers - n_stages * (per + 1)
+    return n_stages, per, trailing
+
+
+def xlstm_layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    per = cfg.slstm_every
+    if per <= 0:
+        return 0, 0, cfg.n_layers
+    n_stages = cfg.n_layers // per
+    trailing = cfg.n_layers - n_stages * per
+    return n_stages, per - 1, trailing
+
+
+# ===========================================================================
+# zamba2
+# ===========================================================================
+def init_params_zamba(key, cfg: ModelConfig):
+    param_dtype = L.dt(cfg.param_dtype)
+    n_stages, per, trailing = zamba_layout(cfg)
+    keys = jax.random.split(key, 6)
+    frozen: Dict[str, Any] = {
+        "embed": L.init_embedding(keys[0], cfg.vocab_size, cfg.d_model, param_dtype)
+    }
+    qstate: Dict[str, Any] = {}
+
+    def init_m(k):
+        return S.init_mamba_block(k, cfg, cfg.quant, param_dtype)
+
+    if n_stages:
+        ks = jax.random.split(keys[1], n_stages * per).reshape(n_stages, per, 2)
+        frozen["stage_mamba"], qstate["stage_mamba"] = jax.vmap(jax.vmap(init_m))(ks)
+        attn_p, attn_s = L.init_attention(keys[2], cfg, cfg.quant, param_dtype)
+        frozen["shared_attn"] = {"attn": attn_p,
+                                 "norm": L.init_rmsnorm(cfg.d_model)}
+        qstate["shared_attn"] = attn_s
+    if trailing:
+        frozen["trail_mamba"], qstate["trail_mamba"] = jax.vmap(init_m)(
+            jax.random.split(keys[3], trailing))
+    frozen["final_norm"] = L.init_rmsnorm(cfg.d_model)
+    frozen["lm_head"] = {
+        "w": jax.random.normal(keys[4], (cfg.d_model, cfg.vocab_size),
+                               param_dtype) * 0.02}
+
+    adapters: Dict[str, Any] = {}
+    p = cfg.peft
+    if p.method == "lora" and n_stages:
+        k1, k2 = jax.random.split(keys[5])
+        adapters["attn"] = {
+            "lora_q": PEFT.init_lora(k1, cfg.d_model, cfg.q_dim, p.lora_rank),
+            "lora_v": PEFT.init_lora(k2, cfg.d_model, cfg.kv_dim, p.lora_rank),
+        }
+    elif p.method == "ia3" and n_stages:
+        adapters["attn"] = {"ia3": PEFT.init_ia3(cfg.kv_dim, 1)}
+    elif p.method in ("prompt", "ptuning"):
+        adapters["prompt"] = (
+            PEFT.init_prompt(keys[5], p.n_virtual_tokens, cfg.d_model)
+            if p.method == "prompt"
+            else PEFT.init_ptuning(keys[5], p.n_virtual_tokens, cfg.d_model,
+                                   p.ptuning_hidden))
+    return frozen, adapters, qstate
+
+
+def forward_zamba(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
+                  input_embeds=None, caches=None, positions=None, remat=False):
+    act_dtype = L.dt(cfg.act_dtype)
+    n_stages, per, trailing = zamba_layout(cfg)
+    x = L.embed(tokens, frozen["embed"], act_dtype)
+    if "prompt" in adapters:
+        x = (PEFT.apply_prompt(x, adapters["prompt"])
+             if isinstance(adapters["prompt"], PEFT.PromptParams)
+             else PEFT.apply_ptuning(x, adapters["prompt"]))
+    x = hint(x, "act_btd")
+    s_len = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(s_len, dtype=jnp.int32)
+
+    stats: Dict[str, Any] = {}
+    new_caches: Dict[str, Any] = {}
+
+    def mamba_body(carry, xs):
+        h = carry
+        params, qs, cache = xs
+        h2, new_cache, st = S.mamba_block(h, params, qs, cfg, cache)
+        return h + h2, (st, new_cache)
+
+    mamba_body = L.remat_wrap(mamba_body, remat)
+
+    if n_stages:
+        attn_params = frozen["shared_attn"]
+        attn_qs = quant_state["shared_attn"]
+        attn_ad = adapters.get("attn")
+
+        def stage_body(carry, xs):
+            h = carry
+            stage_params, stage_qs, stage_mcache, stage_kvcache = xs
+            h, (m_stats, m_caches) = jax.lax.scan(
+                mamba_body, h, (stage_params, stage_qs, stage_mcache))
+            attn_in = L.rmsnorm(h, attn_params["norm"], cfg.norm_eps)
+            a_out, new_kv, a_stats = L.attention(
+                attn_in, attn_params["attn"], attn_qs, cfg,
+                positions=positions, cache=stage_kvcache, adapters=attn_ad)
+            h = hint(h + a_out, "act_btd")
+            return h, (m_stats, a_stats, m_caches, new_kv)
+
+        stage_mc = None if caches is None else caches["stage_mamba"]
+        stage_kv = None if caches is None else caches["stage_kv"]
+        xs = (frozen["stage_mamba"], quant_state["stage_mamba"], stage_mc, stage_kv)
+        x, (m_stats, a_stats, m_caches, kv_caches) = jax.lax.scan(stage_body, x, xs)
+        stats["stage_mamba"] = m_stats
+        # shared attention: reduce per-application stats (state is shared)
+        stats["shared_attn"] = jax.tree.map(
+            lambda a: None if a is None else jnp.max(a, axis=0), a_stats)
+        new_caches["stage_mamba"] = m_caches
+        new_caches["stage_kv"] = kv_caches
+
+    if trailing:
+        trail_mc = None if caches is None else caches["trail_mamba"]
+        x, (t_stats, t_caches) = jax.lax.scan(
+            mamba_body, x, (frozen["trail_mamba"], quant_state["trail_mamba"],
+                            trail_mc))
+        stats["trail_mamba"] = t_stats
+        new_caches["trail_mamba"] = t_caches
+
+    x = L.rmsnorm(x, frozen["final_norm"], cfg.norm_eps)
+    logits = L.unembed(x, frozen["lm_head"], act_dtype, cfg.logits_fp32)
+    out_caches = new_caches if caches is not None else None
+    return logits, stats, out_caches, jnp.zeros((), jnp.float32)
+
+
+def init_caches_zamba(cfg: ModelConfig, batch: int, max_len: int):
+    act_dtype = L.dt(cfg.act_dtype)
+    n_stages, per, trailing = zamba_layout(cfg)
+    mc = S.init_mamba_cache(cfg, batch, act_dtype)
+    caches: Dict[str, Any] = {}
+    if n_stages:
+        caches["stage_mamba"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None, None],
+                                       (n_stages, per) + a.shape).copy(), mc)
+        kv = L.init_kv_cache(cfg, batch, max_len, act_dtype)
+        caches["stage_kv"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_stages,) + a.shape).copy(), kv)
+    if trailing:
+        caches["trail_mamba"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (trailing,) + a.shape).copy(), mc)
+    return caches
+
+
+# ===========================================================================
+# xLSTM
+# ===========================================================================
+def init_params_xlstm(key, cfg: ModelConfig):
+    param_dtype = L.dt(cfg.param_dtype)
+    n_stages, per_m, trailing = xlstm_layout(cfg)
+    keys = jax.random.split(key, 6)
+    frozen: Dict[str, Any] = {
+        "embed": L.init_embedding(keys[0], cfg.vocab_size, cfg.d_model, param_dtype)
+    }
+    qstate: Dict[str, Any] = {}
+
+    def init_m(k):
+        return S.init_mlstm_block(k, cfg, cfg.quant, param_dtype)
+
+    def init_s(k):
+        return S.init_slstm_block(k, cfg, cfg.quant, param_dtype)
+
+    if n_stages and per_m:
+        ks = jax.random.split(keys[1], n_stages * per_m).reshape(n_stages, per_m, 2)
+        frozen["stage_mlstm"], qstate["stage_mlstm"] = jax.vmap(jax.vmap(init_m))(ks)
+    if n_stages:
+        frozen["stage_slstm"], qstate["stage_slstm"] = jax.vmap(init_s)(
+            jax.random.split(keys[2], n_stages))
+    if trailing:
+        frozen["trail_mlstm"], qstate["trail_mlstm"] = jax.vmap(init_m)(
+            jax.random.split(keys[3], trailing))
+    frozen["final_norm"] = L.init_rmsnorm(cfg.d_model)
+    frozen["lm_head"] = {
+        "w": jax.random.normal(keys[4], (cfg.d_model, cfg.vocab_size),
+                               param_dtype) * 0.02}
+
+    adapters: Dict[str, Any] = {}
+    p = cfg.peft
+    if p.method == "lora":
+        def init_ad(k):
+            return {"lora": PEFT.init_lora(k, cfg.d_model, cfg.d_model,
+                                           p.lora_rank)}
+        if n_stages and per_m:
+            ks = jax.random.split(keys[5], n_stages * per_m).reshape(
+                n_stages, per_m, 2)
+            adapters["stage_mlstm"] = jax.vmap(jax.vmap(init_ad))(ks)
+        if trailing:
+            adapters["trail_mlstm"] = jax.vmap(init_ad)(
+                jax.random.split(keys[5], trailing))
+    elif p.method in ("prompt", "ptuning"):
+        adapters["prompt"] = (
+            PEFT.init_prompt(keys[5], p.n_virtual_tokens, cfg.d_model)
+            if p.method == "prompt"
+            else PEFT.init_ptuning(keys[5], p.n_virtual_tokens, cfg.d_model,
+                                   p.ptuning_hidden))
+    return frozen, adapters, qstate
+
+
+def forward_xlstm(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
+                  input_embeds=None, caches=None, positions=None, remat=False):
+    act_dtype = L.dt(cfg.act_dtype)
+    n_stages, per_m, trailing = xlstm_layout(cfg)
+    x = L.embed(tokens, frozen["embed"], act_dtype)
+    if "prompt" in adapters:
+        x = (PEFT.apply_prompt(x, adapters["prompt"])
+             if isinstance(adapters["prompt"], PEFT.PromptParams)
+             else PEFT.apply_ptuning(x, adapters["prompt"]))
+    x = hint(x, "act_btd")
+
+    stats: Dict[str, Any] = {}
+    new_caches: Dict[str, Any] = {}
+
+    def ml_body(carry, xs):
+        h = carry
+        params, qs, ad, cache = xs
+        h2, new_cache, st = S.mlstm_block(h, params, qs, cfg, cache)
+        if ad is not None:
+            p = cfg.peft
+            xn = L.rmsnorm(h, params["norm"], cfg.norm_eps)
+            h2 = h2 + PEFT.apply_lora(xn, ad["lora"], p.lora_alpha, p.lora_rank)
+        return h + h2, (st, new_cache)
+
+    ml_body = L.remat_wrap(ml_body, remat)
+
+    ml_ad_stage = adapters.get("stage_mlstm")
+    ml_ad_trail = adapters.get("trail_mlstm")
+
+    if n_stages:
+        def stage_body(carry, xs):
+            h = carry
+            (m_params, m_qs, m_ad, m_cache, s_params, s_qs, s_cache) = xs
+            if per_m:
+                h, (m_stats, m_caches) = jax.lax.scan(
+                    ml_body, h, (m_params, m_qs, m_ad, m_cache))
+            else:
+                m_stats, m_caches = None, None
+            h2, new_scache, s_stats = S.slstm_block(h, s_params, s_qs, cfg, s_cache)
+            h = hint(h + h2, "act_btd")
+            return h, (m_stats, s_stats, m_caches, new_scache)
+
+        mc = None if caches is None else caches.get("stage_mlstm")
+        sc = None if caches is None else caches.get("stage_slstm")
+        xs = (frozen.get("stage_mlstm"), quant_state.get("stage_mlstm"),
+              ml_ad_stage, mc, frozen["stage_slstm"],
+              quant_state["stage_slstm"], sc)
+        x, (m_stats, s_stats, m_caches, s_caches) = jax.lax.scan(stage_body, x, xs)
+        if per_m:
+            stats["stage_mlstm"] = m_stats
+            new_caches["stage_mlstm"] = m_caches
+        stats["stage_slstm"] = s_stats
+        new_caches["stage_slstm"] = s_caches
+
+    if trailing:
+        tc = None if caches is None else caches.get("trail_mlstm")
+        x, (t_stats, t_caches) = jax.lax.scan(
+            ml_body, x, (frozen["trail_mlstm"], quant_state["trail_mlstm"],
+                         ml_ad_trail, tc))
+        stats["trail_mlstm"] = t_stats
+        new_caches["trail_mlstm"] = t_caches
+
+    x = L.rmsnorm(x, frozen["final_norm"], cfg.norm_eps)
+    logits = L.unembed(x, frozen["lm_head"], act_dtype, cfg.logits_fp32)
+    out_caches = new_caches if caches is not None else None
+    return logits, stats, out_caches, jnp.zeros((), jnp.float32)
+
+
+def init_caches_xlstm(cfg: ModelConfig, batch: int, max_len: int):
+    n_stages, per_m, trailing = xlstm_layout(cfg)
+    mc = S.init_mlstm_cache(cfg, batch)
+    sc = S.init_slstm_cache(cfg, batch)
+    caches: Dict[str, Any] = {}
+    if n_stages and per_m:
+        caches["stage_mlstm"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None, None],
+                                       (n_stages, per_m) + a.shape).copy(), mc)
+    if n_stages:
+        caches["stage_slstm"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_stages,) + a.shape).copy(), sc)
+    if trailing:
+        caches["trail_mlstm"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (trailing,) + a.shape).copy(), mc)
+    return caches

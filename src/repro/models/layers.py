@@ -1,0 +1,379 @@
+"""Shared quant-aware layers: linear init/apply, norms, RoPE, GQA attention
+(with KV cache + sliding window), FFN, embeddings.
+
+Parameter layout convention: every linear is a dict
+    {"w": <mode-specific weights pytree>}
+and, for Quaff mode, a parallel ScaleState lives in the model-level
+``quant_state`` tree (same key path). Forward fns return (y, stats) where
+stats is the OSSH per-outlier-channel max (or None for non-Quaff modes).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines as B
+from repro.core import outliers as O
+from repro.core import peft as P
+from repro.core.baselines import QuantMode
+from repro.core.quaff_linear import QuaffWeights, prepare_quaff_weights
+from repro.core.scaling import ScaleState
+from repro.models.config import ModelConfig, QuantConfig
+from repro.runtime.pspec import hint
+
+
+def dt(name: str):
+    return jnp.dtype(name)
+
+
+# ---------------------------------------------------------------------------
+# Stats-capture mode: when enabled (trace-time flag), every qlinear emits the
+# FULL per-channel absmax (c_in,) instead of Quaff's outlier-only stats.
+# Used by calibration (outlier identification) and the OSSH hit-rate
+# benchmark. Never combined with momentum updates.
+# ---------------------------------------------------------------------------
+import contextlib
+
+_CAPTURE = False
+
+
+@contextlib.contextmanager
+def capture_stats():
+    global _CAPTURE
+    prev = _CAPTURE
+    _CAPTURE = True
+    try:
+        yield
+    finally:
+        _CAPTURE = prev
+
+
+def capture_enabled() -> bool:
+    return _CAPTURE
+
+
+def remat_wrap(body, remat):
+    """remat: False | True/"nothing" | "dots" (checkpoint_dots_with_no_batch
+    -dims saves GEMM outputs: ~1/3 less recompute, more activation memory)."""
+    if not remat:
+        return body
+    if remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    else:
+        pol = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(body, policy=pol)
+
+
+def spread_indices(c_in: int, count: int) -> jnp.ndarray:
+    """Deterministic placeholder outlier set used at init time; real runs
+    overwrite it via core.calibrate (see repro/train/calibrate.py)."""
+    count = max(1, min(count, c_in))
+    idx = (jnp.arange(count, dtype=jnp.int32) * (c_in // count)) % c_in
+    # de-dup by construction: stride >= 1 and count <= c_in
+    return jnp.sort(idx)
+
+
+def outlier_count(c_in: int, layer_type: str, qcfg: QuantConfig) -> int:
+    return max(1, min(c_in, int(round(O.budget_for(layer_type, qcfg.budgets) * c_in))))
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear init / apply
+# ---------------------------------------------------------------------------
+def init_qlinear(
+    key,
+    c_in: int,
+    c_out: int,
+    layer_type: str,
+    qcfg: QuantConfig,
+    *,
+    bias: bool = False,
+    param_dtype=jnp.float32,
+) -> Tuple[Dict[str, Any], Optional[ScaleState]]:
+    w = jax.random.normal(key, (c_in, c_out), param_dtype) / math.sqrt(c_in)
+    b = jnp.zeros((c_out,), param_dtype) if bias else None
+    mode = QuantMode(qcfg.mode)
+    if mode == QuantMode.QUAFF:
+        idx = spread_indices(c_in, outlier_count(c_in, layer_type, qcfg))
+        wts, state = prepare_quaff_weights(w, idx, b, qcfg.bits)
+        return {"w": wts}, state
+    if mode == QuantMode.SMOOTH_STATIC:
+        wts = B.prepare(mode, w, b, calib_absmax=jnp.ones((c_in,), jnp.float32))
+        return {"w": wts}, None
+    wts = B.prepare(mode, w, b) if mode != QuantMode.FP32 else B.FPWeights(w, b)
+    return {"w": wts}, None
+
+
+def _hint_weight_use(wts, use_kind: str = "col"):
+    """FSDP storage -> gathered-INT8 use constraint, with the Megatron
+    pairing: "col" (column-parallel: c_out over "model", no fwd collective)
+    for q/k/v/up/gate, "row" (row-parallel: c_in over "model", one fwd
+    all-reduce of the small (tokens, d) output) for o/down projections.
+    The row choice replaces a (tokens, d_ff) backward partial-sum all-reduce
+    + fwd activation gather with one (tokens, d) fwd all-reduce — measured in
+    EXPERIMENTS.md §Perf."""
+    def one(arr, ndim_kind):
+        if arr is None:
+            return None
+        return hint(arr, ndim_kind)
+
+    d = wts._asdict() if hasattr(wts, "_asdict") else None
+    if d is None:
+        return wts
+    suffix = "_row" if use_kind == "row" else ""
+    for f in ("w", "w_int", "w_fp"):
+        if f in d and d[f] is not None:
+            kind = ("weight_use2" if d[f].ndim == 2 else
+                    "weight_use3" if d[f].ndim == 3 else None)
+            if kind:
+                d[f] = one(d[f], kind + suffix)
+    return type(wts)(**d)
+
+
+def apply_qlinear(
+    x: jnp.ndarray,
+    lin: Dict[str, Any],
+    qcfg: QuantConfig,
+    state: Optional[ScaleState] = None,
+    lora: Optional[P.LoRAParams] = None,
+    peft_cfg: Optional[P.PEFTConfig] = None,
+    use_kind: str = "col",
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    mode = QuantMode(qcfg.mode)
+    s = state.s if state is not None else None
+    y, stats = B.qlinear(x, _hint_weight_use(lin["w"], use_kind), mode, s=s,
+                     bits=qcfg.bits, bwd_int8=qcfg.bwd_int8)
+    if _CAPTURE:
+        x2d = jax.lax.stop_gradient(x).reshape((-1, x.shape[-1]))
+        stats = jnp.max(jnp.abs(x2d.astype(jnp.float32)), axis=0)  # (c_in,)
+    if lora is not None:
+        y = y + P.apply_lora(x, lora, peft_cfg.lora_alpha, peft_cfg.lora_rank)
+    return y, stats
+
+
+# ---------------------------------------------------------------------------
+# Norms / embeddings / positions
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(x: jnp.ndarray, p: Dict[str, jnp.ndarray], eps: float) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    return {"tokens": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(tokens: jnp.ndarray, emb: Dict[str, jnp.ndarray], dtype) -> jnp.ndarray:
+    return jnp.take(emb["tokens"], tokens, axis=0).astype(dtype)
+
+
+def unembed(x: jnp.ndarray, emb_or_head, dtype, fp32: bool = True) -> jnp.ndarray:
+    """Project to vocab. Tied: x @ E^T; untied: fp linear (lm_head stays fp —
+    the paper quantizes interior linears; the head feeds the softmax).
+    ``fp32=False`` computes the projection in act dtype (bf16 on TPU) —
+    halves the biggest fp GEMM + the logits residency (SPerf knob); the loss
+    still reduces in fp32."""
+    w = emb_or_head["tokens"].T if "tokens" in emb_or_head else emb_or_head["w"]
+    cdt = jnp.float32 if fp32 else dtype
+    logits = x.astype(cdt) @ w.astype(cdt)
+    return hint(logits, "logits")
+
+
+def sinusoidal_positions(n_pos: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(n_pos, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    pe = jnp.zeros((n_pos, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) or (S,) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window, optional KV cache)
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, qcfg: QuantConfig, param_dtype):
+    ks = jax.random.split(key, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    wq, sq = init_qlinear(ks[0], d, qd, "q_proj", qcfg, bias=cfg.qkv_bias,
+                          param_dtype=param_dtype)
+    wk, sk = init_qlinear(ks[1], d, kvd, "k_proj", qcfg, bias=cfg.qkv_bias,
+                          param_dtype=param_dtype)
+    wv, sv = init_qlinear(ks[2], d, kvd, "v_proj", qcfg, bias=cfg.qkv_bias,
+                          param_dtype=param_dtype)
+    wo, so = init_qlinear(ks[3], qd, d, "o_proj", qcfg, param_dtype=param_dtype)
+    params = {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+    states = {"wq": sq, "wk": sk, "wv": sv, "wo": so}
+    return params, states
+
+
+def _gqa_scores_softmax_out(q, k, v, mask):
+    """q: (B,S,KH,G,hd); k,v: (B,T,KH,hd); mask: broadcastable (B,1,1,S,T)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bskgh,btkh->bkgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
+    return out
+
+
+def attention(
+    x: jnp.ndarray,
+    params: Dict[str, Any],
+    states: Dict[str, Optional[ScaleState]],
+    cfg: ModelConfig,
+    *,
+    positions: jnp.ndarray,            # (S,) or (B,S) query positions
+    is_global: bool = True,            # False -> sliding window layer
+    causal: bool = True,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,   # decode KV cache
+    adapters: Optional[Dict[str, Any]] = None,
+    kv_override: Optional[jnp.ndarray] = None,        # cross-attention input
+    cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # cached (k,v)
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]], Dict[str, Any]]:
+    """Returns (y, new_cache, stats). Shapes: x (B,S,D)."""
+    qcfg, pcfg = cfg.quant, cfg.peft
+    bsz, s_len, _ = x.shape
+    kh, h, hd = cfg.n_kv_heads, cfg.n_heads, cfg.head_dim
+    g = h // kh
+    ad = adapters or {}
+
+    q, st_q = apply_qlinear(x, params["wq"], qcfg, states.get("wq"),
+                            ad.get("lora_q"), pcfg)
+    if cross_kv is not None:
+        # precomputed cross-attention K/V (enc-dec decode path)
+        k, v = cross_kv
+        q = q.reshape(bsz, s_len, kh, g, hd)
+        mask = jnp.ones((1, 1, 1, s_len, k.shape[1]), dtype=bool)
+        out = _gqa_scores_softmax_out(q, k, v, mask)
+        out = out.reshape(bsz, s_len, h * hd).astype(x.dtype)
+        y, st_o = apply_qlinear(out, params["wo"], qcfg, states.get("wo"),
+                                use_kind="row")
+        return y, None, {"wq": st_q, "wk": None, "wv": None, "wo": st_o}
+    kv_in = kv_override if kv_override is not None else x
+    k, st_k = apply_qlinear(kv_in, params["wk"], qcfg, states.get("wk"))
+    v, st_v = apply_qlinear(kv_in, params["wv"], qcfg, states.get("wv"),
+                            ad.get("lora_v"), pcfg)
+
+    q = hint(q.reshape(bsz, s_len, kh, g, hd), "attn_q")
+    k = hint(k.reshape(bsz, kv_in.shape[1], kh, hd), "attn_kv")
+    v = hint(v.reshape(bsz, kv_in.shape[1], kh, hd), "attn_kv")
+    if "ia3" in ad:
+        k = k * ad["ia3"].l_k.reshape(1, 1, kh, hd).astype(k.dtype)
+        v = v * ad["ia3"].l_v.reshape(1, 1, kh, hd).astype(v.dtype)
+
+    if cfg.use_rope and kv_override is None:
+        q4 = q.reshape(bsz, s_len, kh * g, hd)
+        q = apply_rope(q4, positions, cfg.rope_theta).reshape(bsz, s_len, kh, g, hd)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and kv_override is None:
+        # decode: write this step's k/v at cache["pos"], attend over buffer
+        pos = cache["pos"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, pos, 0, 0))
+        new_cache = {"k": ck, "v": cv, "pos": pos + s_len}
+        k, v = hint(ck, "kv_cache"), hint(cv, "kv_cache")
+        t_len = k.shape[1]
+        k_pos = jnp.arange(t_len, dtype=jnp.int32)[None, :]          # (1,T)
+        q_pos = (pos + jnp.arange(s_len, dtype=jnp.int32))[:, None]  # (S,1)
+        mask = k_pos <= q_pos                                        # (S,T)
+        if cfg.sliding_window:
+            # is_global may be a traced bool (scanned local/global pattern)
+            win = (q_pos - k_pos) < cfg.sliding_window
+            mask = jnp.logical_and(mask, jnp.logical_or(win, is_global))
+        mask = mask[None, None, None, :, :]
+    else:
+        t_len = k.shape[1]
+        if causal and kv_override is None:
+            q_pos = jnp.arange(s_len, dtype=jnp.int32)[:, None]
+            k_pos = jnp.arange(t_len, dtype=jnp.int32)[None, :]
+            mask = k_pos <= q_pos
+            if cfg.sliding_window:
+                win = (q_pos - k_pos) < cfg.sliding_window
+                mask = jnp.logical_and(mask, jnp.logical_or(win, is_global))
+            mask = mask[None, None, None, :, :]
+        else:
+            mask = jnp.ones((1, 1, 1, s_len, t_len), dtype=bool)
+
+    out = _gqa_scores_softmax_out(q, k, v, mask)
+    out = out.reshape(bsz, s_len, h * hd).astype(x.dtype)
+    y, st_o = apply_qlinear(out, params["wo"], qcfg, states.get("wo"),
+                            use_kind="row")
+    stats = {"wq": st_q, "wk": st_k, "wv": st_v, "wo": st_o}
+    return y, new_cache, stats
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict[str, jnp.ndarray]:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN (SwiGLU or GELU)
+# ---------------------------------------------------------------------------
+def init_ffn(key, cfg: ModelConfig, qcfg: QuantConfig, param_dtype):
+    ks = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    params, states = {}, {}
+    if cfg.ffn_type == "swiglu":
+        params["gate"], states["gate"] = init_qlinear(
+            ks[0], d, f, "gate_proj", qcfg, param_dtype=param_dtype)
+    params["up"], states["up"] = init_qlinear(
+        ks[1], d, f, "up_proj", qcfg, param_dtype=param_dtype)
+    params["down"], states["down"] = init_qlinear(
+        ks[2], f, d, "down_proj", qcfg, param_dtype=param_dtype)
+    return params, states
+
+
+def ffn(x, params, states, cfg: ModelConfig, adapters=None):
+    qcfg = cfg.quant
+    ad = adapters or {}
+    stats = {}
+    if cfg.ffn_type == "swiglu":
+        gate, stats["gate"] = apply_qlinear(x, params["gate"], qcfg, states.get("gate"))
+        up, stats["up"] = apply_qlinear(x, params["up"], qcfg, states.get("up"))
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        up, stats["up"] = apply_qlinear(x, params["up"], qcfg, states.get("up"))
+        h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    if "ia3" in ad:
+        h = h * ad["ia3"].l_ff.astype(h.dtype)
+    h = hint(h, "act_btf")
+    y, stats["down"] = apply_qlinear(h, params["down"], qcfg,
+                                     states.get("down"), use_kind="row")
+    return y, stats

@@ -1,0 +1,76 @@
+"""Family dispatch: one uniform functional interface over the model zoo.
+
+    init_params(key, cfg)  -> (frozen, adapters, quant_state)
+    forward(...)           -> (logits, stats, new_caches, aux_loss)
+    init_caches(cfg, B, S) -> decode caches
+
+Families: dense | moe | vlm (transformer.py), hybrid (zamba2), ssm (xlstm),
+encdec (whisper). VLM/audio frontends are stubs: ``input_embeds`` carries
+precomputed patch/frame embeddings per the assignment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, transformer
+from repro.models.config import ModelConfig
+
+
+def init_params(key, cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.init_params(key, cfg)
+    if cfg.family == "hybrid":
+        return hybrid.init_params_zamba(key, cfg)
+    if cfg.family == "ssm":
+        return hybrid.init_params_xlstm(key, cfg)
+    if cfg.family == "encdec":
+        return encdec.init_params(key, cfg)
+    raise ValueError(cfg.family)
+
+
+def forward(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
+            input_embeds=None, caches=None, positions=None, remat=False,
+            enc_out=None):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.forward(frozen, adapters, quant_state, tokens, cfg,
+                                   input_embeds=input_embeds, caches=caches,
+                                   positions=positions, remat=remat)
+    if cfg.family == "hybrid":
+        return hybrid.forward_zamba(frozen, adapters, quant_state, tokens, cfg,
+                                    input_embeds=input_embeds, caches=caches,
+                                    positions=positions, remat=remat)
+    if cfg.family == "ssm":
+        return hybrid.forward_xlstm(frozen, adapters, quant_state, tokens, cfg,
+                                    input_embeds=input_embeds, caches=caches,
+                                    positions=positions, remat=remat)
+    if cfg.family == "encdec":
+        return encdec.forward(frozen, adapters, quant_state, tokens, cfg,
+                              input_embeds=input_embeds, caches=caches,
+                              positions=positions, remat=remat, enc_out=enc_out)
+    raise ValueError(cfg.family)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.init_caches(cfg, batch, max_len)
+    if cfg.family == "hybrid":
+        return hybrid.init_caches_zamba(cfg, batch, max_len)
+    if cfg.family == "ssm":
+        return hybrid.init_caches_xlstm(cfg, batch, max_len)
+    if cfg.family == "encdec":
+        return encdec.init_caches(cfg, batch, max_len)
+    raise ValueError(cfg.family)
+
+
+def has_decode(cfg: ModelConfig) -> bool:
+    """Encoder-only archs would return False; all assigned archs decode."""
+    return True
+
+
+def supports_long_context(cfg: ModelConfig) -> bool:
+    """long_500k applicability: SSM/hybrid (O(1)-state decode) and the
+    5:1 local:global sliding-window arch. Pure full-attention archs are
+    skipped per the assignment rule (see DESIGN.md)."""
+    return cfg.family in ("hybrid", "ssm") or bool(cfg.sliding_window)

@@ -1,0 +1,226 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch (GShard-style
+positions, scatter into a dense (E, C, d) buffer so expert GEMMs are batched
+and EP-shardable over the mesh "model"/"data" axes via sharding hints).
+
+Quaff on experts: the outlier channel set O and the momentum scale s are
+per-layer (shared across experts — outliers are a property of the hidden
+stream feeding the experts, not of the expert; tests/test_moe.py checks
+dispatch exactness and tests/test_smoke_archs.py exercises the quant path),
+while W_int / W_O are per-expert.
+
+No dropless guarantees: tokens over capacity are dropped (standard GShard);
+``capacity_factor`` controls the drop rate. An aux load-balancing loss
+(Switch-style) is returned for the train loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines as B
+from repro.core.baselines import QuantMode
+from repro.core.quaff_linear import QuaffWeights, prepare_quaff_weights, quaff_matmul
+from repro.core.scaling import ScaleState
+from repro.models.config import ModelConfig, QuantConfig
+from repro.models.layers import init_qlinear, outlier_count, spread_indices
+from repro.runtime.pspec import hint
+
+
+def init_moe(key, cfg: ModelConfig, qcfg: QuantConfig, param_dtype):
+    """Router (fp32, small) + per-expert SwiGLU weights, expert dim leading."""
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    router = jax.random.normal(ks[0], (d, e), jnp.float32) * 0.02
+
+    def init_expert(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        gate, s_g = init_qlinear(k1, d, f, "gate_proj", qcfg, param_dtype=param_dtype)
+        up, s_u = init_qlinear(k2, d, f, "up_proj", qcfg, param_dtype=param_dtype)
+        down, s_d = init_qlinear(k3, f, d, "down_proj", qcfg, param_dtype=param_dtype)
+        return {"gate": gate, "up": up, "down": down}, {"gate": s_g, "up": s_u,
+                                                        "down": s_d}
+
+    params_e, states_e = jax.vmap(init_expert)(jax.random.split(ks[1], e))
+    # shared-across-experts scale state: collapse the expert dim (max is a
+    # safe upper bound for |W| normalization)
+    if QuantMode(qcfg.mode) == QuantMode.QUAFF:
+        # collapse the expert dim of the scale state (shared across experts;
+        # max|W| over experts is a safe normalizer upper bound)
+        states = jax.tree.map(lambda x: jnp.max(x, axis=0), states_e)
+        # outlier_idx must be expert-invariant: drop the vmapped copies
+        def fix_idx(w):
+            if isinstance(w, QuaffWeights):
+                return w._replace(outlier_idx=w.outlier_idx[0])
+            return w
+        params_e = jax.tree.map(fix_idx, params_e,
+                                is_leaf=lambda x: isinstance(x, QuaffWeights))
+    else:
+        states = {"gate": None, "up": None, "down": None}
+    return {"router": router, "experts": params_e}, states
+
+
+def _expert_linear(xe, wts, qcfg: QuantConfig, state: Optional[ScaleState],
+                   use_kind: str = "col"):
+    """xe: (E, C, c_in); wts: per-expert stacked weights pytree."""
+    from repro.models.layers import _hint_weight_use, capture_enabled
+
+    wts = dict(wts)
+    wts["w"] = _hint_weight_use(wts["w"], use_kind)
+    mode = QuantMode(qcfg.mode)
+    if mode == QuantMode.QUAFF:
+        def one(x_i, w_int, w_delta, w_outlier):
+            w = QuaffWeights(w_int, w_delta, w_outlier, wts["w"].outlier_idx, None)
+            return quaff_matmul(x_i, w, state.s, qcfg.bits, qcfg.bwd_int8)
+        y, stats = jax.vmap(one)(xe, wts["w"].w_int, wts["w"].w_delta,
+                                 wts["w"].w_outlier)
+        stats = jnp.max(stats, axis=0)
+    else:
+        def one_b(x_i, w):
+            return B.qlinear(x_i, w, mode, bits=qcfg.bits,
+                             bwd_int8=qcfg.bwd_int8)[0]
+        y = jax.vmap(one_b)(xe, wts["w"])
+        stats = None
+    if capture_enabled():
+        x2d = jax.lax.stop_gradient(xe).reshape((-1, xe.shape[-1]))
+        stats = jnp.max(jnp.abs(x2d.astype(jnp.float32)), axis=0)
+    return y, stats
+
+
+def _ct_impl(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """Quantize per token -> transpose dims 0/1 with the sharding hint on the
+    INT8 payload (so the all-to-all moves int8) -> dequantize locally."""
+    from repro.core import quant as Q
+    from repro.runtime.pspec import hint as H
+
+    x_int, delta = Q.quantize(x, axis=-1)
+    x_int = H(jnp.swapaxes(x_int, 0, 1), kind)
+    delta = H(jnp.swapaxes(delta, 0, 1), kind)
+    return (x_int.astype(x.dtype) * delta.astype(x.dtype))
+
+
+def _compressed_transpose(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """INT8-compressed (G,E,c,d)<->(E,G,c,d) transpose. Both directions of
+    autodiff compress: the backward cotangent crosses the mesh quantized
+    too (custom_vjp — int8 arrays have no JAX tangents otherwise)."""
+    rev_kind = ("moe_group_buf" if kind == "moe_expert_buf"
+                else "moe_expert_buf")
+
+    @jax.custom_vjp
+    def ct(v):
+        return _ct_impl(v, kind)
+
+    def ct_fwd(v):
+        return _ct_impl(v, kind), None
+
+    def ct_bwd(_, g):
+        return (_ct_impl(g, rev_kind),)
+
+    ct.defvjp(ct_fwd, ct_bwd)
+    return ct(x)
+
+
+def moe_ffn(
+    x: jnp.ndarray,
+    params: Dict[str, Any],
+    states: Dict[str, Optional[ScaleState]],
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, Any]]:
+    """x: (B, S, D) -> (y, aux_loss, stats).
+
+    GShard grouped dispatch: tokens are split into ``moe_groups`` independent
+    routing groups aligned with the data shards. All cumsums/scatters are
+    group-local (shard-local on the mesh); the only cross-shard movement is
+    the (g, e, c, d) -> (e, g, c, d) transpose, which GSPMD lowers to ONE
+    all-to-all over the "data" axis — the canonical EP collective."""
+    qcfg = cfg.quant
+    bsz, s_len, d = x.shape
+    t = bsz * s_len
+    e, k = cfg.n_experts, cfg.top_k
+    g = max(1, min(cfg.moe_groups, t))
+    while t % g:
+        g //= 2
+    tg = t // g
+    cap = max(1, int(math.ceil(cfg.capacity_factor * tg * k / e)))
+
+    xt = hint(x.reshape(g, tg, d), "moe_tokens")
+    logits = xt.astype(jnp.float32) @ params["router"]          # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)               # (G, Tg, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)       # renormalize
+
+    # Switch-style aux loss: E * sum_e (frac_tokens_e * frac_probs_e)
+    assign_onehot = jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32)
+    frac_tokens = jnp.mean(assign_onehot, axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    # group-local GShard positions: (G, Tg, E) cumsums only
+    pos_list, keep_list = [], []
+    base = jnp.zeros((g, 1, e), jnp.int32)
+    for j in range(k):
+        onehot_j = jax.nn.one_hot(gate_idx[..., j], e, dtype=jnp.int32)
+        pos_in_e = jnp.cumsum(onehot_j, axis=1) - 1 + base
+        pos_j = jnp.sum(pos_in_e * onehot_j, axis=-1)           # (G, Tg)
+        keep_j = pos_j < cap
+        pos_list.append(jnp.where(keep_j, pos_j, cap))
+        keep_list.append(keep_j)
+        base = base + jnp.sum(onehot_j, axis=1, keepdims=True)
+
+    pos = jnp.stack(pos_list, axis=-1)       # (G, Tg, k)
+    keep = jnp.stack(keep_list, axis=-1)     # (G, Tg, k)
+    flat_slot = gate_idx * (cap + 1) + pos   # (G, Tg, k)
+
+    # group-local dispatch: k batched scatters of (G, Tg, D)
+    def scatter_group(buf_g, slot_g, x_g):
+        return buf_g.at[slot_g].set(x_g, mode="drop")
+
+    buf = jnp.zeros((g, e * (cap + 1), d), x.dtype)
+    for j in range(k):
+        buf = jax.vmap(scatter_group)(buf, flat_slot[..., j], xt)
+    buf = buf.reshape(g, e, cap + 1, d)[:, :, :cap, :]
+    buf = hint(buf, "moe_group_buf")
+
+    # group -> expert transpose: THE all-to-all. Optional INT8 compression
+    # (per-token quantized payload, fp deltas ride along) cuts the wire
+    # bytes 2x vs bf16 / 4x vs fp32 — the Quaff idea applied to the EP
+    # collective itself (EXPERIMENTS.md §Perf, beyond-paper).
+    if cfg.moe_int8_dispatch:
+        buf = _compressed_transpose(buf, "moe_expert_buf")      # (E, G, cap, D)
+    else:
+        buf = hint(jnp.swapaxes(buf, 0, 1), "moe_expert_buf")
+    buf = buf.reshape(e, g * cap, d)
+    buf = hint(buf, "moe_buffer")
+
+    # expert SwiGLU
+    stats: Dict[str, Any] = {}
+    gate_h, stats["gate"] = _expert_linear(buf, params["experts"]["gate"], qcfg,
+                                           states.get("gate"))
+    up_h, stats["up"] = _expert_linear(buf, params["experts"]["up"], qcfg,
+                                       states.get("up"))
+    h = jax.nn.silu(gate_h.astype(jnp.float32)).astype(x.dtype) * up_h
+    h = hint(h, "moe_buffer_f")
+    # NOTE: expert down stays COLUMN-parallel: with top-k token duplication
+    # a row-parallel fwd all-reduce moves k x more bytes than the dense case
+    # — measured worse (EXPERIMENTS.md §Perf, kimi iteration 3).
+    out, stats["down"] = _expert_linear(h, params["experts"]["down"], qcfg,
+                                        states.get("down"))
+    out = hint(out.reshape(e, g, cap, d), "moe_expert_buf")
+
+    # expert -> group transpose (all-to-all back) + local combine
+    if cfg.moe_int8_dispatch:
+        out = _compressed_transpose(out, "moe_group_buf")       # (G, E, cap, D)
+    else:
+        out = hint(jnp.swapaxes(out, 0, 1), "moe_group_buf")
+    pad = jnp.zeros((g, e, 1, d), out.dtype)
+    out_p = jnp.concatenate([out, pad], axis=2).reshape(g, e * (cap + 1), d)
+    w = (gate_vals * keep.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.zeros((g, tg, d), x.dtype)
+    for j in range(k):
+        gathered = jax.vmap(lambda o_g, s_g: o_g[s_g])(out_p, flat_slot[..., j])
+        y = y + gathered * w[..., j:j + 1]
+    y = hint(y, "moe_tokens")
+    return y.reshape(bsz, s_len, d), aux, stats

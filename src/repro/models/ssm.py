@@ -1,0 +1,352 @@
+"""SSM blocks: Mamba2 (SSD, chunked) for zamba2 and mLSTM/sLSTM for xLSTM.
+
+Quaff coverage: the in/out projections (the FLOP-dominant GEMMs) are
+quantized; the recurrence itself is activation-only (no weight GEMM), so
+there is nothing to quantize there — see DESIGN.md §Arch-applicability.
+
+Mamba2 uses the chunked SSD form for train/prefill (intra-chunk quadratic +
+inter-chunk scan; memory O(S·c) not O(S²)) and the O(1) recurrence for
+decode. mLSTM uses the stabilized parallel form for train/prefill and the
+matrix-memory recurrence for decode (tested against each other). sLSTM is
+sequential by construction (recurrent gate mixing) and runs under lax.scan.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, QuantConfig
+from repro.runtime.pspec import hint
+
+CHUNK = 128
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+def mamba_dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    p = cfg.ssm_head_dim
+    h = di // p
+    n = cfg.ssm_state
+    conv_dim = di + 2 * n
+    return di, p, h, n, conv_dim
+
+
+def init_mamba_block(key, cfg: ModelConfig, qcfg: QuantConfig, param_dtype):
+    di, p, h, n, conv_dim = mamba_dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    in_dim = 2 * di + 2 * n + h  # z, x, B, C, dt
+    w_in, s_in = L.init_qlinear(k1, cfg.d_model, in_dim, "up_proj", qcfg,
+                                param_dtype=param_dtype)
+    w_out, s_out = L.init_qlinear(k2, di, cfg.d_model, "down_proj", qcfg,
+                                  param_dtype=param_dtype)
+    params = {
+        "in_proj": w_in,
+        "out_proj": w_out,
+        "conv_w": jax.random.normal(k3, (cfg.conv_kernel, conv_dim), param_dtype)
+        * (1.0 / math.sqrt(cfg.conv_kernel)),
+        "conv_b": jnp.zeros((conv_dim,), param_dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": L.init_rmsnorm(di),
+    }
+    return params, {"in_proj": s_in, "out_proj": s_out}
+
+
+def _causal_depthwise_conv(x, w, b, state=None):
+    """x: (B,S,C); w: (K,C). Returns (y, new_state) with new_state the last
+    K-1 inputs (for decode). Train path pads with zeros on the left."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(k))
+    y = y + b[None, None, :]
+    new_state = xp[:, -(k - 1):, :]
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _ssd_chunked(xh, bc, cc, dt, a_log):
+    """Chunked SSD scan.
+    xh: (B,S,H,P)  bc/cc: (B,S,N)  dt: (B,S,H) (post-softplus)  a_log: (H,)
+    Returns y: (B,S,H,P).
+    """
+    bsz, s, h, p = xh.shape
+    n = bc.shape[-1]
+    c = min(CHUNK, s)
+    nc = s // c
+    assert nc * c == s, f"seq {s} not divisible by chunk {c}"
+
+    f32 = jnp.float32
+    xh = xh.astype(f32).reshape(bsz, nc, c, h, p)
+    bc = bc.astype(f32).reshape(bsz, nc, c, n)
+    cc = cc.astype(f32).reshape(bsz, nc, c, n)
+    dt = dt.astype(f32).reshape(bsz, nc, c, h)
+    a = -jnp.exp(a_log.astype(f32))                      # (H,) negative
+    la = dt * a[None, None, None, :]                     # log decay per step
+    cum = jnp.cumsum(la, axis=2)                         # (B,nc,c,H)
+
+    # intra-chunk: scores[t,s'] = (C_t . B_s') * exp(cum_t - cum_s') * dt_s'
+    # NOTE: the mask is applied to the EXPONENT (not post-exp) — above the
+    # diagonal cum_t - cum_s' > 0 and exp() overflows, which poisons the
+    # backward pass through jnp.where (NaN * 0 = NaN).
+    cb = jnp.einsum("bztn,bzsn->bzts", cc, bc)           # (B,nc,c,c)
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    dcum = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,t,s,H)
+    dcum = jnp.where(causal[None, None, :, :, None], dcum, -1e30)
+    scores = cb[..., None] * jnp.exp(dcum) * dt[:, :, None, :, :]
+    y_intra = jnp.einsum("bztsh,bzshp->bzthp", scores, xh)
+
+    # chunk states: S_z = sum_s exp(cum_end - cum_s) dt_s B_s (x) x_s
+    end_decay = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,c,H)
+    sbx = jnp.einsum("bzsh,bzsn,bzshp->bzhpn", end_decay * dt, bc, xh)
+
+    # inter-chunk recurrence over nc
+    chunk_la = cum[:, :, -1, :]                           # (B,nc,H)
+
+    def scan_fn(hprev, inp):
+        s_z, la_z = inp                                   # (B,H,P,N), (B,H)
+        h_new = hprev * jnp.exp(la_z)[:, :, None, None] + s_z
+        return h_new, hprev
+
+    h0 = jnp.zeros((bsz, h, p, n), f32)
+    h_last, h_before = jax.lax.scan(
+        scan_fn, h0, (jnp.moveaxis(sbx, 1, 0), jnp.moveaxis(chunk_la, 1, 0)))
+    h_before = jnp.moveaxis(h_before, 0, 1)               # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bztn,bzhpn->bzthp", cc, h_before) * jnp.exp(cum)[
+        :, :, :, :, None]
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, h_last
+
+
+def mamba_block(x, params, states, cfg: ModelConfig, cache=None):
+    """x: (B,S,D) -> (y, new_cache, stats). cache: {"conv": (B,K-1,C),
+    "h": (B,H,P,N)} for decode (S==1)."""
+    qcfg = cfg.quant
+    di, p, h, n, conv_dim = mamba_dims(cfg)
+    bsz, s, _ = x.shape
+
+    zxbcdt, st_in = L.apply_qlinear(x, params["in_proj"], qcfg, states.get("in_proj"))
+    z, xin, bc, cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bc, cc], axis=-1)
+    conv_state = None if cache is None else cache["conv"]
+    conv_out, new_conv = _causal_depthwise_conv(
+        conv_in, params["conv_w"], params["conv_b"], conv_state)
+    xin, bc, cc = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    xh = xin.reshape(bsz, s, h, p)
+
+    if cache is None:
+        y, _ = _ssd_chunked(xh, bc, cc, dt, params["a_log"])
+        new_h = None
+    elif s > 1:
+        # prefill: parallel form from a FRESH state + emit the final state
+        y, new_h = _ssd_chunked(xh, bc, cc, dt, params["a_log"])
+    else:
+        # decode: O(1) recurrence h' = h*exp(dt*A) + dt * B (x) x ; y = C.h
+        a = -jnp.exp(params["a_log"].astype(jnp.float32))
+        la = dt[:, 0, :] * a[None, :]                     # (B,H)
+        hprev = cache["h"].astype(jnp.float32)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0, :], bc[:, 0].astype(jnp.float32),
+                         xh[:, 0].astype(jnp.float32))
+        hnew = hprev * jnp.exp(la)[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", cc[:, 0].astype(jnp.float32), hnew)[:, None]
+        new_h = hnew
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = L.rmsnorm(y, params["norm"], cfg.norm_eps)
+    y = hint(y, "act_btf")
+    out, st_out = L.apply_qlinear(y, params["out_proj"], qcfg,
+                              states.get("out_proj"), use_kind="row")
+    new_cache = None if cache is None else {"conv": new_conv, "h": new_h}
+    return out, new_cache, {"in_proj": st_in, "out_proj": st_out}
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    di, p, h, n, conv_dim = mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_dim), dtype),
+        "h": jnp.zeros((batch, h, p, n), jnp.float32),
+    }
+
+
+# ===========================================================================
+# mLSTM (xLSTM) — stabilized parallel + recurrent forms
+# ===========================================================================
+def init_mlstm_block(key, cfg: ModelConfig, qcfg: QuantConfig, param_dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    wq, sq = L.init_qlinear(ks[0], d, d, "q_proj", qcfg, param_dtype=param_dtype)
+    wk, sk = L.init_qlinear(ks[1], d, d, "k_proj", qcfg, param_dtype=param_dtype)
+    wv, sv = L.init_qlinear(ks[2], d, d, "v_proj", qcfg, param_dtype=param_dtype)
+    wo, so = L.init_qlinear(ks[3], d, d, "o_proj", qcfg, param_dtype=param_dtype)
+    params = {
+        "wq": wq, "wk": wk, "wv": wv, "wo": wo,
+        "w_if": jax.random.normal(ks[4], (d, 2 * h), jnp.float32) * 0.02,
+        "b_if": jnp.concatenate([jnp.zeros((h,)), 3.0 * jnp.ones((h,))]),
+        "w_og": jax.random.normal(ks[5], (d, d), jnp.float32) * 0.02,
+        "norm": L.init_rmsnorm(d),
+    }
+    return params, {"wq": sq, "wk": sk, "wv": sv, "wo": so}
+
+
+def mlstm_block(x, params, states, cfg: ModelConfig, cache=None):
+    """x: (B,S,D). cache: {"C": (B,H,P,P), "n": (B,H,P), "m": (B,H)}."""
+    qcfg = cfg.quant
+    bsz, s, d = x.shape
+    h = cfg.n_heads
+    p = d // h
+    xn = L.rmsnorm(x, params["norm"], cfg.norm_eps)
+
+    q, st_q = L.apply_qlinear(xn, params["wq"], qcfg, states.get("wq"))
+    k, st_k = L.apply_qlinear(xn, params["wk"], qcfg, states.get("wk"))
+    v, st_v = L.apply_qlinear(xn, params["wv"], qcfg, states.get("wv"))
+    q = q.reshape(bsz, s, h, p).astype(jnp.float32)
+    k = k.reshape(bsz, s, h, p).astype(jnp.float32) / math.sqrt(p)
+    v = v.reshape(bsz, s, h, p).astype(jnp.float32)
+
+    gates = xn.astype(jnp.float32) @ params["w_if"] + params["b_if"][None, None, :]
+    log_i, log_f_raw = jnp.split(gates, 2, axis=-1)       # (B,S,H)
+    log_f = jax.nn.log_sigmoid(log_f_raw)
+
+    if cache is None or s > 1:
+        # parallel stabilized form: D[t,s] = sum_{j=s+1..t} log_f_j + log_i_s
+        cum_f = jnp.cumsum(log_f, axis=1)                 # (B,S,H)
+        dmat = (cum_f[:, :, None, :] - cum_f[:, None, :, :]
+                + log_i[:, None, :, :])                   # (B,t,s,H)
+        causal = jnp.tril(jnp.ones((s, s), bool))
+        dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+        m = jnp.max(dmat, axis=2, keepdims=True)          # (B,t,1,H)
+        dexp = jnp.exp(dmat - m)
+        scores = jnp.einsum("bthp,bshp->btsh", q, k) * dexp
+        norm = jnp.maximum(
+            jnp.abs(jnp.sum(scores, axis=2)), jnp.exp(-m[:, :, 0, :]))  # (B,t,H)
+        y = jnp.einsum("btsh,bshp->bthp", scores, v) / norm[..., None]
+        new_cache = None
+        if cache is not None:
+            # prefill from a FRESH state: emit the final (C, n, m) so decode
+            # can continue. rel[s] = sum_{j>s} log_f_j + log_i_s.
+            rel = cum_f[:, -1:, :] - cum_f + log_i        # (B,S,H)
+            m_end = jnp.max(rel, axis=1)                  # (B,H)
+            w_s = jnp.exp(rel - m_end[:, None, :])        # (B,S,H)
+            c_end = jnp.einsum("bsh,bshp,bshr->bhpr", w_s, v, k)
+            n_end = jnp.einsum("bsh,bshp->bhp", w_s, k)
+            new_cache = {"C": c_end, "n": n_end, "m": m_end}
+    else:
+        cmat, n_s, m_s = (cache["C"].astype(jnp.float32),
+                          cache["n"].astype(jnp.float32),
+                          cache["m"].astype(jnp.float32))
+        li, lf = log_i[:, 0], log_f[:, 0]                 # (B,H)
+        m_new = jnp.maximum(lf + m_s, li)
+        f_act = jnp.exp(lf + m_s - m_new)[:, :, None]
+        i_act = jnp.exp(li - m_new)[:, :, None]
+        kt, vt, qt = k[:, 0], v[:, 0], q[:, 0]            # (B,H,P)
+        cmat = cmat * f_act[..., None] + i_act[..., None] * jnp.einsum(
+            "bhp,bhr->bhpr", vt, kt)
+        n_s = n_s * f_act + i_act * kt
+        hnum = jnp.einsum("bhpr,bhr->bhp", cmat, qt)
+        hden = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n_s, qt)),
+                           jnp.exp(-m_new))[..., None]
+        y = (hnum / hden)[:, None]                        # (B,1,H,P)
+        new_cache = {"C": cmat, "n": n_s, "m": m_new}
+
+    o = jax.nn.sigmoid(xn.astype(jnp.float32) @ params["w_og"])
+    y = (y.reshape(bsz, s, d) * o).astype(x.dtype)
+    out, st_o = L.apply_qlinear(y, params["wo"], qcfg,
+                            states.get("wo"), use_kind="row")
+    return out, new_cache, {"wq": st_q, "wk": st_k, "wv": st_v, "wo": st_o}
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int):
+    h, p = cfg.n_heads, cfg.d_model // cfg.n_heads
+    return {
+        "C": jnp.zeros((batch, h, p, p), jnp.float32),
+        "n": jnp.zeros((batch, h, p), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+# ===========================================================================
+# sLSTM — sequential scan (recurrent gate mixing is not associative)
+# ===========================================================================
+def init_slstm_block(key, cfg: ModelConfig, qcfg: QuantConfig, param_dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    p = d // h
+    ks = jax.random.split(key, 3)
+    w_in, s_in = L.init_qlinear(ks[0], d, 4 * d, "up_proj", qcfg,
+                                param_dtype=param_dtype)
+    params = {
+        "w_in": w_in,
+        # per-head block-diagonal recurrent weights
+        "r": jax.random.normal(ks[1], (4, h, p, p), jnp.float32) / math.sqrt(p),
+        "b": jnp.zeros((4, d), jnp.float32),
+        "norm": L.init_rmsnorm(d),
+        "w_out": None,
+    }
+    w_out, s_out = L.init_qlinear(ks[2], d, d, "o_proj", qcfg,
+                                  param_dtype=param_dtype)
+    params["w_out"] = w_out
+    return params, {"w_in": s_in, "w_out": s_out}
+
+
+def slstm_block(x, params, states, cfg: ModelConfig, cache=None):
+    """Stabilized sLSTM (xLSTM Eq. 15-24), per-head recurrence via lax.scan."""
+    qcfg = cfg.quant
+    bsz, s, d = x.shape
+    h = cfg.n_heads
+    p = d // h
+    xn = L.rmsnorm(x, params["norm"], cfg.norm_eps)
+    pre, st_in = L.apply_qlinear(xn, params["w_in"], qcfg, states.get("w_in"))
+    pre = pre.astype(jnp.float32).reshape(bsz, s, 4, h, p)
+
+    r = params["r"]
+    b = params["b"].reshape(4, h, p)
+
+    if cache is None:
+        c0 = jnp.zeros((bsz, h, p), jnp.float32)
+        n0 = jnp.full((bsz, h, p), 1e-6, jnp.float32)
+        h0 = jnp.zeros((bsz, h, p), jnp.float32)
+        m0 = jnp.zeros((bsz, h, p), jnp.float32)
+    else:
+        c0, n0, h0, m0 = cache["c"], cache["n"], cache["h"], cache["m"]
+
+    def step(carry, x_t):
+        c, n, hp, m = carry
+        rec = jnp.einsum("ghpr,bhr->bghp", r, hp)         # (B,4,H,P)
+        z_t = jnp.tanh(x_t[:, 0] + rec[:, 0] + b[0])
+        i_t = x_t[:, 1] + rec[:, 1] + b[1]                # log-space input gate
+        f_t = jax.nn.log_sigmoid(x_t[:, 2] + rec[:, 2] + b[2])
+        o_t = jax.nn.sigmoid(x_t[:, 3] + rec[:, 3] + b[3])
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_act = jnp.exp(i_t - m_new)
+        f_act = jnp.exp(f_t + m - m_new)
+        c = f_act * c + i_act * z_t
+        n = f_act * n + i_act
+        hp = o_t * c / jnp.maximum(n, 1e-6)
+        return (c, n, hp, m_new), hp
+
+    xs = jnp.moveaxis(pre, 1, 0)                          # (S,B,4,H,P)
+    (c, n, hp, m), ys = jax.lax.scan(step, (c0, n0, h0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, d).astype(x.dtype)
+    out, st_out = L.apply_qlinear(y, params["w_out"], qcfg,
+                              states.get("w_out"), use_kind="row")
+    new_cache = None if cache is None else {"c": c, "n": n, "h": hp, "m": m}
+    return out, new_cache, {"w_in": st_in, "w_out": st_out}
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int):
+    h, p = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, h, p), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z, "m": z}

@@ -1,0 +1,172 @@
+"""Decoder-only transformer LM (dense / MoE / VLM-backbone) — quant-aware,
+scan-over-layers so HLO size is O(1) in depth (61-layer 1T MoE compiles).
+
+Parameter trees:
+  frozen     : embed, stacked blocks (attn + ffn|moe + norms), final_norm, lm_head
+  adapters   : trainable PEFT params (stacked LoRA / IA3 per layer, prompt at top)
+  quant_state: stacked ScaleState per Quaff projection (None otherwise)
+
+forward() returns (logits, stats_tree, new_caches, aux_loss); stats feed the
+momentum update in repro/train/steps.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import peft as PEFT
+from repro.core.baselines import QuantMode
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models.config import ModelConfig
+from repro.runtime.pspec import hint
+
+
+def _is_global_pattern(cfg: ModelConfig) -> jnp.ndarray:
+    """(L,) bool — gemma3-style: every ``global_every``-th layer is global."""
+    idx = jnp.arange(cfg.n_layers)
+    if cfg.sliding_window and cfg.global_every:
+        return (idx % cfg.global_every) == (cfg.global_every - 1)
+    return jnp.ones((cfg.n_layers,), bool)
+
+
+def init_block(key, cfg: ModelConfig, param_dtype):
+    k1, k2 = jax.random.split(key)
+    attn_p, attn_s = L.init_attention(k1, cfg, cfg.quant, param_dtype)
+    if cfg.n_experts:
+        ffn_p, ffn_s = MOE.init_moe(k2, cfg, cfg.quant, param_dtype)
+    else:
+        ffn_p, ffn_s = L.init_ffn(k2, cfg, cfg.quant, param_dtype)
+    params = {
+        "attn": attn_p,
+        "ffn": ffn_p,
+        "norm1": L.init_rmsnorm(cfg.d_model),
+        "norm2": L.init_rmsnorm(cfg.d_model),
+    }
+    return params, {"attn": attn_s, "ffn": ffn_s}
+
+
+def init_adapters_block(key, cfg: ModelConfig):
+    p = cfg.peft
+    out: Dict[str, Any] = {}
+    if p.method == "lora":
+        k1, k2 = jax.random.split(key)
+        out["lora_q"] = PEFT.init_lora(k1, cfg.d_model, cfg.q_dim, p.lora_rank)
+        out["lora_v"] = PEFT.init_lora(k2, cfg.d_model, cfg.kv_dim, p.lora_rank)
+    elif p.method == "ia3":
+        out["ia3"] = PEFT.init_ia3(cfg.kv_dim, cfg.d_ff if not cfg.n_experts else 1)
+    return out
+
+
+def init_params(key, cfg: ModelConfig):
+    """-> (frozen, adapters, quant_state). Usable under jax.eval_shape."""
+    param_dtype = L.dt(cfg.param_dtype)
+    keys = jax.random.split(key, 4)
+    frozen: Dict[str, Any] = {
+        "embed": L.init_embedding(keys[0], cfg.vocab_size, cfg.d_model, param_dtype)
+    }
+    block_keys = jax.random.split(keys[1], cfg.n_layers)
+    frozen["blocks"], qstate = jax.vmap(
+        lambda k: init_block(k, cfg, param_dtype)
+    )(block_keys)
+    frozen["final_norm"] = L.init_rmsnorm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        frozen["lm_head"] = {
+            "w": jax.random.normal(keys[2], (cfg.d_model, cfg.vocab_size),
+                                   param_dtype) * 0.02
+        }
+
+    adapters: Dict[str, Any] = {}
+    p = cfg.peft
+    if p.method in ("lora", "ia3"):
+        adapters["blocks"] = jax.vmap(
+            lambda k: init_adapters_block(k, cfg)
+        )(jax.random.split(keys[3], cfg.n_layers))
+    elif p.method == "prompt":
+        adapters["prompt"] = PEFT.init_prompt(keys[3], p.n_virtual_tokens, cfg.d_model)
+    elif p.method == "ptuning":
+        adapters["prompt"] = PEFT.init_ptuning(
+            keys[3], p.n_virtual_tokens, cfg.d_model, p.ptuning_hidden)
+    return frozen, adapters, qstate
+
+
+def _block_apply(x, block, qstate, adapters, cfg: ModelConfig, *,
+                 positions, is_global, cache):
+    attn_in = L.rmsnorm(x, block["norm1"], cfg.norm_eps)
+    attn_out, new_cache, attn_stats = L.attention(
+        attn_in, block["attn"], qstate["attn"], cfg,
+        positions=positions, is_global=is_global, cache=cache,
+        adapters=adapters)
+    x = hint(x + attn_out, "act_btd")
+    ffn_in = L.rmsnorm(x, block["norm2"], cfg.norm_eps)
+    if cfg.n_experts:
+        ffn_out, aux, ffn_stats = MOE.moe_ffn(ffn_in, block["ffn"], qstate["ffn"], cfg)
+    else:
+        ffn_out, ffn_stats = L.ffn(ffn_in, block["ffn"], qstate["ffn"], cfg,
+                                   adapters=adapters)
+        aux = jnp.zeros((), jnp.float32)
+    x = hint(x + ffn_out, "act_btd")
+    return x, new_cache, {"attn": attn_stats, "ffn": ffn_stats}, aux
+
+
+def forward(
+    frozen: Dict[str, Any],
+    adapters: Dict[str, Any],
+    quant_state: Any,
+    tokens: Optional[jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    input_embeds: Optional[jnp.ndarray] = None,   # VLM: (B, n_img, D) prepended
+    caches: Optional[Any] = None,                 # stacked (L, ...) KV caches
+    positions: Optional[jnp.ndarray] = None,      # decode: (S,) absolute pos
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, Any, Any, jnp.ndarray]:
+    act_dtype = L.dt(cfg.act_dtype)
+    parts = []
+    if input_embeds is not None:
+        parts.append(input_embeds.astype(act_dtype))
+    if tokens is not None:
+        parts.append(L.embed(tokens, frozen["embed"], act_dtype))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+
+    if "prompt" in adapters:
+        if isinstance(adapters["prompt"], PEFT.PromptParams):
+            x = PEFT.apply_prompt(x, adapters["prompt"])
+        else:
+            x = PEFT.apply_ptuning(x, adapters["prompt"])
+
+    x = hint(x, "act_btd")
+    s_len = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(s_len, dtype=jnp.int32)
+
+    is_global = _is_global_pattern(cfg)
+    block_adapters = adapters.get("blocks")
+
+    def body(carry, xs):
+        h = carry
+        block, qs, bad, glob, cache = xs
+        h, new_cache, stats, aux = _block_apply(
+            h, block, qs, bad, cfg,
+            positions=positions, is_global=glob, cache=cache)
+        return h, (stats, aux, new_cache)
+
+    body = L.remat_wrap(body, remat)
+
+    xs = (frozen["blocks"], quant_state, block_adapters, is_global, caches)
+    x, (stats, aux, new_caches) = jax.lax.scan(body, x, xs)
+
+    x = L.rmsnorm(x, frozen["final_norm"], cfg.norm_eps)
+    head = frozen["embed"] if cfg.tie_embeddings else frozen["lm_head"]
+    logits = L.unembed(x, head, act_dtype, cfg.logits_fp32)
+    return logits, stats, new_caches, jnp.mean(aux)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int):
+    act_dtype = L.dt(cfg.act_dtype)
+    one = L.init_kv_cache(cfg, batch, max_len, act_dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape).copy(), one)

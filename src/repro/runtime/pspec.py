@@ -1,0 +1,61 @@
+"""Sharding-hint plumbing: model code calls ``hint(x, kind)`` at layer
+boundaries; the launcher installs a ``ShardingRules`` table mapping semantic
+kinds -> PartitionSpec. With no rules installed (unit tests, single device)
+hints are no-ops, so model code is mesh-agnostic.
+
+Kinds:
+  act_btd    : residual stream (batch, seq, d_model)
+  act_btf    : FFN hidden      (batch, seq, d_ff)
+  act_heads  : attention       (batch, seq, heads, head_dim)
+  logits     : (batch, seq, vocab)
+  kv_cache   : (batch, seq, kv_heads, head_dim)
+  ssm_state  : (batch, heads, head_dim, state)
+  moe_buffer : (experts, capacity, d)
+  tokens     : (batch, seq)
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE: Optional["ShardingRules"] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Semantic-kind -> PartitionSpec. Built per (arch x shape x mesh) by
+    repro.launch.shardings; see there for the actual policies."""
+
+    table: Dict[str, P]
+
+    def spec(self, kind: str) -> Optional[P]:
+        return self.table.get(kind)
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = rules
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+
+
+def hint(x, kind: str):
+    """Annotate x with the active spec for ``kind`` (no-op without rules)."""
+    if _ACTIVE is None:
+        return x
+    spec = _ACTIVE.spec(kind)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,14 @@
+"""Pytree path rendering shared by checkpointing and calibration."""
+from __future__ import annotations
+
+
+def key_str(p) -> str:
+    """Render one path entry (DictKey / SequenceKey / GetAttrKey / FlattenedIndexKey)."""
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p).lstrip(".")
+
+
+def path_str(path) -> str:
+    return "/".join(key_str(p) for p in path)

@@ -1,0 +1,232 @@
+"""Calibration pipeline (paper §3.3 'weights preprocessing'):
+
+  1. run the FP32 model over calibration batches with stats capture on,
+     accumulating per-channel activation absmax AND per-batch outlier hit
+     scores (the xi criterion, Eq. 6 — adapted: a channel scores a hit in a
+     batch when its absmax exceeds ``ratio`` x the median channel absmax;
+     see core/outliers.py for why the paper's literal form is a typo);
+  2. pick the top-k channels per layer under the per-layer-type budget
+     (q/k/v/up: 0.03%, o_proj: 4%, down_proj: 10%, §4.1);
+  3. convert the FP32 weight tree to the target quant mode — for Quaff this
+     quantizes W once, stashes fp W_O rows and initializes the momentum
+     ScaleState; for SmoothQuant-static it bakes the calibration s into W.
+
+The path-matching between the frozen tree and the captured stats tree is
+suffix-normalized (drop structural tokens like "blocks"/"experts") so it
+works for every family in the zoo.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as B
+from repro.core.baselines import QuantMode
+from repro.core.quaff_linear import prepare_quaff_weights
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.core import outliers as OUT
+
+_DROP_TOKENS = {"blocks", "w", "experts", "ffn", "attn"}
+
+LAYER_TYPE_MAP = {
+    "wq": "q_proj", "wk": "k_proj", "wv": "v_proj", "wo": "o_proj",
+    "gate": "gate_proj", "up": "up_proj", "down": "down_proj",
+    "in_proj": "up_proj", "out_proj": "down_proj",
+    "w_in": "up_proj", "w_out": "o_proj",
+}
+
+
+from repro.runtime.treepath import path_str as _path_str
+
+
+def _norm(path_s: str) -> str:
+    return "/".join(t for t in path_s.split("/") if t not in _DROP_TOKENS)
+
+
+def capture_stats(frozen, adapters, quant_state, cfg: ModelConfig,
+                  batches: List[Dict[str, np.ndarray]], ratio: float = 20.0):
+    """Returns (absmax_tree, score_tree): per-layer (stack..., c_in) arrays.
+    absmax = max over batches; score = xi hit count + magnitude tiebreak."""
+    absmax = None
+    scores = None
+    fwd = None
+    for batch in batches:
+        tokens = jnp.asarray(batch["tokens"])
+        embeds = batch.get("embeds")
+        if embeds is not None:
+            embeds = jnp.asarray(embeds)
+        with L.capture_stats():
+            if fwd is None:
+                def run(tok, emb):
+                    _, stats, _, _ = M.forward(frozen, adapters, quant_state,
+                                               tok, cfg, input_embeds=emb)
+                    return stats
+                fwd = jax.jit(run) if embeds is None else jax.jit(run)
+            stats = fwd(tokens, embeds)
+        stats = jax.device_get(stats)
+
+        def hit(st):
+            med = np.median(st, axis=-1, keepdims=True)
+            return (st > ratio * np.maximum(med, 1e-8)).astype(np.float32)
+
+        if absmax is None:
+            absmax = stats
+            scores = jax.tree.map(hit, stats)
+        else:
+            absmax = jax.tree.map(np.maximum, absmax, stats)
+            scores = jax.tree.map(lambda s, st: s + hit(st), scores, stats)
+    # magnitude tiebreak keeps top-k deterministic
+    scores = jax.tree.map(
+        lambda s, a: s + a / (np.max(a, axis=-1, keepdims=True) + 1e-9),
+        scores, absmax)
+    return absmax, scores
+
+
+def _stats_lookup(stats_tree) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(stats_tree)[0]:
+        out[_norm(_path_str(path))] = np.asarray(leaf)
+    return out
+
+
+def _topk_indices(score: np.ndarray, k: int) -> np.ndarray:
+    """score: (..., c_in) -> (..., k) sorted channel indices per layer."""
+    idx = np.argsort(-score, axis=-1)[..., :k]
+    return np.sort(idx, axis=-1).astype(np.int32)
+
+
+def convert(frozen_fp32, stats: Tuple[Any, Any], cfg: ModelConfig,
+            target_mode: str):
+    """Convert an FP32-mode frozen tree to ``target_mode``.
+    Returns (frozen_converted, quant_state)."""
+    mode = QuantMode(target_mode)
+    absmax_lut = _stats_lookup(stats[0]) if stats is not None else {}
+    score_lut = _stats_lookup(stats[1]) if stats is not None else {}
+    qcfg = cfg.quant
+
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        frozen_fp32, is_leaf=lambda x: isinstance(x, B.FPWeights))
+
+    new_leaves = []
+    qstate_flat: Dict[str, Any] = {}
+    for path, leaf in paths_leaves:
+        if not isinstance(leaf, B.FPWeights):
+            new_leaves.append(leaf)
+            continue
+        ps = _path_str(path)
+        key = _norm(ps.rsplit("/w", 1)[0] if ps.endswith("/w") else ps)
+        lname = key.split("/")[-1]
+        ltype = LAYER_TYPE_MAP.get(lname, lname)
+        w, bias = leaf.w, leaf.bias
+        c_in = w.shape[-2]
+
+        if mode == QuantMode.FP32:
+            new_leaves.append(leaf)
+            continue
+        if mode in (QuantMode.NAIVE, QuantMode.LLM_INT8, QuantMode.SMOOTH_DYNAMIC):
+            fn = lambda wi, bi=None: B.prepare(mode, wi, bi, bits=qcfg.bits)
+        elif mode == QuantMode.SMOOTH_STATIC:
+            calib = absmax_lut[key]  # (stack..., c_in)
+            fn = lambda wi, cal: B.prepare(mode, wi, None,
+                                           calib_absmax=jnp.maximum(cal, 1e-6),
+                                           bits=qcfg.bits)
+        elif mode == QuantMode.QUAFF:
+            score = score_lut[key]
+            k = max(1, min(c_in, int(round(
+                OUT.budget_for(ltype, qcfg.budgets) * c_in))))
+            idx = _topk_indices(score, k)  # (stack..., k)
+        else:
+            raise ValueError(mode)
+
+        stack = w.shape[:-2]
+        if mode == QuantMode.QUAFF:
+            if len(stack) == 0:
+                wts, st = prepare_quaff_weights(w, jnp.asarray(idx), bias,
+                                                qcfg.bits)
+            else:
+                w2 = w.reshape((-1,) + w.shape[-2:])
+                # stats stacks may be shorter than the weight stack (MoE: the
+                # expert dim shares one stat row) — repeat the index rows.
+                idx2 = idx.reshape((-1, idx.shape[-1]))
+                if idx2.shape[0] != w2.shape[0]:
+                    idx2 = np.repeat(idx2, w2.shape[0] // idx2.shape[0], axis=0)
+                b2 = (None if bias is None
+                      else bias.reshape((-1,) + bias.shape[-1:]))
+                if b2 is None:
+                    wts, st = jax.vmap(
+                        lambda wi, ii: prepare_quaff_weights(wi, ii, None,
+                                                             qcfg.bits)
+                    )(w2, jnp.asarray(idx2))
+                else:
+                    wts, st = jax.vmap(
+                        lambda wi, ii, bi: prepare_quaff_weights(wi, ii, bi,
+                                                                 qcfg.bits)
+                    )(w2, jnp.asarray(idx2), b2)
+                wts = jax.tree.map(
+                    lambda a: a.reshape(stack + a.shape[1:]), wts)
+                st = jax.tree.map(lambda a: a.reshape(stack + a.shape[1:]), st)
+            # MoE: collapse expert dim of state + idx (shared across experts)
+            if cfg.n_experts and "experts" in ps:
+                st = jax.tree.map(lambda a: jnp.max(a, axis=1), st)
+                wts = wts._replace(outlier_idx=wts.outlier_idx[:, 0])
+            qstate_flat[key] = st
+            new_leaves.append(wts)
+            continue
+
+        # non-quaff modes
+        if len(stack) == 0:
+            if mode == QuantMode.SMOOTH_STATIC:
+                new_leaves.append(fn(w, jnp.asarray(absmax_lut[key])))
+            else:
+                new_leaves.append(fn(w, bias))
+        else:
+            w2 = w.reshape((-1,) + w.shape[-2:])
+            if mode == QuantMode.SMOOTH_STATIC:
+                cal = np.asarray(absmax_lut[key]).reshape((-1, c_in))
+                if cal.shape[0] != w2.shape[0]:
+                    cal = np.repeat(cal, w2.shape[0] // cal.shape[0], axis=0)
+                out = jax.vmap(fn)(w2, jnp.asarray(cal))
+            else:
+                b2 = None if bias is None else bias.reshape((-1,) + bias.shape[-1:])
+                out = (jax.vmap(lambda wi: fn(wi))(w2) if b2 is None
+                       else jax.vmap(lambda wi, bi: fn(wi, bi))(w2, b2))
+            out = jax.tree.map(lambda a: a.reshape(stack + a.shape[1:]), out)
+            new_leaves.append(out)
+
+    frozen_new = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    # rebuild quant_state in the same structure init_params would produce
+    _, _, qstate_like = jax.eval_shape(
+        lambda k: M.init_params(k, _with_mode(cfg, target_mode)),
+        jax.random.PRNGKey(0))
+    if mode != QuantMode.QUAFF:
+        return frozen_new, jax.tree.map(lambda x: None, qstate_like)
+    qstate = _rebuild_qstate(qstate_like, qstate_flat)
+    return frozen_new, qstate
+
+
+def _with_mode(cfg: ModelConfig, mode: str) -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, quant=dataclasses.replace(cfg.quant,
+                                                              mode=mode))
+
+
+def _rebuild_qstate(qstate_like, qstate_flat: Dict[str, Any]):
+    from repro.core.scaling import ScaleState
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        qstate_like, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    # group leaves back into ScaleStates by path prefix
+    out_leaves = []
+    for path, leaf in paths_leaves:
+        ps = _path_str(path)
+        # path ends with .../<lin>/<field> where field in {s, w_absmax}
+        parts = ps.split("/")
+        field = parts[-1]
+        key = _norm("/".join(parts[:-1]))
+        st = qstate_flat[key]
+        out_leaves.append(getattr(st, field))
+    return jax.tree_util.tree_unflatten(treedef, out_leaves)

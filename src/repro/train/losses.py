@@ -1,0 +1,29 @@
+"""Loss functions. Labels use -1 as the ignore index (padding / virtual
+prompt positions); the data pipeline aligns labels[t] = tokens[t+1]."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray):
+    """logits: (B, S, V) fp32; labels: (B, S) int32 with -1 ignored.
+    Returns (mean_loss, n_tokens)."""
+    mask = (labels >= 0)
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask.astype(logits.dtype)
+    n = jnp.maximum(jnp.sum(mask), 1)
+    return jnp.sum(nll) / n.astype(logits.dtype), n
+
+
+def perplexity(mean_loss: jnp.ndarray) -> jnp.ndarray:
+    return jnp.exp(mean_loss)
+
+
+def token_accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    mask = (labels >= 0)
+    pred = jnp.argmax(logits, axis=-1)
+    correct = jnp.sum((pred == labels) & mask)
+    return correct / jnp.maximum(jnp.sum(mask), 1)

@@ -1,0 +1,175 @@
+"""Step builders: train_step (loss + LoRA-only grads + AdamW + Quaff momentum
+state update, with microbatch gradient accumulation), serve_prefill and
+serve_decode. These are the functions the launcher lowers under pjit.
+
+State layout (functional, donated between steps):
+    TrainState = (adapters, opt_state, quant_state, step)
+``frozen`` (the quantized base model) is a separate argument — it never
+changes during fine-tuning, which is exactly Quaff's decoupling story.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import peft as PEFT
+from repro.core.scaling import ScaleState, momentum_update
+from repro.models import model as M
+from repro.models.config import ModelConfig, TrainConfig
+from repro.optim import adamw
+from repro.train import losses
+
+
+class TrainState(NamedTuple):
+    adapters: Any
+    opt: adamw.AdamWState
+    quant: Any
+    step: jnp.ndarray
+
+
+def init_train_state(adapters, quant_state, tcfg: TrainConfig) -> TrainState:
+    return TrainState(
+        adapters=adapters,
+        opt=adamw.init(adapters, use_error_feedback=tcfg.grad_compression),
+        quant=quant_state,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def update_quant_state(quant_state, stats, gamma: float):
+    """Vectorized Eq. 7 across the whole model. ``stats`` leading dims (layer
+    stacks) match the state's; max-reduces nothing — shapes already align."""
+    def upd(st, m):
+        return momentum_update(st, m, gamma)
+    return jax.tree.map(
+        upd, quant_state, stats,
+        is_leaf=lambda x: isinstance(x, ScaleState))
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], n: int):
+    def resh(x):
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    return jax.tree.map(resh, batch)
+
+
+def build_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns train_step(frozen, state, batch) -> (state, metrics).
+
+    batch: {"tokens": (B,S), "labels": (B,S)} (+ "embeds" for vlm/encdec).
+    Microbatching: B is split into ``tcfg.microbatches`` chunks scanned
+    sequentially with gradient accumulation (bounds activation memory)."""
+    n_prefix = PEFT.n_prefix_tokens(cfg.peft)
+
+    def loss_fn(adapters, frozen, quant_state, mb):
+        remat = tcfg.remat_policy if tcfg.remat else False
+        logits, stats, _, aux = M.forward(
+            frozen, adapters, quant_state, mb["tokens"], cfg,
+            input_embeds=mb.get("embeds"), remat=remat)
+        if n_prefix:
+            logits = logits[:, n_prefix:, :]
+        if cfg.family == "vlm" and cfg.n_image_tokens:
+            logits = logits[:, cfg.n_image_tokens:, :]
+        loss, n_tok = losses.cross_entropy(logits.astype(jnp.float32),
+                                           mb["labels"])
+        total = loss + cfg.moe_aux_weight * aux
+        return total, (loss, aux, stats)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(frozen, state: TrainState, batch):
+        nmb = tcfg.microbatches
+        mbs = _split_microbatches(batch, nmb)
+
+        def micro(carry, mb):
+            g_acc, loss_acc, aux_acc = carry
+            (_, (loss, aux, stats)), grads = grad_fn(
+                state.adapters, frozen, state.quant, mb)
+            g_acc = jax.tree.map(lambda a, g: a + g, g_acc, grads)
+            return (g_acc, loss_acc + loss, aux_acc + aux), stats
+
+        g0 = jax.tree.map(jnp.zeros_like, state.adapters)
+        (g_sum, loss_sum, aux_sum), stats_all = jax.lax.scan(
+            micro, (g0, jnp.zeros(()), jnp.zeros(())), mbs)
+        grads = jax.tree.map(lambda g: g / nmb, g_sum)
+        # momentum update uses the LAST microbatch's stats (freshest)
+        stats = jax.tree.map(lambda s: s[-1], stats_all)
+
+        new_adapters, new_opt, opt_metrics = adamw.update(
+            grads, state.opt, state.adapters,
+            lr=tcfg.learning_rate, beta1=tcfg.beta1, beta2=tcfg.beta2,
+            weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip,
+            compress=tcfg.grad_compression)
+
+        new_quant = state.quant
+        if cfg.quant.mode == "quaff":
+            new_quant = update_quant_state(state.quant, stats, cfg.quant.gamma)
+
+        metrics = {
+            "loss": loss_sum / nmb,
+            "aux_loss": aux_sum / nmb,
+            "grad_norm": opt_metrics["grad_norm"],
+        }
+        new_state = TrainState(new_adapters, new_opt, new_quant, state.step + 1)
+        return new_state, metrics
+
+    return train_step
+
+
+def build_eval_step(cfg: ModelConfig):
+    n_prefix = PEFT.n_prefix_tokens(cfg.peft)
+
+    def eval_step(frozen, adapters, quant_state, batch):
+        logits, _, _, _ = M.forward(
+            frozen, adapters, quant_state, batch["tokens"], cfg,
+            input_embeds=batch.get("embeds"))
+        if n_prefix:
+            logits = logits[:, n_prefix:, :]
+        if cfg.family == "vlm" and cfg.n_image_tokens:
+            logits = logits[:, cfg.n_image_tokens:, :]
+        logits = logits.astype(jnp.float32)
+        loss, _ = losses.cross_entropy(logits, batch["labels"])
+        acc = losses.token_accuracy(logits, batch["labels"])
+        return {"loss": loss, "ppl": losses.perplexity(loss), "acc": acc}
+
+    return eval_step
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+def build_prefill(cfg: ModelConfig, extra_len: int = 0):
+    """prefill(frozen, adapters, quant_state, batch) -> (last_logits, caches).
+
+    Decode caches are sized total_seq + ``extra_len`` (generation budget);
+    attention writes the whole block with one dynamic_update_slice. The
+    total sequence includes VLM image tokens and PEFT virtual tokens."""
+    n_prefix = PEFT.n_prefix_tokens(cfg.peft)
+
+    def prefill(frozen, adapters, quant_state, batch):
+        tokens = batch["tokens"]
+        bsz, s_len = tokens.shape
+        total = s_len + n_prefix
+        if cfg.family == "vlm":
+            total += cfg.n_image_tokens
+        caches = M.init_caches(cfg, bsz, total + extra_len)
+        logits, _, new_caches, _ = M.forward(
+            frozen, adapters, quant_state, tokens, cfg,
+            input_embeds=batch.get("embeds"), caches=caches,
+            positions=jnp.arange(total, dtype=jnp.int32))
+        return logits[:, -1, :], new_caches
+
+    return prefill
+
+
+def build_decode(cfg: ModelConfig):
+    """decode(frozen, adapters, quant_state, caches, token, pos) ->
+    (logits, new_caches). ``caches`` carry seq_len-sized KV/SSM buffers."""
+    def decode(frozen, adapters, quant_state, caches, token, pos):
+        logits, _, new_caches, _ = M.forward(
+            frozen, adapters, quant_state, token, cfg,
+            caches=caches, positions=pos.reshape((1,)))
+        return logits[:, -1, :], new_caches
+
+    return decode

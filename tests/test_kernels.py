@@ -1,0 +1,149 @@
+"""Per-kernel validation: sweep shapes/dtypes in interpret mode and compare
+against the pure-jnp oracles (ref.py) and the core Quaff path. Integer GEMM
+accumulation is exact, so tolerances are fp32-epsilon tight."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.core.quaff_linear import prepare_quaff_weights, quaff_matmul
+from repro.kernels import int8_quant, ops, quaff_matmul as qmk, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _mk(shape, key, scale=1.0, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+@pytest.mark.parametrize("t,k", [(16, 64), (64, 256), (32, 512), (128, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rowmax(t, k, dtype):
+    x = _mk((t, k), KEY, 3.0, dtype)
+    got = int8_quant.rowmax(x, block_t=16, block_k=64, interpret=True)
+    np.testing.assert_allclose(got, ref.rowmax_ref(x), rtol=1e-6)
+
+
+@pytest.mark.parametrize("t,k", [(16, 64), (64, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_scale_quant(t, k, dtype):
+    keys = jax.random.split(KEY, 3)
+    x = _mk((t, k), keys[0], 2.0, dtype)
+    s_inv = jnp.abs(_mk((k,), keys[1])) + 0.5
+    delta = ref.rowmax_ref(x.astype(jnp.float32) * s_inv[None, :]) / 127.0
+    got = int8_quant.scale_quant(x, s_inv, delta, block_t=16, block_k=32,
+                                 interpret=True)
+    want = ref.scale_quant_ref(x, s_inv, delta)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("t,k,n,o", [
+    (16, 64, 32, 2), (64, 256, 128, 8), (32, 128, 256, 16), (128, 512, 64, 4),
+])
+def test_quaff_matmul_fused(t, k, n, o):
+    keys = jax.random.split(KEY, 5)
+    x_int = jax.random.randint(keys[0], (t, k), -127, 128, jnp.int8)
+    w_int = jax.random.randint(keys[1], (k, n), -127, 128, jnp.int8)
+    xo_int = jax.random.randint(keys[2], (t, o), -127, 128, jnp.int8)
+    wo_int = jax.random.randint(keys[3], (o, n), -127, 128, jnp.int8)
+    x_delta = jnp.abs(_mk((t, 1), keys[4])) / 100 + 1e-3
+    w_delta = jnp.abs(_mk((1, n), keys[0])) / 100 + 1e-3
+    wo_delta = jnp.abs(_mk((1, n), keys[1])) / 100 + 1e-3
+    got = qmk.quaff_matmul_fused(
+        x_int, w_int, x_delta, w_delta, xo_int, wo_int, wo_delta,
+        block_t=16, block_n=32, block_k=32, interpret=True)
+    want = ref.quaff_matmul_ref(x_int, w_int, x_delta, w_delta,
+                                xo_int, wo_int, wo_delta)
+    # int32 accumulation is exact; the dequant epilogue multiplies in a
+    # different association order than the oracle -> fp32 ULP noise only
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("t,k,n,n_out", [(32, 128, 64, 3), (64, 256, 128, 12)])
+def test_quaff_forward_pallas_vs_core(t, k, n, n_out):
+    """Full kernel pipeline == core (non-kernel) Quaff path."""
+    keys = jax.random.split(KEY, 3)
+    x = _mk((t, k), keys[0], 1.0)
+    idx = jnp.sort(jax.random.choice(keys[1], k, (n_out,), replace=False)
+                   ).astype(jnp.int32)
+    x = x.at[:, idx].mul(80.0)
+    w = _mk((k, n), keys[2], 0.05)
+    qw, st = prepare_quaff_weights(w, idx)
+    s = jnp.abs(_mk((n_out,), keys[0])) * 4 + 1.0
+    y_k, st_k = ops.quaff_forward_pallas(x, qw, s, interpret=True,
+                                         block_t=16, block_n=32, block_k=64)
+    y_c, st_c = quaff_matmul(x, qw, s)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_c),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_c), rtol=1e-6)
+
+
+def test_naive_forward_pallas():
+    keys = jax.random.split(KEY, 2)
+    x = _mk((32, 128), keys[0])
+    w = _mk((128, 64), keys[1], 0.05)
+    w_int, w_delta = quant.quantize(w, axis=0)
+    y_k = ops.naive_forward_pallas(x, w_int, w_delta, interpret=True)
+    y_ref = quant.quantized_matmul(x, w_int, w_delta)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_kernel_outlier_suppression_wins():
+    """The fused kernel with real scales beats naive on outlier data."""
+    keys = jax.random.split(KEY, 2)
+    x = _mk((64, 256), keys[0]).at[:, 7].mul(150.0)
+    w = _mk((256, 64), keys[1], 0.05)
+    idx = jnp.array([7], jnp.int32)
+    qw, st = prepare_quaff_weights(w, idx)
+    y_fp = x @ w
+    s_beta = jnp.sqrt(jnp.array([150.0]) / jnp.maximum(st.w_absmax, 1e-8))
+    y_q, _ = ops.quaff_forward_pallas(x, qw, s_beta, interpret=True,
+                                      block_t=16, block_n=32, block_k=64)
+    w_int, w_delta = quant.quantize(w, axis=0)
+    y_n = ops.naive_forward_pallas(x, w_int, w_delta, interpret=True)
+    err_q = float(jnp.mean(jnp.abs(y_q - y_fp)))
+    err_n = float(jnp.mean(jnp.abs(y_n - y_fp)))
+    assert err_q < err_n * 0.5, (err_q, err_n)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("s,hd,causal", [(64, 32, True), (128, 64, True),
+                                         (64, 32, False)])
+def test_flash_attention_vs_softmax(s, hd, causal):
+    from repro.kernels.flash_attention import flash_attention
+    keys = jax.random.split(KEY, 3)
+    bh = 4
+    q = _mk((bh, s, hd), keys[0])
+    k = _mk((bh, s, hd), keys[1])
+    v = _mk((bh, s, hd), keys[2])
+    got = flash_attention(q, k, v, causal=causal, block_q=32, block_k=32,
+                          interpret=True)
+    scores = jnp.einsum("bqh,bkh->bqk", q, k) / np.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None], scores, -1e30)
+    want = jnp.einsum("bqk,bkh->bqh", jax.nn.softmax(scores, -1), v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_gqa_flash_attention_vs_model_attention():
+    """GQA wrapper == the model's einsum attention path."""
+    from repro.kernels.flash_attention import gqa_flash_attention
+    from repro.models.layers import _gqa_scores_softmax_out
+    keys = jax.random.split(KEY, 3)
+    b, s, kh, g, hd = 2, 64, 2, 3, 32
+    q = _mk((b, s, kh, g, hd), keys[0])
+    k = _mk((b, s, kh, hd), keys[1])
+    v = _mk((b, s, kh, hd), keys[2])
+    got = gqa_flash_attention(q, k, v, causal=True, interpret=True,
+                              block_q=32, block_k=32)
+    mask = jnp.tril(jnp.ones((s, s), bool))[None, None, None]
+    want = _gqa_scores_softmax_out(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)

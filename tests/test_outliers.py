@@ -1,0 +1,56 @@
+"""Outlier identification (Eq. 6 analog) + budget allocation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import outliers as O
+
+
+def _acts_with_planted(planted, n=6, t=32, c=256, scale=60.0, seed=0):
+    rng = jax.random.PRNGKey(seed)
+    x = jax.random.normal(rng, (n, t, c))
+    for ch in planted:
+        x = x.at[:, :, ch].mul(scale)
+    return x
+
+
+def test_planted_outliers_found():
+    planted = [7, 99, 200]
+    acts = _acts_with_planted(planted)
+    spec = O.identify_outliers(acts, "down_proj")  # 10% of 256 = 25 channels
+    for ch in planted:
+        assert ch in spec.indices
+
+
+def test_budget_fractions():
+    acts = _acts_with_planted([1], c=10000)
+    q = O.identify_outliers(acts, "q_proj")
+    d = O.identify_outliers(acts, "down_proj")
+    o = O.identify_outliers(acts, "o_proj")
+    assert q.count == max(1, round(0.0003 * 10000))
+    assert o.count == round(0.04 * 10000)
+    assert d.count == round(0.10 * 10000)
+
+
+def test_total_budget_reallocation():
+    dims = {f"layer{i}.down_proj": 1024 for i in range(8)}
+    dims.update({f"layer{i}.q_proj": 1024 for i in range(8)})
+    counts = O.reallocate_budgets(dims, total_budget=0.05)
+    total_cin = sum(dims.values())
+    assert sum(counts.values()) <= int(0.05 * total_cin)
+    # q_proj keeps at least its tiny share
+    assert all(counts[k] >= 1 for k in counts)
+
+
+def test_hit_rate_perfect_and_zero():
+    acts = _acts_with_planted([5, 9], n=1)[0]  # (t, c)
+    assert O.hit_rate([5, 9], acts) == 1.0
+    assert O.hit_rate([0, 1], acts) == 0.0
+
+
+def test_scores_rank_outliers_first():
+    planted = [3, 77]
+    acts = _acts_with_planted(planted, scale=100.0)
+    xi = np.asarray(O.outlier_scores(acts))
+    top2 = set(np.argsort(-xi)[:2].tolist())
+    assert top2 == set(planted)

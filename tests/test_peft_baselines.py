@@ -1,0 +1,89 @@
+"""PEFT methods x quant modes: adapters are the only trainable params, every
+mode trains, prompt methods extend the sequence correctly."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.peft import PEFTConfig
+from repro.data.pipeline import DataConfig, Loader
+from repro.models import model as M
+from repro.models.config import ModelConfig, QuantConfig, TrainConfig
+from repro.train import steps as S
+
+
+def _cfg(peft="lora", mode="quaff"):
+    return ModelConfig(
+        name="pb-test", family="dense", n_layers=2, d_model=48, n_heads=4,
+        n_kv_heads=2, d_ff=96, vocab_size=64, head_dim=12,
+        quant=QuantConfig(mode=mode),
+        peft=PEFTConfig(method=peft, lora_rank=2, n_virtual_tokens=4))
+
+
+@pytest.mark.parametrize("peft", ["lora", "ia3", "prompt", "ptuning"])
+def test_peft_methods_train(peft):
+    cfg = _cfg(peft=peft)
+    tcfg = TrainConfig(microbatches=1, remat=False, learning_rate=5e-3)
+    frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
+    state = S.init_train_state(adapters, qstate, tcfg)
+    step = jax.jit(S.build_train_step(cfg, tcfg))
+    loader = Loader(DataConfig(vocab_size=64, seq_len=16, batch_size=4))
+    frozen_before = jax.tree.map(lambda x: np.asarray(x).copy(), frozen)
+    for i in range(3):
+        state, metrics = step(frozen, state, jax.tree.map(
+            jnp.asarray, loader.batch(i)))
+        assert bool(jnp.isfinite(metrics["loss"])), peft
+    # adapters moved, frozen untouched
+    moved = sum(float(jnp.sum(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(adapters),
+                                jax.tree.leaves(state.adapters)))
+    assert moved > 0, f"{peft}: adapters frozen?"
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), b), frozen, frozen_before)
+
+
+@pytest.mark.parametrize("peft", ["prompt", "ptuning"])
+def test_prompt_extends_sequence(peft):
+    cfg = _cfg(peft=peft)
+    frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
+    tok = jnp.zeros((2, 8), jnp.int32)
+    logits, _, _, _ = M.forward(frozen, adapters, qstate, tok, cfg)
+    assert logits.shape[1] == 8 + cfg.peft.n_virtual_tokens
+
+
+@pytest.mark.parametrize("mode", ["fp32", "naive", "llm_int8",
+                                  "smooth_static", "smooth_dynamic", "quaff"])
+def test_all_quant_modes_train(mode):
+    cfg = _cfg(mode=mode)
+    tcfg = TrainConfig(microbatches=1, remat=False)
+    frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
+    state = S.init_train_state(adapters, qstate, tcfg)
+    step = jax.jit(S.build_train_step(cfg, tcfg))
+    loader = Loader(DataConfig(vocab_size=64, seq_len=16, batch_size=4))
+    state, metrics = step(frozen, state, jax.tree.map(jnp.asarray,
+                                                      loader.batch(0)))
+    assert bool(jnp.isfinite(metrics["loss"])), mode
+
+
+def test_quant_modes_close_to_fp32():
+    """Forward logits of every quant mode stay near the fp32 model."""
+    import repro.train.calibrate as C
+    from repro.data.pipeline import calibration_batches
+
+    cfg = _cfg(mode="fp32")
+    frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
+    batches = calibration_batches(
+        DataConfig(vocab_size=64, seq_len=16, batch_size=4), 2)
+    stats = C.capture_stats(frozen, adapters, qstate, cfg, batches)
+    tok = jnp.asarray(batches[0]["tokens"])
+    ref, _, _, _ = M.forward(frozen, adapters, qstate, tok, cfg)
+    scale = float(jnp.mean(jnp.abs(ref)))
+    for mode in ("naive", "smooth_static", "quaff"):
+        fz, qs = C.convert(frozen, stats, cfg, mode)
+        cfg_m = dataclasses.replace(
+            cfg, quant=dataclasses.replace(cfg.quant, mode=mode))
+        got, _, _, _ = M.forward(fz, adapters, qs, tok, cfg_m)
+        rel = float(jnp.mean(jnp.abs(got - ref))) / scale
+        assert rel < 0.15, (mode, rel)

@@ -1,0 +1,112 @@
+"""The paper's core algebra, property-tested (DESIGN.md §2):
+
+  1. Eq. 5 is an exact identity in fp arithmetic: X_hat W + x_hat w_hat = XW
+     for ANY s supported on O.
+  2. Quaff's quantized error on outlier-heavy activations beats naive WAQ
+     once s tracks the outlier scale (Fig. 2c).
+  3. Momentum dynamics (Eq. 7/8): s stays >= 1, gamma=1 freezes, gamma=0
+     jumps to beta, fixed point = beta under constant stats.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+from repro.core.quaff_linear import prepare_quaff_weights, quaff_matmul
+from repro.core.scaling import ScaleState, beta_from_stats, momentum_update
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 6),
+       st.floats(1.0, 50.0))
+def test_eq5_identity_fp(seed, n_out, s_val):
+    """X_hat W + X_hat[:,O] (s_O - 1) W[O,:] == X W exactly (no quant)."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    t, c_in, c_out = 8, 32, 16
+    x = jax.random.normal(keys[0], (t, c_in), jnp.float64
+                          if jax.config.read("jax_enable_x64") else jnp.float32)
+    w = jax.random.normal(keys[1], (c_in, c_out))
+    idx = np.sort(np.asarray(
+        jax.random.choice(keys[2], c_in, (n_out,), replace=False)))
+    s = jnp.full((n_out,), s_val)
+    s_inv = jnp.ones((c_in,)).at[idx].set(1.0 / s)
+    x_hat = x * s_inv[None, :]
+    w_hat = (s - 1.0)[:, None] * w[idx, :]
+    y = x_hat @ w + x_hat[:, idx] @ w_hat
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(30.0, 200.0))
+def test_quaff_beats_naive_on_outliers(seed, outlier_scale):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    t, c_in, c_out = 32, 64, 48
+    x = jax.random.normal(keys[0], (t, c_in))
+    idx = jnp.array([3, 17, 50], jnp.int32)
+    x = x.at[:, idx].mul(outlier_scale)
+    w = jax.random.normal(keys[1], (c_in, c_out)) * 0.05
+    y_fp = x @ w
+
+    qw, st0 = prepare_quaff_weights(w, idx)
+    _, stats = quaff_matmul(x, qw, st0.s)
+    st1 = momentum_update(st0, stats, gamma=0.0)  # jump to beta
+    y_q, _ = quaff_matmul(x, qw, st1.s)
+
+    w_int, w_delta = quant.quantize(w, axis=0)
+    y_n = quant.quantized_matmul(x, w_int, w_delta)
+
+    err_q = float(jnp.mean(jnp.abs(y_q - y_fp)))
+    err_n = float(jnp.mean(jnp.abs(y_n - y_fp)))
+    assert err_q < err_n, (err_q, err_n)
+
+
+def test_eq9_shares_per_token_delta():
+    """x_hat_int must be a column GATHER of X_hat_int (Delta_xhat == Delta_x)
+    — no second quantization of the outlier slab (Eq. 9)."""
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = jax.random.normal(keys[0], (16, 32)).at[:, 4].mul(100.0)
+    w = jax.random.normal(keys[1], (32, 8)) * 0.1
+    idx = jnp.array([4], jnp.int32)
+    qw, st0 = prepare_quaff_weights(w, idx)
+    s = jnp.array([10.0])
+    s_inv = jnp.ones((32,)).at[idx].set(1.0 / s)
+    x_int, x_delta = quant.quantize(x * s_inv[None, :], axis=-1)
+    # the kernel's gathered slab must equal re-gathering from x_int
+    xo = jnp.take(x_int, idx, axis=1)
+    assert xo.dtype == jnp.int8
+    # and the forward must be reproducible from those exact pieces
+    w_hat = (s - 1.0)[:, None] * qw.w_outlier
+    wo_int, wo_delta = quant.quantize(w_hat, axis=0)
+    y_manual = (quant.int_matmul(x_int, qw.w_int).astype(jnp.float32)
+                * x_delta * qw.w_delta
+                + quant.int_matmul(xo, wo_int).astype(jnp.float32)
+                * x_delta * wo_delta)
+    y, _ = quaff_matmul(x, qw, s)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_manual), rtol=1e-5)
+
+
+@given(st.floats(0.0, 1.0), st.floats(0.1, 1000.0))
+def test_momentum_properties(gamma, xmax):
+    st0 = ScaleState(s=jnp.array([2.0, 5.0]),
+                     w_absmax=jnp.array([0.5, 0.25]))
+    stats = jnp.array([xmax, xmax])
+    st1 = momentum_update(st0, stats, gamma=gamma)
+    beta = beta_from_stats(stats, st0.w_absmax)
+    assert bool(jnp.all(st1.s >= 1.0 - 1e-6))
+    np.testing.assert_allclose(np.asarray(st1.s),
+                               np.asarray(gamma * st0.s + (1 - gamma) * beta),
+                               rtol=1e-6)
+    # fixed point: repeated updates with constant stats converge to beta
+    stx = st0
+    for _ in range(200):
+        stx = momentum_update(stx, stats, gamma=0.5)
+    np.testing.assert_allclose(np.asarray(stx.s), np.asarray(beta), rtol=1e-4)
+
+
+def test_beta_floor_is_one():
+    beta = beta_from_stats(jnp.array([1e-6]), jnp.array([100.0]))
+    assert float(beta[0]) == 1.0

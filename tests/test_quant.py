@@ -1,0 +1,90 @@
+"""Quantization-primitive invariants, including hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _arrays(min_dim=2, max_dim=64):
+    return st.integers(min_dim, max_dim).flatmap(
+        lambda n: st.integers(min_dim, max_dim).map(lambda m: (n, m)))
+
+
+@given(_arrays(), st.integers(0, 2 ** 31 - 1), st.floats(0.1, 100.0))
+def test_roundtrip_error_bound(shape, seed, scale):
+    """|x - dequant(quant(x))| <= delta/2 elementwise, every granularity."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+    for axis in (None, -1, 0):
+        x_int, delta = quant.quantize(x, axis=axis)
+        err = jnp.abs(x - quant.dequantize(x_int, delta))
+        bound = jnp.broadcast_to(delta, x.shape) * 0.5 + 1e-6
+        assert bool(jnp.all(err <= bound)), (axis, float(jnp.max(err - bound)))
+
+
+@given(_arrays(), st.integers(0, 2 ** 31 - 1))
+def test_int8_range(shape, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape) * 50
+    x_int, _ = quant.quantize(x, axis=-1)
+    assert x_int.dtype == jnp.int8
+    assert int(jnp.max(jnp.abs(x_int.astype(jnp.int32)))) <= 127
+
+
+def test_delta_positive():
+    x = jnp.zeros((4, 8))
+    delta = quant.compute_delta(x, axis=-1)
+    assert bool(jnp.all(delta > 0))
+
+
+def test_granularity_shapes():
+    x = jnp.ones((6, 10))
+    _, d_tensor = quant.quantize(x, axis=None)
+    _, d_token = quant.quantize(x, axis=-1)
+    _, d_oc = quant.quantize(x, axis=0)
+    assert d_tensor.shape == ()
+    assert d_token.shape == (6, 1)
+    assert d_oc.shape == (1, 10)
+
+
+def test_int_matmul_exact():
+    k = jax.random.PRNGKey(0)
+    a = jax.random.randint(k, (16, 32), -127, 128, jnp.int8)
+    b = jax.random.randint(k, (32, 8), -127, 128, jnp.int8)
+    got = quant.int_matmul(a, b)
+    want = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+    np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+def test_quantized_matmul_error_and_grad():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(k1, (32, 64))
+    w = jax.random.normal(k2, (64, 16)) * 0.1
+    w_int, w_delta = quant.quantize(w, axis=0)
+    y = quant.quantized_matmul(x, w_int, w_delta)
+    rel = float(jnp.mean(jnp.abs(y - x @ w)) / jnp.mean(jnp.abs(x @ w)))
+    assert rel < 0.05
+    for bwd_int8 in (True, False):
+        g = jax.grad(lambda xx: quant.quantized_matmul(
+            xx, w_int, w_delta, 8, bwd_int8).sum())(x)
+        g_ref = jax.grad(lambda xx: (xx @ w).sum())(x)
+        grel = float(jnp.mean(jnp.abs(g - g_ref)) / jnp.mean(jnp.abs(g_ref)))
+        assert grel < 0.05, (bwd_int8, grel)
+
+
+def test_fake_quant_ste():
+    x = jnp.linspace(-2, 2, 32).reshape(4, 8)
+    y = quant.fake_quant(x, None)
+    assert y.shape == x.shape
+    g = jax.grad(lambda v: quant.fake_quant(v, None).sum())(x)
+    np.testing.assert_allclose(np.asarray(g), np.ones_like(g))  # STE identity
+
+
+def test_int4_quantization():
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 8))
+    x_int, delta = quant.quantize(x, axis=-1, bits=4)
+    assert int(jnp.max(jnp.abs(x_int.astype(jnp.int32)))) <= 7

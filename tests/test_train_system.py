@@ -1,0 +1,115 @@
+"""System-level training behaviour: convergence on the synthetic task,
+microbatch-count invariance, momentum-state evolution, OSSH hit-rate
+during fine-tuning (the paper's Fig. 3 claim, in miniature)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import outliers as OUT
+from repro.core.peft import PEFTConfig
+from repro.data.pipeline import DataConfig, Loader, SyntheticLM, calibration_batches
+from repro.models import layers as LAY
+from repro.models import model as M
+from repro.models.config import ModelConfig, QuantConfig, TrainConfig
+from repro.train import calibrate as C
+from repro.train import steps as S
+
+
+def _cfg(mode="quaff"):
+    return ModelConfig(
+        name="sys-test", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab_size=64, head_dim=16,
+        quant=QuantConfig(mode=mode),
+        peft=PEFTConfig(method="lora", lora_rank=8))
+
+
+def test_loss_decreases_quaff():
+    cfg = _cfg("quaff")
+    tcfg = TrainConfig(microbatches=1, remat=False, learning_rate=1e-2)
+    frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
+    state = S.init_train_state(adapters, qstate, tcfg)
+    step = jax.jit(S.build_train_step(cfg, tcfg))
+    dcfg = DataConfig(vocab_size=64, seq_len=32, batch_size=8, noise=0.05)
+    loader = Loader(dcfg)
+    losses = []
+    for i in range(25):
+        state, metrics = step(frozen, state, jax.tree.map(jnp.asarray,
+                                                          loader.batch(i)))
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses
+    floor = SyntheticLM(dcfg).entropy_floor()
+    assert losses[-1] > floor - 0.05  # can't beat the generating entropy
+
+
+def test_microbatch_invariance():
+    """mb=1 vs mb=2 produce (nearly) the same updated adapters."""
+    cfg = _cfg("quaff")
+    loader = Loader(DataConfig(vocab_size=64, seq_len=16, batch_size=8))
+    batch = jax.tree.map(jnp.asarray, loader.batch(0))
+    results = []
+    for mb in (1, 2):
+        tcfg = TrainConfig(microbatches=mb, remat=False, grad_clip=0.0)
+        frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
+        state = S.init_train_state(adapters, qstate, tcfg)
+        step = jax.jit(S.build_train_step(cfg, tcfg))
+        new_state, _ = step(frozen, state, batch)
+        results.append(new_state.adapters)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-5),
+        results[0], results[1])
+
+
+def test_momentum_state_moves_toward_beta():
+    cfg = _cfg("quaff")
+    tcfg = TrainConfig(microbatches=1, remat=False)
+    frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
+    state = S.init_train_state(adapters, qstate, tcfg)
+    step = jax.jit(S.build_train_step(cfg, tcfg))
+    loader = Loader(DataConfig(vocab_size=64, seq_len=16, batch_size=4))
+    s0 = np.asarray(state.quant["attn"]["wq"].s)
+    for i in range(5):
+        state, _ = step(frozen, state, jax.tree.map(jnp.asarray,
+                                                    loader.batch(i)))
+    s5 = np.asarray(state.quant["attn"]["wq"].s)
+    assert np.all(s5 >= 1.0 - 1e-6)
+    assert not np.allclose(s0, s5), "momentum state never updated"
+
+
+def test_ossh_hitrate_during_finetuning():
+    """Calibrate outliers on held-out data, fine-tune, then measure the
+    hit rate of the predefined set against runtime outliers (Fig. 3)."""
+    cfg = _cfg("fp32")
+    frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
+    dcfg = DataConfig(vocab_size=64, seq_len=32, batch_size=8)
+    stats = C.capture_stats(frozen, adapters, qstate, cfg,
+                            calibration_batches(dcfg, 3))
+    fq, qs = C.convert(frozen, stats, cfg, "quaff")
+    cfg_q = dataclasses.replace(
+        cfg, quant=dataclasses.replace(cfg.quant, mode="quaff"))
+
+    tcfg = TrainConfig(microbatches=1, remat=False, learning_rate=5e-3)
+    state = S.init_train_state(adapters, qs, tcfg)
+    step = jax.jit(S.build_train_step(cfg_q, tcfg))
+    loader = Loader(dcfg)
+    for i in range(10):
+        state, _ = step(fq, state, jax.tree.map(jnp.asarray, loader.batch(i)))
+
+    # runtime outliers after fine-tuning (capture through the quaff model)
+    with LAY.capture_stats():
+        _, live_stats, _, _ = M.forward(
+            fq, state.adapters, state.quant,
+            jnp.asarray(loader.batch(99)["tokens"]), cfg_q)
+    # hit rate: predefined channels (down_proj has the largest budget)
+    pre = np.asarray(fq["blocks"]["ffn"]["down"]["w"].outlier_idx)  # (L, k)
+    live = np.asarray(live_stats["ffn"]["down"])                    # (L, c)
+    hits, total = 0, 0
+    for layer in range(pre.shape[0]):
+        st_l = live[layer]
+        runtime = np.nonzero(st_l > 20.0 * np.median(st_l))[0]
+        total += len(runtime)
+        hits += len(set(runtime) & set(pre[layer]))
+    if total:
+        assert hits / total >= 0.5, (hits, total)

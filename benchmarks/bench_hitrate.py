@@ -11,8 +11,8 @@ import numpy as np
 
 from benchmarks import common
 from repro.core import outliers as OUT
+from repro.core.backend import CAPTURE
 from repro.data.pipeline import Loader
-from repro.models import layers as LAY
 from repro.models import model as M
 from repro.models.config import TrainConfig
 from repro.train import calibrate as C
@@ -58,10 +58,10 @@ def run(steps: int = 12, uniform: bool = False) -> list:
     for i in range(steps):
         state, _ = step(fz, state, jax.tree.map(jnp.asarray, loader.batch(i)))
         if i % 4 == 3:
-            with LAY.capture_stats():
-                _, live, _, _ = M.forward(
-                    fz, state.adapters, state.quant,
-                    jnp.asarray(loader.batch(1000 + i)["tokens"]), cfg)
+            live = M.forward(
+                fz, state.adapters, state.quant,
+                jnp.asarray(loader.batch(1000 + i)["tokens"]), cfg,
+                scope=CAPTURE).stats
             hr_down = _hitrate(pre["down"], np.asarray(live["ffn"]["down"]))
             hr_o = _hitrate(pre["wo"], np.asarray(live["attn"]["wo"]))
             tag = "uniform" if uniform else "nonuniform"

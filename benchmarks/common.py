@@ -11,11 +11,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core.peft import PEFTConfig
 from repro.data.pipeline import DataConfig, Loader, calibration_batches
-from repro.models import model as M
 from repro.models.config import ModelConfig, QuantConfig, TrainConfig
-from repro.train import calibrate as C
 from repro.train import steps as S
 
 MODES = ["fp32", "llm_int8", "smooth_dynamic", "naive", "smooth_static",
@@ -38,19 +37,14 @@ def data_cfg(batch=8, seq=64, vocab=512, noise=0.1, seed=1234) -> DataConfig:
 
 def build_mode_model(mode: str, peft: str = "lora", dcfg: Optional[DataConfig]
                      = None, calib_batches: int = 4, seed: int = 0):
-    """FP32-init + real calibration + conversion to ``mode``.
+    """FP32-init + real calibration + conversion to ``mode`` via repro.api.
     Returns (cfg, frozen, adapters, quant_state)."""
     dcfg = dcfg or data_cfg()
-    cfg0 = micro_phi3("fp32", peft)
-    frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(seed), cfg0)
-    if mode == "fp32":
-        return cfg0, frozen, adapters, qstate
-    stats = C.capture_stats(frozen, adapters, qstate, cfg0,
-                            calibration_batches(dcfg, calib_batches))
-    fz, qs = C.convert(frozen, stats, cfg0, mode)
-    cfg = dataclasses.replace(cfg0, quant=dataclasses.replace(
-        cfg0.quant, mode=mode))
-    return cfg, fz, adapters, qs
+    model = api.prepare(micro_phi3("fp32", peft), seed=seed)
+    if mode != "fp32":
+        model.calibrate(calibration_batches(dcfg, calib_batches))
+        model.convert(mode)
+    return model.cfg, model.frozen, model.adapters, model.quant_state
 
 
 def timed_train(cfg, frozen, adapters, qstate, dcfg: DataConfig,

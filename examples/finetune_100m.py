@@ -9,18 +9,17 @@ On the CPU container this takes a few minutes; the identical code drives
 the production configs via repro.launch.train.
 """
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.peft import PEFTConfig
 from repro.data.pipeline import DataConfig, Loader, SyntheticLM, calibration_batches
-from repro.models import model as M
 from repro.models.config import ModelConfig, QuantConfig, TrainConfig
-from repro.train import calibrate, steps
+from repro.train import steps
 
 
 def build(mode: str):
@@ -30,22 +29,20 @@ def build(mode: str):
         quant=QuantConfig(mode="fp32"),
         peft=PEFTConfig(method="lora", lora_rank=16))
     data = DataConfig(vocab_size=8192, seq_len=128, batch_size=8, noise=0.05)
-    frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
-    n_params = sum(x.size for x in jax.tree.leaves(frozen))
+    model = api.prepare(cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(model.frozen))
     print(f"[{mode}] base model: {n_params/1e6:.1f}M params (frozen)")
     if mode != "fp32":
-        stats = calibrate.capture_stats(frozen, adapters, qstate, cfg,
-                                        calibration_batches(data, 2))
-        frozen, qstate = calibrate.convert(frozen, stats, cfg, mode)
-        cfg = dataclasses.replace(cfg, quant=dataclasses.replace(
-            cfg.quant, mode=mode))
-    return cfg, frozen, adapters, qstate, data
+        model.calibrate(calibration_batches(data, 2))
+        model.convert(mode)
+    return model, data
 
 
 def train(mode: str, n_steps: int, ckpt_dir: str):
-    cfg, frozen, adapters, qstate, data = build(mode)
+    model, data = build(mode)
+    cfg, frozen = model.cfg, model.frozen
     tcfg = TrainConfig(learning_rate=2e-3, microbatches=2, remat=True)
-    state = steps.init_train_state(adapters, qstate, tcfg)
+    state = steps.init_train_state(model.adapters, model.quant_state, tcfg)
     mgr = CheckpointManager(f"{ckpt_dir}/{mode}", keep=2)
     start = 0
     if mgr.latest_step() is not None:

@@ -1,56 +1,35 @@
-"""Quickstart: Quaff-quantized LoRA fine-tuning of a tiny LM in ~40 lines.
+"""Quickstart: Quaff-quantized LoRA fine-tuning of a tiny LM through the
+``repro.api`` facade — the whole paper pipeline in five calls.
 
     PYTHONPATH=src python examples/quickstart.py
-
-Shows the whole public API surface: config -> fp32 init -> calibration ->
-Quaff conversion -> train loop with momentum-scale updates -> eval.
 """
-import dataclasses
-
-import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.core.peft import PEFTConfig
 from repro.data.pipeline import DataConfig, Loader, calibration_batches
-from repro.models import model as M
 from repro.models.config import ModelConfig, QuantConfig, TrainConfig
-from repro.train import calibrate, steps
 
 cfg = ModelConfig(
     name="quickstart", family="dense", n_layers=4, d_model=128, n_heads=8,
     n_kv_heads=4, d_ff=256, vocab_size=512, head_dim=16,
-    quant=QuantConfig(mode="fp32"),
+    quant=QuantConfig(mode="fp32"),   # fp32 init; .convert() quantizes
     peft=PEFTConfig(method="lora", lora_rank=16))
 data = DataConfig(vocab_size=512, seq_len=64, batch_size=8, noise=0.05)
 
-# 1. initialize the full-precision model (base weights will be frozen)
-frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
+# fp32 init -> calibrate outliers (paper §3.3, Eq. 6) -> one-time Quaff
+# preprocessing (INT8 W, fp W_O rows, momentum state)
+model = api.prepare(cfg)
+model.calibrate(calibration_batches(data, 4))
+model.convert("quaff")
 
-# 2. calibrate outlier channels on held-out data (paper §3.3, Eq. 6)
-stats = calibrate.capture_stats(frozen, adapters, qstate, cfg,
-                                calibration_batches(data, 4))
+# fine-tune: only the LoRA adapters train; s_t updates via Eq. 7
+losses = model.finetune(TrainConfig(learning_rate=5e-3, microbatches=1),
+                        Loader(data), steps=40, log_every=10)
+s_mean = float(jnp.mean(model.quant_state["ffn"]["down"].s))
+print(f"trained 40 steps: loss {losses[0]:.4f} -> {losses[-1]:.4f}  "
+      f"mean s(down_proj) {s_mean:.3f}")
 
-# 3. one-time Quaff preprocessing: INT8 W, fp W_O rows, momentum state
-frozen_q, qstate = calibrate.convert(frozen, stats, cfg, "quaff")
-cfg = dataclasses.replace(cfg, quant=dataclasses.replace(cfg.quant,
-                                                         mode="quaff"))
-
-# 4. fine-tune: only the LoRA adapters train; s_t updates via Eq. 7
-tcfg = TrainConfig(learning_rate=5e-3, microbatches=1)
-state = steps.init_train_state(adapters, qstate, tcfg)
-train_step = jax.jit(steps.build_train_step(cfg, tcfg))
-loader = Loader(data)
-for i in range(40):
-    state, metrics = train_step(frozen_q, state, jax.tree.map(
-        jnp.asarray, loader.batch(i)))
-    if i % 10 == 0:
-        s_mean = float(jnp.mean(state.quant["ffn"]["down"].s))
-        print(f"step {i:3d}  loss {float(metrics['loss']):.4f}  "
-              f"mean s(down_proj) {s_mean:.3f}")
-
-# 5. evaluate
-ev = jax.jit(steps.build_eval_step(cfg))
-m = ev(frozen_q, state.adapters, state.quant,
-       jax.tree.map(jnp.asarray, loader.batch(999)))
-print(f"final: loss {float(m['loss']):.4f}  ppl {float(m['ppl']):.2f}  "
-      f"acc {float(m['acc']):.3f}")
+# evaluate
+m = model.evaluate(Loader(data).batch(999))
+print(f"final: loss {m['loss']:.4f}  ppl {m['ppl']:.2f}  acc {m['acc']:.3f}")

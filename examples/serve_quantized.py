@@ -1,21 +1,19 @@
-"""Serving example: batched request handling with the Quaff INT8 path —
-prefill a batch of prompts, then decode with a shared KV cache, measuring
-per-phase throughput for quaff vs fp32.
+"""Serving example: batched request handling with the Quaff INT8 path
+through the ``repro.api`` facade — prefill a batch of prompts, then decode
+with a shared KV cache, measuring per-phase throughput for quaff vs fp32.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core.peft import PEFTConfig
 from repro.data.pipeline import DataConfig, Loader
-from repro.models import model as M
 from repro.models.config import ModelConfig, QuantConfig
-from repro.train import steps as S
 
 N_REQ, PROMPT, MAX_NEW = 4, 32, 24
 
@@ -26,18 +24,15 @@ def serve(mode: str):
         n_heads=8, n_kv_heads=4, d_ff=512, vocab_size=1024, head_dim=32,
         quant=QuantConfig(mode=mode),
         peft=PEFTConfig(method="lora", lora_rank=8))
-    frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
+    model = api.prepare(cfg)
     prompts = jnp.asarray(Loader(DataConfig(
         vocab_size=cfg.vocab_size, seq_len=PROMPT,
         batch_size=N_REQ)).batch(0)["tokens"])
 
-    prefill = jax.jit(S.build_prefill(cfg, extra_len=MAX_NEW))
-    decode = jax.jit(S.build_decode(cfg))
-
-    logits, caches = prefill(frozen, adapters, qstate, {"tokens": prompts})
+    logits, caches = model.prefill({"tokens": prompts}, extra_len=MAX_NEW)
     jax.block_until_ready(logits)  # includes compile
     t0 = time.perf_counter()
-    logits, caches = prefill(frozen, adapters, qstate, {"tokens": prompts})
+    logits, caches = model.prefill({"tokens": prompts}, extra_len=MAX_NEW)
     jax.block_until_ready(logits)
     t_prefill = time.perf_counter() - t0
 
@@ -45,8 +40,7 @@ def serve(mode: str):
     toks = [tok]
     t0 = time.perf_counter()
     for i in range(MAX_NEW - 1):
-        logits, caches = decode(frozen, adapters, qstate, caches, tok,
-                                jnp.asarray(PROMPT + i, jnp.int32))
+        logits, caches = model.decode_step(caches, tok, PROMPT + i)
         tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         toks.append(tok)
     jax.block_until_ready(tok)

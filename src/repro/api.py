@@ -1,0 +1,166 @@
+"""High-level facade over the Quaff reproduction: the paper's whole
+prepare -> calibrate -> convert -> fine-tune -> serve pipeline in one object,
+so examples, benchmarks and serving stop hand-wiring the plumbing.
+
+    from repro import api
+
+    model = api.prepare(cfg)                 # fp32 init (base stays frozen)
+    model.calibrate(batches)                 # §3.3: capture outlier stats
+    model.convert("quaff")                   # one-time weights preprocessing
+    model.finetune(tcfg, loader, steps=100)  # PEFT adapters + Eq. 7 updates
+    model.evaluate(batch)                    # loss / ppl / acc
+    model.generate(prompts, max_new=32)      # batched greedy decode
+
+Every quant mode in the ``QuantBackend`` registry (including modes
+registered by downstream code) works through the same five calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import backend as BK
+from repro.models import model as M
+from repro.models.config import ModelConfig, TrainConfig
+from repro.train import calibrate as C
+from repro.train import steps as S
+
+
+def prepare(cfg: ModelConfig, seed: int = 0) -> "QuaffModel":
+    """Initialize a model in ``cfg``'s quant mode (typically "fp32" so it
+    can be calibrated and converted) and wrap it in the facade."""
+    frozen, adapters, quant_state = M.init_params(jax.random.PRNGKey(seed), cfg)
+    return QuaffModel(cfg, frozen, adapters, quant_state)
+
+
+class QuaffModel:
+    """Stateful facade. ``frozen`` never changes after ``convert`` — that is
+    Quaff's decoupling story; ``adapters``/``quant_state`` advance with
+    ``finetune``. All heavy functions are jitted once per (cfg, shape)."""
+
+    def __init__(self, cfg: ModelConfig, frozen, adapters, quant_state):
+        self.cfg = cfg
+        self.frozen = frozen
+        self.adapters = adapters
+        self.quant_state = quant_state
+        self.stats = None           # calibration artifacts (absmax, scores)
+        self._eval_fn = None
+        self._eval_cfg = None
+        self._decode_fn = None
+        self._prefill_fns: Dict[int, Any] = {}
+        self._train_state = None
+        self._train_tcfg = None
+        self._step_fn = None
+
+    # ---- calibration / conversion --------------------------------------
+    def calibrate(self, batches: Iterable[Dict[str, Any]],
+                  ratio: Optional[float] = None) -> "QuaffModel":
+        """Capture per-channel activation stats (paper §3.3, Eq. 6)."""
+        ratio = self.cfg.quant.outlier_ratio if ratio is None else ratio
+        self.stats = C.capture_stats(self.frozen, self.adapters,
+                                     self.quant_state, self.cfg,
+                                     list(batches), ratio=ratio)
+        return self
+
+    def convert(self, mode: str) -> "QuaffModel":
+        """One-time weights preprocessing into ``mode`` via the registry."""
+        backend = BK.get_backend(mode)  # fail fast on unknown modes
+        if self.cfg.quant.mode != "fp32":
+            raise ValueError(
+                f"convert() preprocesses the fp32 weight tree exactly once; "
+                f"this model is already {self.cfg.quant.mode!r} — api.prepare "
+                f"a fresh fp32 model to target {mode!r}")
+        if self.stats is None and (backend.wants_absmax
+                                   or backend.wants_outliers):
+            raise ValueError(
+                f"mode {mode!r} needs calibration artifacts; call "
+                f".calibrate(batches) before .convert({mode!r})")
+        self.frozen, self.quant_state = C.convert(
+            self.frozen, self.stats, self.cfg, mode)
+        self.cfg = dataclasses.replace(
+            self.cfg, quant=dataclasses.replace(self.cfg.quant, mode=mode))
+        self._eval_fn = None
+        self._decode_fn = None
+        self._prefill_fns = {}
+        self._train_state = None
+        self._step_fn = None
+        return self
+
+    # ---- training -------------------------------------------------------
+    def finetune(self, tcfg: TrainConfig, loader, steps: int,
+                 start_step: Optional[int] = None,
+                 log_every: int = 0) -> List[float]:
+        """Run ``steps`` train steps (adapters + quant state advance in
+        place); returns the per-step loss history.
+
+        Repeated calls with the same ``tcfg`` CONTINUE training: optimizer
+        moments, the step counter (which also keys dropout), and the data
+        position carry over. A different ``tcfg`` re-initializes the
+        optimizer. ``start_step`` only overrides the loader batch index."""
+        if self._train_state is None or tcfg != self._train_tcfg:
+            self._train_state = S.init_train_state(self.adapters,
+                                                   self.quant_state, tcfg)
+            self._step_fn = jax.jit(S.build_train_step(self.cfg, tcfg))
+            self._train_tcfg = tcfg
+        state = self._train_state
+        begin = int(state.step) if start_step is None else start_step
+        losses = []  # device arrays; host sync deferred to the end
+        for i in range(begin, begin + steps):
+            batch = jax.tree.map(jnp.asarray, loader.batch(i))
+            state, metrics = self._step_fn(self.frozen, state, batch)
+            losses.append(metrics["loss"])
+            if log_every and i % log_every == 0:
+                print(f"step {i:5d}  loss {float(metrics['loss']):.4f}  "
+                      f"gnorm {float(metrics['grad_norm']):.3f}")
+        self._train_state = state
+        self.adapters = state.adapters
+        self.quant_state = state.quant
+        return [float(l) for l in losses]
+
+    # ---- evaluation / inference -----------------------------------------
+    def evaluate(self, batch: Dict[str, Any]) -> Dict[str, float]:
+        if self._eval_fn is None or self._eval_cfg is not self.cfg:
+            self._eval_fn = jax.jit(S.build_eval_step(self.cfg))
+            self._eval_cfg = self.cfg
+        m = self._eval_fn(self.frozen, self.adapters, self.quant_state,
+                          jax.tree.map(jnp.asarray, batch))
+        return {k: float(v) for k, v in m.items()}
+
+    def forward(self, tokens, **kw):
+        """Raw typed forward (ModelOut) for power users."""
+        return M.forward(self.frozen, self.adapters, self.quant_state,
+                         jnp.asarray(tokens), self.cfg, **kw)
+
+    def prefill(self, batch: Dict[str, Any], extra_len: int = 0):
+        """Batched prefill -> (last-token logits, decode caches)."""
+        fn = self._prefill_fns.get(extra_len)
+        if fn is None:
+            fn = jax.jit(S.build_prefill(self.cfg, extra_len=extra_len))
+            self._prefill_fns[extra_len] = fn
+        return fn(self.frozen, self.adapters, self.quant_state,
+                  jax.tree.map(jnp.asarray, batch))
+
+    def decode_step(self, caches, token, pos):
+        """One decode step -> (logits, new caches)."""
+        if self._decode_fn is None:
+            self._decode_fn = jax.jit(S.build_decode(self.cfg))
+        return self._decode_fn(self.frozen, self.adapters, self.quant_state,
+                               caches, token, jnp.asarray(pos, jnp.int32))
+
+    def generate(self, tokens, max_new: int = 32) -> jnp.ndarray:
+        """Greedy batched generation: (B, S) prompts -> (B, max_new)."""
+        tokens = jnp.asarray(tokens)
+        if max_new <= 0:
+            return jnp.zeros((tokens.shape[0], 0), jnp.int32)
+        prompt_len = tokens.shape[1]
+        logits, caches = self.prefill({"tokens": tokens}, extra_len=max_new)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out = [tok]
+        for i in range(max_new - 1):
+            logits, caches = self.decode_step(caches, tok, prompt_len + i)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1)

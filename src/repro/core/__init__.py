@@ -1,6 +1,18 @@
 """Quaff core: quantization primitives, outlier identification, momentum
-scaling, the decoupled Quaff linear, WAQ baselines, and PEFT adapters."""
-from repro.core.baselines import QuantMode, qlinear, prepare  # noqa: F401
+scaling, the decoupled Quaff linear, WAQ baselines, the QuantBackend
+registry, and PEFT adapters."""
+from repro.core.backend import (  # noqa: F401
+    CAPTURE,
+    Calibration,
+    LinearOut,
+    QuantBackend,
+    StatsScope,
+    get_backend,
+    register,
+    registered_modes,
+)
+from repro.core.baselines import QuantMode, prepare, qlinear  # noqa: F401
+from repro.core.int4 import Int4Weights  # noqa: F401
 from repro.core.quaff_linear import (  # noqa: F401
     QuaffWeights,
     prepare_quaff_weights,

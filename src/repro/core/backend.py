@@ -1,0 +1,153 @@
+"""QuantBackend registry: the one extension point for quantized-linear modes.
+
+Every weight-activation-quantization scheme (fp32 reference, naive WAQ,
+LLM.int8, SmoothQuant static/dynamic, Quaff, int4, ...) is a ``QuantBackend``
+registered under its mode name. Model code (``models/layers.py``) never
+branches on the mode — it resolves the backend once and calls the protocol:
+
+    prepare(w, bias, *, calib, bits)  -> frozen weights pytree (one-time)
+    apply(x, weights, *, state, bits, bwd_int8) -> LinearOut(y, stats)
+    init_state(weights)               -> optional per-layer scale state
+
+Adding a mode is one self-registering file (see ``core/int4.py`` for the
+canonical example): define the weights NamedTuple, subclass ``QuantBackend``,
+call ``register()`` at import time. MoE and calibration hooks have default
+implementations so simple backends need only the three methods above.
+
+``StatsScope`` replaces the old module-global capture flag: stats
+capture is an explicit, trace-safe argument threaded through
+``apply_qlinear`` and every model forward. Because the captured statistic
+changes shape ((c_in,) full absmax vs the backend's own stats), the scope is
+static Python data baked in at trace time — exactly like the old flag, but
+visible in the call signature and safe under nested/concurrent traces.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class LinearOut(NamedTuple):
+    """Typed output of one quantized linear application."""
+
+    y: jnp.ndarray
+    stats: Optional[jnp.ndarray] = None  # backend-defined (Quaff: max|X_:,O|)
+
+
+class Calibration(NamedTuple):
+    """Calibration artifacts handed to ``prepare``.
+
+    ``init_placeholder=True`` marks an init-time call (random weights, no
+    data seen yet): backends substitute documented placeholders for missing
+    artifacts (smooth_static: unit absmax; quaff: spread outlier set) that
+    real runs overwrite via train/calibrate. Without the flag, a backend
+    that requires an artifact must raise rather than silently degrade."""
+
+    absmax: Optional[jnp.ndarray] = None       # (c_in,) activation absmax
+    outlier_idx: Optional[jnp.ndarray] = None  # (n_o,) selected channels
+    layer_type: str = ""                       # q_proj / down_proj / ...
+    budgets: Optional[Mapping[str, float]] = None  # per-layer-type fractions
+    init_placeholder: bool = False             # init-time defaults allowed
+
+
+class StatsScope(NamedTuple):
+    """Explicit stats-capture request threaded through ``apply_qlinear``.
+
+    capture=True makes every qlinear emit the FULL per-channel absmax
+    (c_in,) of its input instead of the backend's own stats. Used by
+    calibration (outlier identification) and the OSSH hit-rate benchmark.
+    Never combined with momentum updates."""
+
+    capture: bool = False
+
+
+#: Convenience scope for calibration / hit-rate capture passes.
+CAPTURE = StatsScope(capture=True)
+
+
+class QuantBackend:
+    """Protocol base class. Subclass, set ``name``, implement prepare/apply."""
+
+    name: str = ""
+    #: convert() supplies calibration-time activation absmax to prepare()
+    wants_absmax: bool = False
+    #: convert() supplies selected outlier channel indices to prepare()
+    wants_outliers: bool = False
+
+    # ---- required -------------------------------------------------------
+    def prepare(self, w, bias=None, *, calib: Optional[Calibration] = None,
+                bits: int = 8):
+        """Build the frozen per-layer weights pytree from fp W (c_in, c_out)."""
+        raise NotImplementedError
+
+    def apply(self, x, weights, *, state=None, bits: int = 8,
+              bwd_int8: bool = True) -> LinearOut:
+        """x: (..., c_in) -> LinearOut(y: (..., c_out), stats-or-None)."""
+        raise NotImplementedError
+
+    # ---- optional -------------------------------------------------------
+    def init_state(self, weights):
+        """Per-layer mutable scale state (threaded through train steps)."""
+        return None
+
+    def apply_experts(self, x, weights, *, state=None, bits: int = 8,
+                      bwd_int8: bool = True) -> LinearOut:
+        """MoE expert-batched apply. x: (E, cap, c_in); ``weights`` leaves
+        carry a leading expert dim. Default: vmap ``apply`` over experts."""
+        def one(xe, we):
+            return self.apply(xe, we, state=state, bits=bits,
+                              bwd_int8=bwd_int8)
+        return jax.vmap(one)(x, weights)
+
+    def merge_expert_init(self, params_e, states_e):
+        """Post-init hook for per-expert stacked weights/states of one MoE
+        layer ((E, ...) leading dim). Backends with layer-shared state (Quaff:
+        outlier set + momentum scale are properties of the hidden stream, not
+        the expert) collapse the expert dim here. Default: no-op."""
+        return params_e, states_e
+
+    def collapse_expert_state(self, weights, state):
+        """Conversion-time analogue of ``merge_expert_init`` for stacked
+        (L, E, ...) trees produced by ``train/calibrate.convert``; the expert
+        dim is axis 1. Default: no-op."""
+        return weights, state
+
+
+_REGISTRY: Dict[str, QuantBackend] = {}
+
+
+def register(backend) -> QuantBackend:
+    """Register a backend under its ``.name`` (last wins). Accepts an
+    instance or a QuantBackend subclass (usable as a class decorator)."""
+    instance = backend() if isinstance(backend, type) else backend
+    if not instance.name:
+        raise ValueError(f"{type(instance).__name__} has an empty .name")
+    _REGISTRY[instance.name] = instance
+    return backend
+
+
+def _ensure_builtins():
+    # Lazy so `import repro.core.backend` alone never pulls jax-heavy math,
+    # and so the builtin modules (which import this one) register themselves
+    # no matter which entry point was imported first.
+    from repro.core import baselines, int4, quaff_linear  # noqa: F401
+
+
+def get_backend(mode) -> QuantBackend:
+    """Resolve a mode (str or enum with .value) to its backend."""
+    key = getattr(mode, "value", mode)
+    _ensure_builtins()
+    try:
+        return _REGISTRY[key]
+    except KeyError:
+        raise ValueError(
+            f"unknown quant mode {key!r}; registered modes: "
+            f"{', '.join(registered_modes())}"
+        ) from None
+
+
+def registered_modes():
+    _ensure_builtins()
+    return sorted(_REGISTRY)

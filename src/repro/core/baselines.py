@@ -1,5 +1,6 @@
-"""WAQ baselines the paper compares against (§4.1, App. A), all behind one
-``QuantMode`` dispatcher so every model in the zoo can run every mode.
+"""WAQ baselines the paper compares against (§4.1, App. A), each packaged as
+a registered ``QuantBackend`` so every model in the zoo can run every mode
+without a single mode branch outside the registry.
 
   fp32            : plain fp GEMM (paper's FP32 row).
   naive           : per-token / per-OC INT8 WAQ, Eq. 2.
@@ -14,28 +15,39 @@
   smooth_dynamic  : s recomputed from live activations each call; forces a
                     per-step rescale + requantize of the FP weights (Eq. 3) —
                     the coupling bottleneck Quaff removes.
-  quaff           : the paper's method (core/quaff_linear.py).
+
+Quaff itself registers from ``core/quaff_linear.py``; the int4 proof-of-
+extension backend from ``core/int4.py``.
 """
 from __future__ import annotations
 
 import enum
-import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import quant
-from repro.core.quaff_linear import QuaffWeights, quaff_matmul
+from repro.core.backend import (
+    Calibration,
+    LinearOut,
+    QuantBackend,
+    get_backend,
+    register,
+)
 
 
 class QuantMode(str, enum.Enum):
+    """Canonical mode names. The registry accepts any registered string —
+    this enum just enumerates the paper's baseline set for configs/docs."""
+
     FP32 = "fp32"
     NAIVE = "naive"
     LLM_INT8 = "llm_int8"
     SMOOTH_STATIC = "smooth_static"
     SMOOTH_DYNAMIC = "smooth_dynamic"
     QUAFF = "quaff"
+    INT4 = "int4"
 
 
 class FPWeights(NamedTuple):
@@ -73,33 +85,6 @@ LLM_INT8_THRESHOLD = 6.0  # paper App. A sigma
 SMOOTH_ALPHA = 0.5        # SmoothQuant migration strength
 
 
-def prepare(mode: QuantMode, w, bias=None, *, calib_absmax=None, bits: int = 8):
-    """Build the per-mode frozen weight pytree from fp W (c_in, c_out).
-
-    calib_absmax: (c_in,) calibration-time max|X_i| (smooth_static needs it).
-    """
-    if mode == QuantMode.FP32:
-        return FPWeights(w, bias)
-    if mode == QuantMode.NAIVE:
-        w_int, w_delta = quant.quantize(w, axis=0, bits=bits)
-        return NaiveWeights(w_int, w_delta, bias)
-    if mode == QuantMode.LLM_INT8:
-        w_int, w_delta = quant.quantize(w, axis=0, bits=bits)
-        return LLMInt8Weights(w_int, w_delta, w, bias)
-    if mode == QuantMode.SMOOTH_STATIC:
-        assert calib_absmax is not None, "smooth_static needs calibration stats"
-        w_absmax = jnp.maximum(jnp.max(jnp.abs(w), axis=1), 1e-8)
-        s = jnp.maximum(
-            (calib_absmax ** SMOOTH_ALPHA) / (w_absmax ** (1 - SMOOTH_ALPHA)), 1e-4
-        )
-        w_int, w_delta = quant.quantize(s[:, None] * w, axis=0, bits=bits)
-        return SmoothStaticWeights(w_int, w_delta, 1.0 / s, bias)
-    if mode == QuantMode.SMOOTH_DYNAMIC:
-        w_absmax = jnp.maximum(jnp.max(jnp.abs(w), axis=1), 1e-8)
-        return SmoothDynamicWeights(w, w_absmax, bias)
-    raise ValueError(f"prepare() does not handle {mode}; use prepare_quaff_weights")
-
-
 def _add_bias(y, bias, dtype):
     return y if bias is None else y + bias.astype(dtype)
 
@@ -109,31 +94,34 @@ def fp32_linear(x, wts: FPWeights):
     return _add_bias(y, wts.bias, x.dtype)
 
 
-def naive_linear(x, wts: NaiveWeights, bits: int = 8):
-    y = quant.quantized_matmul(x, wts.w_int, wts.w_delta, bits)
+def naive_linear(x, wts: NaiveWeights, bits: int = 8, bwd_int8: bool = True):
+    y = quant.quantized_matmul(x, wts.w_int, wts.w_delta, bits, bwd_int8)
     return _add_bias(y, wts.bias, x.dtype)
 
 
 def llm_int8_linear(x, wts: LLMInt8Weights, bits: int = 8,
-                    threshold: float = LLM_INT8_THRESHOLD):
+                    threshold: float = LLM_INT8_THRESHOLD,
+                    bwd_int8: bool = True):
     x2d = x.reshape((-1, x.shape[-1]))
     col_max = jnp.max(jnp.abs(jax.lax.stop_gradient(x2d)), axis=0)  # (c_in,)
     is_out = (col_max > threshold).astype(x.dtype)                  # dynamic O
     x_in = x2d * (1.0 - is_out)[None, :]
     x_out = x2d * is_out[None, :]
-    y_q = quant.quantized_matmul(x_in, wts.w_int, wts.w_delta, bits)
+    y_q = quant.quantized_matmul(x_in, wts.w_int, wts.w_delta, bits, bwd_int8)
     y_fp = x_out @ wts.w_fp.astype(x.dtype)   # fp path, needs resident fp W
     y = (y_q + y_fp).reshape(x.shape[:-1] + (wts.w_int.shape[-1],))
     return _add_bias(y, wts.bias, x.dtype)
 
 
-def smooth_static_linear(x, wts: SmoothStaticWeights, bits: int = 8):
+def smooth_static_linear(x, wts: SmoothStaticWeights, bits: int = 8,
+                         bwd_int8: bool = True):
     x_hat = x * wts.s_inv.astype(x.dtype)[None, :]
-    y = quant.quantized_matmul(x_hat, wts.w_int, wts.w_delta, bits)
+    y = quant.quantized_matmul(x_hat, wts.w_int, wts.w_delta, bits, bwd_int8)
     return _add_bias(y, wts.bias, x.dtype)
 
 
-def smooth_dynamic_linear(x, wts: SmoothDynamicWeights, bits: int = 8):
+def smooth_dynamic_linear(x, wts: SmoothDynamicWeights, bits: int = 8,
+                          bwd_int8: bool = True):
     """Per-call: s from live stats, rescale + requantize W (the cost), then
     INT8 GEMM. Requantization is inside the step = the paper's Smooth_D row."""
     x2d = x.reshape((-1, x.shape[-1]))
@@ -145,26 +133,103 @@ def smooth_dynamic_linear(x, wts: SmoothDynamicWeights, bits: int = 8):
     )
     w_int, w_delta = quant.quantize(s[:, None] * wts.w_fp, axis=0, bits=bits)
     x_hat = x2d * (1.0 / s).astype(x.dtype)[None, :]
-    y = quant.quantized_matmul(x_hat, w_int, w_delta, bits)
+    y = quant.quantized_matmul(x_hat, w_int, w_delta, bits, bwd_int8)
     y = y.reshape(x.shape[:-1] + (wts.w_fp.shape[-1],))
     return _add_bias(y, wts.bias, x.dtype)
 
 
-def qlinear(x, wts, mode: QuantMode, s: Optional[jnp.ndarray] = None,
-            bits: int = 8, bwd_int8: bool = True
+# ---------------------------------------------------------------------------
+# Registered backends
+# ---------------------------------------------------------------------------
+@register
+class _FP32Backend(QuantBackend):
+    name = "fp32"
+
+    def prepare(self, w, bias=None, *, calib=None, bits=8):
+        return FPWeights(w, bias)
+
+    def apply(self, x, weights, *, state=None, bits=8, bwd_int8=True):
+        return LinearOut(fp32_linear(x, weights))
+
+
+@register
+class _NaiveBackend(QuantBackend):
+    name = "naive"
+
+    def prepare(self, w, bias=None, *, calib=None, bits=8):
+        w_int, w_delta = quant.quantize(w, axis=0, bits=bits)
+        return NaiveWeights(w_int, w_delta, bias)
+
+    def apply(self, x, weights, *, state=None, bits=8, bwd_int8=True):
+        return LinearOut(naive_linear(x, weights, bits, bwd_int8))
+
+
+@register
+class _LLMInt8Backend(QuantBackend):
+    name = "llm_int8"
+
+    def prepare(self, w, bias=None, *, calib=None, bits=8):
+        w_int, w_delta = quant.quantize(w, axis=0, bits=bits)
+        return LLMInt8Weights(w_int, w_delta, w, bias)
+
+    def apply(self, x, weights, *, state=None, bits=8, bwd_int8=True):
+        return LinearOut(llm_int8_linear(x, weights, bits, bwd_int8=bwd_int8))
+
+
+@register
+class _SmoothStaticBackend(QuantBackend):
+    name = "smooth_static"
+    wants_absmax = True
+
+    def prepare(self, w, bias=None, *, calib=None, bits=8):
+        if calib is not None and calib.absmax is not None:
+            absmax = calib.absmax
+        elif calib is not None and calib.init_placeholder:
+            absmax = jnp.ones((w.shape[-2],), jnp.float32)
+        else:
+            raise ValueError(
+                "smooth_static needs calibration stats (Calibration.absmax); "
+                "pass init_placeholder=True for data-free init")
+        w_absmax = jnp.maximum(jnp.max(jnp.abs(w), axis=1), 1e-8)
+        s = jnp.maximum(
+            (absmax ** SMOOTH_ALPHA) / (w_absmax ** (1 - SMOOTH_ALPHA)), 1e-4
+        )
+        w_int, w_delta = quant.quantize(s[:, None] * w, axis=0, bits=bits)
+        return SmoothStaticWeights(w_int, w_delta, 1.0 / s, bias)
+
+    def apply(self, x, weights, *, state=None, bits=8, bwd_int8=True):
+        return LinearOut(smooth_static_linear(x, weights, bits, bwd_int8))
+
+
+@register
+class _SmoothDynamicBackend(QuantBackend):
+    name = "smooth_dynamic"
+
+    def prepare(self, w, bias=None, *, calib=None, bits=8):
+        w_absmax = jnp.maximum(jnp.max(jnp.abs(w), axis=1), 1e-8)
+        return SmoothDynamicWeights(w, w_absmax, bias)
+
+    def apply(self, x, weights, *, state=None, bits=8, bwd_int8=True):
+        return LinearOut(smooth_dynamic_linear(x, weights, bits, bwd_int8))
+
+
+# ---------------------------------------------------------------------------
+# Thin compatibility wrappers (registry-backed, no mode branching)
+# ---------------------------------------------------------------------------
+def prepare(mode, w, bias=None, *, calib_absmax=None, bits: int = 8):
+    """Build the per-mode frozen weight pytree from fp W (c_in, c_out)."""
+    calib = Calibration(absmax=calib_absmax)
+    return get_backend(mode).prepare(w, bias, calib=calib, bits=bits)
+
+
+def qlinear(x, wts, mode, s: Optional[jnp.ndarray] = None, bits: int = 8,
+            bwd_int8: bool = True
             ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
-    """Unified dispatch. Returns (y, stats-or-None). ``s`` only for QUAFF."""
-    if mode == QuantMode.QUAFF:
-        assert isinstance(wts, QuaffWeights)
-        return quaff_matmul(x, wts, s, bits, bwd_int8)
-    if mode == QuantMode.FP32:
-        return fp32_linear(x, wts), None
-    if mode == QuantMode.NAIVE:
-        return naive_linear(x, wts, bits), None
-    if mode == QuantMode.LLM_INT8:
-        return llm_int8_linear(x, wts, bits), None
-    if mode == QuantMode.SMOOTH_STATIC:
-        return smooth_static_linear(x, wts, bits), None
-    if mode == QuantMode.SMOOTH_DYNAMIC:
-        return smooth_dynamic_linear(x, wts, bits), None
-    raise ValueError(mode)
+    """Registry dispatch. Returns (y, stats-or-None). ``s`` only for Quaff."""
+    state = None
+    if s is not None:
+        from repro.core.scaling import ScaleState
+        state = ScaleState(s=s, w_absmax=jnp.ones_like(s))
+    out = get_backend(mode).apply(x, wts, state=state, bits=bits,
+                                  bwd_int8=bwd_int8)
+    return out.y, out.stats

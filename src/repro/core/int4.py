@@ -1,0 +1,46 @@
+"""INT4 weight-activation quantization backend — the proof that a new mode
+is ONE self-registering file under the ``QuantBackend`` registry.
+
+Per-OC symmetric 4-bit weights + per-token 4-bit activations (paper Eq. 1/2
+granularities at bits=4). The int values still ride in int8 containers
+(`quant.quantize` clips to ±7), so the same integer GEMM path applies; a
+packed-nibble layout is a kernel-level concern, not a protocol one.
+
+No calibration artifacts, no scale state: ``prepare`` + ``apply`` is the
+whole contract. Everything else (init_qlinear, apply_qlinear, MoE experts,
+calibration conversion, the repro.api facade, serving) picks it up from the
+registry with zero edits elsewhere — `QuantConfig(mode="int4")` just works.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.backend import LinearOut, QuantBackend, register
+
+BITS = 4
+
+
+class Int4Weights(NamedTuple):
+    w_int: jnp.ndarray       # (c_in, c_out), values in [-7, 7] (int8 carrier)
+    w_delta: jnp.ndarray     # (1, c_out) per-OC step
+    bias: Optional[jnp.ndarray] = None
+
+
+@register
+class _Int4Backend(QuantBackend):
+    name = "int4"
+
+    def prepare(self, w, bias=None, *, calib=None, bits=8):
+        # bits is the config-wide knob; this backend is 4-bit by definition
+        w_int, w_delta = quant.quantize(w, axis=0, bits=BITS)
+        return Int4Weights(w_int, w_delta, bias)
+
+    def apply(self, x, weights, *, state=None, bits=8, bwd_int8=True):
+        y = quant.quantized_matmul(x, weights.w_int, weights.w_delta, BITS,
+                                   bwd_int8)
+        if weights.bias is not None:
+            y = y + weights.bias.astype(y.dtype)
+        return LinearOut(y)

@@ -56,6 +56,14 @@ def budget_for(layer_type: str, budgets: Optional[Mapping[str, float]] = None) -
     return DEFAULT_BUDGET_FALLBACK
 
 
+def outlier_count(c_in: int, layer_type: str,
+                  budgets: Optional[Mapping[str, float]] = None) -> int:
+    """Channel count for one layer under the per-type budget (>= 1, <= c_in).
+    The single source of truth shared by init-time placeholder selection and
+    calibration-time top-k conversion."""
+    return max(1, min(c_in, int(round(budget_for(layer_type, budgets) * c_in))))
+
+
 def outlier_scores(acts: jnp.ndarray, ratio: float = 20.0) -> jnp.ndarray:
     """xi per channel from calibration activations (n_samples, tokens, c_in).
 

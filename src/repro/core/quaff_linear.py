@@ -30,7 +30,9 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import outliers as OUT
 from repro.core import quant
+from repro.core.backend import LinearOut, QuantBackend, register
 from repro.core.scaling import ScaleState
 
 
@@ -173,14 +175,15 @@ def quaff_matmul(
 # hidden stream, not of the expert — validated in tests/test_moe.py).
 # ---------------------------------------------------------------------------
 def quaff_matmul_experts(
-    x: jnp.ndarray, weights: QuaffWeights, s: jnp.ndarray, bits: int = 8
+    x: jnp.ndarray, weights: QuaffWeights, s: jnp.ndarray, bits: int = 8,
+    bwd_int8: bool = True,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: (E, cap, c_in), weights.*: (E, ...) except outlier_idx (n_o,).
 
     Returns (y: (E, cap, c_out), stats: (n_o,) max over experts)."""
     def per_expert(xe, w_int, w_delta, w_outlier, bias):
         we = QuaffWeights(w_int, w_delta, w_outlier, weights.outlier_idx, bias)
-        return quaff_matmul(xe, we, s, bits)
+        return quaff_matmul(xe, we, s, bits, bwd_int8)
 
     y, stats = jax.vmap(per_expert)(
         x, weights.w_int, weights.w_delta, weights.w_outlier,
@@ -188,3 +191,80 @@ def quaff_matmul_experts(
             (weights.w_int.shape[0], weights.w_int.shape[-1]), jnp.float32),
     )
     return y, jnp.max(stats, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Registry backend
+# ---------------------------------------------------------------------------
+def spread_indices(c_in: int, count: int) -> jnp.ndarray:
+    """Deterministic placeholder outlier set used at init time; real runs
+    overwrite it via calibration (see repro/train/calibrate.py)."""
+    count = max(1, min(count, c_in))
+    idx = (jnp.arange(count, dtype=jnp.int32) * (c_in // count)) % c_in
+    # de-dup by construction: stride >= 1 and count <= c_in
+    return jnp.sort(idx)
+
+
+@register
+class _QuaffBackend(QuantBackend):
+    name = "quaff"
+    wants_outliers = True
+
+    def prepare(self, w, bias=None, *, calib=None, bits=8):
+        idx = calib.outlier_idx if calib is not None else None
+        if idx is None:
+            if calib is None or not calib.init_placeholder:
+                raise ValueError(
+                    "quaff needs a calibrated outlier set "
+                    "(Calibration.outlier_idx); pass init_placeholder=True "
+                    "for the data-free spread-indices init")
+            c_in = w.shape[-2]
+            idx = spread_indices(
+                c_in, OUT.outlier_count(c_in, calib.layer_type, calib.budgets))
+        weights, _ = prepare_quaff_weights(w, jnp.asarray(idx), bias, bits)
+        return weights
+
+    def init_state(self, weights: QuaffWeights) -> ScaleState:
+        return ScaleState.init(weights.w_outlier)
+
+    @staticmethod
+    def _s(state) -> jnp.ndarray:
+        # fail loudly: a dropped ScaleState would otherwise freeze every
+        # outlier scale at 1 and silently disable the paper's mechanism
+        if state is None:
+            raise ValueError(
+                "quaff apply() needs its ScaleState (momentum scales); got "
+                "None — thread the quant_state entry for this layer")
+        return state.s
+
+    def apply(self, x, weights, *, state=None, bits=8, bwd_int8=True):
+        y, stats = quaff_matmul(x, weights, self._s(state), bits, bwd_int8)
+        return LinearOut(y, stats)
+
+    def apply_experts(self, x, weights, *, state=None, bits=8, bwd_int8=True):
+        # per-expert W_int / W_O, layer-shared outlier set + scale state
+        y, stats = quaff_matmul_experts(x, weights, self._s(state), bits,
+                                        bwd_int8)
+        return LinearOut(y, stats)
+
+    def merge_expert_init(self, params_e, states_e):
+        # collapse the expert dim of the scale state (shared across experts;
+        # max|W| over experts is a safe normalizer upper bound); outlier_idx
+        # must be expert-invariant, so drop the vmapped copies.
+        states = jax.tree.map(lambda a: jnp.max(a, axis=0), states_e)
+
+        def fix_idx(w):
+            if isinstance(w, QuaffWeights):
+                return w._replace(outlier_idx=w.outlier_idx[0])
+            return w
+
+        params_e = jax.tree.map(
+            fix_idx, params_e,
+            is_leaf=lambda v: isinstance(v, QuaffWeights))
+        return params_e, states
+
+    def collapse_expert_state(self, weights, state):
+        # stacked (L, E, ...) conversion output -> expert dim (axis 1) shared
+        state = jax.tree.map(lambda a: jnp.max(a, axis=1), state)
+        weights = weights._replace(outlier_idx=weights.outlier_idx[:, 0])
+        return weights, state

@@ -1,5 +1,5 @@
 """Quantized serving driver: continuous-batched prefill + decode with the
-Quaff INT8 path.
+Quaff INT8 path, driven through the ``repro.api`` facade.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --reduced --requests 8 --max-new 32
@@ -19,12 +19,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.configs import get_config
 from repro.core.peft import PEFTConfig
 from repro.data.pipeline import DataConfig, Loader
-from repro.models import model as M
 from repro.models.config import QuantConfig
-from repro.train import steps as S
 
 
 def main():
@@ -42,7 +41,7 @@ def main():
         cfg = cfg.reduced()
     cfg = dataclasses.replace(cfg, quant=QuantConfig(mode=args.quant_mode),
                               peft=PEFTConfig(method="lora", lora_rank=8))
-    frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
+    model = api.prepare(cfg)
 
     # request queue: synthetic prompts
     loader = Loader(DataConfig(vocab_size=cfg.vocab_size,
@@ -50,11 +49,8 @@ def main():
                                batch_size=args.requests))
     prompts = jnp.asarray(loader.batch(0)["tokens"])
 
-    prefill = jax.jit(S.build_prefill(cfg, extra_len=args.max_new))
-    decode = jax.jit(S.build_decode(cfg))
-
     t0 = time.perf_counter()
-    logits, caches = prefill(frozen, adapters, qstate, {"tokens": prompts})
+    logits, caches = model.prefill({"tokens": prompts}, extra_len=args.max_new)
     jax.block_until_ready(logits)
     t_prefill = time.perf_counter() - t0
 
@@ -62,8 +58,7 @@ def main():
     generated = [tok]
     t0 = time.perf_counter()
     for i in range(args.max_new - 1):
-        pos = jnp.asarray(args.prompt_len + i, jnp.int32)
-        logits, caches = decode(frozen, adapters, qstate, caches, tok, pos)
+        logits, caches = model.decode_step(caches, tok, args.prompt_len + i)
         tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         generated.append(tok)
     jax.block_until_ready(tok)

@@ -30,13 +30,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config
 from repro.core.peft import PEFTConfig
 from repro.data.pipeline import DataConfig, Loader, calibration_batches
-from repro.models import model as M
 from repro.models.config import QuantConfig, TrainConfig
-from repro.train import calibrate as C
 from repro.train import steps as S
 
 
@@ -104,12 +103,11 @@ def main():
     print(f"[init] {cfg.name} ({cfg.family}) mode={args.quant_mode}")
     cfg_fp = dataclasses.replace(cfg, quant=dataclasses.replace(
         cfg.quant, mode="fp32"))
-    frozen, adapters, qstate = M.init_params(
-        jax.random.PRNGKey(tcfg.seed), cfg_fp)
+    model = api.prepare(cfg_fp, seed=tcfg.seed)
     if args.quant_mode != "fp32":
-        stats = C.capture_stats(frozen, adapters, qstate, cfg_fp,
-                                calibration_batches(dcfg, args.calib_batches))
-        frozen, qstate = C.convert(frozen, stats, cfg_fp, args.quant_mode)
+        model.calibrate(calibration_batches(dcfg, args.calib_batches))
+        model.convert(args.quant_mode)
+    frozen, adapters, qstate = model.frozen, model.adapters, model.quant_state
 
     state = S.init_train_state(adapters, qstate, tcfg)
     mgr = CheckpointManager(args.ckpt_dir, keep=3)

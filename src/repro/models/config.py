@@ -161,3 +161,7 @@ class TrainConfig:
     remat_policy: str = "nothing"  # nothing | dots (checkpoint_dots)
     grad_compression: bool = False  # INT8 all-reduce of LoRA grads w/ error feedback
     seed: int = 0
+    # deterministic=False enables stochastic regularization in train steps
+    # (PEFTConfig.lora_dropout, keyed from ``seed`` + step). Eval paths are
+    # always deterministic regardless of this flag.
+    deterministic: bool = True

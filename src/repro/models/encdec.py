@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from repro.core import peft as PEFT
 from repro.models import layers as L
 from repro.models.config import ModelConfig
+from repro.models.outputs import ModelOut
 from repro.runtime.pspec import hint
 
 
@@ -82,7 +83,7 @@ def init_params(key, cfg: ModelConfig):
 
 
 def encode(frozen, quant_state, frames: jnp.ndarray, cfg: ModelConfig,
-           remat: bool = False):
+           remat: bool = False, scope=None):
     """frames: (B, encoder_seq, D) precomputed embeddings (stub frontend)."""
     act_dtype = L.dt(cfg.act_dtype)
     x = frames.astype(act_dtype)
@@ -95,10 +96,11 @@ def encode(frozen, quant_state, frames: jnp.ndarray, cfg: ModelConfig,
         block, qs = xs
         a_in = L.rmsnorm(h, block["norm1"], cfg.norm_eps)
         a_out, _, a_st = L.attention(a_in, block["attn"], qs["attn"], cfg,
-                                     positions=positions, causal=False)
+                                     positions=positions, causal=False,
+                                     scope=scope)
         h = hint(h + a_out, "act_btd")
         f_in = L.rmsnorm(h, block["norm2"], cfg.norm_eps)
-        f_out, f_st = L.ffn(f_in, block["ffn"], qs["ffn"], cfg)
+        f_out, f_st = L.ffn(f_in, block["ffn"], qs["ffn"], cfg, scope=scope)
         h = hint(h + f_out, "act_btd")
         return h, {"attn": a_st, "ffn": f_st}
 
@@ -110,7 +112,7 @@ def encode(frozen, quant_state, frames: jnp.ndarray, cfg: ModelConfig,
 
 def forward(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
             input_embeds=None, caches=None, positions=None, remat=False,
-            enc_out=None):
+            enc_out=None, scope=None, rng=None):
     """Decoder forward. ``input_embeds`` is the encoder frame input (stub);
     pass ``enc_out`` directly to skip re-encoding (decode steps), or
     ``caches`` with precomputed cross-KV."""
@@ -118,7 +120,7 @@ def forward(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
     stats: Dict[str, Any] = {}
     if enc_out is None and input_embeds is not None:
         enc_out, stats["enc_blocks"] = encode(frozen, quant_state, input_embeds,
-                                              cfg, remat)
+                                              cfg, remat, scope=scope)
 
     x = L.embed(tokens, frozen["embed"], act_dtype)
     if positions is None:
@@ -140,13 +142,16 @@ def forward(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
     dec_ad = adapters.get("dec_blocks")
 
     def body(carry, xs):
-        h = carry
+        h, key = carry
         block, qs, ad, cache = xs
+        sub = None
+        if key is not None:
+            key, sub = jax.random.split(key)
         self_cache = None if cache is None else cache["self"]
         a_in = L.rmsnorm(h, block["norm1"], cfg.norm_eps)
         a_out, new_self, a_st = L.attention(
             a_in, block["attn"], qs["attn"], cfg, positions=positions,
-            cache=self_cache, adapters=ad)
+            cache=self_cache, adapters=ad, scope=scope, rng=sub)
         h = hint(h + a_out, "act_btd")
         x_in = L.rmsnorm(h, block["norm_x"], cfg.norm_eps)
         new_cross = None
@@ -160,7 +165,7 @@ def forward(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
         else:
             x_out, _, x_st = L.attention(
                 x_in, block["xattn"], qs["xattn"], cfg, positions=positions,
-                causal=False, kv_override=enc_out)
+                causal=False, kv_override=enc_out, scope=scope)
             if cache is not None:
                 # prefill: populate the cross-KV cache for later decode steps
                 kh, hd = cfg.n_kv_heads, cfg.head_dim
@@ -174,20 +179,21 @@ def forward(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
                 }
         h = hint(h + x_out, "act_btd")
         f_in = L.rmsnorm(h, block["norm2"], cfg.norm_eps)
-        f_out, f_st = L.ffn(f_in, block["ffn"], qs["ffn"], cfg)
+        f_out, f_st = L.ffn(f_in, block["ffn"], qs["ffn"], cfg, scope=scope)
         h = hint(h + f_out, "act_btd")
         new_cache = None if cache is None else {"self": new_self,
                                                 "cross": new_cross}
-        return h, ({"attn": a_st, "xattn": x_st, "ffn": f_st}, new_cache)
+        return (h, key), ({"attn": a_st, "xattn": x_st, "ffn": f_st},
+                          new_cache)
 
     body = L.remat_wrap(body, remat)
     xs = (frozen["dec_blocks"], quant_state["dec_blocks"], dec_ad, caches)
-    x, (dec_stats, new_caches) = jax.lax.scan(body, x, xs)
+    (x, _), (dec_stats, new_caches) = jax.lax.scan(body, (x, rng), xs)
     stats["dec_blocks"] = dec_stats
 
     x = L.rmsnorm(x, frozen["final_norm"], cfg.norm_eps)
     logits = L.unembed(x, frozen["lm_head"], act_dtype, cfg.logits_fp32)
-    return logits, stats, new_caches, jnp.zeros((), jnp.float32)
+    return ModelOut(logits, stats, new_caches, jnp.zeros((), jnp.float32))
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int):

@@ -23,6 +23,7 @@ from repro.core import peft as PEFT
 from repro.models import layers as L
 from repro.models import ssm as S
 from repro.models.config import ModelConfig
+from repro.models.outputs import ModelOut
 from repro.runtime.pspec import hint
 
 
@@ -94,7 +95,8 @@ def init_params_zamba(key, cfg: ModelConfig):
 
 
 def forward_zamba(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
-                  input_embeds=None, caches=None, positions=None, remat=False):
+                  input_embeds=None, caches=None, positions=None, remat=False,
+                  scope=None, rng=None):
     act_dtype = L.dt(cfg.act_dtype)
     n_stages, per, trailing = zamba_layout(cfg)
     x = L.embed(tokens, frozen["embed"], act_dtype)
@@ -113,7 +115,8 @@ def forward_zamba(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
     def mamba_body(carry, xs):
         h = carry
         params, qs, cache = xs
-        h2, new_cache, st = S.mamba_block(h, params, qs, cfg, cache)
+        h2, new_cache, st = S.mamba_block(h, params, qs, cfg, cache,
+                                          scope=scope)
         return h + h2, (st, new_cache)
 
     mamba_body = L.remat_wrap(mamba_body, remat)
@@ -124,21 +127,26 @@ def forward_zamba(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
         attn_ad = adapters.get("attn")
 
         def stage_body(carry, xs):
-            h = carry
+            h, key = carry
             stage_params, stage_qs, stage_mcache, stage_kvcache = xs
+            sub = None
+            if key is not None:
+                key, sub = jax.random.split(key)
             h, (m_stats, m_caches) = jax.lax.scan(
                 mamba_body, h, (stage_params, stage_qs, stage_mcache))
             attn_in = L.rmsnorm(h, attn_params["norm"], cfg.norm_eps)
             a_out, new_kv, a_stats = L.attention(
                 attn_in, attn_params["attn"], attn_qs, cfg,
-                positions=positions, cache=stage_kvcache, adapters=attn_ad)
+                positions=positions, cache=stage_kvcache, adapters=attn_ad,
+                scope=scope, rng=sub)
             h = hint(h + a_out, "act_btd")
-            return h, (m_stats, a_stats, m_caches, new_kv)
+            return (h, key), (m_stats, a_stats, m_caches, new_kv)
 
         stage_mc = None if caches is None else caches["stage_mamba"]
         stage_kv = None if caches is None else caches["stage_kv"]
         xs = (frozen["stage_mamba"], quant_state["stage_mamba"], stage_mc, stage_kv)
-        x, (m_stats, a_stats, m_caches, kv_caches) = jax.lax.scan(stage_body, x, xs)
+        (x, _), (m_stats, a_stats, m_caches, kv_caches) = jax.lax.scan(
+            stage_body, (x, rng), xs)
         stats["stage_mamba"] = m_stats
         # shared attention: reduce per-application stats (state is shared)
         stats["shared_attn"] = jax.tree.map(
@@ -157,7 +165,7 @@ def forward_zamba(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
     x = L.rmsnorm(x, frozen["final_norm"], cfg.norm_eps)
     logits = L.unembed(x, frozen["lm_head"], act_dtype, cfg.logits_fp32)
     out_caches = new_caches if caches is not None else None
-    return logits, stats, out_caches, jnp.zeros((), jnp.float32)
+    return ModelOut(logits, stats, out_caches, jnp.zeros((), jnp.float32))
 
 
 def init_caches_zamba(cfg: ModelConfig, batch: int, max_len: int):
@@ -233,7 +241,8 @@ def init_params_xlstm(key, cfg: ModelConfig):
 
 
 def forward_xlstm(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
-                  input_embeds=None, caches=None, positions=None, remat=False):
+                  input_embeds=None, caches=None, positions=None, remat=False,
+                  scope=None, rng=None):
     act_dtype = L.dt(cfg.act_dtype)
     n_stages, per_m, trailing = xlstm_layout(cfg)
     x = L.embed(tokens, frozen["embed"], act_dtype)
@@ -247,14 +256,20 @@ def forward_xlstm(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
     new_caches: Dict[str, Any] = {}
 
     def ml_body(carry, xs):
-        h = carry
+        h, key = carry
         params, qs, ad, cache = xs
-        h2, new_cache, st = S.mlstm_block(h, params, qs, cfg, cache)
+        sub = None
+        if key is not None:
+            key, sub = jax.random.split(key)
+        h2, new_cache, st = S.mlstm_block(h, params, qs, cfg, cache,
+                                          scope=scope)
         if ad is not None:
             p = cfg.peft
             xn = L.rmsnorm(h, params["norm"], cfg.norm_eps)
-            h2 = h2 + PEFT.apply_lora(xn, ad["lora"], p.lora_alpha, p.lora_rank)
-        return h + h2, (st, new_cache)
+            dropout = p.lora_dropout if sub is not None else 0.0
+            h2 = h2 + PEFT.apply_lora(xn, ad["lora"], p.lora_alpha,
+                                      p.lora_rank, dropout, sub)
+        return (h + h2, key), (st, new_cache)
 
     ml_body = L.remat_wrap(ml_body, remat)
 
@@ -263,23 +278,25 @@ def forward_xlstm(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
 
     if n_stages:
         def stage_body(carry, xs):
-            h = carry
+            h, key = carry
             (m_params, m_qs, m_ad, m_cache, s_params, s_qs, s_cache) = xs
             if per_m:
-                h, (m_stats, m_caches) = jax.lax.scan(
-                    ml_body, h, (m_params, m_qs, m_ad, m_cache))
+                (h, key), (m_stats, m_caches) = jax.lax.scan(
+                    ml_body, (h, key), (m_params, m_qs, m_ad, m_cache))
             else:
                 m_stats, m_caches = None, None
-            h2, new_scache, s_stats = S.slstm_block(h, s_params, s_qs, cfg, s_cache)
+            h2, new_scache, s_stats = S.slstm_block(h, s_params, s_qs, cfg,
+                                                    s_cache, scope=scope)
             h = hint(h + h2, "act_btd")
-            return h, (m_stats, s_stats, m_caches, new_scache)
+            return (h, key), (m_stats, s_stats, m_caches, new_scache)
 
         mc = None if caches is None else caches.get("stage_mlstm")
         sc = None if caches is None else caches.get("stage_slstm")
         xs = (frozen.get("stage_mlstm"), quant_state.get("stage_mlstm"),
               ml_ad_stage, mc, frozen["stage_slstm"],
               quant_state["stage_slstm"], sc)
-        x, (m_stats, s_stats, m_caches, s_caches) = jax.lax.scan(stage_body, x, xs)
+        (x, rng), (m_stats, s_stats, m_caches, s_caches) = jax.lax.scan(
+            stage_body, (x, rng), xs)
         if per_m:
             stats["stage_mlstm"] = m_stats
             new_caches["stage_mlstm"] = m_caches
@@ -288,16 +305,16 @@ def forward_xlstm(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
 
     if trailing:
         tc = None if caches is None else caches.get("trail_mlstm")
-        x, (t_stats, t_caches) = jax.lax.scan(
-            ml_body, x, (frozen["trail_mlstm"], quant_state["trail_mlstm"],
-                         ml_ad_trail, tc))
+        (x, rng), (t_stats, t_caches) = jax.lax.scan(
+            ml_body, (x, rng), (frozen["trail_mlstm"],
+                                quant_state["trail_mlstm"], ml_ad_trail, tc))
         stats["trail_mlstm"] = t_stats
         new_caches["trail_mlstm"] = t_caches
 
     x = L.rmsnorm(x, frozen["final_norm"], cfg.norm_eps)
     logits = L.unembed(x, frozen["lm_head"], act_dtype, cfg.logits_fp32)
     out_caches = new_caches if caches is not None else None
-    return logits, stats, out_caches, jnp.zeros((), jnp.float32)
+    return ModelOut(logits, stats, out_caches, jnp.zeros((), jnp.float32))
 
 
 def init_caches_xlstm(cfg: ModelConfig, batch: int, max_len: int):

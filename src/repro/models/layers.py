@@ -2,10 +2,14 @@
 (with KV cache + sliding window), FFN, embeddings.
 
 Parameter layout convention: every linear is a dict
-    {"w": <mode-specific weights pytree>}
-and, for Quaff mode, a parallel ScaleState lives in the model-level
-``quant_state`` tree (same key path). Forward fns return (y, stats) where
-stats is the OSSH per-outlier-channel max (or None for non-Quaff modes).
+    {"w": <backend-specific weights pytree>}
+and, for backends with per-layer state (Quaff's momentum scale), a parallel
+state lives in the model-level ``quant_state`` tree (same key path).
+
+Mode dispatch lives entirely in the ``QuantBackend`` registry
+(core/backend.py): this module resolves ``qcfg.mode`` to a backend and calls
+the protocol. Stats capture is requested with an explicit trace-safe
+``StatsScope`` argument (threaded through every forward), not a global flag.
 """
 from __future__ import annotations
 
@@ -15,12 +19,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import baselines as B
-from repro.core import outliers as O
 from repro.core import peft as P
-from repro.core.baselines import QuantMode
-from repro.core.quaff_linear import QuaffWeights, prepare_quaff_weights
-from repro.core.scaling import ScaleState
+from repro.core.backend import Calibration, StatsScope, get_backend
 from repro.models.config import ModelConfig, QuantConfig
 from repro.runtime.pspec import hint
 
@@ -29,30 +29,11 @@ def dt(name: str):
     return jnp.dtype(name)
 
 
-# ---------------------------------------------------------------------------
-# Stats-capture mode: when enabled (trace-time flag), every qlinear emits the
-# FULL per-channel absmax (c_in,) instead of Quaff's outlier-only stats.
-# Used by calibration (outlier identification) and the OSSH hit-rate
-# benchmark. Never combined with momentum updates.
-# ---------------------------------------------------------------------------
-import contextlib
-
-_CAPTURE = False
-
-
-@contextlib.contextmanager
-def capture_stats():
-    global _CAPTURE
-    prev = _CAPTURE
-    _CAPTURE = True
-    try:
-        yield
-    finally:
-        _CAPTURE = prev
-
-
-def capture_enabled() -> bool:
-    return _CAPTURE
+def capture_absmax(x: jnp.ndarray) -> jnp.ndarray:
+    """Full per-channel absmax (c_in,) of a qlinear input — the calibration
+    statistic a ``StatsScope(capture=True)`` pass collects."""
+    x2d = jax.lax.stop_gradient(x).reshape((-1, x.shape[-1]))
+    return jnp.max(jnp.abs(x2d.astype(jnp.float32)), axis=0)
 
 
 def remat_wrap(body, remat):
@@ -67,19 +48,6 @@ def remat_wrap(body, remat):
     return jax.checkpoint(body, policy=pol)
 
 
-def spread_indices(c_in: int, count: int) -> jnp.ndarray:
-    """Deterministic placeholder outlier set used at init time; real runs
-    overwrite it via core.calibrate (see repro/train/calibrate.py)."""
-    count = max(1, min(count, c_in))
-    idx = (jnp.arange(count, dtype=jnp.int32) * (c_in // count)) % c_in
-    # de-dup by construction: stride >= 1 and count <= c_in
-    return jnp.sort(idx)
-
-
-def outlier_count(c_in: int, layer_type: str, qcfg: QuantConfig) -> int:
-    return max(1, min(c_in, int(round(O.budget_for(layer_type, qcfg.budgets) * c_in))))
-
-
 # ---------------------------------------------------------------------------
 # Quantized linear init / apply
 # ---------------------------------------------------------------------------
@@ -92,19 +60,16 @@ def init_qlinear(
     *,
     bias: bool = False,
     param_dtype=jnp.float32,
-) -> Tuple[Dict[str, Any], Optional[ScaleState]]:
+) -> Tuple[Dict[str, Any], Optional[Any]]:
+    """Random fp init -> backend-prepared frozen weights (+ optional state).
+    Real runs overwrite calibration-dependent pieces via train/calibrate."""
     w = jax.random.normal(key, (c_in, c_out), param_dtype) / math.sqrt(c_in)
     b = jnp.zeros((c_out,), param_dtype) if bias else None
-    mode = QuantMode(qcfg.mode)
-    if mode == QuantMode.QUAFF:
-        idx = spread_indices(c_in, outlier_count(c_in, layer_type, qcfg))
-        wts, state = prepare_quaff_weights(w, idx, b, qcfg.bits)
-        return {"w": wts}, state
-    if mode == QuantMode.SMOOTH_STATIC:
-        wts = B.prepare(mode, w, b, calib_absmax=jnp.ones((c_in,), jnp.float32))
-        return {"w": wts}, None
-    wts = B.prepare(mode, w, b) if mode != QuantMode.FP32 else B.FPWeights(w, b)
-    return {"w": wts}, None
+    backend = get_backend(qcfg.mode)
+    calib = Calibration(layer_type=layer_type, budgets=qcfg.budgets,
+                        init_placeholder=True)
+    wts = backend.prepare(w, b, calib=calib, bits=qcfg.bits)
+    return {"w": wts}, backend.init_state(wts)
 
 
 def _hint_weight_use(wts, use_kind: str = "col"):
@@ -137,20 +102,26 @@ def apply_qlinear(
     x: jnp.ndarray,
     lin: Dict[str, Any],
     qcfg: QuantConfig,
-    state: Optional[ScaleState] = None,
+    state: Optional[Any] = None,
     lora: Optional[P.LoRAParams] = None,
     peft_cfg: Optional[P.PEFTConfig] = None,
     use_kind: str = "col",
+    scope: Optional[StatsScope] = None,
+    rng: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
-    mode = QuantMode(qcfg.mode)
-    s = state.s if state is not None else None
-    y, stats = B.qlinear(x, _hint_weight_use(lin["w"], use_kind), mode, s=s,
-                     bits=qcfg.bits, bwd_int8=qcfg.bwd_int8)
-    if _CAPTURE:
-        x2d = jax.lax.stop_gradient(x).reshape((-1, x.shape[-1]))
-        stats = jnp.max(jnp.abs(x2d.astype(jnp.float32)), axis=0)  # (c_in,)
+    """One quantized linear. ``scope`` requests full-absmax stats capture;
+    ``rng`` (train path only) enables LoRA dropout — eval passes None and
+    stays deterministic."""
+    backend = get_backend(qcfg.mode)
+    out = backend.apply(x, _hint_weight_use(lin["w"], use_kind), state=state,
+                        bits=qcfg.bits, bwd_int8=qcfg.bwd_int8)
+    y, stats = out.y, out.stats
+    if scope is not None and scope.capture:
+        stats = capture_absmax(x)  # (c_in,)
     if lora is not None:
-        y = y + P.apply_lora(x, lora, peft_cfg.lora_alpha, peft_cfg.lora_rank)
+        dropout = peft_cfg.lora_dropout if rng is not None else 0.0
+        y = y + P.apply_lora(x, lora, peft_cfg.lora_alpha, peft_cfg.lora_rank,
+                             dropout, rng)
     return y, stats
 
 
@@ -260,6 +231,8 @@ def attention(
     adapters: Optional[Dict[str, Any]] = None,
     kv_override: Optional[jnp.ndarray] = None,        # cross-attention input
     cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # cached (k,v)
+    scope: Optional[StatsScope] = None,
+    rng: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]], Dict[str, Any]]:
     """Returns (y, new_cache, stats). Shapes: x (B,S,D)."""
     qcfg, pcfg = cfg.quant, cfg.peft
@@ -267,9 +240,12 @@ def attention(
     kh, h, hd = cfg.n_kv_heads, cfg.n_heads, cfg.head_dim
     g = h // kh
     ad = adapters or {}
+    rng_q = rng_v = None
+    if rng is not None:
+        rng_q, rng_v = jax.random.split(rng)
 
     q, st_q = apply_qlinear(x, params["wq"], qcfg, states.get("wq"),
-                            ad.get("lora_q"), pcfg)
+                            ad.get("lora_q"), pcfg, scope=scope, rng=rng_q)
     if cross_kv is not None:
         # precomputed cross-attention K/V (enc-dec decode path)
         k, v = cross_kv
@@ -278,12 +254,13 @@ def attention(
         out = _gqa_scores_softmax_out(q, k, v, mask)
         out = out.reshape(bsz, s_len, h * hd).astype(x.dtype)
         y, st_o = apply_qlinear(out, params["wo"], qcfg, states.get("wo"),
-                                use_kind="row")
+                                use_kind="row", scope=scope)
         return y, None, {"wq": st_q, "wk": None, "wv": None, "wo": st_o}
     kv_in = kv_override if kv_override is not None else x
-    k, st_k = apply_qlinear(kv_in, params["wk"], qcfg, states.get("wk"))
+    k, st_k = apply_qlinear(kv_in, params["wk"], qcfg, states.get("wk"),
+                            scope=scope)
     v, st_v = apply_qlinear(kv_in, params["wv"], qcfg, states.get("wv"),
-                            ad.get("lora_v"), pcfg)
+                            ad.get("lora_v"), pcfg, scope=scope, rng=rng_v)
 
     q = hint(q.reshape(bsz, s_len, kh, g, hd), "attn_q")
     k = hint(k.reshape(bsz, kv_in.shape[1], kh, hd), "attn_kv")
@@ -332,7 +309,7 @@ def attention(
     out = _gqa_scores_softmax_out(q, k, v, mask)
     out = out.reshape(bsz, s_len, h * hd).astype(x.dtype)
     y, st_o = apply_qlinear(out, params["wo"], qcfg, states.get("wo"),
-                            use_kind="row")
+                            use_kind="row", scope=scope)
     stats = {"wq": st_q, "wk": st_k, "wv": st_v, "wo": st_o}
     return y, new_cache, stats
 
@@ -360,20 +337,24 @@ def init_ffn(key, cfg: ModelConfig, qcfg: QuantConfig, param_dtype):
     return params, states
 
 
-def ffn(x, params, states, cfg: ModelConfig, adapters=None):
+def ffn(x, params, states, cfg: ModelConfig, adapters=None, scope=None):
     qcfg = cfg.quant
     ad = adapters or {}
     stats = {}
     if cfg.ffn_type == "swiglu":
-        gate, stats["gate"] = apply_qlinear(x, params["gate"], qcfg, states.get("gate"))
-        up, stats["up"] = apply_qlinear(x, params["up"], qcfg, states.get("up"))
+        gate, stats["gate"] = apply_qlinear(x, params["gate"], qcfg,
+                                            states.get("gate"), scope=scope)
+        up, stats["up"] = apply_qlinear(x, params["up"], qcfg,
+                                        states.get("up"), scope=scope)
         h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
     else:
-        up, stats["up"] = apply_qlinear(x, params["up"], qcfg, states.get("up"))
+        up, stats["up"] = apply_qlinear(x, params["up"], qcfg,
+                                        states.get("up"), scope=scope)
         h = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
     if "ia3" in ad:
         h = h * ad["ia3"].l_ff.astype(h.dtype)
     h = hint(h, "act_btf")
     y, stats["down"] = apply_qlinear(h, params["down"], qcfg,
-                                     states.get("down"), use_kind="row")
+                                     states.get("down"), use_kind="row",
+                                     scope=scope)
     return y, stats

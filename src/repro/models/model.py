@@ -1,12 +1,15 @@
 """Family dispatch: one uniform functional interface over the model zoo.
 
     init_params(key, cfg)  -> (frozen, adapters, quant_state)
-    forward(...)           -> (logits, stats, new_caches, aux_loss)
+    forward(...)           -> ModelOut(logits, stats, caches, aux_loss)
     init_caches(cfg, B, S) -> decode caches
 
 Families: dense | moe | vlm (transformer.py), hybrid (zamba2), ssm (xlstm),
 encdec (whisper). VLM/audio frontends are stubs: ``input_embeds`` carries
 precomputed patch/frame embeddings per the assignment.
+
+``scope`` (core.backend.StatsScope) requests full-absmax stats capture for
+calibration; ``rng`` enables train-time LoRA dropout (eval passes None).
 """
 from __future__ import annotations
 
@@ -16,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.models import encdec, hybrid, transformer
 from repro.models.config import ModelConfig
+from repro.models.outputs import ModelOut
 
 
 def init_params(key, cfg: ModelConfig):
@@ -32,23 +36,27 @@ def init_params(key, cfg: ModelConfig):
 
 def forward(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
             input_embeds=None, caches=None, positions=None, remat=False,
-            enc_out=None):
+            enc_out=None, scope=None, rng=None) -> ModelOut:
     if cfg.family in ("dense", "moe", "vlm"):
         return transformer.forward(frozen, adapters, quant_state, tokens, cfg,
                                    input_embeds=input_embeds, caches=caches,
-                                   positions=positions, remat=remat)
+                                   positions=positions, remat=remat,
+                                   scope=scope, rng=rng)
     if cfg.family == "hybrid":
         return hybrid.forward_zamba(frozen, adapters, quant_state, tokens, cfg,
                                     input_embeds=input_embeds, caches=caches,
-                                    positions=positions, remat=remat)
+                                    positions=positions, remat=remat,
+                                    scope=scope, rng=rng)
     if cfg.family == "ssm":
         return hybrid.forward_xlstm(frozen, adapters, quant_state, tokens, cfg,
                                     input_embeds=input_embeds, caches=caches,
-                                    positions=positions, remat=remat)
+                                    positions=positions, remat=remat,
+                                    scope=scope, rng=rng)
     if cfg.family == "encdec":
         return encdec.forward(frozen, adapters, quant_state, tokens, cfg,
                               input_embeds=input_embeds, caches=caches,
-                              positions=positions, remat=remat, enc_out=enc_out)
+                              positions=positions, remat=remat,
+                              enc_out=enc_out, scope=scope, rng=rng)
     raise ValueError(cfg.family)
 
 

@@ -20,12 +20,10 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import baselines as B
-from repro.core.baselines import QuantMode
-from repro.core.quaff_linear import QuaffWeights, prepare_quaff_weights, quaff_matmul
+from repro.core.backend import StatsScope, get_backend
 from repro.core.scaling import ScaleState
 from repro.models.config import ModelConfig, QuantConfig
-from repro.models.layers import init_qlinear, outlier_count, spread_indices
+from repro.models.layers import init_qlinear
 from repro.runtime.pspec import hint
 
 
@@ -44,48 +42,26 @@ def init_moe(key, cfg: ModelConfig, qcfg: QuantConfig, param_dtype):
                                                         "down": s_d}
 
     params_e, states_e = jax.vmap(init_expert)(jax.random.split(ks[1], e))
-    # shared-across-experts scale state: collapse the expert dim (max is a
-    # safe upper bound for |W| normalization)
-    if QuantMode(qcfg.mode) == QuantMode.QUAFF:
-        # collapse the expert dim of the scale state (shared across experts;
-        # max|W| over experts is a safe normalizer upper bound)
-        states = jax.tree.map(lambda x: jnp.max(x, axis=0), states_e)
-        # outlier_idx must be expert-invariant: drop the vmapped copies
-        def fix_idx(w):
-            if isinstance(w, QuaffWeights):
-                return w._replace(outlier_idx=w.outlier_idx[0])
-            return w
-        params_e = jax.tree.map(fix_idx, params_e,
-                                is_leaf=lambda x: isinstance(x, QuaffWeights))
-    else:
-        states = {"gate": None, "up": None, "down": None}
+    # backend hook: backends with layer-shared state (Quaff) collapse the
+    # expert dim here; stateless backends pass through (all-None states).
+    params_e, states = get_backend(qcfg.mode).merge_expert_init(
+        params_e, states_e)
     return {"router": router, "experts": params_e}, states
 
 
 def _expert_linear(xe, wts, qcfg: QuantConfig, state: Optional[ScaleState],
-                   use_kind: str = "col"):
+                   use_kind: str = "col",
+                   scope: Optional[StatsScope] = None):
     """xe: (E, C, c_in); wts: per-expert stacked weights pytree."""
-    from repro.models.layers import _hint_weight_use, capture_enabled
+    from repro.models.layers import _hint_weight_use, capture_absmax
 
-    wts = dict(wts)
-    wts["w"] = _hint_weight_use(wts["w"], use_kind)
-    mode = QuantMode(qcfg.mode)
-    if mode == QuantMode.QUAFF:
-        def one(x_i, w_int, w_delta, w_outlier):
-            w = QuaffWeights(w_int, w_delta, w_outlier, wts["w"].outlier_idx, None)
-            return quaff_matmul(x_i, w, state.s, qcfg.bits, qcfg.bwd_int8)
-        y, stats = jax.vmap(one)(xe, wts["w"].w_int, wts["w"].w_delta,
-                                 wts["w"].w_outlier)
-        stats = jnp.max(stats, axis=0)
-    else:
-        def one_b(x_i, w):
-            return B.qlinear(x_i, w, mode, bits=qcfg.bits,
-                             bwd_int8=qcfg.bwd_int8)[0]
-        y = jax.vmap(one_b)(xe, wts["w"])
-        stats = None
-    if capture_enabled():
-        x2d = jax.lax.stop_gradient(xe).reshape((-1, xe.shape[-1]))
-        stats = jnp.max(jnp.abs(x2d.astype(jnp.float32)), axis=0)
+    backend = get_backend(qcfg.mode)
+    out = backend.apply_experts(xe, _hint_weight_use(wts["w"], use_kind),
+                                state=state, bits=qcfg.bits,
+                                bwd_int8=qcfg.bwd_int8)
+    y, stats = out.y, out.stats
+    if scope is not None and scope.capture:
+        stats = capture_absmax(xe)
     return y, stats
 
 
@@ -127,6 +103,7 @@ def moe_ffn(
     params: Dict[str, Any],
     states: Dict[str, Optional[ScaleState]],
     cfg: ModelConfig,
+    scope: Optional[StatsScope] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, Any]]:
     """x: (B, S, D) -> (y, aux_loss, stats).
 
@@ -198,16 +175,16 @@ def moe_ffn(
     # expert SwiGLU
     stats: Dict[str, Any] = {}
     gate_h, stats["gate"] = _expert_linear(buf, params["experts"]["gate"], qcfg,
-                                           states.get("gate"))
+                                           states.get("gate"), scope=scope)
     up_h, stats["up"] = _expert_linear(buf, params["experts"]["up"], qcfg,
-                                       states.get("up"))
+                                       states.get("up"), scope=scope)
     h = jax.nn.silu(gate_h.astype(jnp.float32)).astype(x.dtype) * up_h
     h = hint(h, "moe_buffer_f")
     # NOTE: expert down stays COLUMN-parallel: with top-k token duplication
     # a row-parallel fwd all-reduce moves k x more bytes than the dense case
     # — measured worse (EXPERIMENTS.md §Perf, kimi iteration 3).
     out, stats["down"] = _expert_linear(h, params["experts"]["down"], qcfg,
-                                        states.get("down"))
+                                        states.get("down"), scope=scope)
     out = hint(out.reshape(e, g, cap, d), "moe_expert_buf")
 
     # expert -> group transpose (all-to-all back) + local combine

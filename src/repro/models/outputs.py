@@ -1,0 +1,20 @@
+"""Typed forward output shared by every model family.
+
+Replaces the positional ``(logits, stats, caches, aux)`` 4-tuple. It is a
+NamedTuple, so legacy positional unpacking still works, but call sites
+should read fields by name — adding a field later then stays non-breaking.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax.numpy as jnp
+
+
+class ModelOut(NamedTuple):
+    """Output of one model forward pass (any family)."""
+
+    logits: jnp.ndarray     # (B, S, vocab)
+    stats: Any = None       # per-qlinear stats tree (backend-defined)
+    caches: Any = None      # updated decode caches (None outside decode)
+    aux_loss: Any = None    # scalar auxiliary loss (MoE load balancing)

@@ -128,14 +128,15 @@ def _ssd_chunked(xh, bc, cc, dt, a_log):
     return y, h_last
 
 
-def mamba_block(x, params, states, cfg: ModelConfig, cache=None):
+def mamba_block(x, params, states, cfg: ModelConfig, cache=None, scope=None):
     """x: (B,S,D) -> (y, new_cache, stats). cache: {"conv": (B,K-1,C),
     "h": (B,H,P,N)} for decode (S==1)."""
     qcfg = cfg.quant
     di, p, h, n, conv_dim = mamba_dims(cfg)
     bsz, s, _ = x.shape
 
-    zxbcdt, st_in = L.apply_qlinear(x, params["in_proj"], qcfg, states.get("in_proj"))
+    zxbcdt, st_in = L.apply_qlinear(x, params["in_proj"], qcfg,
+                                    states.get("in_proj"), scope=scope)
     z, xin, bc, cc, dt = jnp.split(
         zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
     conv_in = jnp.concatenate([xin, bc, cc], axis=-1)
@@ -169,7 +170,8 @@ def mamba_block(x, params, states, cfg: ModelConfig, cache=None):
     y = L.rmsnorm(y, params["norm"], cfg.norm_eps)
     y = hint(y, "act_btf")
     out, st_out = L.apply_qlinear(y, params["out_proj"], qcfg,
-                              states.get("out_proj"), use_kind="row")
+                                  states.get("out_proj"), use_kind="row",
+                                  scope=scope)
     new_cache = None if cache is None else {"conv": new_conv, "h": new_h}
     return out, new_cache, {"in_proj": st_in, "out_proj": st_out}
 
@@ -202,7 +204,7 @@ def init_mlstm_block(key, cfg: ModelConfig, qcfg: QuantConfig, param_dtype):
     return params, {"wq": sq, "wk": sk, "wv": sv, "wo": so}
 
 
-def mlstm_block(x, params, states, cfg: ModelConfig, cache=None):
+def mlstm_block(x, params, states, cfg: ModelConfig, cache=None, scope=None):
     """x: (B,S,D). cache: {"C": (B,H,P,P), "n": (B,H,P), "m": (B,H)}."""
     qcfg = cfg.quant
     bsz, s, d = x.shape
@@ -210,9 +212,12 @@ def mlstm_block(x, params, states, cfg: ModelConfig, cache=None):
     p = d // h
     xn = L.rmsnorm(x, params["norm"], cfg.norm_eps)
 
-    q, st_q = L.apply_qlinear(xn, params["wq"], qcfg, states.get("wq"))
-    k, st_k = L.apply_qlinear(xn, params["wk"], qcfg, states.get("wk"))
-    v, st_v = L.apply_qlinear(xn, params["wv"], qcfg, states.get("wv"))
+    q, st_q = L.apply_qlinear(xn, params["wq"], qcfg, states.get("wq"),
+                              scope=scope)
+    k, st_k = L.apply_qlinear(xn, params["wk"], qcfg, states.get("wk"),
+                              scope=scope)
+    v, st_v = L.apply_qlinear(xn, params["wv"], qcfg, states.get("wv"),
+                              scope=scope)
     q = q.reshape(bsz, s, h, p).astype(jnp.float32)
     k = k.reshape(bsz, s, h, p).astype(jnp.float32) / math.sqrt(p)
     v = v.reshape(bsz, s, h, p).astype(jnp.float32)
@@ -265,7 +270,7 @@ def mlstm_block(x, params, states, cfg: ModelConfig, cache=None):
     o = jax.nn.sigmoid(xn.astype(jnp.float32) @ params["w_og"])
     y = (y.reshape(bsz, s, d) * o).astype(x.dtype)
     out, st_o = L.apply_qlinear(y, params["wo"], qcfg,
-                            states.get("wo"), use_kind="row")
+                                states.get("wo"), use_kind="row", scope=scope)
     return out, new_cache, {"wq": st_q, "wk": st_k, "wv": st_v, "wo": st_o}
 
 
@@ -301,14 +306,15 @@ def init_slstm_block(key, cfg: ModelConfig, qcfg: QuantConfig, param_dtype):
     return params, {"w_in": s_in, "w_out": s_out}
 
 
-def slstm_block(x, params, states, cfg: ModelConfig, cache=None):
+def slstm_block(x, params, states, cfg: ModelConfig, cache=None, scope=None):
     """Stabilized sLSTM (xLSTM Eq. 15-24), per-head recurrence via lax.scan."""
     qcfg = cfg.quant
     bsz, s, d = x.shape
     h = cfg.n_heads
     p = d // h
     xn = L.rmsnorm(x, params["norm"], cfg.norm_eps)
-    pre, st_in = L.apply_qlinear(xn, params["w_in"], qcfg, states.get("w_in"))
+    pre, st_in = L.apply_qlinear(xn, params["w_in"], qcfg,
+                                 states.get("w_in"), scope=scope)
     pre = pre.astype(jnp.float32).reshape(bsz, s, 4, h, p)
 
     r = params["r"]
@@ -341,7 +347,8 @@ def slstm_block(x, params, states, cfg: ModelConfig, cache=None):
     (c, n, hp, m), ys = jax.lax.scan(step, (c0, n0, h0, m0), xs)
     y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, d).astype(x.dtype)
     out, st_out = L.apply_qlinear(y, params["w_out"], qcfg,
-                              states.get("w_out"), use_kind="row")
+                                  states.get("w_out"), use_kind="row",
+                                  scope=scope)
     new_cache = None if cache is None else {"c": c, "n": n, "h": hp, "m": m}
     return out, new_cache, {"w_in": st_in, "w_out": st_out}
 

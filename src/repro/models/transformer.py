@@ -6,8 +6,8 @@ Parameter trees:
   adapters   : trainable PEFT params (stacked LoRA / IA3 per layer, prompt at top)
   quant_state: stacked ScaleState per Quaff projection (None otherwise)
 
-forward() returns (logits, stats_tree, new_caches, aux_loss); stats feed the
-momentum update in repro/train/steps.py.
+forward() returns a typed ``ModelOut``; its stats tree feeds the momentum
+update in repro/train/steps.py.
 """
 from __future__ import annotations
 
@@ -18,10 +18,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import peft as PEFT
-from repro.core.baselines import QuantMode
 from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models.config import ModelConfig
+from repro.models.outputs import ModelOut
 from repro.runtime.pspec import hint
 
 
@@ -94,19 +94,20 @@ def init_params(key, cfg: ModelConfig):
 
 
 def _block_apply(x, block, qstate, adapters, cfg: ModelConfig, *,
-                 positions, is_global, cache):
+                 positions, is_global, cache, scope=None, rng=None):
     attn_in = L.rmsnorm(x, block["norm1"], cfg.norm_eps)
     attn_out, new_cache, attn_stats = L.attention(
         attn_in, block["attn"], qstate["attn"], cfg,
         positions=positions, is_global=is_global, cache=cache,
-        adapters=adapters)
+        adapters=adapters, scope=scope, rng=rng)
     x = hint(x + attn_out, "act_btd")
     ffn_in = L.rmsnorm(x, block["norm2"], cfg.norm_eps)
     if cfg.n_experts:
-        ffn_out, aux, ffn_stats = MOE.moe_ffn(ffn_in, block["ffn"], qstate["ffn"], cfg)
+        ffn_out, aux, ffn_stats = MOE.moe_ffn(ffn_in, block["ffn"],
+                                              qstate["ffn"], cfg, scope=scope)
     else:
         ffn_out, ffn_stats = L.ffn(ffn_in, block["ffn"], qstate["ffn"], cfg,
-                                   adapters=adapters)
+                                   adapters=adapters, scope=scope)
         aux = jnp.zeros((), jnp.float32)
     x = hint(x + ffn_out, "act_btd")
     return x, new_cache, {"attn": attn_stats, "ffn": ffn_stats}, aux
@@ -123,7 +124,9 @@ def forward(
     caches: Optional[Any] = None,                 # stacked (L, ...) KV caches
     positions: Optional[jnp.ndarray] = None,      # decode: (S,) absolute pos
     remat: bool = False,
-) -> Tuple[jnp.ndarray, Any, Any, jnp.ndarray]:
+    scope=None,                                   # StatsScope (calibration)
+    rng: Optional[jnp.ndarray] = None,            # train-time dropout key
+) -> ModelOut:
     act_dtype = L.dt(cfg.act_dtype)
     parts = []
     if input_embeds is not None:
@@ -147,22 +150,26 @@ def forward(
     block_adapters = adapters.get("blocks")
 
     def body(carry, xs):
-        h = carry
+        h, key = carry
         block, qs, bad, glob, cache = xs
+        sub = None
+        if key is not None:
+            key, sub = jax.random.split(key)
         h, new_cache, stats, aux = _block_apply(
             h, block, qs, bad, cfg,
-            positions=positions, is_global=glob, cache=cache)
-        return h, (stats, aux, new_cache)
+            positions=positions, is_global=glob, cache=cache,
+            scope=scope, rng=sub)
+        return (h, key), (stats, aux, new_cache)
 
     body = L.remat_wrap(body, remat)
 
     xs = (frozen["blocks"], quant_state, block_adapters, is_global, caches)
-    x, (stats, aux, new_caches) = jax.lax.scan(body, x, xs)
+    (x, _), (stats, aux, new_caches) = jax.lax.scan(body, (x, rng), xs)
 
     x = L.rmsnorm(x, frozen["final_norm"], cfg.norm_eps)
     head = frozen["embed"] if cfg.tie_embeddings else frozen["lm_head"]
     logits = L.unembed(x, head, act_dtype, cfg.logits_fp32)
-    return logits, stats, new_caches, jnp.mean(aux)
+    return ModelOut(logits, stats, new_caches, jnp.mean(aux))
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int):

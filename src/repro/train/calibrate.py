@@ -1,15 +1,18 @@
 """Calibration pipeline (paper §3.3 'weights preprocessing'):
 
-  1. run the FP32 model over calibration batches with stats capture on,
-     accumulating per-channel activation absmax AND per-batch outlier hit
-     scores (the xi criterion, Eq. 6 — adapted: a channel scores a hit in a
-     batch when its absmax exceeds ``ratio`` x the median channel absmax;
-     see core/outliers.py for why the paper's literal form is a typo);
+  1. run the FP32 model over calibration batches with an explicit
+     ``StatsScope(capture=True)`` pass, accumulating per-channel activation
+     absmax AND per-batch outlier hit scores (the xi criterion, Eq. 6 —
+     adapted: a channel scores a hit in a batch when its absmax exceeds
+     ``ratio`` x the median channel absmax; see core/outliers.py for why the
+     paper's literal form is a typo);
   2. pick the top-k channels per layer under the per-layer-type budget
      (q/k/v/up: 0.03%, o_proj: 4%, down_proj: 10%, §4.1);
-  3. convert the FP32 weight tree to the target quant mode — for Quaff this
-     quantizes W once, stashes fp W_O rows and initializes the momentum
-     ScaleState; for SmoothQuant-static it bakes the calibration s into W.
+  3. convert the FP32 weight tree to the target mode through the
+     ``QuantBackend`` registry: each backend declares which calibration
+     artifacts it wants (``wants_absmax`` / ``wants_outliers``), receives a
+     ``Calibration`` and returns its frozen weights (+ optional state) —
+     no mode branching here, new backends convert with zero edits.
 
 The path-matching between the frozen tree and the captured stats tree is
 suffix-normalized (drop structural tokens like "blocks"/"experts") so it
@@ -23,13 +26,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backend as BK
 from repro.core import baselines as B
-from repro.core.baselines import QuantMode
-from repro.core.quaff_linear import prepare_quaff_weights
-from repro.models import layers as L
+from repro.core import outliers as OUT
 from repro.models import model as M
 from repro.models.config import ModelConfig
-from repro.core import outliers as OUT
+from repro.runtime.treepath import path_str as _path_str
 
 _DROP_TOKENS = {"blocks", "w", "experts", "ffn", "attn"}
 
@@ -39,9 +41,6 @@ LAYER_TYPE_MAP = {
     "in_proj": "up_proj", "out_proj": "down_proj",
     "w_in": "up_proj", "w_out": "o_proj",
 }
-
-
-from repro.runtime.treepath import path_str as _path_str
 
 
 def _norm(path_s: str) -> str:
@@ -60,15 +59,12 @@ def capture_stats(frozen, adapters, quant_state, cfg: ModelConfig,
         embeds = batch.get("embeds")
         if embeds is not None:
             embeds = jnp.asarray(embeds)
-        with L.capture_stats():
-            if fwd is None:
-                def run(tok, emb):
-                    _, stats, _, _ = M.forward(frozen, adapters, quant_state,
-                                               tok, cfg, input_embeds=emb)
-                    return stats
-                fwd = jax.jit(run) if embeds is None else jax.jit(run)
-            stats = fwd(tokens, embeds)
-        stats = jax.device_get(stats)
+        if fwd is None:
+            def run(tok, emb):
+                return M.forward(frozen, adapters, quant_state, tok, cfg,
+                                 input_embeds=emb, scope=BK.CAPTURE).stats
+            fwd = jax.jit(run)
+        stats = jax.device_get(fwd(tokens, embeds))
 
         def hit(st):
             med = np.median(st, axis=-1, keepdims=True)
@@ -100,11 +96,19 @@ def _topk_indices(score: np.ndarray, k: int) -> np.ndarray:
     return np.sort(idx, axis=-1).astype(np.int32)
 
 
-def convert(frozen_fp32, stats: Tuple[Any, Any], cfg: ModelConfig,
+def _match_stack(arr: np.ndarray, n: int) -> np.ndarray:
+    """Repeat stats rows when the stats stack is shorter than the weight
+    stack (MoE: the expert dim shares one stat row)."""
+    if arr.shape[0] != n:
+        arr = np.repeat(arr, n // arr.shape[0], axis=0)
+    return arr
+
+
+def convert(frozen_fp32, stats: Optional[Tuple[Any, Any]], cfg: ModelConfig,
             target_mode: str):
-    """Convert an FP32-mode frozen tree to ``target_mode``.
+    """Convert an FP32-mode frozen tree to ``target_mode`` via the registry.
     Returns (frozen_converted, quant_state)."""
-    mode = QuantMode(target_mode)
+    backend = BK.get_backend(target_mode)
     absmax_lut = _stats_lookup(stats[0]) if stats is not None else {}
     score_lut = _stats_lookup(stats[1]) if stats is not None else {}
     qcfg = cfg.quant
@@ -124,89 +128,86 @@ def convert(frozen_fp32, stats: Tuple[Any, Any], cfg: ModelConfig,
         ltype = LAYER_TYPE_MAP.get(lname, lname)
         w, bias = leaf.w, leaf.bias
         c_in = w.shape[-2]
+        stack = w.shape[:-2]
+        n_flat = int(np.prod(stack)) if stack else 1
 
-        if mode == QuantMode.FP32:
+        if target_mode == "fp32":
             new_leaves.append(leaf)
             continue
-        if mode in (QuantMode.NAIVE, QuantMode.LLM_INT8, QuantMode.SMOOTH_DYNAMIC):
-            fn = lambda wi, bi=None: B.prepare(mode, wi, bi, bits=qcfg.bits)
-        elif mode == QuantMode.SMOOTH_STATIC:
-            calib = absmax_lut[key]  # (stack..., c_in)
-            fn = lambda wi, cal: B.prepare(mode, wi, None,
-                                           calib_absmax=jnp.maximum(cal, 1e-6),
-                                           bits=qcfg.bits)
-        elif mode == QuantMode.QUAFF:
-            score = score_lut[key]
-            k = max(1, min(c_in, int(round(
-                OUT.budget_for(ltype, qcfg.budgets) * c_in))))
-            idx = _topk_indices(score, k)  # (stack..., k)
-        else:
-            raise ValueError(mode)
 
-        stack = w.shape[:-2]
-        if mode == QuantMode.QUAFF:
-            if len(stack) == 0:
-                wts, st = prepare_quaff_weights(w, jnp.asarray(idx), bias,
-                                                qcfg.bits)
-            else:
-                w2 = w.reshape((-1,) + w.shape[-2:])
-                # stats stacks may be shorter than the weight stack (MoE: the
-                # expert dim shares one stat row) — repeat the index rows.
-                idx2 = idx.reshape((-1, idx.shape[-1]))
-                if idx2.shape[0] != w2.shape[0]:
-                    idx2 = np.repeat(idx2, w2.shape[0] // idx2.shape[0], axis=0)
-                b2 = (None if bias is None
-                      else bias.reshape((-1,) + bias.shape[-1:]))
-                if b2 is None:
-                    wts, st = jax.vmap(
-                        lambda wi, ii: prepare_quaff_weights(wi, ii, None,
-                                                             qcfg.bits)
-                    )(w2, jnp.asarray(idx2))
-                else:
-                    wts, st = jax.vmap(
-                        lambda wi, ii, bi: prepare_quaff_weights(wi, ii, bi,
-                                                                 qcfg.bits)
-                    )(w2, jnp.asarray(idx2), b2)
-                wts = jax.tree.map(
-                    lambda a: a.reshape(stack + a.shape[1:]), wts)
+        # calibration artifacts this backend asked for, (n_flat, ...) aligned
+        absmax2 = idx2 = None
+        if backend.wants_absmax:
+            if key not in absmax_lut:
+                raise ValueError(
+                    f"backend {backend.name!r} needs calibration absmax but "
+                    f"none was captured for {key!r}; run capture_stats first")
+            absmax2 = _match_stack(
+                np.maximum(np.asarray(absmax_lut[key]), 1e-6).reshape(
+                    (-1, c_in)), n_flat)
+        if backend.wants_outliers:
+            if key not in score_lut:
+                raise ValueError(
+                    f"backend {backend.name!r} needs calibration outlier "
+                    f"scores but none were captured for {key!r}; run "
+                    f"capture_stats first")
+            k = OUT.outlier_count(c_in, ltype, qcfg.budgets)
+            idx2 = _match_stack(
+                _topk_indices(np.asarray(score_lut[key]), k).reshape((-1, k)),
+                n_flat)
+
+        w2 = w.reshape((-1,) + w.shape[-2:])
+        # calibration pieces ride in one dict so vmap's in_axes stay uniform
+        extras = {}
+        if bias is not None:
+            extras["bias"] = bias.reshape((-1,) + bias.shape[-1:])
+        if absmax2 is not None:
+            extras["absmax"] = jnp.asarray(absmax2)
+        if idx2 is not None:
+            extras["idx"] = jnp.asarray(idx2)
+
+        def prep_one(wi, ex):
+            calib = BK.Calibration(
+                absmax=ex.get("absmax"), outlier_idx=ex.get("idx"),
+                layer_type=ltype, budgets=qcfg.budgets)
+            wts_i = backend.prepare(wi, ex.get("bias"), calib=calib,
+                                    bits=qcfg.bits)
+            return wts_i, backend.init_state(wts_i)
+
+        if not stack:
+            wts, st = prep_one(w2[0], jax.tree.map(lambda a: a[0], extras))
+        else:
+            try:
+                wts, st = jax.vmap(prep_one)(w2, extras)
+            except (TypeError, jax.errors.JAXTypeError):
+                # non-traceable custom backend: eager per-slice fallback
+                # (real prepare() bugs re-raise from the eager path below)
+                pairs = [prep_one(w2[i], jax.tree.map(lambda a: a[i], extras))
+                         for i in range(n_flat)]
+                wts = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[p[0] for p in pairs])
+                st = (None if pairs[0][1] is None else
+                      jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[p[1] for p in pairs]))
+            wts = jax.tree.map(lambda a: a.reshape(stack + a.shape[1:]), wts)
+            if st is not None:
                 st = jax.tree.map(lambda a: a.reshape(stack + a.shape[1:]), st)
-            # MoE: collapse expert dim of state + idx (shared across experts)
+            # MoE: expert dim of state/outlier set is layer-shared
             if cfg.n_experts and "experts" in ps:
-                st = jax.tree.map(lambda a: jnp.max(a, axis=1), st)
-                wts = wts._replace(outlier_idx=wts.outlier_idx[:, 0])
-            qstate_flat[key] = st
-            new_leaves.append(wts)
-            continue
+                wts, st = backend.collapse_expert_state(wts, st)
 
-        # non-quaff modes
-        if len(stack) == 0:
-            if mode == QuantMode.SMOOTH_STATIC:
-                new_leaves.append(fn(w, jnp.asarray(absmax_lut[key])))
-            else:
-                new_leaves.append(fn(w, bias))
-        else:
-            w2 = w.reshape((-1,) + w.shape[-2:])
-            if mode == QuantMode.SMOOTH_STATIC:
-                cal = np.asarray(absmax_lut[key]).reshape((-1, c_in))
-                if cal.shape[0] != w2.shape[0]:
-                    cal = np.repeat(cal, w2.shape[0] // cal.shape[0], axis=0)
-                out = jax.vmap(fn)(w2, jnp.asarray(cal))
-            else:
-                b2 = None if bias is None else bias.reshape((-1,) + bias.shape[-1:])
-                out = (jax.vmap(lambda wi: fn(wi))(w2) if b2 is None
-                       else jax.vmap(lambda wi, bi: fn(wi, bi))(w2, b2))
-            out = jax.tree.map(lambda a: a.reshape(stack + a.shape[1:]), out)
-            new_leaves.append(out)
+        new_leaves.append(wts)
+        if st is not None:
+            qstate_flat[key] = st
 
     frozen_new = jax.tree_util.tree_unflatten(treedef, new_leaves)
     # rebuild quant_state in the same structure init_params would produce
     _, _, qstate_like = jax.eval_shape(
         lambda k: M.init_params(k, _with_mode(cfg, target_mode)),
         jax.random.PRNGKey(0))
-    if mode != QuantMode.QUAFF:
+    if not qstate_flat:
         return frozen_new, jax.tree.map(lambda x: None, qstate_like)
-    qstate = _rebuild_qstate(qstate_like, qstate_flat)
-    return frozen_new, qstate
+    return frozen_new, _rebuild_qstate(qstate_like, qstate_flat)
 
 
 def _with_mode(cfg: ModelConfig, mode: str) -> ModelConfig:
@@ -216,14 +217,13 @@ def _with_mode(cfg: ModelConfig, mode: str) -> ModelConfig:
 
 
 def _rebuild_qstate(qstate_like, qstate_flat: Dict[str, Any]):
-    from repro.core.scaling import ScaleState
     paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(
         qstate_like, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
-    # group leaves back into ScaleStates by path prefix
+    # group leaves back into per-layer states by path prefix
     out_leaves = []
     for path, leaf in paths_leaves:
         ps = _path_str(path)
-        # path ends with .../<lin>/<field> where field in {s, w_absmax}
+        # path ends with .../<lin>/<field> where field names the state leaf
         parts = ps.split("/")
         field = parts[-1]
         key = _norm("/".join(parts[:-1]))

@@ -48,6 +48,12 @@ def update_quant_state(quant_state, stats, gamma: float):
         is_leaf=lambda x: isinstance(x, ScaleState))
 
 
+def _has_scale_state(quant_state) -> bool:
+    """True when the backend produced per-layer scale states (Quaff): the
+    quant tree then has array leaves to momentum-update each step."""
+    return len(jax.tree.leaves(quant_state)) > 0
+
+
 def _split_microbatches(batch: Dict[str, jnp.ndarray], n: int):
     def resh(x):
         return x.reshape((n, x.shape[0] // n) + x.shape[1:])
@@ -61,12 +67,19 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig):
     Microbatching: B is split into ``tcfg.microbatches`` chunks scanned
     sequentially with gradient accumulation (bounds activation memory)."""
     n_prefix = PEFT.n_prefix_tokens(cfg.peft)
+    # stochastic LoRA dropout only when asked for AND configured > 0; the
+    # rng is derived from (tcfg.seed, step, microbatch) so runs stay
+    # reproducible and eval (which never passes an rng) stays deterministic.
+    use_dropout = (not tcfg.deterministic
+                   and cfg.peft.method == "lora"
+                   and cfg.peft.lora_dropout > 0.0)
 
-    def loss_fn(adapters, frozen, quant_state, mb):
+    def loss_fn(adapters, frozen, quant_state, mb, rng):
         remat = tcfg.remat_policy if tcfg.remat else False
-        logits, stats, _, aux = M.forward(
+        out = M.forward(
             frozen, adapters, quant_state, mb["tokens"], cfg,
-            input_embeds=mb.get("embeds"), remat=remat)
+            input_embeds=mb.get("embeds"), remat=remat, rng=rng)
+        logits, stats, aux = out.logits, out.stats, out.aux_loss
         if n_prefix:
             logits = logits[:, n_prefix:, :]
         if cfg.family == "vlm" and cfg.n_image_tokens:
@@ -81,17 +94,24 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig):
     def train_step(frozen, state: TrainState, batch):
         nmb = tcfg.microbatches
         mbs = _split_microbatches(batch, nmb)
+        if use_dropout:
+            step_key = jax.random.fold_in(jax.random.PRNGKey(tcfg.seed),
+                                          state.step)
+            mb_keys = jax.random.split(step_key, nmb)
+        else:
+            mb_keys = None
 
-        def micro(carry, mb):
+        def micro(carry, xs):
+            mb, key = xs
             g_acc, loss_acc, aux_acc = carry
             (_, (loss, aux, stats)), grads = grad_fn(
-                state.adapters, frozen, state.quant, mb)
+                state.adapters, frozen, state.quant, mb, key)
             g_acc = jax.tree.map(lambda a, g: a + g, g_acc, grads)
             return (g_acc, loss_acc + loss, aux_acc + aux), stats
 
         g0 = jax.tree.map(jnp.zeros_like, state.adapters)
         (g_sum, loss_sum, aux_sum), stats_all = jax.lax.scan(
-            micro, (g0, jnp.zeros(()), jnp.zeros(())), mbs)
+            micro, (g0, jnp.zeros(()), jnp.zeros(())), (mbs, mb_keys))
         grads = jax.tree.map(lambda g: g / nmb, g_sum)
         # momentum update uses the LAST microbatch's stats (freshest)
         stats = jax.tree.map(lambda s: s[-1], stats_all)
@@ -103,7 +123,7 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig):
             compress=tcfg.grad_compression)
 
         new_quant = state.quant
-        if cfg.quant.mode == "quaff":
+        if _has_scale_state(state.quant):
             new_quant = update_quant_state(state.quant, stats, cfg.quant.gamma)
 
         metrics = {
@@ -121,9 +141,10 @@ def build_eval_step(cfg: ModelConfig):
     n_prefix = PEFT.n_prefix_tokens(cfg.peft)
 
     def eval_step(frozen, adapters, quant_state, batch):
-        logits, _, _, _ = M.forward(
+        # no rng: eval is always dropout-free / deterministic
+        logits = M.forward(
             frozen, adapters, quant_state, batch["tokens"], cfg,
-            input_embeds=batch.get("embeds"))
+            input_embeds=batch.get("embeds")).logits
         if n_prefix:
             logits = logits[:, n_prefix:, :]
         if cfg.family == "vlm" and cfg.n_image_tokens:
@@ -154,11 +175,11 @@ def build_prefill(cfg: ModelConfig, extra_len: int = 0):
         if cfg.family == "vlm":
             total += cfg.n_image_tokens
         caches = M.init_caches(cfg, bsz, total + extra_len)
-        logits, _, new_caches, _ = M.forward(
+        out = M.forward(
             frozen, adapters, quant_state, tokens, cfg,
             input_embeds=batch.get("embeds"), caches=caches,
             positions=jnp.arange(total, dtype=jnp.int32))
-        return logits[:, -1, :], new_caches
+        return out.logits[:, -1, :], out.caches
 
     return prefill
 
@@ -167,9 +188,9 @@ def build_decode(cfg: ModelConfig):
     """decode(frozen, adapters, quant_state, caches, token, pos) ->
     (logits, new_caches). ``caches`` carry seq_len-sized KV/SSM buffers."""
     def decode(frozen, adapters, quant_state, caches, token, pos):
-        logits, _, new_caches, _ = M.forward(
+        out = M.forward(
             frozen, adapters, quant_state, token, cfg,
             caches=caches, positions=pos.reshape((1,)))
-        return logits[:, -1, :], new_caches
+        return out.logits[:, -1, :], out.caches
 
     return decode

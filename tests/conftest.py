@@ -1,0 +1,11 @@
+"""Shared test fixtures/markers."""
+import jax
+import pytest
+
+# The multi-device sharding machinery targets mesh axis_types /
+# jax.set_mesh / jax.shard_map; older jax (e.g. 0.4.x) lacks them and the
+# subprocess suites skip rather than fail on the missing APIs.
+requires_modern_jax = pytest.mark.skipif(
+    not hasattr(jax.sharding, "AxisType") or not hasattr(jax, "set_mesh"),
+    reason="mesh axis_types / jax.set_mesh / jax.shard_map need a newer jax "
+           "than this environment provides")

@@ -1,0 +1,157 @@
+"""QuantBackend registry contract:
+
+  * every registered mode round-trips prepare -> apply against the fp32
+    reference within a mode-appropriate tolerance;
+  * unknown-mode lookup raises a helpful error listing registered names;
+  * a toy backend registered in-test flows through init_qlinear /
+    apply_qlinear untouched by core edits (the extension point works);
+  * the int4 proof-of-extension backend trains the quickstart config
+    end-to-end through the repro.api facade with decreasing loss.
+"""
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import backend as BK
+from repro.core.peft import PEFTConfig
+from repro.data.pipeline import DataConfig, Loader, calibration_batches
+from repro.models import layers as L
+from repro.models.config import ModelConfig, QuantConfig, TrainConfig
+
+# per-mode mean-abs-error tolerance relative to the fp32 GEMM output scale
+MODE_RTOL = {
+    "fp32": 1e-6,
+    "naive": 0.05,
+    "llm_int8": 0.05,
+    "smooth_static": 0.05,
+    "smooth_dynamic": 0.05,
+    "quaff": 0.05,
+    "int4": 0.60,  # 4-bit weights AND activations: ~16x coarser grid
+}
+
+
+def _gemm_setup(seed=0, t=32, c_in=64, c_out=48):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (t, c_in))
+    w = jax.random.normal(k2, (c_in, c_out)) * 0.1
+    return x, w
+
+
+def test_every_registered_mode_roundtrips():
+    x, w = _gemm_setup()
+    y_ref = x @ w
+    scale = float(jnp.mean(jnp.abs(y_ref)))
+    calib = BK.Calibration(
+        absmax=jnp.max(jnp.abs(x), axis=0),
+        outlier_idx=jnp.array([3, 17, 50], jnp.int32))
+    # every builtin must be registered (in-test toys may add more)
+    assert set(MODE_RTOL) <= set(BK.registered_modes())
+    for mode in sorted(MODE_RTOL):
+        backend = BK.get_backend(mode)
+        wts = backend.prepare(w, calib=calib)
+        out = backend.apply(x, wts, state=backend.init_state(wts))
+        assert isinstance(out, BK.LinearOut), mode
+        rel = float(jnp.mean(jnp.abs(out.y - y_ref))) / scale
+        tol = MODE_RTOL.get(mode, 0.25)
+        assert rel < tol, (mode, rel, tol)
+
+
+def test_bias_is_applied_every_mode():
+    x, w = _gemm_setup(seed=1)
+    bias = jnp.linspace(-1.0, 1.0, w.shape[1])
+    calib = BK.Calibration(absmax=jnp.max(jnp.abs(x), axis=0),
+                           outlier_idx=jnp.array([5], jnp.int32))
+    for mode in sorted(MODE_RTOL):
+        backend = BK.get_backend(mode)
+        w0 = backend.prepare(w, None, calib=calib)
+        w1 = backend.prepare(w, bias, calib=calib)
+        y0 = backend.apply(x, w0, state=backend.init_state(w0)).y
+        y1 = backend.apply(x, w1, state=backend.init_state(w1)).y
+        np.testing.assert_allclose(np.asarray(y1 - y0),
+                                   np.broadcast_to(bias, y0.shape),
+                                   rtol=1e-4, atol=1e-4, err_msg=mode)
+
+
+def test_unknown_mode_error_lists_registered():
+    with pytest.raises(ValueError) as ei:
+        BK.get_backend("no_such_mode")
+    msg = str(ei.value)
+    assert "no_such_mode" in msg
+    for mode in ("fp32", "quaff", "int4"):
+        assert mode in msg, f"error should list registered mode {mode}"
+
+
+# --------------------------------------------------------------------------
+# Toy backend: registered here, never mentioned in core — must flow through
+# init_qlinear / apply_qlinear purely via the registry.
+# --------------------------------------------------------------------------
+class _ToyWeights(NamedTuple):
+    w: jnp.ndarray
+    bias: jnp.ndarray = None
+
+
+class _ToyBackend(BK.QuantBackend):
+    """fp GEMM that also counts applications via stats (marker backend)."""
+
+    name = "toy_halved"
+
+    def prepare(self, w, bias=None, *, calib=None, bits=8):
+        return _ToyWeights(0.5 * w, bias)  # marker: halved weights
+
+    def apply(self, x, weights, *, state=None, bits=8, bwd_int8=True):
+        return BK.LinearOut(x @ weights.w.astype(x.dtype))
+
+
+BK.register(_ToyBackend())
+
+
+def test_toy_backend_flows_through_qlinear():
+    qcfg = QuantConfig(mode="toy_halved")
+    lin, state = L.init_qlinear(jax.random.PRNGKey(0), 16, 8, "q_proj", qcfg)
+    assert isinstance(lin["w"], _ToyWeights)
+    assert state is None
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    y, stats = L.apply_qlinear(x, lin, qcfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ lin["w"].w),
+                               rtol=1e-6)
+    assert stats is None
+    # capture scope: toy backend gets full-absmax stats for free
+    y2, stats2 = L.apply_qlinear(x, lin, qcfg, scope=BK.CAPTURE)
+    np.testing.assert_allclose(np.asarray(stats2),
+                               np.max(np.abs(np.asarray(x)), axis=0),
+                               rtol=1e-6)
+
+
+def _quickstart_cfg(mode="fp32"):
+    return ModelConfig(
+        name="quickstart", family="dense", n_layers=4, d_model=128, n_heads=8,
+        n_kv_heads=4, d_ff=256, vocab_size=512, head_dim=16,
+        quant=QuantConfig(mode=mode),
+        peft=PEFTConfig(method="lora", lora_rank=16))
+
+
+def test_int4_trains_quickstart_through_api():
+    """Acceptance: the one-file int4 backend runs the quickstart pipeline
+    end-to-end through repro.api with decreasing loss."""
+    data = DataConfig(vocab_size=512, seq_len=64, batch_size=8, noise=0.05)
+    model = api.prepare(_quickstart_cfg())
+    model.calibrate(calibration_batches(data, 2))
+    model.convert("int4")
+    assert model.cfg.quant.mode == "int4"
+    losses = model.finetune(TrainConfig(learning_rate=2e-2, microbatches=1,
+                                        remat=False),
+                            Loader(data), steps=80)
+    assert np.all(np.isfinite(losses))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.15, losses
+    m = model.evaluate(Loader(data).batch(999))
+    assert np.isfinite(m["loss"])
+
+
+def test_api_convert_requires_calibration_when_needed():
+    model = api.prepare(_quickstart_cfg())
+    with pytest.raises(ValueError, match="calibrate"):
+        model.convert("quaff")  # wants_outliers but no .calibrate() yet

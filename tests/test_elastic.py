@@ -4,6 +4,8 @@ a subprocess with 8 forced host devices."""
 import subprocess
 import sys
 
+import conftest
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -49,6 +51,7 @@ print("OK")
 """
 
 
+@conftest.requires_modern_jax
 def test_elastic_restore_different_mesh():
     r = subprocess.run([sys.executable, "-c", _SCRIPT], capture_output=True,
                        text=True, timeout=600, env={"PYTHONPATH": "src"})

@@ -5,6 +5,7 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
+import conftest
 
 from repro.optim import adamw
 
@@ -40,6 +41,7 @@ print("OK", rel)
 """
 
 
+@conftest.requires_modern_jax
 def test_compressed_psum_matches_exact_subprocess():
     """Runs under 8 forced host devices in a subprocess so the main test
     process keeps its single-device view."""

@@ -49,8 +49,70 @@ def test_prompt_extends_sequence(peft):
     cfg = _cfg(peft=peft)
     frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
     tok = jnp.zeros((2, 8), jnp.int32)
-    logits, _, _, _ = M.forward(frozen, adapters, qstate, tok, cfg)
-    assert logits.shape[1] == 8 + cfg.peft.n_virtual_tokens
+    out = M.forward(frozen, adapters, qstate, tok, cfg)
+    assert out.logits.shape[1] == 8 + cfg.peft.n_virtual_tokens
+
+
+def test_lora_dropout_train_vs_eval():
+    """Train (rng passed) and eval (no rng) logits differ exactly when
+    lora_dropout > 0 — the PEFTConfig.lora_dropout knob is live."""
+    import dataclasses
+
+    cfg = _cfg(peft="lora")  # PEFTConfig default lora_dropout = 0.1
+    assert cfg.peft.lora_dropout > 0.0
+    frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
+    # LoRA inits with B = 0 (adapter is a no-op); randomize so it contributes
+    rng = np.random.RandomState(0)
+    adapters = jax.tree.map(
+        lambda a: jnp.asarray(rng.normal(0, 0.1, a.shape), a.dtype), adapters)
+    tok = jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 16)))
+
+    ev = M.forward(frozen, adapters, qstate, tok, cfg)               # eval
+    tr = M.forward(frozen, adapters, qstate, tok, cfg,
+                   rng=jax.random.PRNGKey(3))                        # train
+    assert not np.allclose(np.asarray(ev.logits), np.asarray(tr.logits)), \
+        "dropout > 0 with an rng must perturb the train-path logits"
+
+    cfg0 = dataclasses.replace(cfg, peft=dataclasses.replace(
+        cfg.peft, lora_dropout=0.0))
+    tr0 = M.forward(frozen, adapters, qstate, tok, cfg0,
+                    rng=jax.random.PRNGKey(3))
+    np.testing.assert_allclose(np.asarray(ev.logits), np.asarray(tr0.logits),
+                               rtol=1e-6, atol=1e-6)
+
+    # same rng twice -> identical (the stochasticity is fully keyed)
+    tr2 = M.forward(frozen, adapters, qstate, tok, cfg,
+                    rng=jax.random.PRNGKey(3))
+    np.testing.assert_allclose(np.asarray(tr.logits), np.asarray(tr2.logits))
+
+
+def test_train_step_dropout_flag():
+    """TrainConfig.deterministic=False turns LoRA dropout on inside the
+    jitted train step; the default stays deterministic."""
+    cfg = _cfg(peft="lora")
+    loader = Loader(DataConfig(vocab_size=64, seq_len=16, batch_size=4))
+    batch = jax.tree.map(jnp.asarray, loader.batch(0))
+
+    def one_step(deterministic, seed):
+        tcfg = TrainConfig(microbatches=1, remat=False,
+                           deterministic=deterministic, seed=seed)
+        frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
+        # non-zero LoRA B so dropout has something to act on
+        rng = np.random.RandomState(1)
+        adapters = jax.tree.map(
+            lambda a: jnp.asarray(rng.normal(0, 0.1, a.shape), a.dtype),
+            adapters)
+        state = S.init_train_state(adapters, qstate, tcfg)
+        step = jax.jit(S.build_train_step(cfg, tcfg))
+        state, metrics = step(frozen, state, batch)
+        return float(metrics["loss"])
+
+    det = one_step(True, 0)
+    sto = one_step(False, 0)
+    assert det != sto, "dropout should change the train loss"
+    # keyed from (seed, step): same seed reproduces exactly
+    assert sto == one_step(False, 0)
+    assert sto != one_step(False, 7)
 
 
 @pytest.mark.parametrize("mode", ["fp32", "naive", "llm_int8",

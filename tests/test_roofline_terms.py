@@ -4,7 +4,7 @@ bytes / trip-count handling against analytic values."""
 import subprocess
 import sys
 
-import pytest
+import conftest
 
 from repro.launch import hloparse
 
@@ -63,6 +63,7 @@ print("OK")
 """
 
 
+@conftest.requires_modern_jax
 def test_roofline_extraction_subprocess():
     r = subprocess.run([sys.executable, "-c", _SCRIPT], capture_output=True,
                        text=True, timeout=600,

@@ -8,6 +8,13 @@ import sys
 
 import pytest
 
+import conftest
+
+pytestmark = [
+    pytest.mark.slow,  # subprocess compiles: minutes
+    conftest.requires_modern_jax,
+]
+
 _MINI_DRYRUN = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

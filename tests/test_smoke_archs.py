@@ -14,6 +14,8 @@ from repro.models import model as M
 from repro.models.config import QuantConfig, TrainConfig
 from repro.train import steps as S
 
+pytestmark = pytest.mark.slow  # full-zoo smoke: minutes of compiles
+
 BATCH, SEQ = 2, 32
 
 

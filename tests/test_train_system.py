@@ -9,13 +9,15 @@ import numpy as np
 import pytest
 
 from repro.core import outliers as OUT
+from repro.core.backend import CAPTURE
 from repro.core.peft import PEFTConfig
 from repro.data.pipeline import DataConfig, Loader, SyntheticLM, calibration_batches
-from repro.models import layers as LAY
 from repro.models import model as M
 from repro.models.config import ModelConfig, QuantConfig, TrainConfig
 from repro.train import calibrate as C
 from repro.train import steps as S
+
+pytestmark = pytest.mark.slow  # multi-minute system tests (see pyproject)
 
 
 def _cfg(mode="quaff"):
@@ -98,10 +100,9 @@ def test_ossh_hitrate_during_finetuning():
         state, _ = step(fq, state, jax.tree.map(jnp.asarray, loader.batch(i)))
 
     # runtime outliers after fine-tuning (capture through the quaff model)
-    with LAY.capture_stats():
-        _, live_stats, _, _ = M.forward(
-            fq, state.adapters, state.quant,
-            jnp.asarray(loader.batch(99)["tokens"]), cfg_q)
+    live_stats = M.forward(
+        fq, state.adapters, state.quant,
+        jnp.asarray(loader.batch(99)["tokens"]), cfg_q, scope=CAPTURE).stats
     # hit rate: predefined channels (down_proj has the largest budget)
     pre = np.asarray(fq["blocks"]["ffn"]["down"]["w"].outlier_idx)  # (L, k)
     live = np.asarray(live_stats["ffn"]["down"])                    # (L, c)

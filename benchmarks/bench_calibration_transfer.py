@@ -8,7 +8,7 @@ import dataclasses
 import jax
 
 from benchmarks import common
-from repro.data.pipeline import DataConfig, calibration_batches
+from repro.data.pipeline import calibration_batches
 from repro.models import model as M
 from repro.train import calibrate as C
 

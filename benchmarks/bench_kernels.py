@@ -1,16 +1,25 @@
 """Kernel-path timing + accuracy: Pallas (interpret) vs jnp oracle vs XLA
-fp32 GEMM. On CPU the interpret-mode timing is NOT a perf claim (the TPU
-roofline lives in EXPERIMENTS.md); accuracy parity is the deliverable."""
+fp32 GEMM, for the Quaff W8A8 path and the packed-nibble INT4 path. On CPU
+the interpret-mode timing is NOT a perf claim (the TPU roofline lives in
+EXPERIMENTS.md); accuracy parity is the deliverable.
+
+CLI (the CI bench-smoke job runs ``--tiny --json bench_kernels.json``):
+  --tiny         shrink shapes so interpret-mode Pallas stays in seconds
+  --json PATH    also dump rows + shape metadata as a JSON artifact
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import quant
+from repro.core.int4 import prepare_int4_weights
 from repro.core.quaff_linear import prepare_quaff_weights, quaff_matmul
-from repro.kernels import ops
+from repro.kernels import int4_matmul_fused, ops, ref
 
 
 def _time(fn, *args, reps=3):
@@ -21,23 +30,22 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run() -> list:
+def _quaff_rows(t, k, n, bt, bn, bk) -> list:
     key = jax.random.PRNGKey(0)
-    t, k, n = 128, 512, 256
     k1, k2 = jax.random.split(key)
     x = jax.random.normal(k1, (t, k)).at[:, 7].mul(90.0)
     w = jax.random.normal(k2, (k, n)) * 0.05
-    idx = jnp.array([7, 100, 300], jnp.int32)
+    idx = jnp.array([7, k // 4, (3 * k) // 4], jnp.int32)
     qw, st = prepare_quaff_weights(w, idx)
     s = jnp.array([8.0, 1.0, 1.0])
 
     us_core = _time(lambda: quaff_matmul(x, qw, s)[0])
     us_kernel = _time(lambda: ops.quaff_forward_pallas(
-        x, qw, s, interpret=True, block_t=64, block_n=128, block_k=128)[0])
+        x, qw, s, interpret=True, block_t=bt, block_n=bn, block_k=bk)[0])
     us_fp = _time(lambda: x @ w)
 
     y_k, _ = ops.quaff_forward_pallas(x, qw, s, interpret=True,
-                                      block_t=64, block_n=128, block_k=128)
+                                      block_t=bt, block_n=bn, block_k=bk)
     y_c, _ = quaff_matmul(x, qw, s)
     max_diff = float(jnp.max(jnp.abs(y_k - y_c)))
     return [
@@ -48,9 +56,87 @@ def run() -> list:
     ]
 
 
-def main():
-    for r in run():
+def _int4_rows(t, k, n, bt, bn, bk, group_size) -> list:
+    """Packed fused kernel vs the UNPACKED int8-carrier reference — the
+    acceptance gate: the packed path must at least match the unpacked one
+    (exact integer math, ULP-level fp epilogue noise only)."""
+    key = jax.random.PRNGKey(1)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (t, k))
+    w = jax.random.normal(k2, (k, n)) * 0.05
+    wts = prepare_int4_weights(w, group_size=group_size)
+    x_int, x_delta = quant.quantize(x, axis=-1, bits=8)
+
+    # unpacked reference: same nibble values riding in full int8 bytes;
+    # timed GEMM-to-GEMM against the fused kernel (both start from x_int)
+    def unpacked_ref():
+        return ref.int4_matmul_ref(x_int, wts.w_packed, x_delta,
+                                   wts.w_delta)
+
+    us_packed = _time(lambda: int4_matmul_fused(
+        x_int, wts.w_packed, x_delta, wts.w_delta, block_t=bt, block_n=bn,
+        block_k=bk, interpret=True))
+    us_unpacked = _time(unpacked_ref)
+    us_pipeline = _time(lambda: ops.int4_forward_pallas(
+        x, wts, x_bits=8, interpret=True, block_t=bt, block_n=bn,
+        block_k=bk))
+    us_core = _time(lambda: quant.quantized_matmul_packed(
+        x, wts.w_packed, wts.w_delta, x_bits=8))
+
+    y_p = int4_matmul_fused(x_int, wts.w_packed, x_delta, wts.w_delta,
+                            block_t=bt, block_n=bn, block_k=bk,
+                            interpret=True)
+    y_u = unpacked_ref()
+    max_diff = float(jnp.max(jnp.abs(y_p - y_u)))
+    scale = float(jnp.max(jnp.abs(y_u))) + 1e-12
+    matches = max_diff <= 1e-4 * scale
+    # vs the INDEPENDENT int8 carrier (not our own unpack) so a packing
+    # regression to full bytes would show up as 1.00 here
+    pack_ratio = (wts.w_packed.nbytes
+                  / quant.quantize(w, axis=0, bits=4)[0].nbytes)
+    return [
+        ("kernel_int4_fused_pallas_interpret", us_packed,
+         f"max_diff_vs_unpacked_ref={max_diff:.2e},matches_unpacked="
+         f"{matches}"),
+        ("kernel_int4_unpacked_ref_jnp", us_unpacked, "oracle"),
+        ("kernel_int4_pipeline_pallas_interpret", us_pipeline,
+         "rowmax+scale_quant+fused_gemm"),
+        ("kernel_int4_packed_core_jnp", us_core,
+         f"groups={wts.w_delta.shape[0]}"),
+        ("kernel_int4_weight_bytes_ratio", 0.0, f"{pack_ratio:.2f}"),
+    ]
+
+
+def run(tiny: bool = False) -> list:
+    if tiny:
+        t, k, n, bt, bn, bk = 32, 128, 64, 16, 32, 32
+    else:
+        t, k, n, bt, bn, bk = 128, 512, 256, 64, 128, 128
+    rows = _quaff_rows(t, k, n, bt, bn, bk)
+    rows += _int4_rows(t, k, n, bt, bn, bk, group_size=k // 4)
+    return rows
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--tiny", action="store_true",
+                   help="CI smoke shapes (seconds in interpret mode)")
+    p.add_argument("--json", metavar="PATH", default=None,
+                   help="also write rows as a JSON artifact")
+    args = p.parse_args(argv)
+    rows = run(tiny=args.tiny)
+    for r in rows:
         print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    if args.json:
+        payload = {
+            "benchmark": "bench_kernels",
+            "tiny": args.tiny,
+            "backend": jax.default_backend(),
+            "rows": [{"name": r[0], "us_per_call": r[1], "derived": r[2]}
+                     for r in rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
 
 
 if __name__ == "__main__":

@@ -5,7 +5,6 @@ from __future__ import annotations
 import dataclasses
 
 from benchmarks import common
-from repro.models.config import TrainConfig
 
 
 def run(steps: int = 10) -> list:

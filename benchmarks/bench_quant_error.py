@@ -1,13 +1,14 @@
 """Paper Fig. 2(c): quantization error of static scaling vs Quaff's targeted
 momentum scaling on outlier-heavy activations whose outlier magnitudes SHIFT
-over iterations (the distribution-shift failure mode of Smooth_S)."""
+over iterations (the distribution-shift failure mode of Smooth_S), plus the
+packed-INT4 modes (per-OC and group-wise) on the same drift schedule."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import backend as BK
 from repro.core import baselines as B
-from repro.core import quant
 from repro.core.quaff_linear import prepare_quaff_weights, quaff_matmul
 from repro.core.scaling import momentum_update
 
@@ -26,6 +27,10 @@ def run() -> list:
     naive_w = B.prepare(B.QuantMode.NAIVE, w)
     smooth_w = B.prepare(B.QuantMode.SMOOTH_STATIC, w, calib_absmax=calib_absmax)
     quaff_w, qstate = prepare_quaff_weights(w, idx)
+    w4a8 = BK.get_backend("int4_w4a8")
+    w4a8_poc = w4a8.prepare(w, calib=BK.Calibration(init_placeholder=True))
+    w4a8_g64 = w4a8.prepare(w, calib=BK.Calibration(init_placeholder=True,
+                                                    group_size=64))
 
     rows = []
     # fine-tuning drift: outlier magnitude grows 40x -> 160x (Fig. 2b)
@@ -41,7 +46,9 @@ def run() -> list:
         qstate = momentum_update(qstate, stats, gamma=0.2)
 
         for name, y in (("naive", y_n), ("smooth_static", y_s),
-                        ("quaff", y_q)):
+                        ("quaff", y_q),
+                        ("int4_w4a8", w4a8.apply(xk, w4a8_poc).y),
+                        ("int4_w4a8_g64", w4a8.apply(xk, w4a8_g64).y)):
             rel = float(jnp.mean(jnp.abs(y - y_fp))) / denom
             rows.append((f"fig2c_err_{name}_scale{int(scale)}", 0.0,
                          f"{rel:.5f}"))

@@ -9,7 +9,6 @@ from __future__ import annotations
 import glob
 import json
 import os
-from collections import defaultdict
 
 from benchmarks.roofline import DRYRUN_DIR, terms
 

@@ -50,6 +50,8 @@ class Calibration(NamedTuple):
     layer_type: str = ""                       # q_proj / down_proj / ...
     budgets: Optional[Mapping[str, float]] = None  # per-layer-type fractions
     init_placeholder: bool = False             # init-time defaults allowed
+    group_size: int = 0                        # group-wise weight scales
+                                               # (0 = per-OC; int4 backends)
 
 
 class StatsScope(NamedTuple):
@@ -132,7 +134,8 @@ def _ensure_builtins():
     # Lazy so `import repro.core.backend` alone never pulls jax-heavy math,
     # and so the builtin modules (which import this one) register themselves
     # no matter which entry point was imported first.
-    from repro.core import baselines, int4, quaff_linear  # noqa: F401
+    from repro.core import (  # noqa: F401
+        baselines, int4, int4_w4a8, quaff_linear)
 
 
 def get_backend(mode) -> QuantBackend:

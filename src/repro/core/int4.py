@@ -1,10 +1,16 @@
-"""INT4 weight-activation quantization backend — the proof that a new mode
-is ONE self-registering file under the ``QuantBackend`` registry.
+"""INT4 weight-activation quantization backend, packed-nibble edition.
 
-Per-OC symmetric 4-bit weights + per-token 4-bit activations (paper Eq. 1/2
-granularities at bits=4). The int values still ride in int8 containers
-(`quant.quantize` clips to ±7), so the same integer GEMM path applies; a
-packed-nibble layout is a kernel-level concern, not a protocol one.
+Per-group (or per-OC when ``QuantConfig.group_size`` is 0) symmetric 4-bit
+weights stored as TWO SIGNED NIBBLES PER INT8 BYTE (``quant.pack_int4``
+split-half layout), plus per-token 4-bit activations. Packing halves the
+frozen weight bytes for real — ``bits=4`` stops being a protocol fiction
+carried in int8 containers.
+
+The integer GEMM runs against the unpacked nibbles
+(``quant.quantized_matmul_packed``); setting ``USE_PALLAS_KERNEL`` (or the
+``REPRO_INT4_PALLAS=1`` environment knob) routes the forward through the
+fused unpack-dequant-GEMM Pallas kernel in ``kernels/int4_matmul.py`` —
+identical integer math, one pass over the packed bytes.
 
 No calibration artifacts, no scale state: ``prepare`` + ``apply`` is the
 whole contract. Everything else (init_qlinear, apply_qlinear, MoE experts,
@@ -13,6 +19,7 @@ registry with zero edits elsewhere — `QuantConfig(mode="int4")` just works.
 """
 from __future__ import annotations
 
+import os
 from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
@@ -22,25 +29,48 @@ from repro.core.backend import LinearOut, QuantBackend, register
 
 BITS = 4
 
+#: Route backend forwards through the Pallas fused kernel (interpret-mode on
+#: CPU). Off by default: the pure-jnp path is the oracle and compiles leaner
+#: at CPU test scale; tests flip this to prove the wiring.
+USE_PALLAS_KERNEL = os.environ.get(
+    "REPRO_INT4_PALLAS", "").lower() in ("1", "true", "yes")
+
 
 class Int4Weights(NamedTuple):
-    w_int: jnp.ndarray       # (c_in, c_out), values in [-7, 7] (int8 carrier)
-    w_delta: jnp.ndarray     # (1, c_out) per-OC step
+    w_packed: jnp.ndarray    # (c_in // 2, c_out) int8 — two nibbles per byte
+    w_delta: jnp.ndarray     # (G, c_out) group steps (G == 1: per-OC)
     bias: Optional[jnp.ndarray] = None
+
+
+def prepare_int4_weights(w, bias=None, group_size: int = 0) -> Int4Weights:
+    """Group-quantize at 4 bits and pack two nibbles per byte (shared by the
+    w4a4 and w4a8 backends)."""
+    if w.shape[-2] % 2:
+        raise ValueError(
+            f"int4 packing needs an even c_in, got {w.shape[-2]}")
+    w_int, w_delta = quant.quantize_grouped(w, group_size, bits=BITS)
+    return Int4Weights(quant.pack_int4(w_int), w_delta, bias)
+
+
+def _apply_packed(x, weights: Int4Weights, x_bits: int, bwd_int8: bool,
+                  use_kernel: bool) -> LinearOut:
+    y = quant.quantized_matmul_packed(
+        x, weights.w_packed, weights.w_delta, x_bits, bwd_int8, use_kernel)
+    if weights.bias is not None:
+        y = y + weights.bias.astype(y.dtype)
+    return LinearOut(y)
 
 
 @register
 class _Int4Backend(QuantBackend):
+    """w4a4: packed 4-bit weights x per-token 4-bit activations."""
+
     name = "int4"
 
     def prepare(self, w, bias=None, *, calib=None, bits=8):
         # bits is the config-wide knob; this backend is 4-bit by definition
-        w_int, w_delta = quant.quantize(w, axis=0, bits=BITS)
-        return Int4Weights(w_int, w_delta, bias)
+        group_size = calib.group_size if calib is not None else 0
+        return prepare_int4_weights(w, bias, group_size)
 
     def apply(self, x, weights, *, state=None, bits=8, bwd_int8=True):
-        y = quant.quantized_matmul(x, weights.w_int, weights.w_delta, BITS,
-                                   bwd_int8)
-        if weights.bias is not None:
-            y = y + weights.bias.astype(y.dtype)
-        return LinearOut(y)
+        return _apply_packed(x, weights, BITS, bwd_int8, USE_PALLAS_KERNEL)

@@ -1,0 +1,31 @@
+"""INT4-weight / INT8-activation mixed backend (OWQ-style fine-tuning mode).
+
+Weights: packed-nibble 4-bit with group-wise (or per-OC) scales — exactly
+``core/int4.py``'s carrier, so the frozen tree is byte-identical in size.
+Activations: per-token INT8 (the 16x finer grid is what makes 4-bit weights
+usable for fine-tuning on outlier-heavy activations; weight error dominates,
+activation error stays at W8A8 levels).
+
+Shares ``prepare_int4_weights`` / the packed GEMM with the w4a4 backend —
+the two modes differ in ONE number (``x_bits``), which is the point of the
+packed-matmul primitive taking activation bits as an argument.
+"""
+from __future__ import annotations
+
+from repro.core import int4 as _int4
+from repro.core.backend import QuantBackend, register
+
+X_BITS = 8
+
+
+@register
+class _Int4W4A8Backend(QuantBackend):
+    name = "int4_w4a8"
+
+    def prepare(self, w, bias=None, *, calib=None, bits=8):
+        group_size = calib.group_size if calib is not None else 0
+        return _int4.prepare_int4_weights(w, bias, group_size)
+
+    def apply(self, x, weights, *, state=None, bits=8, bwd_int8=True):
+        return _int4._apply_packed(x, weights, X_BITS, bwd_int8,
+                                   _int4.USE_PALLAS_KERNEL)

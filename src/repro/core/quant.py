@@ -156,3 +156,170 @@ def quantized_matmul(
     x2d = x.reshape((-1, x.shape[-1]))
     y = _quantized_matmul_2d(x2d, w_int, w_delta, bits, bwd_int8)
     return y.reshape(x.shape[:-1] + (w_int.shape[-1],))
+
+
+# ---------------------------------------------------------------------------
+# Packed-nibble INT4 carriers + group-wise scales.
+#
+# Layout ("split-half"): a (c_in, c_out) int4 weight packs two signed nibbles
+# per int8 byte along c_in — byte r holds row r in the LOW nibble and row
+# r + c_in/2 in the HIGH nibble. Unpack is therefore a concatenation (no
+# sublane interleave), which is what lets the Pallas GEMM kernel
+# (kernels/int4_matmul.py) feed both halves to the MXU as two contiguous
+# x-blocks instead of a strided gather.
+#
+# Scales: ``w_delta`` is (G, c_out) — G == 1 is plain per-OC; G > 1 splits
+# c_in into G contiguous groups of ``c_in / G`` channels, each with its own
+# step (OWQ / OutlierTune-style group-wise granularity).
+# ---------------------------------------------------------------------------
+def pack_int4(w_int: jnp.ndarray) -> jnp.ndarray:
+    """(..., K, N) int4-valued int8 -> (..., K//2, N) packed int8 (K even)."""
+    k = w_int.shape[-2]
+    if k % 2:
+        raise ValueError(f"pack_int4 needs an even c_in, got {k}")
+    lo = w_int[..., : k // 2, :].astype(jnp.int32)
+    hi = w_int[..., k // 2:, :].astype(jnp.int32)
+    return ((lo & 0xF) | ((hi & 0xF) << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """(..., K//2, N) packed int8 -> (..., K, N) int8 in [-8, 7] (exact
+    inverse of ``pack_int4`` for values in [-8, 7])."""
+    p = packed.astype(jnp.int32) & 0xFF
+    lo = ((p & 0xF) ^ 8) - 8          # 4-bit sign extension
+    hi = (((p >> 4) & 0xF) ^ 8) - 8
+    return jnp.concatenate([lo, hi], axis=-2).astype(jnp.int8)
+
+
+def quantize_grouped(
+    w: jnp.ndarray, group_size: int, bits: int = 4
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Group-wise symmetric quantization of a (K, N) weight along c_in.
+
+    Returns (w_int (K, N) int8-carried, delta (G, N)) with
+    G = K / group_size. ``group_size`` that is <= 0 or does not divide K
+    degrades to one group (per-OC) — the safe granularity for any layer
+    shape, matching how group-wise schemes handle ragged layers.
+    """
+    k, n = w.shape[-2:]
+    if group_size <= 0 or k % group_size:
+        group_size = k
+    g = k // group_size
+    wg = w.reshape(w.shape[:-2] + (g, group_size, n))
+    delta = compute_delta(wg, axis=-2, bits=bits)            # (..., G, 1, N)
+    qm = qmax_for_bits(bits)
+    w_int = jnp.clip(jnp.round(wg / delta), -qm, qm).astype(jnp.int8)
+    return (w_int.reshape(w.shape),
+            delta.reshape(w.shape[:-2] + (g, n)).astype(jnp.float32))
+
+
+def dequantize_grouped(w_int: jnp.ndarray, w_delta: jnp.ndarray,
+                       dtype=jnp.float32) -> jnp.ndarray:
+    """(K, N) int carrier x (G, N) group steps -> (K, N) float."""
+    k = w_int.shape[-2]
+    g = w_delta.shape[-2]
+    scale = jnp.repeat(w_delta, k // g, axis=-2)
+    return w_int.astype(dtype) * scale.astype(dtype)
+
+
+def _grouped_int_matmul(x_int: jnp.ndarray, w_int: jnp.ndarray,
+                        w_delta: jnp.ndarray) -> jnp.ndarray:
+    """sum_g (X_:,g @ W_g) * delta_g  — (T, K) x (K, N) x (G, N) -> (T, N)
+    f32. The int32 partial products are exact; group scales are applied
+    before the cross-group sum (a group-wise GEMM cannot fold its scales
+    into a pure epilogue the way per-OC can)."""
+    t = x_int.shape[0]
+    k, n = w_int.shape
+    g = w_delta.shape[0]
+    if g == 1:
+        acc = int_matmul(x_int, w_int).astype(jnp.float32)
+        return acc * w_delta.reshape((1, n))
+    xg = x_int.reshape((t, g, k // g)).transpose(1, 0, 2)    # (G, T, gs)
+    wg = w_int.reshape((g, k // g, n))                       # (G, gs, N)
+    acc = jax.lax.dot_general(
+        xg, wg, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32).astype(jnp.float32)  # (G, T, N)
+    return jnp.sum(acc * w_delta[:, None, :], axis=0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _packed_matmul_2d(
+    x2d: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    w_delta: jnp.ndarray,
+    x_bits: int = 8,
+    bwd_int8: bool = True,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    x_int, x_delta = quantize(x2d, axis=-1, bits=x_bits)
+    if use_kernel:
+        # Pallas fused unpack-dequant-GEMM (interpret-mode on CPU). Lazy
+        # import: the kernels layer depends on core, never the reverse at
+        # import time.
+        from repro.kernels import int4_matmul as _k
+        y = _k.int4_matmul_auto(x_int, w_packed, x_delta, w_delta)
+        return y.astype(x2d.dtype)
+    w_int = unpack_int4(w_packed)
+    y = _grouped_int_matmul(x_int, w_int, w_delta)
+    return (y * x_delta.astype(jnp.float32)).astype(x2d.dtype)
+
+
+def _pmm_fwd(x2d, w_packed, w_delta, x_bits, bwd_int8, use_kernel):
+    return (_packed_matmul_2d(x2d, w_packed, w_delta, x_bits, bwd_int8,
+                              use_kernel),
+            (w_packed, w_delta))
+
+
+def _pmm_bwd(x_bits, bwd_int8, use_kernel, res, g):
+    w_packed, w_delta = res
+    w_int = unpack_int4(w_packed)
+    if not bwd_int8:
+        # bf16 backward: dequantized transposed GEMM (collective-lean mode)
+        w_fp = dequantize_grouped(w_int, w_delta, g.dtype)
+        return g @ w_fp.T, None, None
+    n_groups = w_delta.shape[0]
+    k, n = w_int.shape
+    if n_groups == 1:
+        # per-OC: fold the weight scale into g, one integer transposed GEMM
+        g_scaled = g.astype(jnp.float32) * w_delta.reshape((1, n))
+        g_int, g_delta = quantize(g_scaled, axis=-1, bits=x_bits)
+        dx = int_matmul(g_int, w_int.T).astype(g.dtype) * g_delta.astype(
+            g.dtype)
+        return dx, None, None
+    # group-wise: the scale depends on (group(k), n), so fold it per group
+    # and run one batched integer GEMM over groups:
+    #   dx[:, g] = quant_per_token(dY * delta_g) @ W_g^T
+    gs_all = g.astype(jnp.float32)[None] * w_delta[:, None, :]  # (G, T, N)
+    g_int, g_delta = quantize(gs_all, axis=-1, bits=x_bits)     # (G, T, 1)
+    wg = w_int.reshape((n_groups, k // n_groups, n))
+    dxg = jax.lax.dot_general(
+        g_int, wg, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32).astype(jnp.float32)   # (G, T, gs)
+    dxg = dxg * g_delta
+    dx = dxg.transpose(1, 0, 2).reshape((g.shape[0], k))
+    return dx.astype(g.dtype), None, None
+
+
+_packed_matmul_2d.defvjp(_pmm_fwd, _pmm_bwd)
+
+
+def quantized_matmul_packed(
+    x: jnp.ndarray,
+    w_packed: jnp.ndarray,
+    w_delta: jnp.ndarray,
+    x_bits: int = 8,
+    bwd_int8: bool = True,
+    use_kernel: bool = False,
+) -> jnp.ndarray:
+    """Packed-nibble INT4-weight GEMM: per-token quantize x at ``x_bits``
+    (8 -> w4a8, 4 -> w4a4), integer GEMM against the unpacked nibbles,
+    group-wise dequant. ``w_delta``: (G, c_out), G == 1 meaning per-OC.
+
+    Backward (frozen W, STE through the rounding) mirrors
+    ``quantized_matmul``: one integer transposed GEMM per-OC, or one
+    group-batched integer GEMM when G > 1. ``use_kernel=True`` routes the
+    forward through the fused Pallas kernel (same integer math)."""
+    x2d = x.reshape((-1, x.shape[-1]))
+    y = _packed_matmul_2d(x2d, w_packed, w_delta, x_bits, bwd_int8,
+                          use_kernel)
+    return y.reshape(x.shape[:-1] + (w_packed.shape[-1],))

@@ -13,7 +13,7 @@ process feeds its addressable shard of a globally-sharded array.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

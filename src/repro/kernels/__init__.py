@@ -1,3 +1,36 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the hot paths the paper optimizes, plus their
+entry points:
+
+  int8_quant    rowmax / scale_quant — two-pass per-token quantization
+  quaff_matmul  quaff_matmul_fused — W8A8 GEMM + dequant + outlier GEMM
+  int4_pack     pack_int4_pallas / unpack_int4_pallas — two signed nibbles
+                per int8 byte (split-half layout, see core/quant.pack_int4)
+  int4_matmul   int4_matmul_fused — fused unpack-dequant GEMM over packed
+                INT4 weights with group-wise scales (w4a4 and w4a8)
+  flash_attention  flash_attention / gqa_flash_attention
+  ops           jnp-orchestrated full-layer forwards built from the above
+  ref           pure-jnp oracles every kernel test compares against
+
+Every wrapper takes ``interpret=`` and honors ``REPRO_PALLAS_INTERPRET=1``
+(see ``common.interpret_mode``) so CPU-only runners — CI in particular —
+execute the kernel bodies without Mosaic.
+"""
+from repro.kernels.common import FORCE_INTERPRET, interpret_mode
+from repro.kernels.flash_attention import flash_attention, gqa_flash_attention
+from repro.kernels.int4_matmul import int4_matmul_fused
+from repro.kernels.int4_pack import pack_int4_pallas, unpack_int4_pallas
+from repro.kernels.int8_quant import rowmax, scale_quant
+from repro.kernels.quaff_matmul import quaff_matmul_fused
+
+__all__ = [
+    "FORCE_INTERPRET",
+    "interpret_mode",
+    "flash_attention",
+    "gqa_flash_attention",
+    "int4_matmul_fused",
+    "pack_int4_pallas",
+    "unpack_int4_pallas",
+    "rowmax",
+    "scale_quant",
+    "quaff_matmul_fused",
+]

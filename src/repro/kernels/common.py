@@ -1,0 +1,30 @@
+"""Shared kernel-layer knobs.
+
+``REPRO_PALLAS_INTERPRET=1`` forces every Pallas wrapper in this package
+into interpret mode regardless of what the caller requested — the switch CI
+flips so the whole suite runs the kernel bodies on CPU-only runners. Read
+once at import so jit cache keys stay consistent within a process.
+"""
+from __future__ import annotations
+
+import math
+import os
+
+FORCE_INTERPRET = os.environ.get(
+    "REPRO_PALLAS_INTERPRET", "").lower() in ("1", "true", "yes")
+
+
+def interpret_mode(requested: bool) -> bool:
+    """The interpret flag a wrapper should pass to ``pl.pallas_call``."""
+    return True if FORCE_INTERPRET else bool(requested)
+
+
+def fit_block(block: int, *dims: int) -> int:
+    """Largest block size <= ``block`` dividing every dim in ``dims`` (the
+    auto-shape rule for kernel entry points that cannot assert on their
+    callers' shapes). gcd-based: exact for the power-of-two shapes the MXU
+    wants, conservative otherwise."""
+    g = 0
+    for d in dims:
+        g = math.gcd(g, d)
+    return max(1, math.gcd(g, min(block, g)))

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import interpret_mode
+
 NEG_INF = -1e30
 
 
@@ -76,6 +78,7 @@ def flash_attention(
     block_k: int = 128,
     interpret: bool = False,
 ) -> jnp.ndarray:
+    interpret = interpret_mode(interpret)
     bh, s, hd = q.shape
     t = k.shape[1]
     bq, bk = min(block_q, s), min(block_k, t)

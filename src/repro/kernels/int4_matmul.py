@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: fused unpack-dequant-GEMM over packed-nibble INT4
+weights with group-wise (or per-OC) scales.
+
+Serves both int4 modes — the activation operand is whatever the quantizer
+produced (int8 per-token at 8 bits for w4a8, int4-range int8 carriers for
+w4a4); the MXU contraction is s8 x s8 -> s32 either way.
+
+Why the weights never exist unpacked in HBM: the packed (K/2, N) byte block
+is DMA'd to VMEM once per grid step and both nibbles are expanded in
+registers right before the dot — HBM traffic for the weight stream is
+HALVED vs an int8 GEMM of the same logical shape, which is the entire
+memory win of ``bits=4``.
+
+Why two dots per step: the split-half layout puts rows [0, K/2) in low
+nibbles and [K/2, K) in high nibbles, so one packed block pairs with TWO
+activation blocks (x[:, kb] and x[:, K/2 + kb]) — both contiguous, fed via
+two BlockSpec views of the same x buffer. An even/odd interleaved layout
+would need a lane-strided gather here instead.
+
+Why the accumulator is f32 (not the usual s32): with G scale groups along
+c_in the per-OC "dequant epilogue" factorization no longer exists — each
+K-step's s32 partial product must be scaled by its group's (1, BN) delta
+row before joining the accumulator. The two group rows per step are picked
+by BlockSpec index maps ((k_off // group_size, j)), so block_k must divide
+group_size; per-OC is just G == 1, where both maps collapse to row 0.
+Grid (T/BT, N/BN, K/2/BK), K innermost; the per-token step is applied once
+on the last K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import fit_block, interpret_mode
+
+
+def _kernel(xlo_ref, xhi_ref, wp_ref, xd_ref, wdlo_ref, wdhi_ref, out_ref,
+            acc_ref, *, k_steps: int):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    p = wp_ref[...].astype(jnp.int32) & 0xFF
+    w_lo = (((p & 0xF) ^ 8) - 8).astype(jnp.int8)          # rows [0, K/2)
+    w_hi = ((((p >> 4) & 0xF) ^ 8) - 8).astype(jnp.int8)   # rows [K/2, K)
+    p_lo = jax.lax.dot_general(
+        xlo_ref[...], w_lo, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    p_hi = jax.lax.dot_general(
+        xhi_ref[...], w_hi, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    acc_ref[...] += (p_lo.astype(jnp.float32) * wdlo_ref[...]
+                     + p_hi.astype(jnp.float32) * wdhi_ref[...])
+
+    @pl.when(kk == k_steps - 1)
+    def _epilogue():
+        out_ref[...] = (acc_ref[...] * xd_ref[...]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_n", "block_k",
+                                             "interpret"))
+def int4_matmul_fused(
+    x_int: jnp.ndarray,     # (T, K) int8 (int4-range carriers for w4a4)
+    w_packed: jnp.ndarray,  # (K/2, N) int8 — two nibbles per byte
+    x_delta: jnp.ndarray,   # (T, 1) f32 per-token step
+    w_delta: jnp.ndarray,   # (G, N) f32 group steps (G == 1: per-OC)
+    *,
+    block_t: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    interpret = interpret_mode(interpret)
+    t, k = x_int.shape
+    kh, n = w_packed.shape
+    assert k == 2 * kh, (k, kh)
+    g = w_delta.shape[0]
+    assert k % g == 0, (k, g)
+    gs = k // g
+    bt = fit_block(block_t, t)
+    bn = fit_block(block_n, n)
+    bk = fit_block(block_k, kh, gs)   # one scale group per (lo|hi) K-block
+    kh_steps = kh // bk
+    grid = (t // bt, n // bn, kh_steps)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=kh_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bk), lambda i, j, kk: (i, kk)),          # x lo
+            pl.BlockSpec((bt, bk),
+                         lambda i, j, kk: (i, kk + kh_steps)),         # x hi
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),          # bytes
+            pl.BlockSpec((bt, 1), lambda i, j, kk: (i, 0)),            # Dx
+            pl.BlockSpec((1, bn),
+                         lambda i, j, kk: ((kk * bk) // gs, j)),       # Dw lo
+            pl.BlockSpec((1, bn),
+                         lambda i, j, kk: ((kh + kk * bk) // gs, j)),  # Dw hi
+        ],
+        out_specs=pl.BlockSpec((bt, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bt, bn), jnp.float32)],
+        interpret=interpret,
+    )(x_int, x_int, w_packed, x_delta, w_delta, w_delta)
+
+
+def int4_matmul_auto(x_int, w_packed, x_delta, w_delta) -> jnp.ndarray:
+    """Backend entry point (core/int4*.py forwards land here when the
+    Pallas route is enabled): compiled on TPU, interpret elsewhere."""
+    interpret = jax.default_backend() != "tpu"
+    return int4_matmul_fused(x_int, w_packed, x_delta, w_delta,
+                             interpret=interpret)

@@ -1,0 +1,89 @@
+"""Pallas TPU kernels for packed-nibble INT4 weight carriers.
+
+Layout (must match ``core/quant.pack_int4``): split-half along c_in — byte
+r of the packed (K/2, N) array holds original row r in the LOW nibble and
+row r + K/2 in the HIGH nibble. The split (rather than the usual
+even/odd interleave) is deliberate: unpack is a concatenation of two
+contiguous row-blocks, so the GEMM kernel reads both activation halves as
+ordinary contiguous blocks instead of a lane-strided gather the VPU would
+have to emulate.
+
+  pack_int4_pallas   : (K, N) int4-valued int8 -> (K/2, N) packed bytes.
+                       Two input views of the same array (lo/hi halves via
+                       two BlockSpec index maps) -> one byte store per pair.
+  unpack_int4_pallas : (K/2, N) packed -> (K, N) sign-extended nibbles,
+                       emitted as two outputs (lo, hi halves) the wrapper
+                       concatenates — each grid step writes one block of
+                       each half, no revisits.
+
+Sign extension is branch-free 4-bit two's-complement: ((v & 0xF) ^ 8) - 8.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import fit_block, interpret_mode
+
+
+def _pack_kernel(lo_ref, hi_ref, out_ref):
+    lo = lo_ref[...].astype(jnp.int32)
+    hi = hi_ref[...].astype(jnp.int32)
+    out_ref[...] = ((lo & 0xF) | ((hi & 0xF) << 4)).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "block_n",
+                                             "interpret"))
+def pack_int4_pallas(w_int: jnp.ndarray, *, block_k: int = 256,
+                     block_n: int = 512, interpret: bool = False
+                     ) -> jnp.ndarray:
+    """w_int: (K, N) int8 with int4-range values -> (K//2, N) packed int8."""
+    interpret = interpret_mode(interpret)
+    k, n = w_int.shape
+    assert k % 2 == 0, f"pack_int4_pallas needs an even c_in, got {k}"
+    kh = k // 2
+    bk, bn = fit_block(block_k, kh), fit_block(block_n, n)
+    kh_steps = kh // bk
+    return pl.pallas_call(
+        _pack_kernel,
+        grid=(kh_steps, n // bn),
+        in_specs=[
+            pl.BlockSpec((bk, bn), lambda i, j: (i, j)),             # rows r
+            pl.BlockSpec((bk, bn),
+                         lambda i, j: (i + kh_steps, j)),            # r + K/2
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((kh, n), jnp.int8),
+        interpret=interpret,
+    )(w_int, w_int)
+
+
+def _unpack_kernel(p_ref, lo_ref, hi_ref):
+    p = p_ref[...].astype(jnp.int32) & 0xFF
+    lo_ref[...] = (((p & 0xF) ^ 8) - 8).astype(jnp.int8)
+    hi_ref[...] = ((((p >> 4) & 0xF) ^ 8) - 8).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "block_n",
+                                             "interpret"))
+def unpack_int4_pallas(packed: jnp.ndarray, *, block_k: int = 256,
+                       block_n: int = 512, interpret: bool = False
+                       ) -> jnp.ndarray:
+    """packed: (K//2, N) int8 -> (K, N) int8 in [-8, 7]."""
+    interpret = interpret_mode(interpret)
+    kh, n = packed.shape
+    bk, bn = fit_block(block_k, kh), fit_block(block_n, n)
+    lo, hi = pl.pallas_call(
+        _unpack_kernel,
+        grid=(kh // bk, n // bn),
+        in_specs=[pl.BlockSpec((bk, bn), lambda i, j: (i, j))],
+        out_specs=[pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+                   pl.BlockSpec((bk, bn), lambda i, j: (i, j))],
+        out_shape=[jax.ShapeDtypeStruct((kh, n), jnp.int8),
+                   jax.ShapeDtypeStruct((kh, n), jnp.int8)],
+        interpret=interpret,
+    )(packed)
+    return jnp.concatenate([lo, hi], axis=0)

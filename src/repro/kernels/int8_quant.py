@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import interpret_mode
+
 INT8_MAX = 127.0
 
 
@@ -41,6 +43,7 @@ def _rowmax_kernel(x_ref, out_ref):
 def rowmax(x: jnp.ndarray, *, block_t: int = 256, block_k: int = 2048,
            interpret: bool = False) -> jnp.ndarray:
     """x: (T, K) -> (T, 1) fp32 row absmax."""
+    interpret = interpret_mode(interpret)
     t, k = x.shape
     bt, bk = min(block_t, t), min(block_k, k)
     assert t % bt == 0 and k % bk == 0
@@ -54,23 +57,27 @@ def rowmax(x: jnp.ndarray, *, block_t: int = 256, block_k: int = 2048,
     )(x)
 
 
-def _scale_quant_kernel(x_ref, sinv_ref, delta_ref, out_ref):
+def _scale_quant_kernel(x_ref, sinv_ref, delta_ref, out_ref, *,
+                        qmax: float = INT8_MAX):
     x = x_ref[...].astype(jnp.float32) * sinv_ref[...].astype(jnp.float32)
     q = jnp.round(x / delta_ref[...])
-    out_ref[...] = jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    out_ref[...] = jnp.clip(q, -qmax, qmax).astype(jnp.int8)
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_k",
-                                             "interpret"))
+                                             "qmax", "interpret"))
 def scale_quant(x: jnp.ndarray, s_inv: jnp.ndarray, delta: jnp.ndarray, *,
                 block_t: int = 256, block_k: int = 2048,
+                qmax: float = INT8_MAX,
                 interpret: bool = False) -> jnp.ndarray:
-    """x: (T, K), s_inv: (K,), delta: (T, 1) -> int8 (T, K)."""
+    """x: (T, K), s_inv: (K,), delta: (T, 1) -> int8 (T, K) clipped to
+    ±``qmax`` (127 for int8 carriers, 7 for int4-range carriers)."""
+    interpret = interpret_mode(interpret)
     t, k = x.shape
     bt, bk = min(block_t, t), min(block_k, k)
     assert t % bt == 0 and k % bk == 0
     return pl.pallas_call(
-        _scale_quant_kernel,
+        functools.partial(_scale_quant_kernel, qmax=qmax),
         grid=(t // bt, k // bk),
         in_specs=[
             pl.BlockSpec((bt, bk), lambda i, kk: (i, kk)),

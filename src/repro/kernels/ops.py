@@ -1,26 +1,27 @@
-"""Jit'd wrappers orchestrating the Pallas kernels into the full Quaff
-forward (the kernel-level counterpart of core/quaff_linear.quaff_matmul):
+"""Jit'd wrappers orchestrating the Pallas kernels into full linear-layer
+forwards (the kernel-level counterparts of the core/ jnp paths):
 
-  1. rowmax        — per-token absmax of the scaled activations
-  2. scale_quant   — fused s_inv scaling + INT8 rounding
-  3. quaff_matmul_fused — W8A8 GEMM + dequant + outlier correction
+  quaff_forward_pallas : rowmax -> scale_quant -> quaff_matmul_fused
+                         (W8A8 GEMM + dequant + outlier correction)
+  naive_forward_pallas : same pipeline with zero outlier channels
+  int4_forward_pallas  : rowmax -> scale_quant (at the activation qmax) ->
+                         int4_matmul_fused (packed-nibble W4 GEMM with
+                         group-wise scales; x_bits picks w4a4 vs w4a8)
 
 On this CPU container the kernels run with interpret=True (Python
 execution of the kernel body); on a real TPU the same code compiles to
-Mosaic. ``quaff_forward_pallas`` is validated against the pure-jnp oracle
-(core path) in tests/test_kernels.py across shape/dtype sweeps.
+Mosaic. Each wrapper is validated against the pure-jnp oracle (core path)
+in tests/test_kernels.py / tests/test_int4.py across shape sweeps.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import quant
 from repro.core.quaff_linear import QuaffWeights, _scatter_s_inv
-from repro.kernels import int8_quant, quaff_matmul, ref
+from repro.kernels import int4_matmul, int8_quant, quaff_matmul
 
 INT8_MAX = 127.0
 
@@ -70,6 +71,33 @@ def quaff_forward_pallas(
     stats = jnp.max(jnp.abs(
         jnp.take(x, weights.outlier_idx, axis=1).astype(jnp.float32)), axis=0)
     return y, stats
+
+
+def int4_forward_pallas(
+    x: jnp.ndarray,            # (T, K) float
+    weights,                   # core.int4.Int4Weights (packed + group deltas)
+    *,
+    x_bits: int = 4,           # 4 -> w4a4, 8 -> w4a8
+    interpret: bool = True,
+    block_t: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+) -> jnp.ndarray:
+    """Full kernel-path packed-INT4 linear: per-token activation quantize at
+    ``x_bits`` + fused unpack-dequant GEMM. Returns y (T, N) f32."""
+    t, k = x.shape
+    qm = quant.qmax_for_bits(x_bits)
+    xmax = int8_quant.rowmax(x, interpret=interpret)
+    delta = jnp.maximum(xmax, 1e-8) / qm
+    x_int = int8_quant.scale_quant(x, jnp.ones((k,), jnp.float32), delta,
+                                   qmax=qm, interpret=interpret)
+    y = int4_matmul.int4_matmul_fused(
+        x_int, weights.w_packed, delta, weights.w_delta,
+        block_t=block_t, block_n=block_n, block_k=block_k,
+        interpret=interpret)
+    if weights.bias is not None:
+        y = y + weights.bias[None, :]
+    return y
 
 
 def naive_forward_pallas(x, w_int, w_delta, *, interpret: bool = True):

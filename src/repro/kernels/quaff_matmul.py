@@ -19,12 +19,13 @@ well under 16 MB VMEM for O <= 1024.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_mode
 
 
 def _kernel(x_ref, w_ref, xd_ref, wd_ref, xo_ref, wo_ref, wod_ref,
@@ -65,6 +66,7 @@ def quaff_matmul_fused(
     block_k: int = 512,
     interpret: bool = False,
 ) -> jnp.ndarray:
+    interpret = interpret_mode(interpret)
     t, k = x_int.shape
     _, n = w_int.shape
     o = xo_int.shape[1]

@@ -48,3 +48,39 @@ def int8_matmul_ref(x_int, w_int, x_delta, w_delta):
         x_int, w_int, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32).astype(jnp.float32)
     return acc * x_delta * w_delta
+
+
+# ---------------------------------------------------------------------------
+# Packed-nibble INT4 (split-half layout: byte r = row r | row r+K/2 << 4)
+# ---------------------------------------------------------------------------
+def int4_pack_ref(w_int: jnp.ndarray) -> jnp.ndarray:
+    """(K, N) int4-valued int8 -> (K//2, N) packed bytes."""
+    k = w_int.shape[0]
+    lo = w_int[: k // 2].astype(jnp.int32)
+    hi = w_int[k // 2:].astype(jnp.int32)
+    return ((lo & 0xF) | ((hi & 0xF) << 4)).astype(jnp.int8)
+
+
+def int4_unpack_ref(packed: jnp.ndarray) -> jnp.ndarray:
+    """(K//2, N) packed bytes -> (K, N) int8 in [-8, 7]."""
+    p = packed.astype(jnp.int32) & 0xFF
+    lo = ((p & 0xF) ^ 8) - 8
+    hi = (((p >> 4) & 0xF) ^ 8) - 8
+    return jnp.concatenate([lo, hi], axis=0).astype(jnp.int8)
+
+
+def int4_matmul_ref(x_int, w_packed, x_delta, w_delta):
+    """Unpack + group-scaled integer GEMM + per-token dequant.
+
+    x_int: (T, K) int8; w_packed: (K/2, N); x_delta: (T, 1) f32;
+    w_delta: (G, N) f32 — group g scales c_in rows [g*K/G, (g+1)*K/G)."""
+    w_int = int4_unpack_ref(w_packed)
+    t = x_int.shape[0]
+    k, n = w_int.shape
+    g = w_delta.shape[0]
+    xg = x_int.reshape((t, g, k // g)).transpose(1, 0, 2)     # (G, T, gs)
+    wg = w_int.reshape((g, k // g, n))                        # (G, gs, N)
+    acc = jax.lax.dot_general(
+        xg, wg, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32).astype(jnp.float32)  # (G, T, N)
+    return jnp.sum(acc * w_delta[:, None, :], axis=0) * x_delta

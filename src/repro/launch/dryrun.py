@@ -25,7 +25,6 @@ import warnings
 warnings.filterwarnings("ignore")
 
 import jax
-import numpy as np
 
 from repro.configs import ASSIGNED, get_config
 from repro.launch import hloparse, shardings, specs

@@ -4,7 +4,7 @@ tests that must see 1 device)."""
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 

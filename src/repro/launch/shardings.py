@@ -18,10 +18,9 @@ success is never hostage to an odd vocab (whisper's 51866).
 from __future__ import annotations
 
 import math
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -72,7 +71,11 @@ def _frozen_leaf_spec(path_s: str, shape: Tuple[int, ...], cfg: ModelConfig,
     is_row = (any(t in path_s for t in ("/down/", "/wo/", "/out_proj/",
                                         "/w_out/"))
               and not is_expert)
-    if path_s.endswith(("/w_int", "/w_fp")) or path_s.endswith("/w/w"):
+    # w_packed: the int4 nibble carrier — (c_in/2, c_out), shards exactly
+    # like its unpacked counterparts (halved c_in still divides the mesh
+    # for pow-2 axes; _div falls back to replicated otherwise)
+    if (path_s.endswith(("/w_int", "/w_fp", "/w_packed"))
+            or path_s.endswith("/w/w")):
         c_in, c_out = shape[-2], shape[-1]
         if is_expert:
             # (L, E, c_in, c_out): EP over "data", TP over "model"

@@ -24,7 +24,6 @@ import dataclasses
 import json
 import os
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ assignment table (arch id comments in repro/configs/<id>.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Mapping, Optional, Tuple
+from typing import Any, Dict, Mapping, Optional
 
 from repro.core.peft import PEFTConfig
 
@@ -20,6 +20,10 @@ class QuantConfig:
     outlier_ratio: float = 20.0  # xi criterion threshold
     bwd_int8: bool = True        # INT8 backward GEMMs (paper-faithful); False
                                  # = bf16 backward (collective-lean, SPerf)
+    group_size: int = 0          # group-wise weight-scale granularity for
+                                 # the int4 backends: channels per scale
+                                 # group along c_in (0 = per-OC; layers it
+                                 # does not divide fall back to per-OC)
     total_budget: float = 0.05   # < 5% overall overhead
     # per-layer-type budget fractions of c_in (paper §4.1)
     budgets: Optional[Mapping[str, float]] = None

@@ -9,7 +9,7 @@ Decode-time caches: per-layer self-attn KV (growing) + cross-attn KV
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

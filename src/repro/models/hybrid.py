@@ -14,7 +14,7 @@ mLSTM, n_stages = n_layers // slstm_every (0 => pure mLSTM stack).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -67,7 +67,7 @@ def init_qlinear(
     b = jnp.zeros((c_out,), param_dtype) if bias else None
     backend = get_backend(qcfg.mode)
     calib = Calibration(layer_type=layer_type, budgets=qcfg.budgets,
-                        init_placeholder=True)
+                        init_placeholder=True, group_size=qcfg.group_size)
     wts = backend.prepare(w, b, calib=calib, bits=qcfg.bits)
     return {"w": wts}, backend.init_state(wts)
 
@@ -89,7 +89,9 @@ def _hint_weight_use(wts, use_kind: str = "col"):
     if d is None:
         return wts
     suffix = "_row" if use_kind == "row" else ""
-    for f in ("w", "w_int", "w_fp"):
+    # w_packed: the int4 nibble carrier — (c_in/2, c_out), same col/row
+    # Megatron pairing as its unpacked counterparts
+    for f in ("w", "w_int", "w_fp", "w_packed"):
         if f in d and d[f] is not None:
             kind = ("weight_use2" if d[f].ndim == 2 else
                     "weight_use3" if d[f].ndim == 3 else None)

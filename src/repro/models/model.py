@@ -13,9 +13,7 @@ calibration; ``rng`` enables train-time LoRA dropout (eval passes None).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
 
-import jax.numpy as jnp
 
 from repro.models import encdec, hybrid, transformer
 from repro.models.config import ModelConfig

@@ -13,7 +13,6 @@ sequential by construction (recurrent gate mixing) and runs under lax.scan.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

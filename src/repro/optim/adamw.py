@@ -10,7 +10,7 @@ Two compression paths:
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

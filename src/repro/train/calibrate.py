@@ -169,7 +169,8 @@ def convert(frozen_fp32, stats: Optional[Tuple[Any, Any]], cfg: ModelConfig,
         def prep_one(wi, ex):
             calib = BK.Calibration(
                 absmax=ex.get("absmax"), outlier_idx=ex.get("idx"),
-                layer_type=ltype, budgets=qcfg.budgets)
+                layer_type=ltype, budgets=qcfg.budgets,
+                group_size=qcfg.group_size)
             wts_i = backend.prepare(wi, ex.get("bias"), calib=calib,
                                     bits=qcfg.bits)
             return wts_i, backend.init_state(wts_i)

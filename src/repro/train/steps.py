@@ -9,7 +9,7 @@ changes during fine-tuning, which is exactly Quaff's decoupling story.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -30,7 +30,8 @@ MODE_RTOL = {
     "smooth_static": 0.05,
     "smooth_dynamic": 0.05,
     "quaff": 0.05,
-    "int4": 0.60,  # 4-bit weights AND activations: ~16x coarser grid
+    "int4": 0.60,       # 4-bit weights AND activations: ~16x coarser grid
+    "int4_w4a8": 0.35,  # 4-bit weights, int8 activations: weight error only
 }
 
 

@@ -1,6 +1,5 @@
 """Checkpoint manager: roundtrip, atomicity, retention, and crash-resume
 equivalence (the fault-tolerance contract)."""
-import dataclasses
 import os
 
 import jax

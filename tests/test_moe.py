@@ -1,7 +1,6 @@
 """MoE dispatch correctness: grouped capacity dispatch must equal a dense
 per-token expert evaluation when nothing is dropped, and must be invariant
 to the group count."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,5 @@
 """Outlier identification (Eq. 6 analog) + budget allocation."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import outliers as O

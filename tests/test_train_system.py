@@ -8,7 +8,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import outliers as OUT
 from repro.core.backend import CAPTURE
 from repro.core.peft import PEFTConfig
 from repro.data.pipeline import DataConfig, Loader, SyntheticLM, calibration_batches

@@ -1,0 +1,131 @@
+"""Continuous-batching serving benchmark: Engine throughput/latency vs the
+lockstep decode loop on the same workload, via the real calibration +
+conversion pipeline (micro Phi3 stand-in).
+
+CLI (the CI serve-smoke job runs ``--tiny --json bench_serving.json``):
+
+  --tiny         CI smoke shapes (seconds on CPU)
+  --json PATH    dump rows + engine stats as a JSON artifact
+  --mode MODE    quant mode to serve (default quaff)
+
+Rows follow the bench_kernels convention: (name, us_per_call, derived).
+``serving_engine_greedy_parity`` carries ``parity=True/False`` (engine
+tokens vs lockstep on a shared batch) and ``serving_engine_mixed`` carries
+``slot_steps=A<B=lockstep`` — the two gates CI checks.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+import common
+from repro import api
+from repro.data.pipeline import DataConfig, Loader
+from repro.serving import GenerationRequest, SamplingParams
+
+
+def _lockstep_tokens(model, prompts, max_new):
+    import jax.numpy as jnp
+    tokens = jnp.asarray(prompts)
+    logits, caches = model.prefill({"tokens": tokens}, extra_len=max_new)
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for i in range(max_new - 1):
+        logits, caches = model.decode_step(caches, tok, tokens.shape[1] + i)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return np.asarray(jnp.concatenate(out, axis=1))
+
+
+def run(mode: str = "quaff", tiny: bool = False):
+    if tiny:
+        n_req, slots, plen, max_new = 4, 2, 8, 8
+    else:
+        n_req, slots, plen, max_new = 16, 4, 32, 32
+    cfg, frozen, adapters, qstate = common.build_mode_model(
+        mode, dcfg=common.data_cfg(batch=max(n_req, 4), seq=plen,
+                                   vocab=512))
+    model = api.QuaffModel(cfg, frozen, adapters, qstate)
+    prompts = np.asarray(Loader(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=plen,
+        batch_size=n_req)).batch(0)["tokens"])
+
+    rows, extra = [], {}
+
+    # ---- greedy parity gate: engine vs lockstep on a shared batch --------
+    t0 = time.perf_counter()
+    ref = _lockstep_tokens(model, prompts, max_new)
+    t_lockstep = time.perf_counter() - t0
+    eng = model.engine(max_slots=n_req, max_seq_len=plen + max_new,
+                       fresh=True)
+    outs = eng.run([GenerationRequest(p, max_new_tokens=max_new)
+                    for p in prompts])
+    got = np.asarray([o.token_ids for o in outs])
+    parity = bool(np.array_equal(ref, got))
+    rows.append(("serving_engine_greedy_parity",
+                 (eng.stats.prefill_time_s + eng.stats.decode_time_s) * 1e6,
+                 f"parity={parity}"))
+    rows.append(("serving_lockstep_reference", t_lockstep * 1e6,
+                 f"reqs={n_req} max_new={max_new}"))
+
+    # ---- mixed-budget workload: the continuous-batching win --------------
+    short = max(1, max_new // 4)
+    eng2 = model.engine(max_slots=slots, max_seq_len=plen + max_new,
+                        fresh=True)
+    reqs = [GenerationRequest(prompts[i],
+                              max_new_tokens=short if i % 2 else max_new)
+            for i in range(n_req)]
+    outs2 = eng2.run(reqs)
+    st = eng2.stats
+    lockstep_slot_steps = n_req * max_new
+    rows.append((
+        "serving_engine_mixed",
+        (st.prefill_time_s + st.decode_time_s) * 1e6,
+        f"slot_steps={st.slot_steps}<{lockstep_slot_steps}=lockstep "
+        f"occupancy={st.occupancy:.2f} tok_s={st.decode_tokens_per_s:.1f}"))
+    extra["mixed_stats"] = st.as_dict()
+    extra["mixed_completed"] = sum(o.n_generated for o in outs2)
+
+    # ---- seeded sampling path (throughput only) --------------------------
+    eng3 = model.engine(max_slots=slots, max_seq_len=plen + max_new,
+                        fresh=True)
+    eng3.run([GenerationRequest(
+        prompts[i], max_new_tokens=short,
+        sampling=SamplingParams(temperature=0.8, top_k=50, top_p=0.95,
+                                seed=i)) for i in range(slots)])
+    rows.append(("serving_engine_sampled",
+                 (eng3.stats.prefill_time_s + eng3.stats.decode_time_s) * 1e6,
+                 f"tok_s={eng3.stats.decode_tokens_per_s:.1f}"))
+    return rows, extra
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--tiny", action="store_true",
+                   help="CI smoke shapes (seconds on CPU)")
+    p.add_argument("--mode", default="quaff")
+    p.add_argument("--json", metavar="PATH", default=None)
+    args = p.parse_args(argv)
+    rows, extra = run(mode=args.mode, tiny=args.tiny)
+    for r in rows:
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    if args.json:
+        payload = {
+            "benchmark": "bench_serving",
+            "tiny": args.tiny,
+            "mode": args.mode,
+            "backend": jax.default_backend(),
+            "rows": [{"name": r[0], "us_per_call": r[1], "derived": r[2]}
+                     for r in rows],
+            **extra,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

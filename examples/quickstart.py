@@ -1,8 +1,11 @@
 """Quickstart: Quaff-quantized LoRA fine-tuning of a tiny LM through the
-``repro.api`` facade — the whole paper pipeline in five calls.
+``repro.api`` facade — the whole paper pipeline (prepare -> calibrate ->
+convert -> finetune -> evaluate -> save/load -> generate) in a screenful.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import tempfile
+
 import jax.numpy as jnp
 
 from repro import api
@@ -33,3 +36,15 @@ print(f"trained 40 steps: loss {losses[0]:.4f} -> {losses[-1]:.4f}  "
 # evaluate
 m = model.evaluate(Loader(data).batch(999))
 print(f"final: loss {m['loss']:.4f}  ppl {m['ppl']:.2f}  acc {m['acc']:.3f}")
+
+# checkpoint lifecycle: save -> load round-trips to bit-identical metrics
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    model.save(ckpt_dir)
+    restored = api.QuaffModel.load(ckpt_dir)
+    m2 = restored.evaluate(Loader(data).batch(999))
+    print(f"save->load round-trip bit-identical: {m == m2}")
+
+# engine-backed greedy generation (see examples/serve_quantized.py for the
+# full continuous-batching surface)
+tokens = model.generate(Loader(data).batch(0)["tokens"][:, :16], max_new=8)
+print(f"generated: {tokens[0].tolist()}")

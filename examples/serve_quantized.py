@@ -1,21 +1,18 @@
-"""Serving example: batched request handling with the Quaff INT8 path
-through the ``repro.api`` facade — prefill a batch of prompts, then decode
-with a shared KV cache, measuring per-phase throughput for quaff vs fp32.
+"""Serving example: continuous batching with the Quaff INT8 path through
+``repro.serving.Engine`` — a mixed-length request queue over a small slot
+pool, quaff vs fp32, with greedy-token agreement and engine stats.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
-import time
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import api
 from repro.core.peft import PEFTConfig
 from repro.data.pipeline import DataConfig, Loader
 from repro.models.config import ModelConfig, QuantConfig
+from repro.serving import GenerationRequest, SamplingParams
 
-N_REQ, PROMPT, MAX_NEW = 4, 32, 24
+N_REQ, SLOTS, PROMPT, MAX_NEW = 6, 2, 32, 24
 
 
 def serve(mode: str):
@@ -25,36 +22,34 @@ def serve(mode: str):
         quant=QuantConfig(mode=mode),
         peft=PEFTConfig(method="lora", lora_rank=8))
     model = api.prepare(cfg)
-    prompts = jnp.asarray(Loader(DataConfig(
+    prompts = np.asarray(Loader(DataConfig(
         vocab_size=cfg.vocab_size, seq_len=PROMPT,
         batch_size=N_REQ)).batch(0)["tokens"])
 
-    logits, caches = model.prefill({"tokens": prompts}, extra_len=MAX_NEW)
-    jax.block_until_ready(logits)  # includes compile
-    t0 = time.perf_counter()
-    logits, caches = model.prefill({"tokens": prompts}, extra_len=MAX_NEW)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
+    # mixed budgets: even requests use the full budget, odd ones a quarter —
+    # the slot pool backfills retired slots instead of waiting lockstep
+    engine = model.engine(max_slots=SLOTS, max_seq_len=PROMPT + MAX_NEW,
+                          fresh=True)
+    outs = engine.run([
+        GenerationRequest(prompts[i],
+                          max_new_tokens=MAX_NEW if i % 2 == 0 else MAX_NEW // 4,
+                          sampling=SamplingParams())        # greedy
+        for i in range(N_REQ)])
 
-    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    toks = [tok]
-    t0 = time.perf_counter()
-    for i in range(MAX_NEW - 1):
-        logits, caches = model.decode_step(caches, tok, PROMPT + i)
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        toks.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-    out = np.asarray(jnp.concatenate(toks, axis=1))
-    print(f"[{mode:6s}] prefill {t_prefill*1e3:7.1f} ms | "
-          f"decode {t_decode*1e3:7.1f} ms "
-          f"({N_REQ*MAX_NEW/t_decode:6.0f} tok/s) | req0: {out[0][:8].tolist()}")
-    return out
+    st = engine.stats
+    print(f"[{mode:6s}] prefill {st.prefill_time_s*1e3:7.1f} ms | "
+          f"decode {st.decode_steps} steps {st.decode_time_s*1e3:7.1f} ms "
+          f"({st.decode_tokens_per_s:6.0f} tok/s, occ {st.occupancy:.0%}) | "
+          f"slot-steps {st.slot_steps} vs {N_REQ*MAX_NEW} lockstep")
+    return outs
 
 
 if __name__ == "__main__":
-    print(f"{N_REQ} requests, prompt {PROMPT}, {MAX_NEW} new tokens")
+    print(f"{N_REQ} requests over {SLOTS} slots, prompt {PROMPT}, "
+          f"budget {MAX_NEW} (even) / {MAX_NEW//4} (odd)")
     out_q = serve("quaff")
     out_f = serve("fp32")
-    agree = float(np.mean(out_q == out_f))
+    toks_q = np.concatenate([o.token_ids for o in out_q])
+    toks_f = np.concatenate([o.token_ids for o in out_f])
+    agree = float(np.mean(toks_q == toks_f))
     print(f"greedy-token agreement quaff vs fp32: {agree:.2%}")

@@ -1,6 +1,7 @@
 """High-level facade over the Quaff reproduction: the paper's whole
-prepare -> calibrate -> convert -> fine-tune -> serve pipeline in one object,
-so examples, benchmarks and serving stop hand-wiring the plumbing.
+prepare -> calibrate -> convert -> fine-tune -> save/load -> serve lifecycle
+in one object, so examples, benchmarks and serving stop hand-wiring the
+plumbing.
 
     from repro import api
 
@@ -9,22 +10,33 @@ so examples, benchmarks and serving stop hand-wiring the plumbing.
     model.convert("quaff")                   # one-time weights preprocessing
     model.finetune(tcfg, loader, steps=100)  # PEFT adapters + Eq. 7 updates
     model.evaluate(batch)                    # loss / ppl / acc
-    model.generate(prompts, max_new=32)      # batched greedy decode
+    model.save("ckpts/run")                  # frozen + adapters + quant
+                                             #  (+ optimizer) w/ fingerprint
+    model = api.QuaffModel.load("ckpts/run")  # bit-identical round-trip
+    model.generate(prompts, max_new=32, eos_id=2)   # one-shot engine decode
+    engine = model.engine(max_slots=8, max_seq_len=512)   # continuous
+    outs = engine.run([GenerationRequest(...), ...])      #  batching
 
 Every quant mode in the ``QuantBackend`` registry (including modes
-registered by downstream code) works through the same five calls.
+registered by downstream code) works through the same calls. Inference is
+backed by ``repro.serving.Engine`` — a fixed-capacity slot-based KV pool
+where one compiled decode step serves a changing request mix (greedy /
+temperature / top-k / top-p / seeded sampling, per-token streaming,
+EOS-or-budget retirement) — with a lockstep fallback for families whose
+decode state is not a poolable KV cache (hybrid/ssm/encdec).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterable, List, Optional
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import backend as BK
 from repro.models import model as M
-from repro.models.config import ModelConfig, TrainConfig
+from repro.models.config import ModelConfig, QuantConfig, TrainConfig
 from repro.train import calibrate as C
 from repro.train import steps as S
 
@@ -36,10 +48,29 @@ def prepare(cfg: ModelConfig, seed: int = 0) -> "QuaffModel":
     return QuaffModel(cfg, frozen, adapters, quant_state)
 
 
+def _cfg_to_dict(cfg: ModelConfig) -> Dict[str, Any]:
+    d = dataclasses.asdict(cfg)
+    if d["quant"].get("budgets") is not None:
+        d["quant"]["budgets"] = dict(d["quant"]["budgets"])
+    return d
+
+
+def _cfg_from_dict(d: Dict[str, Any]) -> ModelConfig:
+    from repro.core.peft import PEFTConfig
+    d = dict(d)
+    d["quant"] = QuantConfig(**d["quant"])
+    d["peft"] = PEFTConfig(**d["peft"])
+    return ModelConfig(**d)
+
+
 class QuaffModel:
     """Stateful facade. ``frozen`` never changes after ``convert`` — that is
     Quaff's decoupling story; ``adapters``/``quant_state`` advance with
     ``finetune``. All heavy functions are jitted once per (cfg, shape)."""
+
+    #: each cached engine pins a (L, slots, seq, kv_heads, hd) device KV
+    #: pool; bound the cache so varied generate() shapes can't accumulate
+    _MAX_CACHED_ENGINES = 4
 
     def __init__(self, cfg: ModelConfig, frozen, adapters, quant_state):
         self.cfg = cfg
@@ -51,8 +82,19 @@ class QuaffModel:
         self._eval_cfg = None
         self._decode_fn = None
         self._prefill_fns: Dict[int, Any] = {}
+        self._engines: Dict[Tuple[int, int], Any] = {}
         self._train_state = None
         self._train_tcfg = None
+        self._step_fn = None
+
+    def _invalidate_compiled(self):
+        """Drop every compiled function keyed on ``self.cfg``. Call whenever
+        ``self.cfg`` (or the tree structures it implies) is replaced."""
+        self._eval_fn = None
+        self._eval_cfg = None
+        self._decode_fn = None
+        self._prefill_fns = {}
+        self._engines = {}
         self._step_fn = None
 
     # ---- calibration / conversion --------------------------------------
@@ -82,11 +124,8 @@ class QuaffModel:
             self.frozen, self.stats, self.cfg, mode)
         self.cfg = dataclasses.replace(
             self.cfg, quant=dataclasses.replace(self.cfg.quant, mode=mode))
-        self._eval_fn = None
-        self._decode_fn = None
-        self._prefill_fns = {}
+        self._invalidate_compiled()
         self._train_state = None
-        self._step_fn = None
         return self
 
     # ---- training -------------------------------------------------------
@@ -98,13 +137,16 @@ class QuaffModel:
 
         Repeated calls with the same ``tcfg`` CONTINUE training: optimizer
         moments, the step counter (which also keys dropout), and the data
-        position carry over. A different ``tcfg`` re-initializes the
-        optimizer. ``start_step`` only overrides the loader batch index."""
+        position carry over — including across a ``save``/``load`` pair. A
+        different ``tcfg`` re-initializes the optimizer. ``start_step`` only
+        overrides the loader batch index."""
         if self._train_state is None or tcfg != self._train_tcfg:
             self._train_state = S.init_train_state(self.adapters,
                                                    self.quant_state, tcfg)
             self._step_fn = jax.jit(S.build_train_step(self.cfg, tcfg))
             self._train_tcfg = tcfg
+        elif self._step_fn is None:     # restored state (load) — re-jit only
+            self._step_fn = jax.jit(S.build_train_step(self.cfg, tcfg))
         state = self._train_state
         begin = int(state.step) if start_step is None else start_step
         losses = []  # device arrays; host sync deferred to the end
@@ -120,9 +162,72 @@ class QuaffModel:
         self.quant_state = state.quant
         return [float(l) for l in losses]
 
+    # ---- checkpoint lifecycle -------------------------------------------
+    def save(self, directory: str) -> str:
+        """Checkpoint the full model state into ``directory``:
+        frozen (quantized base) + adapters + quant state, plus — when the
+        model has been fine-tuned — the optimizer moments and step counter,
+        so training continues where it left off after ``load``. The model
+        config rides in metadata.json with a fingerprint that ``load``
+        verifies."""
+        from repro.checkpoint.manager import (CheckpointManager,
+                                              config_fingerprint)
+        cfg_dict = _cfg_to_dict(self.cfg)
+        tree: Dict[str, Any] = {"frozen": self.frozen,
+                                "adapters": self.adapters,
+                                "quant": self.quant_state}
+        meta: Dict[str, Any] = {
+            "config": cfg_dict,
+            "config_fingerprint": config_fingerprint(cfg_dict),
+            "arch": self.cfg.name,
+        }
+        step = 0
+        if self._train_state is not None:
+            tree["opt"] = self._train_state.opt
+            meta["train_config"] = dataclasses.asdict(self._train_tcfg)
+            step = int(self._train_state.step)
+        mgr = CheckpointManager(directory, async_save=False)
+        mgr.save(step, tree, meta)
+        return directory
+
+    @classmethod
+    def load(cls, directory: str, step: Optional[int] = None) -> "QuaffModel":
+        """Rebuild a facade model from a ``save`` checkpoint: reconstructs
+        the config from metadata (refusing a fingerprint mismatch), uses a
+        same-config init as the structural template, and restores every
+        array bit-exactly — eval metrics round-trip identically, and a
+        fine-tuned model keeps its optimizer state."""
+        from repro.checkpoint.manager import (CheckpointManager,
+                                              config_fingerprint)
+        mgr = CheckpointManager(directory, async_save=False)
+        meta = mgr.read_metadata(step)
+        if "config" not in meta:
+            raise ValueError(
+                f"checkpoint in {directory} has no model config metadata — "
+                f"was it written by QuaffModel.save()?")
+        cfg = _cfg_from_dict(meta["config"])
+        expect = config_fingerprint(_cfg_to_dict(cfg))
+        # template with the right pytree structure/shapes for this config
+        frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
+        like: Dict[str, Any] = {"frozen": frozen, "adapters": adapters,
+                                "quant": qstate}
+        tcfg = None
+        if meta.get("train_config") is not None:
+            tcfg = TrainConfig(**meta["train_config"])
+            like["opt"] = S.init_train_state(adapters, qstate, tcfg).opt
+        tree, meta = mgr.restore(like, step, expect_fingerprint=expect)
+        model = cls(cfg, tree["frozen"], tree["adapters"], tree["quant"])
+        if tcfg is not None:
+            model._train_state = S.TrainState(
+                adapters=tree["adapters"], opt=tree["opt"],
+                quant=tree["quant"],
+                step=jnp.asarray(meta["step"], jnp.int32))
+            model._train_tcfg = tcfg
+        return model
+
     # ---- evaluation / inference -----------------------------------------
     def evaluate(self, batch: Dict[str, Any]) -> Dict[str, float]:
-        if self._eval_fn is None or self._eval_cfg is not self.cfg:
+        if self._eval_fn is None or self._eval_cfg != self.cfg:
             self._eval_fn = jax.jit(S.build_eval_step(self.cfg))
             self._eval_cfg = self.cfg
         m = self._eval_fn(self.frozen, self.adapters, self.quant_state,
@@ -150,17 +255,74 @@ class QuaffModel:
         return self._decode_fn(self.frozen, self.adapters, self.quant_state,
                                caches, token, jnp.asarray(pos, jnp.int32))
 
-    def generate(self, tokens, max_new: int = 32) -> jnp.ndarray:
-        """Greedy batched generation: (B, S) prompts -> (B, max_new)."""
-        tokens = jnp.asarray(tokens)
+    # ---- serving ---------------------------------------------------------
+    def engine(self, max_slots: int = 4, max_seq_len: int = 256,
+               fresh: bool = False):
+        """A ``repro.serving.Engine`` over this model (continuous batching:
+        slot-pooled KV cache, mid-decode admission, per-request sampling).
+        A few engines are cached per (max_slots, max_seq_len) so repeated
+        one-shot uses reuse their compiled steps — oldest-evicted beyond
+        ``_MAX_CACHED_ENGINES``, since each engine pins a device KV pool;
+        ``fresh=True`` bypasses the cache (e.g. for independent
+        ``EngineStats``)."""
+        from repro.serving import Engine
+        key = (max_slots, max_seq_len)
+        eng = None if fresh else self._engines.get(key)
+        if eng is None:
+            eng = Engine(self, max_slots=max_slots, max_seq_len=max_seq_len)
+            if not fresh:
+                while len(self._engines) >= self._MAX_CACHED_ENGINES:
+                    self._engines.pop(next(iter(self._engines)))
+                self._engines[key] = eng
+        return eng
+
+    def generate(self, tokens, max_new: int = 32,
+                 eos_id: Optional[int] = None, pad_id: int = 0) -> jnp.ndarray:
+        """Batched generation: (B, S) prompts -> (B, max_new) greedy tokens.
+
+        A thin wrapper over a one-shot serving engine (every prompt gets a
+        slot; rows retire independently). With ``eos_id`` set, a row stops
+        at its EOS token and the remainder is ``pad_id``-padded; with
+        ``eos_id=None`` every row spends the exact budget. Families without
+        a slot-poolable KV cache (hybrid/ssm/encdec) take the equivalent
+        lockstep loop."""
+        tokens = np.asarray(tokens)
+        bsz = tokens.shape[0]
         if max_new <= 0:
-            return jnp.zeros((tokens.shape[0], 0), jnp.int32)
-        prompt_len = tokens.shape[1]
+            return jnp.zeros((bsz, 0), jnp.int32)
+        if not M.supports_slot_decode(self.cfg):
+            return self._generate_lockstep(tokens, max_new, eos_id, pad_id)
+        from repro.core.peft import n_prefix_tokens
+        from repro.serving import GenerationRequest
+        max_seq = tokens.shape[1] + n_prefix_tokens(self.cfg.peft) + max_new
+        eng = self.engine(max_slots=bsz, max_seq_len=max_seq)
+        outs = eng.run([GenerationRequest(tokens[i], max_new_tokens=max_new,
+                                          eos_id=eos_id) for i in range(bsz)])
+        rows = [o.token_ids + [pad_id] * (max_new - o.n_generated)
+                for o in outs]
+        return jnp.asarray(np.asarray(rows, np.int32))
+
+    def _generate_lockstep(self, tokens, max_new: int,
+                           eos_id: Optional[int], pad_id: int) -> jnp.ndarray:
+        """Lockstep batched greedy decode (whole batch advances together)."""
+        tokens = jnp.asarray(tokens)
+        bsz, prompt_len = tokens.shape
         logits, caches = self.prefill({"tokens": tokens}, extra_len=max_new)
         tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         out = [tok]
+        finished = (tok[:, 0] == eos_id) if eos_id is not None else None
         for i in range(max_new - 1):
+            if finished is not None and bool(jnp.all(finished)):
+                pad = jnp.full((bsz, 1), pad_id, jnp.int32)
+                out.extend([pad] * (max_new - 1 - i))
+                break
             logits, caches = self.decode_step(caches, tok, prompt_len + i)
-            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            out.append(tok)
+            nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            if finished is not None:
+                nxt = jnp.where(finished[:, None], pad_id, nxt)
+                out.append(nxt)
+                finished = jnp.logical_or(finished, nxt[:, 0] == eos_id)
+            else:
+                out.append(nxt)
+            tok = nxt
         return jnp.concatenate(out, axis=1)

@@ -16,6 +16,7 @@ simulated crash (tests/test_checkpoint.py kills mid-run and resumes).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -25,6 +26,14 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+def config_fingerprint(obj: Any) -> str:
+    """Deterministic fingerprint of a JSON-serializable config payload.
+    Stored in metadata.json at save time; restore/load refuse a checkpoint
+    whose fingerprint does not match the expected model config."""
+    blob = json.dumps(obj, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()[:16]
 
 
 def _flatten(tree: Any) -> Dict[str, np.ndarray]:
@@ -118,15 +127,40 @@ class CheckpointManager:
             self._writer = None
 
     # ------------------------------------------------------------------
-    def restore(self, like: Any, step: Optional[int] = None
+    def read_metadata(self, step: Optional[int] = None) -> Dict[str, Any]:
+        """Load metadata.json alone (no arrays) — lets a loader reconstruct
+        the model config BEFORE it can build the ``like`` tree ``restore``
+        needs."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        with open(os.path.join(self._step_dir(step), "metadata.json")) as f:
+            return json.load(f)
+
+    def restore(self, like: Any, step: Optional[int] = None, *,
+                expect_fingerprint: Optional[str] = None
                 ) -> Tuple[Any, Dict[str, Any]]:
         if step is None:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
         d = self._step_dir(step)
-        with np.load(os.path.join(d, "arrays.npz")) as z:
-            flat = {k: z[k] for k in z.files}
         with open(os.path.join(d, "metadata.json")) as f:
             meta = json.load(f)
+        if expect_fingerprint is not None:
+            got = meta.get("config_fingerprint")
+            if got is None:
+                # pre-fingerprint checkpoint: can't verify — proceed (the
+                # shape checks in _unflatten still catch gross mismatches)
+                print(f"[ckpt] warning: {d} has no config fingerprint; "
+                      f"skipping config verification")
+            elif got != expect_fingerprint:
+                raise ValueError(
+                    f"checkpoint config fingerprint mismatch in {d}: "
+                    f"checkpoint has {got!r}, caller expects "
+                    f"{expect_fingerprint!r} — refusing to restore a "
+                    f"different model config")
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
         return _unflatten(like, flat), meta

@@ -1,13 +1,17 @@
-"""Quantized serving driver: continuous-batched prefill + decode with the
-Quaff INT8 path, driven through the ``repro.api`` facade.
+"""Quantized serving driver: continuous batching through
+``repro.serving.Engine`` over the ``repro.api`` facade.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-        --reduced --requests 8 --max-new 32
+        --reduced --requests 16 --slots 4 --max-new 32 --mixed
 
-The loop implements the small-but-real serving pattern: a request queue,
-batched prefill (one compiled program), then lockstep batched decode with a
-shared KV/state cache; per-request completion on EOS-or-budget. Throughput
-(tokens/s) and per-phase latency are reported.
+A fixed-capacity slot pool serves the request queue: prompts are prefilled
+into free slots mid-decode, every live slot advances one token per compiled
+decode step, and slots retire on EOS-or-budget — no request waits for the
+batch's slowest. ``--mixed`` draws per-request budgets/prompt lengths to
+show the continuous-batching win (EngineStats vs the lockstep equivalent);
+``--temperature/--top-k/--top-p`` exercise the seeded sampling path.
+``--load DIR`` serves a ``QuaffModel.save`` checkpoint instead of a fresh
+random-init model.
 """
 from __future__ import annotations
 
@@ -16,14 +20,15 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import api
 from repro.configs import get_config
-from repro.core.peft import PEFTConfig
+from repro.core.peft import PEFTConfig, n_prefix_tokens
 from repro.data.pipeline import DataConfig, Loader
-from repro.models.config import QuantConfig
+from repro.models import model as M
+from repro.models.config import QuantConfig, ServingConfig
+from repro.serving import GenerationRequest, SamplingParams
 
 
 def main():
@@ -31,48 +36,101 @@ def main():
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--quant-mode", default="quaff")
+    ap.add_argument("--load", default=None, metavar="DIR",
+                    help="serve a QuaffModel.save checkpoint")
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--mixed", action="store_true",
+                    help="mixed prompt lengths + budgets (continuous-"
+                         "batching showcase)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", action="store_true",
+                    help="print per-token stream events for request 0")
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    cfg = dataclasses.replace(cfg, quant=QuantConfig(mode=args.quant_mode),
-                              peft=PEFTConfig(method="lora", lora_rank=8))
-    model = api.prepare(cfg)
+    if args.load:
+        model = api.QuaffModel.load(args.load)
+        cfg = model.cfg
+        print(f"[init] loaded checkpoint {args.load} ({cfg.name}, "
+              f"{cfg.quant.mode})")
+    else:
+        cfg = get_config(args.arch)
+        if args.reduced:
+            cfg = cfg.reduced()
+        cfg = dataclasses.replace(cfg,
+                                  quant=QuantConfig(mode=args.quant_mode),
+                                  peft=PEFTConfig(method="lora", lora_rank=8))
+        model = api.prepare(cfg)
+        print(f"[init] {cfg.name} ({cfg.family}) mode={args.quant_mode}")
 
-    # request queue: synthetic prompts
+    # request queue: synthetic prompts, optionally mixed lengths/budgets
     loader = Loader(DataConfig(vocab_size=cfg.vocab_size,
                                seq_len=args.prompt_len,
-                               batch_size=args.requests))
-    prompts = jnp.asarray(loader.batch(0)["tokens"])
+                               batch_size=max(args.requests, 1)))
+    prompts = np.asarray(loader.batch(0)["tokens"])
+    rng = np.random.RandomState(args.seed)
 
-    t0 = time.perf_counter()
-    logits, caches = model.prefill({"tokens": prompts}, extra_len=args.max_new)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
+    reqs = []
+    for i in range(args.requests):
+        plen = args.prompt_len
+        max_new = args.max_new
+        if args.mixed:
+            plen = int(rng.randint(max(4, args.prompt_len // 4),
+                                   args.prompt_len + 1))
+            max_new = int(rng.choice([args.max_new // 4, args.max_new]))
+        sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                            top_p=args.top_p, seed=args.seed + i)
+        on_token = None
+        if args.stream and i == 0:
+            def on_token(rid, tok):
+                print(f"[stream] {rid} -> {tok}")
+        reqs.append(GenerationRequest(prompts[i][:plen], max_new_tokens=max_new,
+                                      sampling=sp, on_token=on_token))
 
-    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    generated = [tok]
-    t0 = time.perf_counter()
-    for i in range(args.max_new - 1):
-        logits, caches = model.decode_step(caches, tok, args.prompt_len + i)
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
+    if not M.supports_slot_decode(cfg):
+        # recurrent / enc-dec families: no slot story yet — lockstep drive
+        # through the facade (whole batch advances together)
+        t0 = time.perf_counter()
+        out = model.generate(prompts, max_new=args.max_new)
+        jax.block_until_ready(out)
+        dt = time.perf_counter() - t0
+        total_new = args.requests * args.max_new
+        print(f"[serve] lockstep fallback ({cfg.family}): {args.requests} "
+              f"reqs x {args.prompt_len} prompt + {args.max_new} new in "
+              f"{dt*1e3:.1f} ms ({total_new/max(dt,1e-9):.0f} tok/s)")
+        print(f"sample completion (req 0): "
+              f"{np.asarray(out[0])[:8].tolist()}")
+        return
 
-    out = jnp.concatenate(generated, axis=1)
-    total_new = args.requests * args.max_new
-    print(f"[serve] {args.requests} reqs x {args.prompt_len} prompt "
-          f"+ {args.max_new} new tokens ({cfg.name}, {args.quant_mode})")
-    print(f"prefill: {t_prefill*1e3:.1f} ms "
-          f"({args.requests*args.prompt_len/t_prefill:.0f} tok/s)")
-    print(f"decode : {t_decode*1e3:.1f} ms "
-          f"({total_new/max(t_decode,1e-9):.0f} tok/s)")
-    print(f"sample completion (req 0): {np.asarray(out[0])[:16].tolist()}")
+    # pool must fit prompt + PEFT virtual-token prefix + budget per slot
+    from repro.serving import Engine
+    n_prefix = n_prefix_tokens(cfg.peft)
+    scfg = ServingConfig(max_slots=args.slots,
+                         max_seq_len=args.prompt_len + n_prefix
+                         + args.max_new)
+    engine = Engine.from_config(model, scfg)
+    outs = engine.run(reqs)
+
+    st = engine.stats
+    lockstep_slot_steps = args.requests * max(
+        r.max_new_tokens for r in reqs)  # lockstep pays max budget everywhere
+    print(f"[serve] {args.requests} reqs over {args.slots} slots "
+          f"(pool seq {scfg.max_seq_len}, {cfg.name}, {cfg.quant.mode})")
+    print(f"prefill: {st.prefills} reqs in {st.prefill_time_s*1e3:.1f} ms")
+    print(f"decode : {st.decode_steps} steps in {st.decode_time_s*1e3:.1f} ms "
+          f"({st.decode_tokens_per_s:.0f} tok/s, occupancy "
+          f"{st.occupancy:.0%})")
+    print(f"slot-steps: {st.slot_steps} continuous vs "
+          f"{lockstep_slot_steps} lockstep-equivalent")
+    for o in outs[:3]:
+        print(f"  {o.request_id}: prompt {o.prompt_len} -> "
+              f"{o.n_generated} tokens ({o.finish_reason}) "
+              f"{o.token_ids[:8]}{'...' if o.n_generated > 8 else ''}")
 
 
 if __name__ == "__main__":

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import api
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, config_fingerprint
 from repro.configs import get_config
 from repro.core.peft import PEFTConfig
 from repro.data.pipeline import DataConfig, Loader, calibration_batches
@@ -110,9 +110,12 @@ def main():
 
     state = S.init_train_state(adapters, qstate, tcfg)
     mgr = CheckpointManager(args.ckpt_dir, keep=3)
+    # fingerprint the post-convert config: resume refuses a checkpoint
+    # written by a run with a different arch/quant setup
+    fp = config_fingerprint(api._cfg_to_dict(model.cfg))
     start = 0
     if mgr.latest_step() is not None:
-        state, meta = mgr.restore(state)
+        state, meta = mgr.restore(state, expect_fingerprint=fp)
         start = meta["step"]
         print(f"[resume] restored step {start} from {args.ckpt_dir}")
 
@@ -137,8 +140,10 @@ def main():
                   f"gnorm {float(metrics['grad_norm']):.3f} "
                   f"{dt*1e3:.0f}ms")
         if (i + 1) % args.ckpt_every == 0:
-            mgr.save(i + 1, state, {"arch": cfg.name})
-    mgr.save(args.steps, state, {"arch": cfg.name, "final": True})
+            mgr.save(i + 1, state, {"arch": cfg.name,
+                                    "config_fingerprint": fp})
+    mgr.save(args.steps, state, {"arch": cfg.name, "final": True,
+                                 "config_fingerprint": fp})
     mgr.wait()
     print(f"[done] {args.steps} steps; stragglers flagged: "
           f"{len(watchdog.flagged)}; checkpoints in {args.ckpt_dir}")

@@ -154,6 +154,16 @@ SHAPES: Dict[str, ShapeConfig] = {
 
 
 @dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Engine pool sizing (repro.serving): ``max_slots`` concurrent
+    requests over a shared KV pool of ``max_seq_len`` positions per slot.
+    A request needs prompt + PEFT-prefix + max_new positions to fit."""
+
+    max_slots: int = 4
+    max_seq_len: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
 class TrainConfig:
     learning_rate: float = 2e-4   # paper App. E
     beta1: float = 0.9

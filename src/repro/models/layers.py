@@ -277,7 +277,29 @@ def attention(
         k = apply_rope(k, positions, cfg.rope_theta)
 
     new_cache = None
-    if cache is not None and kv_override is None:
+    if cache is not None and kv_override is None and cache["pos"].ndim == 1:
+        # slot decode (continuous batching): per-row write cursors (B,).
+        # Each slot writes this step's k/v at its OWN position and masks by
+        # its OWN length — rows never block each other, so one compiled
+        # step serves a changing request mix (repro.serving.Engine).
+        pos = cache["pos"]                                           # (B,)
+        def _row_write(buf, new):
+            return jax.vmap(
+                lambda b, n, p: jax.lax.dynamic_update_slice(b, n, (p, 0, 0))
+            )(buf, new.astype(buf.dtype), pos)
+        ck = _row_write(cache["k"], k)
+        cv = _row_write(cache["v"], v)
+        new_cache = {"k": ck, "v": cv, "pos": pos + s_len}
+        k, v = hint(ck, "kv_cache"), hint(cv, "kv_cache")
+        t_len = k.shape[1]
+        k_pos = jnp.arange(t_len, dtype=jnp.int32)                   # (T,)
+        q_pos = pos[:, None] + jnp.arange(s_len, dtype=jnp.int32)[None, :]
+        mask = k_pos[None, None, :] <= q_pos[:, :, None]             # (B,S,T)
+        if cfg.sliding_window:
+            win = (q_pos[:, :, None] - k_pos[None, None, :]) < cfg.sliding_window
+            mask = jnp.logical_and(mask, jnp.logical_or(win, is_global))
+        mask = mask[:, None, None, :, :]
+    elif cache is not None and kv_override is None:
         # decode: write this step's k/v at cache["pos"], attend over buffer
         pos = cache["pos"]
         ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),

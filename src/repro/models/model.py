@@ -70,6 +70,30 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int):
     raise ValueError(cfg.family)
 
 
+def supports_slot_decode(cfg: ModelConfig) -> bool:
+    """True for families whose decode state is a plain KV cache — those can
+    be pooled into per-request slots by ``repro.serving.Engine``. Recurrent
+    families (hybrid/ssm) carry conv/SSM state without a seq axis and the
+    enc-dec family needs per-request encoder output; both would need their
+    own slot story.
+
+    Caveat (moe): expert-capacity routing pools all batch rows, so under
+    TIGHT capacity a request's logits can shift with pool composition —
+    exactly the batch-composition semantics lockstep decode already has
+    (see tests/test_decode_consistency.py). Dense per-request parity is
+    exact; MoE parity holds when capacity is ample."""
+    return cfg.family in ("dense", "moe")
+
+
+def init_slot_caches(cfg: ModelConfig, n_slots: int, max_len: int):
+    """Slot-pooled decode caches (per-slot write cursors) for serving."""
+    if not supports_slot_decode(cfg):
+        raise NotImplementedError(
+            f"slot-pooled decode is only implemented for KV-cache families "
+            f"(dense/moe); got family={cfg.family!r}")
+    return transformer.init_slot_caches(cfg, n_slots, max_len)
+
+
 def has_decode(cfg: ModelConfig) -> bool:
     """Encoder-only archs would return False; all assigned archs decode."""
     return True

@@ -176,3 +176,12 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int):
     one = L.init_kv_cache(cfg, batch, max_len, act_dtype)
     return jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape).copy(), one)
+
+
+def init_slot_caches(cfg: ModelConfig, n_slots: int, max_len: int):
+    """KV pool for continuous batching: like ``init_caches`` but the write
+    cursor is PER SLOT ((L, n_slots) instead of (L,)), which routes
+    ``layers.attention`` through its per-row write/mask branch."""
+    caches = init_caches(cfg, n_slots, max_len)
+    caches["pos"] = jnp.zeros((cfg.n_layers, n_slots), jnp.int32)
+    return caches

@@ -1,0 +1,17 @@
+"""repro.serving — continuous-batching inference over the facade model.
+
+Public surface:
+
+    Engine             slot-pooled continuous-batching engine
+    GenerationRequest  prompt + budget + SamplingParams (+ streaming cb)
+    SamplingParams     greedy / temperature / top-k / top-p, seeded
+    RequestOutput      generated ids + finish reason
+    EngineStats        tokens/s, per-phase latency, slot occupancy
+"""
+from repro.models.config import ServingConfig
+from repro.serving.engine import Engine
+from repro.serving.params import (EngineStats, GenerationRequest,
+                                  RequestOutput, SamplingParams)
+
+__all__ = ["Engine", "GenerationRequest", "SamplingParams", "RequestOutput",
+           "EngineStats", "ServingConfig"]

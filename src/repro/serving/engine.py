@@ -1,0 +1,257 @@
+"""Continuous-batching serving engine.
+
+ONE compiled decode step (``train.steps.build_decode_slots``) serves a
+continuously changing request mix over a fixed-capacity slot pool:
+
+  * admission — a waiting request is prefilled into any free slot
+    (``build_prefill_slot`` + ``pool.write_slot``) between decode steps,
+    while other slots are mid-generation;
+  * decode — every live slot advances one token per step, each writing at
+    its own cursor and masked by its own length;
+  * retirement — a slot frees on EOS or token budget, with no barrier on
+    the rest of the batch (the lockstep loop this replaces made the whole
+    batch wait for its slowest request).
+
+The engine holds no model state of its own: it reads ``cfg`` / ``frozen`` /
+``adapters`` / ``quant_state`` off the wrapped model object (duck-typed —
+``repro.api.QuaffModel`` in practice) at every call, so serving a model that
+is later fine-tuned further picks up the new adapters automatically.
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+import time
+from typing import Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import peft as PEFT
+from repro.models import model as M
+from repro.models.config import ServingConfig
+from repro.serving import sampling
+from repro.serving.params import (EngineStats, GenerationRequest,
+                                  RequestOutput, SamplingParams)
+from repro.serving.pool import SlotPool
+from repro.train import steps as S
+
+
+class _SlotState:
+    """Host-side bookkeeping for one occupied slot."""
+
+    __slots__ = ("req", "request_id", "token_ids", "prompt_len", "last_token")
+
+    def __init__(self, req: GenerationRequest, request_id: str, prompt_len: int):
+        self.req = req
+        self.request_id = request_id
+        self.token_ids: List[int] = []
+        self.prompt_len = prompt_len
+        self.last_token = 0
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.token_ids)
+
+
+class Engine:
+    """Slot-pooled continuous-batching engine over a facade model.
+
+        engine = Engine(model, max_slots=4, max_seq_len=128)
+        outs = engine.run([GenerationRequest(prompt, max_new_tokens=16),
+                           GenerationRequest(prompt2, max_new_tokens=64,
+                                             sampling=SamplingParams(
+                                                 temperature=0.8, top_k=50,
+                                                 seed=7))])
+
+    ``submit``/``step`` expose the loop for callers that interleave their own
+    work (the serve launcher); ``run`` drains to completion. Per-token
+    streaming: set ``GenerationRequest.on_token``.
+    """
+
+    @classmethod
+    def from_config(cls, model, serving: ServingConfig) -> "Engine":
+        """Build from a ``models.config.ServingConfig``."""
+        return cls(model, max_slots=serving.max_slots,
+                   max_seq_len=serving.max_seq_len)
+
+    def __init__(self, model, max_slots: int = 4, max_seq_len: int = 256):
+        cfg = model.cfg
+        if not M.supports_slot_decode(cfg):
+            raise NotImplementedError(
+                f"Engine needs a KV-cache family (dense/moe); "
+                f"family={cfg.family!r} is not slot-poolable yet")
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_seq_len = max_seq_len
+        self._model = model
+        self._pool = SlotPool(cfg, max_slots, max_seq_len)
+        self._decode_fn = jax.jit(S.build_decode_slots(cfg))
+        # one jitted prefill; jit re-specializes per prompt-length shape
+        self._prefill_fn = jax.jit(S.build_prefill_slot(cfg, max_seq_len))
+        self._sample = sampling.make_sampler()
+        self._n_prefix = PEFT.n_prefix_tokens(cfg.peft)
+        self._waiting: collections.deque = collections.deque()
+        self._slots: List[Optional[_SlotState]] = [None] * max_slots
+        self._finished: Dict[str, RequestOutput] = {}
+        self._pending: List[str] = []               # submitted, not returned
+        self._auto_id = itertools.count()
+        self.stats = EngineStats(n_slots=max_slots)
+
+    # ------------------------------------------------------------------
+    # submission
+    # ------------------------------------------------------------------
+    def submit(self, req: GenerationRequest) -> str:
+        """Validate + enqueue; returns the request id. Admission happens on
+        the next ``step``/``run`` — possibly mid-decode of other requests."""
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{req.max_new_tokens}")
+        need = prompt.size + self._n_prefix + req.max_new_tokens
+        if need > self.max_seq_len:
+            raise ValueError(
+                f"request needs {need} cache positions (prompt {prompt.size} "
+                f"+ prefix {self._n_prefix} + max_new {req.max_new_tokens}) "
+                f"but the pool is sized max_seq_len={self.max_seq_len}")
+        rid = req.request_id or f"req-{next(self._auto_id)}"
+        if rid in self._finished or any(
+                r is not None and r[0] == rid for r in self._waiting) or any(
+                s is not None and s.request_id == rid for s in self._slots):
+            raise ValueError(f"duplicate request_id {rid!r}")
+        self._waiting.append((rid, req, prompt))
+        self._pending.append(rid)
+        self.stats.requests_submitted += 1
+        return rid
+
+    # ------------------------------------------------------------------
+    # engine loop
+    # ------------------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self._waiting) or self._pool.n_active > 0
+
+    def step(self) -> bool:
+        """One engine iteration: admit into free slots, then one batched
+        decode step. Returns ``has_work``."""
+        while self._waiting and self._pool.n_free:
+            self._admit_one()
+        if self._pool.n_active:
+            self._decode_once()
+        return self.has_work
+
+    def run(self, requests: Iterable[GenerationRequest] = ()
+            ) -> List[RequestOutput]:
+        """Submit ``requests``, drain until idle, and return outputs for all
+        not-yet-returned requests in submission order. Returned outputs are
+        released from the engine (a long-lived engine holds no per-request
+        state once its outputs are handed out)."""
+        for req in requests:
+            self.submit(req)
+        while self.has_work:
+            self.step()
+        out = [self._finished.pop(rid) for rid in self._pending]
+        self._pending = []
+        return out
+
+    def output(self, request_id: str, pop: bool = True
+               ) -> Optional[RequestOutput]:
+        """Fetch a completed request's output (step-driven callers).
+        ``pop=True`` (default) releases it from the engine so completed
+        requests do not accumulate over a long-lived engine's lifetime."""
+        if pop:
+            out = self._finished.pop(request_id, None)
+            if out is not None and request_id in self._pending:
+                self._pending.remove(request_id)
+            return out
+        return self._finished.get(request_id)
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+    def _sample_one(self, logits_row, sp: SamplingParams, token_index: int):
+        tok = self._sample(
+            logits_row,
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_k], jnp.int32),
+            jnp.asarray([sp.top_p], jnp.float32),
+            sampling.request_key(sp, token_index)[None],
+        )
+        return int(tok[0])
+
+    def _admit_one(self):
+        rid, req, prompt = self._waiting.popleft()
+        slot = self._pool.acquire()
+        m = self._model
+        t0 = time.perf_counter()
+        logits, row_caches = self._prefill_fn(
+            m.frozen, m.adapters, m.quant_state, jnp.asarray(prompt[None, :]))
+        self._pool.admit(row_caches, slot)
+        tok = self._sample_one(logits, req.sampling, 0)
+        self.stats.prefill_time_s += time.perf_counter() - t0
+        self.stats.prefills += 1
+
+        st = _SlotState(req, rid, prompt.size)
+        self._slots[slot] = st
+        self._emit_token(st, slot, tok)
+
+    def _decode_once(self):
+        m = self._model
+        b = self.max_slots
+        tokens = np.zeros((b, 1), np.int32)
+        positions = np.zeros((b,), np.int32)
+        temps = np.zeros((b,), np.float32)
+        top_ks = np.zeros((b,), np.int32)
+        top_ps = np.ones((b,), np.float32)
+        keys = [None] * b
+        active = []
+        for i, st in enumerate(self._slots):
+            if st is None:
+                keys[i] = jax.random.PRNGKey(0)
+                continue
+            active.append(i)
+            sp = st.req.sampling
+            tokens[i, 0] = st.last_token
+            # the fed-back token is generated token #n_generated (1-based):
+            # its RoPE position is prompt_len + n_generated - 1, matching the
+            # lockstep generate loop's ``prompt_len + i``
+            positions[i] = st.prompt_len + st.n_generated - 1
+            temps[i] = sp.temperature
+            top_ks[i] = sp.top_k
+            top_ps[i] = sp.top_p
+            keys[i] = sampling.request_key(sp, st.n_generated)
+
+        t0 = time.perf_counter()
+        logits, self._pool.caches = self._decode_fn(
+            m.frozen, m.adapters, m.quant_state, self._pool.caches,
+            jnp.asarray(tokens), jnp.asarray(positions))
+        toks = np.asarray(self._sample(
+            logits, jnp.asarray(temps), jnp.asarray(top_ks),
+            jnp.asarray(top_ps), jnp.stack(keys)))
+        self.stats.decode_time_s += time.perf_counter() - t0
+        self.stats.decode_steps += 1
+        self.stats.busy_slot_steps += len(active)
+
+        for i in active:
+            self._emit_token(self._slots[i], i, int(toks[i]))
+
+    def _emit_token(self, st: _SlotState, slot: int, tok: int):
+        st.token_ids.append(tok)
+        st.last_token = tok
+        self.stats.tokens_generated += 1
+        if st.req.on_token is not None:
+            st.req.on_token(st.request_id, tok)
+        hit_eos = st.req.eos_id is not None and tok == st.req.eos_id
+        if hit_eos or st.n_generated >= st.req.max_new_tokens:
+            self._retire(st, slot, "eos" if hit_eos else "length")
+
+    def _retire(self, st: _SlotState, slot: int, reason: str):
+        self._finished[st.request_id] = RequestOutput(
+            request_id=st.request_id, prompt_len=st.prompt_len,
+            token_ids=st.token_ids, finish_reason=reason)
+        self._slots[slot] = None
+        self._pool.release(slot)
+        self.stats.requests_completed += 1

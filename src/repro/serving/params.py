@@ -1,0 +1,120 @@
+"""Public request/response surface of the serving engine.
+
+Everything here is plain host-side data: requests go in, per-token streams
+and ``RequestOutput``s come out, and ``EngineStats`` summarizes a run. The
+device-side machinery (slot pool, compiled steps, samplers) lives in
+``pool.py`` / ``engine.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding policy.
+
+    ``temperature <= 0`` is greedy (argmax); otherwise tokens are drawn from
+    the temperature-scaled distribution after top-k / top-p truncation.
+    Sampling is SEEDED per request: token ``i`` of a request uses
+    ``fold_in(PRNGKey(seed), i)``, so a request's stream is reproducible
+    regardless of which slot it lands in or what else shares the batch."""
+
+    temperature: float = 0.0
+    top_k: int = 0          # 0 = no top-k truncation
+    top_p: float = 1.0      # 1.0 = no nucleus truncation
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+
+@dataclasses.dataclass
+class GenerationRequest:
+    """One generation job. ``prompt`` is a token-id sequence (list/array).
+
+    ``on_token(request_id, token_id)`` — optional streaming callback, called
+    from the engine loop the moment each token is sampled (before the
+    request completes)."""
+
+    prompt: Sequence[int]
+    max_new_tokens: int = 32
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    eos_id: Optional[int] = None
+    request_id: Optional[str] = None      # assigned by the engine if None
+    on_token: Optional[Callable[[str, int], None]] = None
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """Completed request: generated ids + why generation stopped."""
+
+    request_id: str
+    prompt_len: int
+    token_ids: List[int]
+    finish_reason: str          # "eos" | "length"
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.token_ids)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Aggregate counters for one engine lifetime.
+
+    ``slot_steps`` (decode steps x pool width) is the cost a LOCKSTEP decoder
+    of the same width would also pay — continuous batching wins by finishing
+    the same workload in fewer of them. ``occupancy`` is the fraction of
+    those slot-steps that decoded a live request."""
+
+    n_slots: int = 0
+    requests_submitted: int = 0
+    requests_completed: int = 0
+    tokens_generated: int = 0
+    prefills: int = 0
+    decode_steps: int = 0
+    busy_slot_steps: int = 0
+    prefill_time_s: float = 0.0
+    decode_time_s: float = 0.0
+
+    @property
+    def slot_steps(self) -> int:
+        return self.decode_steps * self.n_slots
+
+    @property
+    def occupancy(self) -> float:
+        return self.busy_slot_steps / max(self.slot_steps, 1)
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        # each admission samples one token inside the prefill-timed block;
+        # only the rest were produced by decode steps
+        decode_tokens = self.tokens_generated - self.prefills
+        return decode_tokens / max(self.decode_time_s, 1e-9)
+
+    @property
+    def tokens_per_s(self) -> float:
+        total = self.prefill_time_s + self.decode_time_s
+        return self.tokens_generated / max(total, 1e-9)
+
+    def as_dict(self) -> dict:
+        return {
+            "n_slots": self.n_slots,
+            "requests_submitted": self.requests_submitted,
+            "requests_completed": self.requests_completed,
+            "tokens_generated": self.tokens_generated,
+            "prefills": self.prefills,
+            "decode_steps": self.decode_steps,
+            "slot_steps": self.slot_steps,
+            "busy_slot_steps": self.busy_slot_steps,
+            "occupancy": round(self.occupancy, 4),
+            "prefill_time_s": self.prefill_time_s,
+            "decode_time_s": self.decode_time_s,
+            "decode_tokens_per_s": self.decode_tokens_per_s,
+            "tokens_per_s": self.tokens_per_s,
+        }

@@ -1,0 +1,74 @@
+"""Fixed-capacity slot-based KV pool.
+
+The pool is ONE device pytree shaped like ``models.init_slot_caches``:
+k/v buffers (L, n_slots, max_seq_len, kv_heads, head_dim) plus per-slot
+write cursors (L, n_slots). Admission splices a freshly prefilled row into a
+free slot with one compiled ``write_slot``; retirement is pure host-side
+bookkeeping (the slot's buffer is fully overwritten by the next admission,
+and its cursor keeps masking it consistently meanwhile).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def write_slot(pool, row, slot):
+    """Splice single-request caches (leading batch dim 1, from
+    ``train.steps.build_prefill_slot``) into column ``slot`` of the pool.
+
+    Works leaf-wise: k/v buffers share the pool's rank (row batch dim == 1);
+    the row's write cursor is (L,) scalar-per-layer and lands in one column
+    of the pool's (L, n_slots) cursor plane."""
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def wr(p, r):
+        if r.ndim == p.ndim:
+            start = (0, slot) + (0,) * (p.ndim - 2)
+            return jax.lax.dynamic_update_slice(p, r.astype(p.dtype), start)
+        return jax.lax.dynamic_update_slice(
+            p, r[:, None].astype(p.dtype), (0, slot))
+
+    return jax.tree.map(wr, pool, row)
+
+
+class SlotPool:
+    """Device caches + host-side free-list for ``n_slots`` concurrent rows."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_seq_len: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq_len = max_seq_len
+        self.caches = M.init_slot_caches(cfg, n_slots, max_seq_len)
+        self._free: List[int] = list(range(n_slots))
+        self._write = jax.jit(write_slot)
+
+    # ---- host bookkeeping ------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def acquire(self) -> Optional[int]:
+        return self._free.pop(0) if self._free else None
+
+    def release(self, slot: int):
+        if slot in self._free:
+            raise ValueError(f"slot {slot} is already free")
+        self._free.append(slot)
+        self._free.sort()
+
+    # ---- device ----------------------------------------------------------
+    def admit(self, row_caches, slot: int):
+        """Write a prefilled request row into ``slot`` (one compiled call)."""
+        self.caches = self._write(self.caches, row_caches, slot)

@@ -1,0 +1,59 @@
+"""Batched per-slot token sampling: greedy / temperature / top-k / top-p,
+seeded per request.
+
+One jitted function samples for the WHOLE pool at once — each slot carries
+its own (temperature, top_k, top_p, key) row, so a greedy request and a
+nucleus-sampled request share the same compiled step. Free slots ride along
+with don't-care rows; the engine ignores their output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving.params import SamplingParams
+
+
+def request_key(params: SamplingParams, token_index: int) -> jnp.ndarray:
+    """Key for token ``token_index`` of a request: depends only on the
+    request's seed and the token position — NOT on slot assignment or batch
+    composition — so seeded streams are reproducible under any admission
+    order."""
+    return jax.random.fold_in(jax.random.PRNGKey(params.seed), token_index)
+
+
+def sample_tokens(logits: jnp.ndarray, temperature: jnp.ndarray,
+                  top_k: jnp.ndarray, top_p: jnp.ndarray,
+                  keys: jnp.ndarray) -> jnp.ndarray:
+    """logits (B, V) f32; temperature/top_p (B,) f32; top_k (B,) i32;
+    keys (B, 2) PRNG keys. Returns (B,) int32 token ids.
+
+    Rows with ``temperature <= 0`` take the argmax (exactly the lockstep
+    greedy path). Others: scale by temperature, keep the top-k logits, then
+    the smallest prefix of the remaining distribution with cumulative
+    probability >= top_p (the max-probability token always survives), and
+    draw categorically with the row's key."""
+    v = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    lg = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    desc = jnp.sort(lg, axis=-1)[:, ::-1]                       # (B, V) desc
+    # top-k: threshold at the k-th largest logit (k<=0 keeps everything)
+    k_idx = jnp.clip(jnp.where(top_k > 0, top_k, v) - 1, 0, v - 1)
+    kth = jnp.take_along_axis(desc, k_idx[:, None], axis=-1)    # (B, 1)
+    lg = jnp.where(lg < kth, -jnp.inf, lg)
+    # top-p over the top-k-truncated distribution
+    desc = jnp.sort(lg, axis=-1)[:, ::-1]
+    probs = jax.nn.softmax(desc, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = (cum - probs) < top_p[:, None]        # prefix up to mass >= top_p
+    cutoff = jnp.min(jnp.where(keep, desc, jnp.inf), axis=-1, keepdims=True)
+    lg = jnp.where(lg < cutoff, -jnp.inf, lg)
+
+    drawn = jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, drawn, greedy)
+
+
+def make_sampler():
+    return jax.jit(sample_tokens)

@@ -194,3 +194,49 @@ def build_decode(cfg: ModelConfig):
         return out.logits[:, -1, :], out.caches
 
     return decode
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching (repro.serving): prefill-into-slot + slot decode.
+# One compiled decode step serves a CHANGING request mix: the KV pool carries
+# per-slot write cursors ((L, n_slots) ``pos`` — see models.init_slot_caches)
+# and attention masks each row by its own length, so requests admitted
+# mid-decode or retired on EOS never block the other slots.
+# ---------------------------------------------------------------------------
+def build_prefill_slot(cfg: ModelConfig, cache_len: int):
+    """prefill_slot(frozen, adapters, quant_state, tokens) -> (last-token
+    logits, row caches).
+
+    ``tokens`` is ONE request (1, prompt_len); the returned caches are sized
+    to the pool's ``cache_len`` so the row can be spliced straight into a
+    free slot (serving.pool.write_slot). Under jit, compilation specializes
+    per prompt-length shape automatically."""
+    n_prefix = PEFT.n_prefix_tokens(cfg.peft)
+
+    def prefill_slot(frozen, adapters, quant_state, tokens):
+        total = tokens.shape[1] + n_prefix
+        caches = M.init_caches(cfg, tokens.shape[0], cache_len)
+        out = M.forward(
+            frozen, adapters, quant_state, tokens, cfg, caches=caches,
+            positions=jnp.arange(total, dtype=jnp.int32))
+        return out.logits[:, -1, :], out.caches
+
+    return prefill_slot
+
+
+def build_decode_slots(cfg: ModelConfig):
+    """decode_slots(frozen, adapters, quant_state, caches, tokens, positions)
+    -> (logits (n_slots, vocab), new_caches).
+
+    ``tokens`` is (n_slots, 1) — each slot's previous token (free slots carry
+    a pad token; their logits are ignored by the engine). ``positions`` is
+    (n_slots,) — each slot's RoPE position (prompt_len + n generated, the
+    same convention the lockstep ``api.QuaffModel.generate`` uses). Write
+    positions and length masks come from the caches' per-slot cursors."""
+    def decode_slots(frozen, adapters, quant_state, caches, tokens, positions):
+        out = M.forward(
+            frozen, adapters, quant_state, tokens, cfg,
+            caches=caches, positions=positions[:, None])
+        return out.logits[:, -1, :], out.caches
+
+    return decode_slots

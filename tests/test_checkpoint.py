@@ -1,5 +1,7 @@
-"""Checkpoint manager: roundtrip, atomicity, retention, and crash-resume
-equivalence (the fault-tolerance contract)."""
+"""Checkpoint manager: roundtrip, atomicity, retention, crash-resume
+equivalence (the fault-tolerance contract), and the facade-level
+``save``/``load`` lifecycle (config fingerprint + bit-identical eval)."""
+import json
 import os
 
 import jax
@@ -7,9 +9,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.manager import CheckpointManager
+from repro import api
+from repro.checkpoint.manager import CheckpointManager, config_fingerprint
 from repro.core.peft import PEFTConfig
-from repro.data.pipeline import DataConfig, Loader
+from repro.data.pipeline import DataConfig, Loader, calibration_batches
 from repro.models import model as M
 from repro.models.config import ModelConfig, QuantConfig, TrainConfig
 from repro.train import steps as S
@@ -102,3 +105,98 @@ def test_async_save(tmp_path):
     mgr.save(1, {"x": jnp.ones((128, 128))})
     mgr.wait()
     assert mgr.latest_step() == 1
+
+
+def test_restore_fingerprint_guard(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    tree = {"x": jnp.zeros((2,))}
+    mgr.save(1, tree, {"config_fingerprint": config_fingerprint({"a": 1})})
+    got, _ = mgr.restore(tree,
+                         expect_fingerprint=config_fingerprint({"a": 1}))
+    np.testing.assert_array_equal(np.asarray(got["x"]), np.zeros((2,)))
+    with pytest.raises(ValueError, match="fingerprint mismatch"):
+        mgr.restore(tree, expect_fingerprint=config_fingerprint({"a": 2}))
+    # pre-fingerprint checkpoints restore with a warning, not a failure
+    mgr.save(2, tree, {"legacy": True})
+    got, meta = mgr.restore(tree, step=2,
+                            expect_fingerprint=config_fingerprint({"a": 1}))
+    assert meta["legacy"]
+
+
+# ---------------------------------------------------------------------------
+# facade save -> load lifecycle
+# ---------------------------------------------------------------------------
+def _finetuned_model():
+    dcfg = DataConfig(vocab_size=64, seq_len=16, batch_size=4)
+    model = api.prepare(ModelConfig(
+        name="ckpt-facade", family="dense", n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab_size=64, head_dim=8,
+        quant=QuantConfig(mode="fp32"),
+        peft=PEFTConfig(method="lora", lora_rank=2)))
+    model.calibrate(calibration_batches(dcfg, 2))
+    model.convert("quaff")
+    tcfg = TrainConfig(microbatches=1, remat=False, learning_rate=1e-3)
+    model.finetune(tcfg, Loader(dcfg), steps=3)
+    return model, tcfg, dcfg
+
+
+def test_facade_save_load_bit_identical_eval(tmp_path):
+    """calibrate -> convert -> finetune -> save -> load must round-trip the
+    quantized base, adapters and momentum scale state to BIT-identical eval
+    metrics (the acceptance criterion)."""
+    model, _, dcfg = _finetuned_model()
+    batch = Loader(dcfg).batch(123)
+    before = model.evaluate(batch)
+    model.save(str(tmp_path))
+    loaded = api.QuaffModel.load(str(tmp_path))
+    assert loaded.cfg == model.cfg
+    after = loaded.evaluate(batch)
+    assert before == after          # float-exact, not allclose
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), model.quant_state, loaded.quant_state)
+    out_a = np.asarray(model.generate(batch["tokens"][:, :8], max_new=4))
+    out_b = np.asarray(loaded.generate(batch["tokens"][:, :8], max_new=4))
+    np.testing.assert_array_equal(out_a, out_b)
+
+
+def test_facade_load_continues_training(tmp_path):
+    """The optimizer moments + step counter ride along: train 3 + save +
+    load + train 2 == train 5 straight."""
+    model, tcfg, dcfg = _finetuned_model()          # 3 steps in
+    model.save(str(tmp_path))
+    loaded = api.QuaffModel.load(str(tmp_path))
+    more_a = model.finetune(tcfg, Loader(dcfg), steps=2)
+    more_b = loaded.finetune(tcfg, Loader(dcfg), steps=2)
+    np.testing.assert_allclose(more_a, more_b, rtol=0, atol=0)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), model.adapters, loaded.adapters)
+
+
+def test_facade_load_refuses_tampered_config(tmp_path):
+    model, _, _ = _finetuned_model()
+    model.save(str(tmp_path))
+    meta_path = os.path.join(
+        str(tmp_path), f"step_{3:08d}", "metadata.json")
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["config"]["n_heads"] = 2
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="fingerprint mismatch"):
+        api.QuaffModel.load(str(tmp_path))
+
+
+def test_facade_save_before_finetune(tmp_path):
+    """A converted-but-untrained model saves/loads too (no optimizer)."""
+    dcfg = DataConfig(vocab_size=64, seq_len=16, batch_size=4)
+    model = api.prepare(ModelConfig(
+        name="ckpt-notrain", family="dense", n_layers=2, d_model=32,
+        n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=64, head_dim=8,
+        quant=QuantConfig(mode="fp32"),
+        peft=PEFTConfig(method="lora", lora_rank=2)))
+    model.calibrate(calibration_batches(dcfg, 1))
+    model.convert("quaff")
+    model.save(str(tmp_path))
+    loaded = api.QuaffModel.load(str(tmp_path))
+    batch = Loader(dcfg).batch(7)
+    assert model.evaluate(batch) == loaded.evaluate(batch)

@@ -1,0 +1,234 @@
+"""Continuous-batching engine: token parity with the lockstep reference,
+mid-stream admission, mixed-length scheduling wins, seeded sampling, and the
+facade ``generate`` wrapper (EOS/pad semantics)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.peft import PEFTConfig
+from repro.data.pipeline import DataConfig, Loader, calibration_batches
+from repro.models.config import ModelConfig, QuantConfig
+from repro.serving import Engine, GenerationRequest, SamplingParams
+
+VOCAB, PROMPT = 128, 8
+
+
+def _tiny_cfg(mode="fp32"):
+    return ModelConfig(
+        name="serve-test", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=VOCAB, head_dim=16,
+        quant=QuantConfig(mode=mode),
+        peft=PEFTConfig(method="lora", lora_rank=4))
+
+
+@pytest.fixture(scope="module")
+def quaff_model():
+    dcfg = DataConfig(vocab_size=VOCAB, seq_len=PROMPT, batch_size=4)
+    model = api.prepare(_tiny_cfg())
+    model.calibrate(calibration_batches(dcfg, 2))
+    model.convert("quaff")
+    return model
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    return np.asarray(Loader(DataConfig(vocab_size=VOCAB, seq_len=PROMPT,
+                                        batch_size=4)).batch(0)["tokens"])
+
+
+def _lockstep_reference(model, prompts, max_new):
+    """The pre-engine greedy loop, straight on the step builders."""
+    tokens = jnp.asarray(prompts)
+    prompt_len = tokens.shape[1]
+    logits, caches = model.prefill({"tokens": tokens}, extra_len=max_new)
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for i in range(max_new - 1):
+        logits, caches = model.decode_step(caches, tok, prompt_len + i)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return np.asarray(jnp.concatenate(out, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# greedy parity
+# ---------------------------------------------------------------------------
+def test_engine_greedy_token_parity(quaff_model, prompts):
+    """Engine greedy decode on a shared prompt batch must be token-identical
+    to the lockstep loop (the acceptance criterion)."""
+    max_new = 8
+    ref = _lockstep_reference(quaff_model, prompts, max_new)
+    eng = Engine(quaff_model, max_slots=len(prompts),
+                 max_seq_len=PROMPT + max_new)
+    outs = eng.run([GenerationRequest(p, max_new_tokens=max_new)
+                    for p in prompts])
+    got = np.asarray([o.token_ids for o in outs])
+    np.testing.assert_array_equal(ref, got)
+    assert all(o.finish_reason == "length" for o in outs)
+    assert eng.stats.requests_completed == len(prompts)
+    assert eng.stats.tokens_generated == len(prompts) * max_new
+
+
+def test_generate_is_engine_backed(quaff_model, prompts):
+    """facade generate == lockstep reference (thin wrapper contract)."""
+    ref = _lockstep_reference(quaff_model, prompts, 6)
+    got = np.asarray(quaff_model.generate(prompts, max_new=6))
+    np.testing.assert_array_equal(ref, got)
+
+
+def test_mixed_prompt_lengths_parity(quaff_model, prompts):
+    """Each request's stream must equal ITS OWN single-request lockstep
+    decode, no matter what shares the pool (mixed prompt lengths)."""
+    max_new = 6
+    lens = [PROMPT, PROMPT - 2, PROMPT - 3, PROMPT - 1]
+    eng = Engine(quaff_model, max_slots=2, max_seq_len=PROMPT + max_new)
+    outs = eng.run([GenerationRequest(prompts[i][:n], max_new_tokens=max_new)
+                    for i, n in enumerate(lens)])
+    for i, (n, out) in enumerate(zip(lens, outs)):
+        solo = _lockstep_reference(quaff_model, prompts[i:i + 1, :n], max_new)
+        np.testing.assert_array_equal(
+            solo[0], np.asarray(out.token_ids),
+            err_msg=f"request {i} (prompt len {n}) diverged in shared pool")
+
+
+# ---------------------------------------------------------------------------
+# scheduling
+# ---------------------------------------------------------------------------
+def test_mid_stream_admission(quaff_model, prompts):
+    """Requests submitted while others are mid-decode produce the same
+    tokens as a fresh batch run — admission never perturbs live slots."""
+    max_new = 6
+    ref = _lockstep_reference(quaff_model, prompts, max_new)
+    eng = Engine(quaff_model, max_slots=2, max_seq_len=PROMPT + max_new)
+    for i in range(2):
+        eng.submit(GenerationRequest(prompts[i], max_new_tokens=max_new,
+                                     request_id=f"r{i}"))
+    eng.step()
+    eng.step()                      # two requests now mid-generation
+    for i in range(2, 4):
+        eng.submit(GenerationRequest(prompts[i], max_new_tokens=max_new,
+                                     request_id=f"r{i}"))
+    outs = {o.request_id: o for o in eng.run()}
+    got = np.asarray([outs[f"r{i}"].token_ids for i in range(4)])
+    np.testing.assert_array_equal(ref, got)
+
+
+def test_mixed_budgets_beat_lockstep_slot_steps(quaff_model, prompts):
+    """A mixed-budget workload must finish in strictly fewer slot-steps than
+    the lockstep equivalent (batch waits for its slowest request)."""
+    short, long = 4, 16
+    n_req, slots = 6, 2
+    eng = Engine(quaff_model, max_slots=slots, max_seq_len=PROMPT + long)
+    outs = eng.run([GenerationRequest(prompts[i % 4],
+                                      max_new_tokens=short if i % 2 else long)
+                    for i in range(n_req)])
+    assert [o.n_generated for o in outs] == [long, short] * 3
+    lockstep_slot_steps = n_req * long
+    assert eng.stats.slot_steps < lockstep_slot_steps
+    assert eng.stats.busy_slot_steps <= eng.stats.slot_steps
+    assert 0.0 < eng.stats.occupancy <= 1.0
+    assert eng.stats.decode_tokens_per_s > 0
+
+
+def test_streaming_callback(quaff_model, prompts):
+    events = []
+    eng = Engine(quaff_model, max_slots=1, max_seq_len=PROMPT + 4)
+    out = eng.run([GenerationRequest(
+        prompts[0], max_new_tokens=4, request_id="s0",
+        on_token=lambda rid, tok: events.append((rid, tok)))])[0]
+    assert events == [("s0", t) for t in out.token_ids]
+
+
+def test_capacity_validation(quaff_model, prompts):
+    eng = Engine(quaff_model, max_slots=1, max_seq_len=10)
+    with pytest.raises(ValueError, match="cache positions"):
+        eng.submit(GenerationRequest(prompts[0], max_new_tokens=32))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.submit(GenerationRequest(prompts[0], max_new_tokens=0))
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+def test_seeded_sampling_determinism(quaff_model, prompts):
+    """Same seed -> identical stream, independent of pool size / admission
+    order; different seed -> allowed (and here, expected) to differ."""
+    sp = SamplingParams(temperature=0.9, top_k=20, top_p=0.9, seed=11)
+
+    def run_one(slots, extra_load):
+        eng = Engine(quaff_model, max_slots=slots, max_seq_len=PROMPT + 16)
+        reqs = [GenerationRequest(prompts[0], max_new_tokens=8, sampling=sp,
+                                  request_id="probe")]
+        if extra_load:
+            reqs += [GenerationRequest(prompts[i], max_new_tokens=12)
+                     for i in (1, 2)]
+        outs = {o.request_id: o for o in eng.run(reqs)}
+        return outs["probe"].token_ids
+
+    a = run_one(slots=1, extra_load=False)
+    b = run_one(slots=3, extra_load=True)
+    assert a == b
+    assert all(0 <= t < VOCAB for t in a)
+
+    c_eng = Engine(quaff_model, max_slots=1, max_seq_len=PROMPT + 16)
+    c = c_eng.run([GenerationRequest(
+        prompts[0], max_new_tokens=8,
+        sampling=dataclasses.replace(sp, seed=12))])[0].token_ids
+    assert c != a
+
+
+def test_greedy_param_matches_zero_temperature(quaff_model, prompts):
+    ref = _lockstep_reference(quaff_model, prompts[:1], 5)
+    eng = Engine(quaff_model, max_slots=1, max_seq_len=PROMPT + 5)
+    out = eng.run([GenerationRequest(
+        prompts[0], max_new_tokens=5,
+        sampling=SamplingParams(temperature=0.0, top_k=3, top_p=0.5))])[0]
+    np.testing.assert_array_equal(ref[0], np.asarray(out.token_ids))
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+
+
+# ---------------------------------------------------------------------------
+# facade generate: EOS / pad satellite
+# ---------------------------------------------------------------------------
+def test_generate_eos_stops_and_pads(quaff_model, prompts):
+    max_new, pad = 8, 0
+    ref = np.asarray(quaff_model.generate(prompts, max_new=max_new))
+    eos = int(ref[0, 2])            # force row 0 to stop at its 3rd token
+    got = np.asarray(quaff_model.generate(prompts, max_new=max_new,
+                                          eos_id=eos, pad_id=pad))
+    assert got.shape == ref.shape
+    for r in range(len(prompts)):
+        row, ref_row = got[r].tolist(), ref[r].tolist()
+        if eos in ref_row:
+            stop = ref_row.index(eos)
+            assert row[:stop + 1] == ref_row[:stop + 1]
+            assert row[stop + 1:] == [pad] * (max_new - stop - 1)
+        else:
+            assert row == ref_row
+
+
+def test_generate_exact_budget_without_eos(quaff_model, prompts):
+    """eos_id=None keeps the exact-budget contract (no early stop)."""
+    out = np.asarray(quaff_model.generate(prompts, max_new=5))
+    assert out.shape == (len(prompts), 5)
+    assert np.asarray(quaff_model.generate(prompts, max_new=0)).shape == \
+        (len(prompts), 0)
+
+
+def test_engine_rejects_non_kv_families():
+    import repro.configs as CFGS
+    cfg = dataclasses.replace(
+        CFGS.get_config("xlstm-350m").reduced(),
+        quant=QuantConfig(mode="fp32"), peft=PEFTConfig(method="none"))
+    model = api.prepare(cfg)
+    with pytest.raises(NotImplementedError):
+        Engine(model, max_slots=1, max_seq_len=16)

@@ -2,16 +2,25 @@
 lockstep decode loop on the same workload, via the real calibration +
 conversion pipeline (micro Phi3 stand-in).
 
-CLI (the CI serve-smoke job runs ``--tiny --json bench_serving.json``):
+CLI (the CI serve-smoke job runs ``--tiny --json bench_serving.json`` and a
+paged sibling ``--tiny --kv-layout paged --json bench_serving_paged.json``):
 
-  --tiny         CI smoke shapes (seconds on CPU)
-  --json PATH    dump rows + engine stats as a JSON artifact
-  --mode MODE    quant mode to serve (default quaff)
+  --tiny             CI smoke shapes (seconds on CPU)
+  --json PATH        dump rows + engine stats as a JSON artifact
+  --mode MODE        quant mode to serve (default quaff)
+  --kv-layout L      contiguous (default) | paged — block-pool KV cache
+  --kv-dtype D       fp (default) | int8 — paged-only quantized KV
+  --prefill-chunk N  paged-only chunked admission (default plen/2 when paged)
 
 Rows follow the bench_kernels convention: (name, us_per_call, derived).
 ``serving_engine_greedy_parity`` carries ``parity=True/False`` (engine
 tokens vs lockstep on a shared batch) and ``serving_engine_mixed`` carries
-``slot_steps=A<B=lockstep`` — the two gates CI checks.
+``slot_steps=A<B=lockstep`` — the CI gates. A paged run adds
+``serving_paged_kv_bytes`` (``bytes_per_req=A<B=contiguous``) and an int8
+sibling of the mixed workload (``serving_paged_int8_kv_bytes``) gated on a
+further bytes reduction. The JSON payload records the workload geometry
+(n_requests / slots / prompt_len / max_new / max_seq_len) so
+paged-vs-contiguous memory comparisons are reproducible from the artifact.
 """
 from __future__ import annotations
 
@@ -41,11 +50,19 @@ def _lockstep_tokens(model, prompts, max_new):
     return np.asarray(jnp.concatenate(out, axis=1))
 
 
-def run(mode: str = "quaff", tiny: bool = False):
+def run(mode: str = "quaff", tiny: bool = False,
+        kv_layout: str = "contiguous", kv_dtype: str = "fp",
+        prefill_chunk: int = -1):
     if tiny:
         n_req, slots, plen, max_new = 4, 2, 8, 8
     else:
         n_req, slots, plen, max_new = 16, 4, 32, 32
+    paged = kv_layout == "paged"
+    if prefill_chunk < 0:                   # default: exercise chunking
+        prefill_chunk = plen // 2 if paged else 0
+    block_size = 4 if tiny else 16          # blocks must subdivide the rows
+    kv = dict(kv_layout=kv_layout, kv_dtype=kv_dtype, block_size=block_size,
+              prefill_chunk=prefill_chunk) if paged else {}
     cfg, frozen, adapters, qstate = common.build_mode_model(
         mode, dcfg=common.data_cfg(batch=max(n_req, 4), seq=plen,
                                    vocab=512))
@@ -55,31 +72,41 @@ def run(mode: str = "quaff", tiny: bool = False):
         batch_size=n_req)).batch(0)["tokens"])
 
     rows, extra = [], {}
+    extra["workload"] = {"n_requests": n_req, "n_slots": slots,
+                         "prompt_len": plen, "max_new": max_new,
+                         "max_seq_len": plen + max_new,
+                         "kv_layout": kv_layout, "kv_dtype": kv_dtype,
+                         "block_size": block_size if paged else 0,
+                         "prefill_chunk": prefill_chunk}
 
     # ---- greedy parity gate: engine vs lockstep on a shared batch --------
     t0 = time.perf_counter()
     ref = _lockstep_tokens(model, prompts, max_new)
     t_lockstep = time.perf_counter() - t0
     eng = model.engine(max_slots=n_req, max_seq_len=plen + max_new,
-                       fresh=True)
+                       fresh=True, **kv)
     outs = eng.run([GenerationRequest(p, max_new_tokens=max_new)
                     for p in prompts])
     got = np.asarray([o.token_ids for o in outs])
     parity = bool(np.array_equal(ref, got))
     rows.append(("serving_engine_greedy_parity",
                  (eng.stats.prefill_time_s + eng.stats.decode_time_s) * 1e6,
-                 f"parity={parity}"))
+                 f"parity={parity} kv={kv_layout}/{kv_dtype}"))
     rows.append(("serving_lockstep_reference", t_lockstep * 1e6,
-                 f"reqs={n_req} max_new={max_new}"))
+                 f"reqs={n_req} max_new={max_new} "
+                 f"max_seq_len={plen + max_new}"))
 
     # ---- mixed-budget workload: the continuous-batching win --------------
     short = max(1, max_new // 4)
+
+    def mixed_reqs():
+        return [GenerationRequest(prompts[i],
+                                  max_new_tokens=short if i % 2 else max_new)
+                for i in range(n_req)]
+
     eng2 = model.engine(max_slots=slots, max_seq_len=plen + max_new,
-                        fresh=True)
-    reqs = [GenerationRequest(prompts[i],
-                              max_new_tokens=short if i % 2 else max_new)
-            for i in range(n_req)]
-    outs2 = eng2.run(reqs)
+                        fresh=True, **kv)
+    outs2 = eng2.run(mixed_reqs())
     st = eng2.stats
     lockstep_slot_steps = n_req * max_new
     rows.append((
@@ -90,9 +117,45 @@ def run(mode: str = "quaff", tiny: bool = False):
     extra["mixed_stats"] = st.as_dict()
     extra["mixed_completed"] = sum(o.n_generated for o in outs2)
 
+    # ---- paged telemetry: per-request KV bytes vs the contiguous row -----
+    if paged:
+        # the bytes rows always compare fp-paged and int8-paged engines on
+        # the mixed workload, whatever dtype the CLI picked for the
+        # throughput rows — reuse eng2 when it already is the right one
+        def mixed_paged(dtype):
+            if kv_dtype == dtype:
+                return outs2, st
+            eng = model.engine(max_slots=slots, max_seq_len=plen + max_new,
+                               fresh=True, kv_layout="paged",
+                               kv_dtype=dtype, block_size=block_size,
+                               prefill_chunk=prefill_chunk)
+            outs = eng.run(mixed_reqs())
+            return outs, eng.stats
+
+        outs_fp, st_fp = mixed_paged("fp")
+        rows.append((
+            "serving_paged_kv_bytes", 0.0,
+            f"bytes_per_req={st_fp.kv_bytes_per_request:.0f}"
+            f"<{st_fp.contiguous_bytes_per_request}=contiguous "
+            f"frag={st_fp.mean_fragmentation:.2f} "
+            f"peak_blocks={st_fp.peak_blocks_in_use}/{st_fp.n_blocks}"))
+        # int8 sibling of the same mixed workload: ~4x fewer KV bytes on
+        # top of the paging win (greedy tokens may shift within int8
+        # precision on this random micro model; the bytes are the gate)
+        outs4, st4 = mixed_paged("int8")
+        same = sum(int(np.array_equal(a.token_ids, b.token_ids))
+                   for a, b in zip(outs_fp, outs4))
+        rows.append((
+            "serving_paged_int8_kv_bytes",
+            (st4.prefill_time_s + st4.decode_time_s) * 1e6,
+            f"bytes_per_req={st4.kv_bytes_per_request:.0f}"
+            f"<{st_fp.kv_bytes_per_request:.0f}=paged_fp "
+            f"streams_matching_fp={same}/{n_req}"))
+        extra["int8_stats"] = st4.as_dict()
+
     # ---- seeded sampling path (throughput only) --------------------------
     eng3 = model.engine(max_slots=slots, max_seq_len=plen + max_new,
-                        fresh=True)
+                        fresh=True, **kv)
     eng3.run([GenerationRequest(
         prompts[i], max_new_tokens=short,
         sampling=SamplingParams(temperature=0.8, top_k=50, top_p=0.95,
@@ -108,9 +171,16 @@ def main(argv=None):
     p.add_argument("--tiny", action="store_true",
                    help="CI smoke shapes (seconds on CPU)")
     p.add_argument("--mode", default="quaff")
+    p.add_argument("--kv-layout", default="contiguous",
+                   choices=["contiguous", "paged"])
+    p.add_argument("--kv-dtype", default="fp", choices=["fp", "int8"])
+    p.add_argument("--prefill-chunk", type=int, default=-1,
+                   help="paged chunked admission; -1 = plen/2 default")
     p.add_argument("--json", metavar="PATH", default=None)
     args = p.parse_args(argv)
-    rows, extra = run(mode=args.mode, tiny=args.tiny)
+    rows, extra = run(mode=args.mode, tiny=args.tiny,
+                      kv_layout=args.kv_layout, kv_dtype=args.kv_dtype,
+                      prefill_chunk=args.prefill_chunk)
     for r in rows:
         print(f"{r[0]},{r[1]:.1f},{r[2]}")
     if args.json:

@@ -257,19 +257,30 @@ class QuaffModel:
 
     # ---- serving ---------------------------------------------------------
     def engine(self, max_slots: int = 4, max_seq_len: int = 256,
-               fresh: bool = False):
+               fresh: bool = False, **kv_opts):
         """A ``repro.serving.Engine`` over this model (continuous batching:
         slot-pooled KV cache, mid-decode admission, per-request sampling).
-        A few engines are cached per (max_slots, max_seq_len) so repeated
-        one-shot uses reuse their compiled steps — oldest-evicted beyond
-        ``_MAX_CACHED_ENGINES``, since each engine pins a device KV pool;
-        ``fresh=True`` bypasses the cache (e.g. for independent
+        ``kv_opts`` pass through to the engine's KV knobs — ``kv_layout=
+        "paged"``, ``kv_dtype="int8"``, ``block_size``, ``n_blocks``,
+        ``prefill_chunk`` (see ``models.config.ServingConfig``). A few
+        engines are cached per (max_slots, max_seq_len, kv knobs) so
+        repeated one-shot uses reuse their compiled steps — oldest-evicted
+        beyond ``_MAX_CACHED_ENGINES``, since each engine pins a device KV
+        pool; ``fresh=True`` bypasses the cache (e.g. for independent
         ``EngineStats``)."""
         from repro.serving import Engine
-        key = (max_slots, max_seq_len)
+        from repro.models.config import ServingConfig
+        # normalize default-valued kwargs out of the cache key so
+        # engine(4, 256) and engine(4, 256, kv_layout="contiguous") share
+        # one cached engine (each pins a device KV pool)
+        defaults = {f.name: f.default
+                    for f in dataclasses.fields(ServingConfig)}
+        key = (max_slots, max_seq_len) + tuple(sorted(
+            (k, v) for k, v in kv_opts.items() if v != defaults.get(k)))
         eng = None if fresh else self._engines.get(key)
         if eng is None:
-            eng = Engine(self, max_slots=max_slots, max_seq_len=max_seq_len)
+            eng = Engine(self, max_slots=max_slots, max_seq_len=max_seq_len,
+                         **kv_opts)
             if not fresh:
                 while len(self._engines) >= self._MAX_CACHED_ENGINES:
                     self._engines.pop(next(iter(self._engines)))

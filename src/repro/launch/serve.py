@@ -12,6 +12,13 @@ show the continuous-batching win (EngineStats vs the lockstep equivalent);
 ``--temperature/--top-k/--top-p`` exercise the seeded sampling path.
 ``--load DIR`` serves a ``QuaffModel.save`` checkpoint instead of a fresh
 random-init model.
+
+KV-cache knobs (repro.serving.paged): ``--kv-layout paged`` swaps the
+per-slot contiguous rows for the block-pool cache (``--block-size`` tokens
+per block), ``--kv-dtype int8`` stores it quantized (~4x fewer KV bytes),
+and ``--prefill-chunk N`` admits prompts N tokens at a time so long
+prompts never stall the decode batch; block-pool telemetry (blocks in
+use, fragmentation, bytes saved vs contiguous) prints after the run.
 """
 from __future__ import annotations
 
@@ -45,6 +52,14 @@ def main():
     ap.add_argument("--mixed", action="store_true",
                     help="mixed prompt lengths + budgets (continuous-"
                          "batching showcase)")
+    ap.add_argument("--kv-layout", default="contiguous",
+                    choices=["contiguous", "paged"])
+    ap.add_argument("--kv-dtype", default="fp", choices=["fp", "int8"],
+                    help="paged only: int8 KV (per-channel key scales, "
+                         "per-token value scales)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="paged only: admit prompts in chunks of N tokens")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -112,7 +127,10 @@ def main():
     n_prefix = n_prefix_tokens(cfg.peft)
     scfg = ServingConfig(max_slots=args.slots,
                          max_seq_len=args.prompt_len + n_prefix
-                         + args.max_new)
+                         + args.max_new,
+                         kv_layout=args.kv_layout, kv_dtype=args.kv_dtype,
+                         block_size=args.block_size,
+                         prefill_chunk=args.prefill_chunk)
     engine = Engine.from_config(model, scfg)
     outs = engine.run(reqs)
 
@@ -120,13 +138,22 @@ def main():
     lockstep_slot_steps = args.requests * max(
         r.max_new_tokens for r in reqs)  # lockstep pays max budget everywhere
     print(f"[serve] {args.requests} reqs over {args.slots} slots "
-          f"(pool seq {scfg.max_seq_len}, {cfg.name}, {cfg.quant.mode})")
-    print(f"prefill: {st.prefills} reqs in {st.prefill_time_s*1e3:.1f} ms")
+          f"(pool seq {scfg.max_seq_len}, kv {args.kv_layout}/"
+          f"{args.kv_dtype}, {cfg.name}, {cfg.quant.mode})")
+    print(f"prefill: {st.prefills} reqs in {st.prefill_batches} batched "
+          f"calls, {st.prefill_time_s*1e3:.1f} ms")
     print(f"decode : {st.decode_steps} steps in {st.decode_time_s*1e3:.1f} ms "
           f"({st.decode_tokens_per_s:.0f} tok/s, occupancy "
           f"{st.occupancy:.0%})")
     print(f"slot-steps: {st.slot_steps} continuous vs "
           f"{lockstep_slot_steps} lockstep-equivalent")
+    if args.kv_layout == "paged":
+        print(f"kv-pool: {st.peak_blocks_in_use}/{st.n_blocks} blocks peak "
+              f"(x{st.block_size} tok), fragmentation "
+              f"{st.mean_fragmentation:.0%}, "
+              f"{st.kv_bytes_per_request/1024:.1f} KiB/req vs "
+              f"{st.contiguous_bytes_per_request/1024:.1f} KiB contiguous "
+              f"(saves {st.kv_bytes_saved_vs_contiguous/1024:.1f} KiB/req)")
     for o in outs[:3]:
         print(f"  {o.request_id}: prompt {o.prompt_len} -> "
               f"{o.n_generated} tokens ({o.finish_reason}) "

@@ -157,10 +157,32 @@ SHAPES: Dict[str, ShapeConfig] = {
 class ServingConfig:
     """Engine pool sizing (repro.serving): ``max_slots`` concurrent
     requests over a shared KV pool of ``max_seq_len`` positions per slot.
-    A request needs prompt + PEFT-prefix + max_new positions to fit."""
+    A request needs prompt + PEFT-prefix + max_new positions to fit.
+
+    KV layout/precision (repro.serving.paged):
+      kv_layout     "contiguous" = one max_seq_len row per slot (PR 3);
+                    "paged" = block-pool cache — a request holds
+                    ceil(need / block_size) fixed-size blocks through a
+                    per-request block table, so short requests stop
+                    stranding worst-case rows.
+      kv_dtype      "fp" = activation-dtype passthrough; "int8" = quantized
+                    KV (per-channel key scales held static under OSSH,
+                    per-token value scales) at ~4x fewer KV bytes.
+      block_size    tokens per KV block (paged only).
+      n_blocks      pool capacity in blocks; 0 = worst case
+                    (max_slots * ceil(max_seq_len / block_size)).
+      prefill_chunk admit prompts in chunks of this many tokens so long
+                    prompts never stall the decode batch; 0 = whole-prompt
+                    admission. Chunked prefill is paged-only.
+    """
 
     max_slots: int = 4
     max_seq_len: int = 256
+    kv_layout: str = "contiguous"   # contiguous | paged
+    kv_dtype: str = "fp"            # fp | int8
+    block_size: int = 16
+    n_blocks: int = 0
+    prefill_chunk: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

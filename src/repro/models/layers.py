@@ -14,6 +14,7 @@ the protocol. Stats capture is requested with an explicit trace-safe
 from __future__ import annotations
 
 import math
+import os
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -209,6 +210,13 @@ def init_attention(key, cfg: ModelConfig, qcfg: QuantConfig, param_dtype):
     return params, states
 
 
+# Route paged DECODE attention through the Pallas block-table kernel
+# (serving/paged/kernels) instead of the jnp gather path — the paged
+# sibling of REPRO_INT4_PALLAS, read once so jit cache keys stay stable.
+_PAGED_PALLAS = os.environ.get(
+    "REPRO_PAGED_PALLAS", "").lower() in ("1", "true", "yes")
+
+
 def _gqa_scores_softmax_out(q, k, v, mask):
     """q: (B,S,KH,G,hd); k,v: (B,T,KH,hd); mask: broadcastable (B,1,1,S,T)."""
     scale = 1.0 / math.sqrt(q.shape[-1])
@@ -276,7 +284,90 @@ def attention(
         q = apply_rope(q4, positions, cfg.rope_theta).reshape(bsz, s_len, kh, g, hd)
         k = apply_rope(k, positions, cfg.rope_theta)
 
+    kv_stats = None
+    if scope is not None and scope.capture:
+        # per-channel absmax of the to-be-cached (rotated) K/V: seeds the
+        # paged int8 pool's static key-channel grid (serving.paged.kvquant)
+        # from the same calibration set that fixes the outlier channels
+        def kv_abs(a):
+            a32 = jax.lax.stop_gradient(a).astype(jnp.float32)
+            return jnp.max(jnp.abs(a32), axis=(0, 1))        # (kh, hd)
+        kv_stats = {"k": kv_abs(k), "v": kv_abs(v)}
+
     new_cache = None
+    if cache is not None and kv_override is None and "k_pool" in cache:
+        # paged (block-pool) path: each of the row's s_len tokens lands at
+        # cache position pos+i, which the per-request block table maps to
+        # (page, offset) — pool writes are scatters, reads are block-table
+        # gathers, and int8 pools quantize on write / dequantize on read
+        # (per-channel K grid, per-token V scales; serving.paged.kvquant).
+        from repro.serving.paged import kvquant as KVQ
+        pos = cache["pos"]                                           # (B,)
+        bt = cache["block_tables"]                                   # (B,P)
+        k_pool, v_pool = cache["k_pool"], cache["v_pool"]
+        blk = k_pool.shape[1]
+        tpos = pos[:, None] + jnp.arange(s_len, dtype=jnp.int32)[None, :]
+        page = jnp.take_along_axis(bt, tpos // blk, axis=1)          # (B,S)
+        off = tpos % blk
+        quantized = k_pool.dtype == jnp.int8
+        new_cache = dict(cache)
+        if quantized:
+            qk = KVQ.quantize_k(k, cache["k_scale"])
+            qv, vsc = KVQ.quantize_v(v)
+            k_pool = k_pool.at[page, off].set(qk)
+            v_pool = v_pool.at[page, off].set(qv)
+            new_cache["v_scale"] = cache["v_scale"].at[page, off].set(vsc)
+        else:
+            k_pool = k_pool.at[page, off].set(k.astype(k_pool.dtype))
+            v_pool = v_pool.at[page, off].set(v.astype(v_pool.dtype))
+        new_cache.update(k_pool=k_pool, v_pool=v_pool, pos=pos + s_len)
+        if s_len == 1 and _PAGED_PALLAS and not cfg.sliding_window:
+            # decode hot path: fused gather-dequant-attention kernel. The
+            # kernel reads every position — the current token included —
+            # from the pool, so on int8 pools it skips the jnp path's
+            # read-after-write fp override below (a one-position
+            # approximation; fp pools are exact either way).
+            from repro.serving.paged.kernels.paged_attention import (
+                paged_attention_auto)
+            out = paged_attention_auto(
+                q[:, 0], k_pool, v_pool, bt, pos + 1,
+                new_cache.get("k_scale"), new_cache.get("v_scale"))
+            out = out[:, None]                           # (B,1,KH,G,hd)
+        else:
+            kg, vg = k_pool[bt], v_pool[bt]              # (B,P,blk,kh,hd)
+            if quantized:
+                kf = KVQ.dequant_k(kg, cache["k_scale"])
+                vf = KVQ.dequant_v(vg, new_cache["v_scale"][bt])
+            else:
+                kf, vf = kg, vg
+            t_len = bt.shape[1] * blk
+            kf = kf.reshape(bsz, t_len, kh, hd)
+            vf = vf.reshape(bsz, t_len, kh, hd)
+            if quantized:
+                # read-after-write fidelity: this step's own tokens attend
+                # in fp straight from registers — the pool's int8 copy is
+                # for FUTURE steps. Makes whole-prompt prefill exact vs the
+                # contiguous fp path; only already-retired positions carry
+                # quantization error.
+                row = jnp.arange(bsz, dtype=jnp.int32)[:, None]
+                kf = kf.at[row, tpos].set(k.astype(kf.dtype))
+                vf = vf.at[row, tpos].set(v.astype(vf.dtype))
+            kf = hint(kf, "kv_cache")
+            vf = hint(vf, "kv_cache")
+            k_pos = jnp.arange(t_len, dtype=jnp.int32)               # (T,)
+            mask = k_pos[None, None, :] <= tpos[:, :, None]          # (B,S,T)
+            if cfg.sliding_window:
+                win = (tpos[:, :, None] - k_pos[None, None, :]) \
+                    < cfg.sliding_window
+                mask = jnp.logical_and(mask, jnp.logical_or(win, is_global))
+            out = _gqa_scores_softmax_out(q, kf, vf, mask[:, None, None])
+        out = out.reshape(bsz, s_len, h * hd).astype(x.dtype)
+        y, st_o = apply_qlinear(out, params["wo"], qcfg, states.get("wo"),
+                                use_kind="row", scope=scope)
+        stats = {"wq": st_q, "wk": st_k, "wv": st_v, "wo": st_o}
+        if kv_stats is not None:
+            stats["kv"] = kv_stats
+        return y, new_cache, stats
     if cache is not None and kv_override is None and cache["pos"].ndim == 1:
         # slot decode (continuous batching): per-row write cursors (B,).
         # Each slot writes this step's k/v at its OWN position and masks by
@@ -335,6 +426,8 @@ def attention(
     y, st_o = apply_qlinear(out, params["wo"], qcfg, states.get("wo"),
                             use_kind="row", scope=scope)
     stats = {"wq": st_q, "wk": st_k, "wv": st_v, "wo": st_o}
+    if kv_stats is not None:
+        stats["kv"] = kv_stats
     return y, new_cache, stats
 
 

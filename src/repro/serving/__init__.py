@@ -2,16 +2,23 @@
 
 Public surface:
 
-    Engine             slot-pooled continuous-batching engine
+    Engine             slot-pooled continuous-batching engine; KV knobs
+                       kv_layout="contiguous"|"paged", kv_dtype="fp"|"int8",
+                       block_size / n_blocks / prefill_chunk
     GenerationRequest  prompt + budget + SamplingParams (+ streaming cb)
     SamplingParams     greedy / temperature / top-k / top-p, seeded
     RequestOutput      generated ids + finish reason
-    EngineStats        tokens/s, per-phase latency, slot occupancy
+    EngineStats        tokens/s, per-phase latency, slot occupancy,
+                       block-pool telemetry (paged engines)
+
+The block-pool machinery (allocator, int8 KV storage, Pallas block-table
+attention) lives in ``repro.serving.paged``.
 """
 from repro.models.config import ServingConfig
 from repro.serving.engine import Engine
 from repro.serving.params import (EngineStats, GenerationRequest,
                                   RequestOutput, SamplingParams)
+from repro.serving.pool import PagedPool, SlotPool
 
 __all__ = ["Engine", "GenerationRequest", "SamplingParams", "RequestOutput",
-           "EngineStats", "ServingConfig"]
+           "EngineStats", "ServingConfig", "SlotPool", "PagedPool"]

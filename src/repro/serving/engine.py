@@ -1,16 +1,27 @@
 """Continuous-batching serving engine.
 
-ONE compiled decode step (``train.steps.build_decode_slots``) serves a
-continuously changing request mix over a fixed-capacity slot pool:
+ONE compiled decode step (``train.steps.build_decode_slots`` /
+``build_paged_step``) serves a continuously changing request mix over a
+fixed-capacity KV pool:
 
-  * admission — a waiting request is prefilled into any free slot
-    (``build_prefill_slot`` + ``pool.write_slot``) between decode steps,
-    while other slots are mid-generation;
+  * admission — a waiting request is prefilled into any free slot between
+    decode steps, while other slots are mid-generation; under
+    ``kv_layout="paged"`` admission acquires the request's BLOCK footprint
+    (ceil(need/block_size) blocks) and, with ``prefill_chunk`` set, feeds
+    the prompt in fixed-size chunks so a long prompt never stalls the
+    decode batch — and pending prompts whose next chunk has the same
+    length are prefilled as ONE batched call;
   * decode — every live slot advances one token per step, each writing at
     its own cursor and masked by its own length;
-  * retirement — a slot frees on EOS or token budget, with no barrier on
-    the rest of the batch (the lockstep loop this replaces made the whole
-    batch wait for its slowest request).
+  * retirement — a slot frees on EOS or token budget (plus its KV blocks
+    in paged mode), with no barrier on the rest of the batch.
+
+KV layouts: "contiguous" is the PR 3 per-slot max_seq_len row
+(``pool.SlotPool``); "paged" is the block-pool cache (``pool.PagedPool`` /
+``repro.serving.paged``), optionally int8-quantized (``kv_dtype="int8"``:
+per-channel key scales seeded from the Quaff calibration capture — or
+probed from the first admitted prompt — per-token value scales, ~4x fewer
+KV bytes).
 
 The engine holds no model state of its own: it reads ``cfg`` / ``frozen`` /
 ``adapters`` / ``quant_state`` off the wrapped model object (duck-typed —
@@ -20,9 +31,10 @@ is later fine-tuned further picks up the new adapters automatically.
 from __future__ import annotations
 
 import collections
+import functools
 import itertools
 import time
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,16 +44,41 @@ from repro.core import peft as PEFT
 from repro.models import model as M
 from repro.models.config import ServingConfig
 from repro.serving import sampling
+from repro.serving.paged import kvquant as KVQ
 from repro.serving.params import (EngineStats, GenerationRequest,
                                   RequestOutput, SamplingParams)
-from repro.serving.pool import SlotPool
+from repro.serving.pool import PagedPool, SlotPool
 from repro.train import steps as S
 
 
-class _SlotState:
-    """Host-side bookkeeping for one occupied slot."""
+# ---------------------------------------------------------------------------
+# Compiled-step cache: ModelConfig is a frozen (hashable) dataclass, so the
+# jitted step builders memoize per cfg — every engine over the same config
+# (short-lived benchmark/test engines included) shares one trace cache
+# instead of recompiling its own.
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=64)
+def _jit_paged_step(cfg):
+    return jax.jit(S.build_paged_step(cfg))
 
-    __slots__ = ("req", "request_id", "token_ids", "prompt_len", "last_token")
+
+@functools.lru_cache(maxsize=64)
+def _jit_decode_slots(cfg):
+    return jax.jit(S.build_decode_slots(cfg))
+
+
+@functools.lru_cache(maxsize=64)
+def _jit_prefill_slot(cfg, max_seq_len: int):
+    return jax.jit(S.build_prefill_slot(cfg, max_seq_len))
+
+
+class _SlotState:
+    """Host-side bookkeeping for one occupied slot. ``remaining`` is the
+    not-yet-prefilled prompt tail (paged chunked admission) — None once the
+    request is decoding."""
+
+    __slots__ = ("req", "request_id", "token_ids", "prompt_len", "last_token",
+                 "remaining")
 
     def __init__(self, req: GenerationRequest, request_id: str, prompt_len: int):
         self.req = req
@@ -49,10 +86,15 @@ class _SlotState:
         self.token_ids: List[int] = []
         self.prompt_len = prompt_len
         self.last_token = 0
+        self.remaining: Optional[np.ndarray] = None
 
     @property
     def n_generated(self) -> int:
         return len(self.token_ids)
+
+    @property
+    def decoding(self) -> bool:
+        return self.remaining is None
 
 
 class Engine:
@@ -67,29 +109,48 @@ class Engine:
 
     ``submit``/``step`` expose the loop for callers that interleave their own
     work (the serve launcher); ``run`` drains to completion. Per-token
-    streaming: set ``GenerationRequest.on_token``.
+    streaming: set ``GenerationRequest.on_token``. Paged / quantized KV and
+    chunked prefill: ``kv_layout="paged"``, ``kv_dtype="int8"``,
+    ``prefill_chunk=N`` (see module docstring).
     """
 
     @classmethod
     def from_config(cls, model, serving: ServingConfig) -> "Engine":
         """Build from a ``models.config.ServingConfig``."""
         return cls(model, max_slots=serving.max_slots,
-                   max_seq_len=serving.max_seq_len)
+                   max_seq_len=serving.max_seq_len,
+                   kv_layout=serving.kv_layout, kv_dtype=serving.kv_dtype,
+                   block_size=serving.block_size, n_blocks=serving.n_blocks,
+                   prefill_chunk=serving.prefill_chunk)
 
-    def __init__(self, model, max_slots: int = 4, max_seq_len: int = 256):
+    def __init__(self, model, max_slots: int = 4, max_seq_len: int = 256, *,
+                 kv_layout: str = "contiguous", kv_dtype: str = "fp",
+                 block_size: int = 16, n_blocks: int = 0,
+                 prefill_chunk: int = 0):
         cfg = model.cfg
         if not M.supports_slot_decode(cfg):
             raise NotImplementedError(
                 f"Engine needs a KV-cache family (dense/moe); "
                 f"family={cfg.family!r} is not slot-poolable yet")
+        if kv_layout not in ("contiguous", "paged"):
+            raise ValueError(f"kv_layout must be 'contiguous' or 'paged', "
+                             f"got {kv_layout!r}")
+        KVQ.check_kv_dtype(kv_dtype)
+        if kv_layout != "paged":
+            if kv_dtype != "fp":
+                raise ValueError("kv_dtype='int8' needs kv_layout='paged'")
+            if prefill_chunk:
+                raise ValueError("chunked prefill (prefill_chunk > 0) needs "
+                                 "kv_layout='paged'")
+        if prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0, got {prefill_chunk}")
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_seq_len = max_seq_len
+        self.kv_layout = kv_layout
+        self.kv_dtype = kv_dtype
+        self.prefill_chunk = prefill_chunk
         self._model = model
-        self._pool = SlotPool(cfg, max_slots, max_seq_len)
-        self._decode_fn = jax.jit(S.build_decode_slots(cfg))
-        # one jitted prefill; jit re-specializes per prompt-length shape
-        self._prefill_fn = jax.jit(S.build_prefill_slot(cfg, max_seq_len))
         self._sample = sampling.make_sampler()
         self._n_prefix = PEFT.n_prefix_tokens(cfg.peft)
         self._waiting: collections.deque = collections.deque()
@@ -97,14 +158,34 @@ class Engine:
         self._finished: Dict[str, RequestOutput] = {}
         self._pending: List[str] = []               # submitted, not returned
         self._auto_id = itertools.count()
-        self.stats = EngineStats(n_slots=max_slots)
+        self._paged: Optional[PagedPool] = None
+        self._probe_fn = None                       # int8 k-scale probe
+        if kv_layout == "paged":
+            self._paged = PagedPool(cfg, max_slots, max_seq_len,
+                                    block_size=block_size, kv_dtype=kv_dtype,
+                                    n_blocks=n_blocks)
+            self._paged_fn = _jit_paged_step(cfg)
+        else:
+            self._pool = SlotPool(cfg, max_slots, max_seq_len)
+            self._decode_fn = _jit_decode_slots(cfg)
+            # one jitted prefill; jit re-specializes per prompt-length shape
+            self._prefill_fn = _jit_prefill_slot(cfg, max_seq_len)
+        self.stats = EngineStats(
+            n_slots=max_slots, kv_layout=kv_layout, kv_dtype=kv_dtype,
+            block_size=self._paged.alloc.block_size if self._paged else 0,
+            n_blocks=self._paged.alloc.n_blocks if self._paged else 0,
+            contiguous_bytes_per_request=(
+                self._paged.contiguous_bytes_equiv(1) if self._paged
+                else max_seq_len * KVQ.kv_bytes_per_token(cfg, "fp")))
 
     # ------------------------------------------------------------------
     # submission
     # ------------------------------------------------------------------
     def submit(self, req: GenerationRequest) -> str:
         """Validate + enqueue; returns the request id. Admission happens on
-        the next ``step``/``run`` — possibly mid-decode of other requests."""
+        the next ``step``/``run`` — possibly mid-decode of other requests
+        (and possibly DEFERRED under paged layout until enough blocks
+        free up; only a request that could NEVER fit is rejected here)."""
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -117,6 +198,11 @@ class Engine:
                 f"request needs {need} cache positions (prompt {prompt.size} "
                 f"+ prefix {self._n_prefix} + max_new {req.max_new_tokens}) "
                 f"but the pool is sized max_seq_len={self.max_seq_len}")
+        if self._paged is not None and \
+                self._paged.blocks_for(need) > self._paged.alloc.n_blocks:
+            raise ValueError(
+                f"request needs {self._paged.blocks_for(need)} KV blocks but "
+                f"the pool only has {self._paged.alloc.n_blocks}")
         rid = req.request_id or f"req-{next(self._auto_id)}"
         if rid in self._finished or any(
                 r is not None and r[0] == rid for r in self._waiting) or any(
@@ -131,16 +217,27 @@ class Engine:
     # engine loop
     # ------------------------------------------------------------------
     @property
+    def _n_active(self) -> int:
+        return (self._paged.n_active if self._paged is not None
+                else self._pool.n_active)
+
+    @property
     def has_work(self) -> bool:
-        return bool(self._waiting) or self._pool.n_active > 0
+        return bool(self._waiting) or self._n_active > 0
 
     def step(self) -> bool:
-        """One engine iteration: admit into free slots, then one batched
-        decode step. Returns ``has_work``."""
-        while self._waiting and self._pool.n_free:
-            self._admit_one()
-        if self._pool.n_active:
-            self._decode_once()
+        """One engine iteration: admit into free slots, advance prefill
+        chunks (paged), then one batched decode step. Returns ``has_work``."""
+        if self._paged is not None:
+            self._admit_paged()
+            self._prefill_paged_chunks()
+            self._decode_once_paged()
+            self._snapshot_pool_stats()
+        else:
+            while self._waiting and self._pool.n_free:
+                self._admit_one()
+            if self._pool.n_active:
+                self._decode_once()
         return self.has_work
 
     def run(self, requests: Iterable[GenerationRequest] = ()
@@ -170,7 +267,7 @@ class Engine:
         return self._finished.get(request_id)
 
     # ------------------------------------------------------------------
-    # internals
+    # shared internals
     # ------------------------------------------------------------------
     def _sample_one(self, logits_row, sp: SamplingParams, token_index: int):
         tok = self._sample(
@@ -181,62 +278,6 @@ class Engine:
             sampling.request_key(sp, token_index)[None],
         )
         return int(tok[0])
-
-    def _admit_one(self):
-        rid, req, prompt = self._waiting.popleft()
-        slot = self._pool.acquire()
-        m = self._model
-        t0 = time.perf_counter()
-        logits, row_caches = self._prefill_fn(
-            m.frozen, m.adapters, m.quant_state, jnp.asarray(prompt[None, :]))
-        self._pool.admit(row_caches, slot)
-        tok = self._sample_one(logits, req.sampling, 0)
-        self.stats.prefill_time_s += time.perf_counter() - t0
-        self.stats.prefills += 1
-
-        st = _SlotState(req, rid, prompt.size)
-        self._slots[slot] = st
-        self._emit_token(st, slot, tok)
-
-    def _decode_once(self):
-        m = self._model
-        b = self.max_slots
-        tokens = np.zeros((b, 1), np.int32)
-        positions = np.zeros((b,), np.int32)
-        temps = np.zeros((b,), np.float32)
-        top_ks = np.zeros((b,), np.int32)
-        top_ps = np.ones((b,), np.float32)
-        keys = [None] * b
-        active = []
-        for i, st in enumerate(self._slots):
-            if st is None:
-                keys[i] = jax.random.PRNGKey(0)
-                continue
-            active.append(i)
-            sp = st.req.sampling
-            tokens[i, 0] = st.last_token
-            # the fed-back token is generated token #n_generated (1-based):
-            # its RoPE position is prompt_len + n_generated - 1, matching the
-            # lockstep generate loop's ``prompt_len + i``
-            positions[i] = st.prompt_len + st.n_generated - 1
-            temps[i] = sp.temperature
-            top_ks[i] = sp.top_k
-            top_ps[i] = sp.top_p
-            keys[i] = sampling.request_key(sp, st.n_generated)
-
-        t0 = time.perf_counter()
-        logits, self._pool.caches = self._decode_fn(
-            m.frozen, m.adapters, m.quant_state, self._pool.caches,
-            jnp.asarray(tokens), jnp.asarray(positions))
-        toks = np.asarray(self._sample(
-            logits, jnp.asarray(temps), jnp.asarray(top_ks),
-            jnp.asarray(top_ps), jnp.stack(keys)))
-        self.stats.decode_time_s += time.perf_counter() - t0
-        self.stats.decode_steps += 1
-        self.stats.busy_slot_steps += len(active)
-
-        for i in active:
-            self._emit_token(self._slots[i], i, int(toks[i]))
 
     def _emit_token(self, st: _SlotState, slot: int, tok: int):
         st.token_ids.append(tok)
@@ -253,5 +294,208 @@ class Engine:
             request_id=st.request_id, prompt_len=st.prompt_len,
             token_ids=st.token_ids, finish_reason=reason)
         self._slots[slot] = None
-        self._pool.release(slot)
+        if self._paged is not None:
+            table = self._paged.tables[slot]
+            self.stats.kv_bytes_per_request_sum += (
+                table.capacity * self._paged.bytes_per_token())
+            self._paged.release(slot)
+        else:
+            self._pool.release(slot)
         self.stats.requests_completed += 1
+
+    # ------------------------------------------------------------------
+    # contiguous layout
+    # ------------------------------------------------------------------
+    def _admit_one(self):
+        rid, req, prompt = self._waiting.popleft()
+        slot = self._pool.acquire()
+        m = self._model
+        t0 = time.perf_counter()
+        logits, row_caches = self._prefill_fn(
+            m.frozen, m.adapters, m.quant_state, jnp.asarray(prompt[None, :]))
+        self._pool.admit(row_caches, slot)
+        tok = self._sample_one(logits, req.sampling, 0)
+        self.stats.prefill_time_s += time.perf_counter() - t0
+        self.stats.prefills += 1
+        self.stats.prefill_batches += 1
+
+        st = _SlotState(req, rid, prompt.size)
+        self._slots[slot] = st
+        self._emit_token(st, slot, tok)
+
+    def _decode_batch_arrays(self, decoding: List[int]):
+        """Per-slot host arrays for one batched decode call: fed-back
+        tokens, RoPE positions and sampling-parameter rows (free and
+        mid-prefill slots ride along with don't-care rows).
+
+        The fed-back token is generated token #n_generated (1-based): its
+        RoPE position is prompt_len + n_generated - 1, matching the
+        lockstep generate loop's ``prompt_len + i``."""
+        b = self.max_slots
+        tokens = np.zeros((b, 1), np.int32)
+        positions = np.zeros((b,), np.int32)
+        temps = np.zeros((b,), np.float32)
+        top_ks = np.zeros((b,), np.int32)
+        top_ps = np.ones((b,), np.float32)
+        keys = [jax.random.PRNGKey(0)] * b
+        for i in decoding:
+            st = self._slots[i]
+            sp = st.req.sampling
+            tokens[i, 0] = st.last_token
+            positions[i] = st.prompt_len + st.n_generated - 1
+            temps[i] = sp.temperature
+            top_ks[i] = sp.top_k
+            top_ps[i] = sp.top_p
+            keys[i] = sampling.request_key(sp, st.n_generated)
+        return tokens, positions, temps, top_ks, top_ps, keys
+
+    def _decode_once(self):
+        m = self._model
+        active = [i for i, st in enumerate(self._slots) if st is not None]
+        tokens, positions, temps, top_ks, top_ps, keys = \
+            self._decode_batch_arrays(active)
+
+        t0 = time.perf_counter()
+        logits, self._pool.caches = self._decode_fn(
+            m.frozen, self._adapters_no_prefix(), m.quant_state,
+            self._pool.caches, jnp.asarray(tokens), jnp.asarray(positions))
+        toks = np.asarray(self._sample(
+            logits, jnp.asarray(temps), jnp.asarray(top_ks),
+            jnp.asarray(top_ps), jnp.stack(keys)))
+        self.stats.decode_time_s += time.perf_counter() - t0
+        self.stats.decode_steps += 1
+        self.stats.busy_slot_steps += len(active)
+
+        for i in active:
+            self._emit_token(self._slots[i], i, int(toks[i]))
+
+    # ------------------------------------------------------------------
+    # paged layout
+    # ------------------------------------------------------------------
+    def _admit_paged(self):
+        """FIFO admission into (slot + block footprint); stops at the first
+        request the pool cannot hold RIGHT NOW — it stays queued and admits
+        once retirements free enough blocks (refusal, never a crash)."""
+        while self._waiting:
+            rid, req, prompt = self._waiting[0]
+            need = prompt.size + self._n_prefix + req.max_new_tokens
+            slot = self._paged.acquire(need)
+            if slot is None:
+                self.stats.admission_deferrals += 1
+                break
+            self._waiting.popleft()
+            st = _SlotState(req, rid, prompt.size)
+            st.remaining = prompt
+            self._slots[slot] = st
+
+    def _adapters_no_prefix(self):
+        """Adapters with the prompt-PEFT virtual tokens stripped: decode
+        steps (both layouts) and continuation chunks must not re-prepend
+        the prefix — it is already in the cache from the prefill, and a
+        re-prepended prefix would also write n_prefix extra cache positions
+        per step, corrupting the slot cursor."""
+        ad = self._model.adapters
+        if isinstance(ad, dict) and "prompt" in ad:
+            return {k: v for k, v in ad.items() if k != "prompt"}
+        return ad
+
+    def _ensure_k_scales(self, prompt: np.ndarray):
+        """Seed the int8 pool's static key-channel grid: from the Quaff
+        calibration capture when the model carries one, else from a one-off
+        contiguous fp prefill of the first admitted prompt (OSSH: the hot
+        key channels it exposes are the hot channels every token hits)."""
+        scales = KVQ.k_scales_from_stats(
+            getattr(self._model, "stats", None), self.cfg)
+        if scales is None:
+            m = self._model
+            if self._probe_fn is None:
+                self._probe_fn = _jit_prefill_slot(self.cfg, self.max_seq_len)
+            _, row_caches = self._probe_fn(
+                m.frozen, m.adapters, m.quant_state,
+                jnp.asarray(prompt[None, :]))
+            scales = KVQ.k_scales_from_row_caches(jax.device_get(row_caches))
+        self._paged.seed_k_scales(scales)
+
+    def _prefill_paged_chunks(self):
+        """Advance every mid-prefill slot by one chunk. Slots whose next
+        chunk has the SAME length ride one batched call (same-length
+        admission); jit re-specializes only per distinct (batch, chunk)."""
+        pending = [i for i, st in enumerate(self._slots)
+                   if st is not None and not st.decoding]
+        if not pending:
+            return
+        if self._paged.needs_k_seed:
+            self._ensure_k_scales(self._slots[pending[0]].remaining)
+        groups: Dict[Tuple[int, bool], List[int]] = {}
+        for i in pending:
+            st = self._slots[i]
+            clen = st.remaining.size if not self.prefill_chunk else \
+                min(self.prefill_chunk, st.remaining.size)
+            first = self._paged.cursor(i) == 0
+            groups.setdefault((clen, first), []).append(i)
+        m = self._model
+        for (clen, first), rows in sorted(groups.items()):
+            t0 = time.perf_counter()
+            tokens = np.stack(
+                [self._slots[s].remaining[:clen] for s in rows])
+            # the first chunk prepends the PEFT prefix inside the forward,
+            # so it spans clen + n_prefix cache positions
+            sx = clen + (self._n_prefix if first else 0)
+            pos0 = np.asarray([self._paged.cursor(s) for s in rows], np.int32)
+            positions = pos0[:, None] + np.arange(sx, dtype=np.int32)[None, :]
+            adapters = m.adapters if first else self._adapters_no_prefix()
+            caches = self._paged.gather_caches(rows)
+            logits, new_caches = self._paged_fn(
+                m.frozen, adapters, m.quant_state, caches,
+                jnp.asarray(tokens), jnp.asarray(positions))
+            self._paged.update_from(new_caches)
+            self.stats.prefill_time_s += time.perf_counter() - t0
+            self.stats.prefill_batches += 1
+            self.stats.prefill_chunks += len(rows)
+            for r, slot in enumerate(rows):
+                st = self._slots[slot]
+                self._paged.advance(slot, sx)
+                st.remaining = st.remaining[clen:]
+                if st.remaining.size == 0:
+                    st.remaining = None
+                    self.stats.prefills += 1
+                    tok = self._sample_one(logits[r:r + 1], st.req.sampling, 0)
+                    self._emit_token(st, slot, tok)
+
+    def _decode_once_paged(self):
+        decoding = [i for i, st in enumerate(self._slots)
+                    if st is not None and st.decoding]
+        if not decoding:
+            return
+        m = self._model
+        live = [st is not None and st.decoding for st in self._slots]
+        tokens, positions, temps, top_ks, top_ps, keys = \
+            self._decode_batch_arrays(decoding)
+
+        t0 = time.perf_counter()
+        frag = self._paged.fragmentation()      # pool state THIS step uses
+        self.stats.fragmentation_sum += frag
+        self.stats.fragmentation_samples += 1
+        caches = self._paged.gather_caches(list(range(self.max_slots)),
+                                           live=live)
+        logits, new_caches = self._paged_fn(
+            m.frozen, self._adapters_no_prefix(), m.quant_state, caches,
+            jnp.asarray(tokens), jnp.asarray(positions[:, None]))
+        self._paged.update_from(new_caches)
+        toks = np.asarray(self._sample(
+            logits, jnp.asarray(temps), jnp.asarray(top_ks),
+            jnp.asarray(top_ps), jnp.stack(keys)))
+        self.stats.decode_time_s += time.perf_counter() - t0
+        self.stats.decode_steps += 1
+        self.stats.busy_slot_steps += len(decoding)
+
+        for i in decoding:
+            self._paged.advance(i, 1)
+            self._emit_token(self._slots[i], i, int(toks[i]))
+
+    def _snapshot_pool_stats(self):
+        st, pool = self.stats, self._paged
+        st.blocks_in_use = pool.alloc.n_used
+        st.peak_blocks_in_use = pool.peak_blocks_in_use
+        st.fragmentation = pool.fragmentation()
+        st.kv_bytes_in_use = pool.bytes_in_use()

@@ -1,0 +1,16 @@
+"""repro.serving.paged — block-pool KV cache with optional int8 storage.
+
+    BlockAllocator / BlockTable   free-list blocks + per-request tables
+    init_paged_pools              device pools (int8 w/ scales, or fp)
+    kv_bytes_per_token            telemetry unit for paged-vs-contiguous
+    kernels.paged_attention       Pallas block-table decode attention
+
+The engine-facing pool object (``PagedPool``) lives in
+``repro.serving.pool`` next to its contiguous sibling.
+"""
+from repro.serving.paged.blocks import TRASH_BLOCK, BlockAllocator, BlockTable
+from repro.serving.paged.kvquant import (init_paged_pools, k_scales_from_stats,
+                                         kv_bytes_per_token)
+
+__all__ = ["BlockAllocator", "BlockTable", "TRASH_BLOCK", "init_paged_pools",
+           "kv_bytes_per_token", "k_scales_from_stats"]

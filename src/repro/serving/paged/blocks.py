@@ -1,0 +1,106 @@
+"""Fixed-size KV blocks: free-list allocator + per-request block tables.
+
+A "block" is ``block_size`` cache positions across ALL layers (one block id
+indexes every layer's pool at once), so a request's whole KV footprint is
+described by one table of block ids. Block id 0 is reserved as the trash
+page: free/mid-admission slot rows point every table entry at it, so the
+batched decode step can scatter its don't-care K/V without corrupting live
+requests.
+
+Everything here is host-side bookkeeping — device pools live in
+``kvquant.init_paged_pools`` and are written through the block table by the
+paged branch of ``models.layers.attention``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+TRASH_BLOCK = 0   # block id 0 is never allocated; free rows write/read it
+
+
+class BlockAllocator:
+    """Free-list over block ids ``1..n_blocks`` (0 is the trash page).
+
+    ``acquire(n)`` hands out ``n`` ids or ``None`` when the pool cannot
+    satisfy the request right now — the engine turns that into admission
+    deferral, never a crash. Released ids return to the free list and are
+    reused lowest-id-first (keeps tables dense and tests deterministic).
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 1:
+            raise ValueError(f"n_blocks must be >= 1, got {n_blocks}")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free: List[int] = list(range(1, n_blocks + 1))
+
+    # ---- sizing ----------------------------------------------------------
+    def blocks_for(self, n_tokens: int) -> int:
+        """ceil(n_tokens / block_size) — the footprint of one request."""
+        return -(-max(n_tokens, 0) // self.block_size)
+
+    # ---- free-list -------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def can_acquire(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def acquire(self, n: int) -> Optional[List[int]]:
+        if n > len(self._free):
+            return None
+        out, self._free = self._free[:n], self._free[n:]
+        return out
+
+    def release(self, blocks: List[int]):
+        for b in blocks:
+            if not 1 <= b <= self.n_blocks:
+                raise ValueError(f"block id {b} outside pool 1..{self.n_blocks}")
+            if b in self._free:
+                raise ValueError(f"block {b} is already free")
+        self._free.extend(blocks)
+        self._free.sort()
+
+    # ---- occupancy -------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        return {"n_blocks": self.n_blocks, "block_size": self.block_size,
+                "blocks_in_use": self.n_used, "blocks_free": self.n_free,
+                "utilization": self.n_used / self.n_blocks}
+
+
+@dataclasses.dataclass
+class BlockTable:
+    """One request's view of the pool: its block ids in sequence order plus
+    the number of cache positions actually written so far (for internal-
+    fragmentation accounting: the tail of the last block is allocated but
+    unused until decode fills it)."""
+
+    blocks: List[int]
+    block_size: int
+    n_tokens: int = 0           # cache positions written so far
+
+    @property
+    def capacity(self) -> int:
+        return len(self.blocks) * self.block_size
+
+    @property
+    def waste(self) -> int:
+        """Allocated-but-unwritten positions (internal fragmentation)."""
+        return self.capacity - self.n_tokens
+
+    def as_row(self, max_pages: int) -> np.ndarray:
+        """(max_pages,) int32 row for the device-side table; entries past
+        this request's footprint point at the trash page."""
+        row = np.full((max_pages,), TRASH_BLOCK, np.int32)
+        row[:len(self.blocks)] = self.blocks
+        return row

@@ -1,0 +1,5 @@
+"""Pallas kernels owned by the paged-KV subsystem."""
+from repro.serving.paged.kernels.paged_attention import (
+    paged_attention, paged_attention_auto, paged_attention_ref)
+
+__all__ = ["paged_attention", "paged_attention_auto", "paged_attention_ref"]

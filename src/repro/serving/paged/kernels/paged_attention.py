@@ -1,0 +1,157 @@
+"""Pallas TPU decode attention over the paged KV pool: K/V are GATHERED
+through the per-request block table and dequantized in registers — the
+packed int8 pool is the only thing that ever leaves HBM, so decode's KV
+traffic drops ~4x vs an fp32 contiguous row on top of the paging win.
+
+How the gather works: the grid is (request, kv_head, page) and the K/V/
+v-scale BlockSpec index maps read the scalar-prefetched block table —
+``lambda b, h, p, bt, cl: (bt[b, p], 0, h, 0)`` — so the DMA engine walks
+each request's (possibly non-contiguous) block list directly; the kernel
+body never sees a block id. Pages run innermost and sequential, carrying a
+flash-style online softmax (running max / normalizer / accumulator in VMEM
+scratch); positions at or past the request's context length — including
+every slot of a trash page — are masked before the max.
+
+All operands inside the body are 2D (g x hd queries, block_size x hd keys)
+so the dots lower cleanly to the MXU; dequant is one VPU multiply by the
+(1, hd) static key-scale row / (block_size, 1) per-token value-scale
+column, with fp passthrough just feeding ones.
+
+Wrappers follow the int4 kernels' CPU story: ``interpret=`` plus the
+``REPRO_PALLAS_INTERPRET=1`` override (kernels.common.interpret_mode), and
+``paged_attention_auto`` interprets off-TPU. ``paged_attention_ref`` is the
+plain-jnp oracle the tests compare against — the same gather/dequant math
+``models.layers.attention``'s paged branch inlines.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_mode
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, cl_ref, q_ref, k_ref, v_ref, ksc_ref, vsc_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, pages: int, block_size: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                     # (g, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32) * ksc_ref[...]   # (bs, hd) dequant
+    v = v_ref[0, :, 0].astype(jnp.float32) * vsc_ref[0]     # (bs, hd)
+
+    s = q @ k.T / math.sqrt(q.shape[-1])                    # (g, bs)
+    pos = p * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(pos < cl_ref[b], s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    probs = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_prev * alpha + jnp.sum(probs, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + probs @ v
+    m_ref[...] = m_cur
+
+    @pl.when(p == pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(
+    q: jnp.ndarray,             # (B, kv_heads, group, head_dim) f32
+    k_pool: jnp.ndarray,        # (n_pool, block_size, kv_heads, hd) int8|fp
+    v_pool: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, pages) int32 into the pool's row axis
+    context_lens: jnp.ndarray,  # (B,) int32 valid KV positions per request
+    k_scale: jnp.ndarray,       # (kv_heads, hd) f32 — ones for fp pools
+    v_scale: jnp.ndarray,       # (n_pool, block_size, kv_heads) f32
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """One decode step of block-table attention -> (B, kv_heads, group, hd)
+    f32. Free rows (context_len 0) produce finite don't-care output."""
+    interpret = interpret_mode(interpret)
+    bsz, kh, g, hd = q.shape
+    bs = k_pool.shape[1]
+    pages = block_tables.shape[1]
+    grid = (bsz, kh, pages)
+    spec_kv = pl.BlockSpec((1, bs, 1, hd),
+                           lambda b, h, p, bt, cl: (bt[b, p], 0, h, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,              # block_tables, context_lens
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, p, bt, cl: (b, h, 0, 0)),
+            spec_kv,                                                    # k
+            spec_kv,                                                    # v
+            pl.BlockSpec((1, hd), lambda b, h, p, bt, cl: (h, 0)),      # Dk
+            pl.BlockSpec((1, bs, 1),
+                         lambda b, h, p, bt, cl: (bt[b, p], 0, h)),     # Dv
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b, h, p, bt, cl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),        # running max
+            pltpu.VMEM((g, 1), jnp.float32),        # normalizer
+            pltpu.VMEM((g, hd), jnp.float32),       # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, pages=pages, block_size=bs),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, kh, g, hd), jnp.float32),
+        interpret=interpret,
+    )(block_tables, context_lens, q, k_pool, v_pool, k_scale, v_scale)
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_tables, context_lens,
+                        k_scale=None, v_scale=None) -> jnp.ndarray:
+    """Plain-jnp oracle: gather pages, dequantize, full masked softmax."""
+    bsz, kh, g, hd = q.shape
+    bs = k_pool.shape[1]
+    t = block_tables.shape[1] * bs
+    k = k_pool[block_tables].astype(jnp.float32)    # (B, P, bs, kh, hd)
+    v = v_pool[block_tables].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale
+    if v_scale is not None:
+        v = v * v_scale[block_tables][..., None]
+    k = k.reshape(bsz, t, kh, hd)
+    v = v.reshape(bsz, t, kh, hd)
+    s = jnp.einsum("bkgh,btkh->bkgt", q.astype(jnp.float32), k)
+    s = s / math.sqrt(hd)
+    valid = jnp.arange(t)[None, :] < context_lens[:, None]  # (B, T)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgt,btkh->bkgh", probs, v)
+
+
+def paged_attention_auto(q, k_pool, v_pool, block_tables, context_lens,
+                         k_scale=None, v_scale=None) -> jnp.ndarray:
+    """Entry point for the decode hot path (models.layers routes here under
+    ``REPRO_PAGED_PALLAS=1``): compiled on TPU, interpret elsewhere. Fills
+    unit scales for fp pools so the kernel signature stays uniform."""
+    kh, hd = q.shape[1], q.shape[3]
+    if k_scale is None:
+        k_scale = jnp.ones((kh, hd), jnp.float32)
+    if v_scale is None:
+        v_scale = jnp.ones(k_pool.shape[:3], jnp.float32)
+    interpret = jax.default_backend() != "tpu"
+    return paged_attention(q, k_pool, v_pool, block_tables, context_lens,
+                           k_scale, v_scale, interpret=interpret)

@@ -1,0 +1,137 @@
+"""Quantized (or fp-passthrough) storage for the paged KV pool.
+
+INT8 layout (KIVI-style, justified by the paper's OSSH):
+
+  * K — per-CHANNEL scales, one per (kv_head, head_dim) channel, held
+    STATIC for the pool's lifetime. Key outliers live in fixed channels
+    (the same spatial stability Quaff exploits for activations), so a
+    static per-channel grid absorbs them without per-token rescaling —
+    and a static grid is what makes in-kernel dequant free: the scale row
+    rides next to the block in VMEM. Scales are seeded from the Quaff
+    calibration capture (``StatsScope`` absmax of the rotated K, rides in
+    ``model.stats``) or, absent calibration, probed from the first
+    admitted prompt's fp prefill.
+  * V — per-TOKEN scales (one per (position, kv_head)), computed at write
+    time from the token itself and stored alongside the pool; no seeding
+    needed, and value outliers (which are token-local, not channel-local)
+    are captured exactly.
+
+``kv_dtype="fp"`` skips all of it: pools are activation-dtype and the
+scale leaves are absent, which statically routes ``models.layers`` and the
+Pallas kernel onto the passthrough path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+INT8_MAX = 127.0
+KV_DTYPES = ("fp", "int8")
+
+
+def check_kv_dtype(kv_dtype: str) -> str:
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, "
+                         f"got {kv_dtype!r}")
+    return kv_dtype
+
+
+# ---------------------------------------------------------------------------
+# Pool construction
+# ---------------------------------------------------------------------------
+def init_paged_pools(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     kv_dtype: str) -> Dict[str, jnp.ndarray]:
+    """Device arrays of the paged cache, stacked over layers. Row 0 of every
+    pool is the trash page (blocks.TRASH_BLOCK) — allocatable ids are
+    1..n_blocks, so pools carry ``n_blocks + 1`` rows.
+
+    int8: k_scale (L, kv_heads, head_dim) starts at 1.0 (placeholder until
+    seeded); v_scale (L, n_blocks+1, block_size, kv_heads) is written
+    per-token next to the values."""
+    check_kv_dtype(kv_dtype)
+    kh, hd, nl = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    shape = (nl, n_blocks + 1, block_size, kh, hd)
+    if kv_dtype == "int8":
+        return {
+            "k_pool": jnp.zeros(shape, jnp.int8),
+            "v_pool": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.ones((nl, kh, hd), jnp.float32),
+            "v_scale": jnp.ones(shape[:-1], jnp.float32),
+        }
+    act = jnp.dtype(cfg.act_dtype)
+    return {"k_pool": jnp.zeros(shape, act), "v_pool": jnp.zeros(shape, act)}
+
+
+def kv_bytes_per_token(cfg: ModelConfig, kv_dtype: str) -> int:
+    """KV bytes one cache position costs across all layers (k + v + any
+    per-token scale rows) — the unit of the paged-vs-contiguous telemetry."""
+    kh, hd, nl = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+    if kv_dtype == "int8":
+        return nl * (2 * kh * hd * 1 + kh * 4)      # int8 k+v, f32 v scale
+    return nl * 2 * kh * hd * jnp.dtype(cfg.act_dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize (shared by models.layers and the Pallas kernel ref)
+# ---------------------------------------------------------------------------
+def quantize_k(k: jnp.ndarray, k_scale: jnp.ndarray) -> jnp.ndarray:
+    """k (..., kv_heads, head_dim) f32 -> int8 under the static per-channel
+    grid; values past the seeded absmax clip (OSSH: rare by construction)."""
+    q = jnp.round(k.astype(jnp.float32) / k_scale)
+    return jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+
+
+def quantize_v(v: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """v (..., kv_heads, head_dim) -> (int8 values, (..., kv_heads) f32
+    per-token scales)."""
+    absmax = jnp.max(jnp.abs(v.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax, 1e-8) / INT8_MAX
+    q = jnp.round(v.astype(jnp.float32) / scale[..., None])
+    return jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8), scale
+
+
+def dequant_k(qk: jnp.ndarray, k_scale: jnp.ndarray) -> jnp.ndarray:
+    return qk.astype(jnp.float32) * k_scale
+
+
+def dequant_v(qv: jnp.ndarray, v_scale: jnp.ndarray) -> jnp.ndarray:
+    return qv.astype(jnp.float32) * v_scale[..., None]
+
+
+# ---------------------------------------------------------------------------
+# Key-channel scale seeding
+# ---------------------------------------------------------------------------
+def k_scales_from_stats(stats: Any, cfg: ModelConfig
+                        ) -> Optional[jnp.ndarray]:
+    """(L, kv_heads, head_dim) scales from the Quaff calibration artifacts
+    (``QuaffModel.stats``): the ``StatsScope`` capture pass records the
+    rotated K's per-channel absmax next to the per-linear input absmax the
+    outlier criterion uses, so the KV grid is pinned by the SAME calibration
+    set that fixes the outlier channels. Returns None when the capture
+    predates the kv entry (or no calibration ran)."""
+    if stats is None:
+        return None
+    absmax_tree = stats[0] if isinstance(stats, tuple) else stats
+    try:
+        k_absmax = absmax_tree["attn"]["kv"]["k"]
+    except (KeyError, TypeError, IndexError):
+        return None
+    k_absmax = np.asarray(k_absmax, np.float32)
+    if k_absmax.shape != (cfg.n_layers, cfg.n_kv_heads, cfg.head_dim):
+        return None
+    return jnp.asarray(np.maximum(k_absmax, 1e-8) / INT8_MAX)
+
+
+def k_scales_from_row_caches(row_caches: Dict[str, jnp.ndarray]
+                             ) -> jnp.ndarray:
+    """Probe fallback: per-channel absmax of a contiguous fp prefill's K
+    buffers ((L, 1, T, kh, hd), zero-padded past the prompt — zeros never
+    win an absmax). OSSH makes one prompt a usable seed: the hot channels
+    it exposes are the hot channels every later token hits."""
+    k = np.asarray(row_caches["k"], np.float32)
+    absmax = np.max(np.abs(k), axis=(1, 2))                 # (L, kh, hd)
+    return jnp.asarray(np.maximum(absmax, 1e-8) / INT8_MAX)

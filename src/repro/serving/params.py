@@ -70,7 +70,15 @@ class EngineStats:
     ``slot_steps`` (decode steps x pool width) is the cost a LOCKSTEP decoder
     of the same width would also pay — continuous batching wins by finishing
     the same workload in fewer of them. ``occupancy`` is the fraction of
-    those slot-steps that decoded a live request."""
+    those slot-steps that decoded a live request.
+
+    Block-pool telemetry (``kv_layout="paged"`` engines): ``prefills``
+    counts requests fully admitted, ``prefill_batches`` compiled prefill
+    calls (batched same-length admission makes batches < prefills), and
+    ``prefill_chunks`` per-request chunk advances; ``fragmentation`` is the
+    allocated-but-unwritten fraction of in-use blocks; the ``kv_bytes_*``
+    fields compare against what the contiguous layout (one fp max_seq_len
+    row per request) would pin."""
 
     n_slots: int = 0
     requests_submitted: int = 0
@@ -81,6 +89,41 @@ class EngineStats:
     busy_slot_steps: int = 0
     prefill_time_s: float = 0.0
     decode_time_s: float = 0.0
+
+    # KV layout + block-pool telemetry (paged engines)
+    kv_layout: str = "contiguous"
+    kv_dtype: str = "fp"
+    block_size: int = 0
+    n_blocks: int = 0
+    blocks_in_use: int = 0
+    peak_blocks_in_use: int = 0
+    fragmentation: float = 0.0              # current gauge (0 when drained)
+    fragmentation_sum: float = 0.0          # sampled before each decode step
+    fragmentation_samples: int = 0
+    kv_bytes_in_use: int = 0
+    kv_bytes_per_request_sum: int = 0       # allocated bytes, completed reqs
+    contiguous_bytes_per_request: int = 0   # fp max_seq_len row equivalent
+    prefill_batches: int = 0
+    prefill_chunks: int = 0
+    admission_deferrals: int = 0
+
+    @property
+    def mean_fragmentation(self) -> float:
+        """Mean allocated-but-unwritten fraction over decode steps (the
+        ``fragmentation`` gauge reads 0 once a run drains — this is the
+        number to report for a completed workload)."""
+        return self.fragmentation_sum / max(self.fragmentation_samples, 1)
+
+    @property
+    def kv_bytes_per_request(self) -> float:
+        """Mean KV bytes one completed request pinned (paged: its block
+        footprint; meaningful after at least one retirement)."""
+        return self.kv_bytes_per_request_sum / max(self.requests_completed, 1)
+
+    @property
+    def kv_bytes_saved_vs_contiguous(self) -> float:
+        """Per-request bytes the paged layout saved vs a contiguous fp row."""
+        return self.contiguous_bytes_per_request - self.kv_bytes_per_request
 
     @property
     def slot_steps(self) -> int:
@@ -103,12 +146,13 @@ class EngineStats:
         return self.tokens_generated / max(total, 1e-9)
 
     def as_dict(self) -> dict:
-        return {
+        out = {
             "n_slots": self.n_slots,
             "requests_submitted": self.requests_submitted,
             "requests_completed": self.requests_completed,
             "tokens_generated": self.tokens_generated,
             "prefills": self.prefills,
+            "prefill_batches": self.prefill_batches,
             "decode_steps": self.decode_steps,
             "slot_steps": self.slot_steps,
             "busy_slot_steps": self.busy_slot_steps,
@@ -117,4 +161,24 @@ class EngineStats:
             "decode_time_s": self.decode_time_s,
             "decode_tokens_per_s": self.decode_tokens_per_s,
             "tokens_per_s": self.tokens_per_s,
+            "kv_layout": self.kv_layout,
+            "kv_dtype": self.kv_dtype,
         }
+        if self.kv_layout == "paged":
+            out.update({
+                "block_size": self.block_size,
+                "n_blocks": self.n_blocks,
+                "blocks_in_use": self.blocks_in_use,
+                "peak_blocks_in_use": self.peak_blocks_in_use,
+                "fragmentation": round(self.fragmentation, 4),
+                "mean_fragmentation": round(self.mean_fragmentation, 4),
+                "kv_bytes_in_use": self.kv_bytes_in_use,
+                "kv_bytes_per_request": self.kv_bytes_per_request,
+                "contiguous_bytes_per_request":
+                    self.contiguous_bytes_per_request,
+                "kv_bytes_saved_vs_contiguous":
+                    self.kv_bytes_saved_vs_contiguous,
+                "prefill_chunks": self.prefill_chunks,
+                "admission_deferrals": self.admission_deferrals,
+            })
+        return out

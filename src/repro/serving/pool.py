@@ -1,21 +1,32 @@
-"""Fixed-capacity slot-based KV pool.
+"""Fixed-capacity KV pools behind the serving engine.
 
-The pool is ONE device pytree shaped like ``models.init_slot_caches``:
-k/v buffers (L, n_slots, max_seq_len, kv_heads, head_dim) plus per-slot
-write cursors (L, n_slots). Admission splices a freshly prefilled row into a
-free slot with one compiled ``write_slot``; retirement is pure host-side
-bookkeeping (the slot's buffer is fully overwritten by the next admission,
-and its cursor keeps masking it consistently meanwhile).
+``SlotPool`` (contiguous layout) is ONE device pytree shaped like
+``models.init_slot_caches``: k/v buffers (L, n_slots, max_seq_len,
+kv_heads, head_dim) plus per-slot write cursors (L, n_slots). Admission
+splices a freshly prefilled row into a free slot with one compiled
+``write_slot``; retirement is pure host-side bookkeeping (the slot's
+buffer is fully overwritten by the next admission, and its cursor keeps
+masking it consistently meanwhile).
+
+``PagedPool`` (block layout, ``repro.serving.paged``) replaces the
+per-slot rows with a shared pool of fixed-size blocks: a request holds
+ceil(need / block_size) blocks through a per-request block table, so
+short requests stop paying for worst-case rows, and ``kv_dtype="int8"``
+stores the pool quantized (~4x fewer KV bytes on top of the paging win).
 """
 from __future__ import annotations
 
-from typing import List, Optional
+import math
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.serving.paged import blocks as PB
+from repro.serving.paged import kvquant as KVQ
 
 
 def write_slot(pool, row, slot):
@@ -72,3 +83,143 @@ class SlotPool:
     def admit(self, row_caches, slot: int):
         """Write a prefilled request row into ``slot`` (one compiled call)."""
         self.caches = self._write(self.caches, row_caches, slot)
+
+
+class PagedPool:
+    """Block-pool KV cache: device pools + host-side block allocator and
+    per-slot ``BlockTable``s.
+
+    A slot admission acquires the slot AND its whole block footprint
+    atomically (``acquire`` returns None on either shortage — the engine
+    defers, never crashes); retirement returns both. The device side is
+    slot-agnostic — pools are indexed by block id only — so any subset of
+    slots can ride one compiled call: ``gather_caches(rows)`` assembles the
+    cache pytree for those rows (tables + cursors broadcast over layers, the
+    per-layer leading axis ``lax.scan`` slices), and ``update_from`` takes
+    the written pools back. Rows without a live table read/write the trash
+    page (block 0) and are masked by cursor 0."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_seq_len: int, *,
+                 block_size: int = 16, kv_dtype: str = "fp",
+                 n_blocks: int = 0):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        KVQ.check_kv_dtype(kv_dtype)
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq_len = max_seq_len
+        self.kv_dtype = kv_dtype
+        self.max_pages = max(1, math.ceil(max_seq_len / block_size))
+        n_blocks = n_blocks or n_slots * self.max_pages
+        self.alloc = PB.BlockAllocator(n_blocks, block_size)
+        self.pools = KVQ.init_paged_pools(cfg, n_blocks, block_size, kv_dtype)
+        self.tables: List[Optional[PB.BlockTable]] = [None] * n_slots
+        self._free_slots: List[int] = list(range(n_slots))
+        self._k_seeded = kv_dtype != "int8"
+        self.peak_blocks_in_use = 0
+
+    # ---- host bookkeeping ------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free_slots)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return self.alloc.blocks_for(n_tokens)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        return bool(self._free_slots) and self.alloc.can_acquire(
+            self.blocks_for(n_tokens))
+
+    def acquire(self, n_tokens: int) -> Optional[int]:
+        """Slot + block footprint for one request, or None (defer)."""
+        if not self._free_slots:
+            return None
+        blocks = self.alloc.acquire(self.blocks_for(n_tokens))
+        if blocks is None:
+            return None
+        slot = self._free_slots.pop(0)
+        self.tables[slot] = PB.BlockTable(blocks, self.alloc.block_size)
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.alloc.n_used)
+        return slot
+
+    def release(self, slot: int):
+        table = self.tables[slot]
+        if table is None:
+            raise ValueError(f"slot {slot} is already free")
+        self.alloc.release(table.blocks)
+        self.tables[slot] = None
+        self._free_slots.append(slot)
+        self._free_slots.sort()
+
+    def advance(self, slot: int, n_tokens: int):
+        """Record ``n_tokens`` more cache positions written for ``slot``."""
+        self.tables[slot].n_tokens += n_tokens
+
+    def cursor(self, slot: int) -> int:
+        t = self.tables[slot]
+        return 0 if t is None else t.n_tokens
+
+    # ---- k-scale seeding (int8) ------------------------------------------
+    @property
+    def needs_k_seed(self) -> bool:
+        return not self._k_seeded
+
+    def seed_k_scales(self, scales: jnp.ndarray):
+        self.pools["k_scale"] = jnp.asarray(scales, jnp.float32)
+        self._k_seeded = True
+
+    # ---- device call assembly --------------------------------------------
+    def gather_caches(self, rows: List[int],
+                      live: Optional[List[bool]] = None
+                      ) -> Dict[str, jnp.ndarray]:
+        """Cache pytree for one compiled call over ``rows``. ``live[i]``
+        False masks row i onto the trash page at cursor 0 (free or
+        mid-prefill slots riding a decode batch must not touch their
+        blocks)."""
+        nl = self.cfg.n_layers
+        if live is None:
+            live = [True] * len(rows)
+        bt = np.stack([
+            self.tables[s].as_row(self.max_pages)
+            if live[j] and self.tables[s] is not None
+            else np.full((self.max_pages,), PB.TRASH_BLOCK, np.int32)
+            for j, s in enumerate(rows)])
+        pos = np.asarray([self.cursor(s) if live[j] else 0
+                          for j, s in enumerate(rows)], np.int32)
+        caches = dict(self.pools)
+        caches["block_tables"] = jnp.asarray(
+            np.broadcast_to(bt, (nl,) + bt.shape))
+        caches["pos"] = jnp.asarray(np.broadcast_to(pos, (nl, len(rows))))
+        return caches
+
+    def update_from(self, new_caches: Dict[str, jnp.ndarray]):
+        """Take the written pool leaves back (tables/cursors stay host-side;
+        the static k_scale rides along unchanged)."""
+        for key in self.pools:
+            self.pools[key] = new_caches[key]
+
+    # ---- telemetry -------------------------------------------------------
+    def bytes_per_token(self) -> int:
+        return KVQ.kv_bytes_per_token(self.cfg, self.kv_dtype)
+
+    def bytes_in_use(self) -> int:
+        per_blk = self.alloc.block_size * self.bytes_per_token()
+        return sum(len(t.blocks) * per_blk
+                   for t in self.tables if t is not None)
+
+    def contiguous_bytes_equiv(self, n_requests: int) -> int:
+        """What the PR 3 layout (one fp max_seq_len row each) would hold."""
+        fp_tok = KVQ.kv_bytes_per_token(self.cfg, "fp")
+        return n_requests * self.max_seq_len * fp_tok
+
+    def fragmentation(self) -> float:
+        """Allocated-but-unwritten fraction of the in-use blocks (internal
+        fragmentation: the tail of each request's last block)."""
+        active = [t for t in self.tables if t is not None]
+        cap = sum(t.capacity for t in active)
+        return sum(t.waste for t in active) / cap if cap else 0.0

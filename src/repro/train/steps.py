@@ -224,6 +224,30 @@ def build_prefill_slot(cfg: ModelConfig, cache_len: int):
     return prefill_slot
 
 
+def build_paged_step(cfg: ModelConfig):
+    """paged_step(frozen, adapters, quant_state, caches, tokens, positions)
+    -> (last-token logits (B, vocab), new caches).
+
+    ONE builder serves every paged-KV call shape: decode (tokens (n_slots,
+    1)) and chunked prefill (tokens (B_group, chunk)) — the block-pool
+    caches carry per-row block tables + write cursors, so the same forward
+    writes each row's tokens wherever its table says. ``positions`` is
+    (B, S) absolute RoPE positions (chunk rows start mid-prompt). Under jit
+    the function re-specializes per (B, S) — chunked admission groups
+    same-length rows precisely so this stays a handful of shapes.
+
+    Chunked prefill + prompt-PEFT: the engine passes adapters WITHOUT the
+    "prompt" entry for continuation chunks, so the virtual-token prefix is
+    prepended exactly once (on the first chunk)."""
+    def paged_step(frozen, adapters, quant_state, caches, tokens, positions):
+        out = M.forward(
+            frozen, adapters, quant_state, tokens, cfg,
+            caches=caches, positions=positions)
+        return out.logits[:, -1, :], out.caches
+
+    return paged_step
+
+
 def build_decode_slots(cfg: ModelConfig):
     """decode_slots(frozen, adapters, quant_state, caches, tokens, positions)
     -> (logits (n_slots, vocab), new_caches).

@@ -2,12 +2,18 @@
 lockstep decode loop on the same workload, via the real calibration +
 conversion pipeline (micro Phi3 stand-in).
 
-CLI (the CI serve-smoke job runs ``--tiny --json bench_serving.json`` and a
-paged sibling ``--tiny --kv-layout paged --json bench_serving_paged.json``):
+CLI (the CI serve-smoke job runs ``--tiny --json bench_serving.json``, a
+paged sibling ``--tiny --kv-layout paged --json bench_serving_paged.json``
+and per-family siblings ``--tiny --family ssm|hybrid`` gated on lockstep
+parity):
 
   --tiny             CI smoke shapes (seconds on CPU)
   --json PATH        dump rows + engine stats as a JSON artifact
-  --mode MODE        quant mode to serve (default quaff)
+  --mode MODE        quant mode to serve (default quaff; dense only)
+  --family F         dense (default) | ssm | hybrid | encdec — serve that
+                     family's reduced arch through the engine and emit
+                     tokens/s + state-bytes rows (incl. an int8
+                     recurrent-state sibling for ssm/hybrid)
   --kv-layout L      contiguous (default) | paged — block-pool KV cache
   --kv-dtype D       fp (default) | int8 — paged-only quantized KV
   --prefill-chunk N  paged-only chunked admission (default plen/2 when paged)
@@ -48,6 +54,76 @@ def _lockstep_tokens(model, prompts, max_new):
         tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         out.append(tok)
     return np.asarray(jnp.concatenate(out, axis=1))
+
+
+def build_family_model(family: str):
+    """Reduced arch of a non-dense family, quaff placeholder-init — the
+    SAME model tests/test_serving_families drives (shared recipe in
+    ``repro.configs.reduced_family_demo``)."""
+    from repro.configs import reduced_family_demo
+    return api.prepare(reduced_family_demo(family))
+
+
+def run_family(family: str, tiny: bool = False):
+    """Per-family engine rows: lockstep parity gate, tokens/s, state bytes
+    (+ an int8 recurrent-state sibling for the ssm/hybrid families)."""
+    n_req, slots, plen, max_new = (4, 2, 8, 8) if tiny else (8, 4, 16, 16)
+    model = build_family_model(family)
+    cfg = model.cfg
+    prompts = np.asarray(Loader(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=plen,
+        batch_size=n_req)).batch(0)["tokens"])
+    rows, extra = [], {}
+    extra["workload"] = {"family": family, "n_requests": n_req,
+                         "n_slots": slots, "prompt_len": plen,
+                         "max_new": max_new, "max_seq_len": plen + max_new}
+
+    ref = _lockstep_tokens(model, prompts, max_new)
+    eng = model.engine(max_slots=n_req, max_seq_len=plen + max_new,
+                       fresh=True)
+    outs = eng.run([GenerationRequest(p, max_new_tokens=max_new)
+                    for p in prompts])
+    got = np.asarray([o.token_ids for o in outs])
+    parity = bool(np.array_equal(ref, got))
+    rows.append(("serving_engine_greedy_parity",
+                 (eng.stats.prefill_time_s + eng.stats.decode_time_s) * 1e6,
+                 f"parity={parity} family={family}"))
+
+    # mixed budgets over a tight pool: the continuous-batching win
+    short = max(1, max_new // 4)
+    eng2 = model.engine(max_slots=slots, max_seq_len=plen + max_new,
+                        fresh=True)
+    eng2.run([GenerationRequest(prompts[i],
+                                max_new_tokens=short if i % 2 else max_new)
+              for i in range(n_req)])
+    st = eng2.stats
+    rows.append((
+        "serving_engine_mixed",
+        (st.prefill_time_s + st.decode_time_s) * 1e6,
+        f"slot_steps={st.slot_steps}<{n_req * max_new}=lockstep "
+        f"occupancy={st.occupancy:.2f} tok_s={st.decode_tokens_per_s:.1f}"))
+    extra["mixed_stats"] = st.as_dict()
+    rows.append((
+        f"serving_{family}_state_bytes", 0.0,
+        f"family={family} state_bytes_per_slot={st.state_bytes_per_slot} "
+        f"kv_row_equiv={st.contiguous_bytes_per_request}"))
+
+    if family in ("ssm", "hybrid"):
+        eng3 = model.engine(max_slots=slots, max_seq_len=plen + max_new,
+                            fresh=True, state_dtype="int8")
+        outs3 = eng3.run([GenerationRequest(p, max_new_tokens=max_new)
+                          for p in prompts])
+        st3 = eng3.stats
+        same = sum(int(np.array_equal(a.token_ids, b.token_ids))
+                   for a, b in zip(outs, outs3))
+        rows.append((
+            "serving_recurrent_int8_state_bytes",
+            (st3.prefill_time_s + st3.decode_time_s) * 1e6,
+            f"bytes_per_slot={st3.state_bytes_per_slot}"
+            f"<{st3.fp_state_bytes_per_slot}=fp "
+            f"streams_matching_fp={same}/{n_req}"))
+        extra["int8_state_stats"] = st3.as_dict()
+    return rows, extra
 
 
 def run(mode: str = "quaff", tiny: bool = False,
@@ -116,6 +192,11 @@ def run(mode: str = "quaff", tiny: bool = False,
         f"occupancy={st.occupancy:.2f} tok_s={st.decode_tokens_per_s:.1f}"))
     extra["mixed_stats"] = st.as_dict()
     extra["mixed_completed"] = sum(o.n_generated for o in outs2)
+    if not paged:    # paged runs carry their own KV-bytes rows below
+        rows.append((
+            "serving_dense_state_bytes", 0.0,
+            f"family=dense state_bytes_per_slot={st.state_bytes_per_slot} "
+            f"kv_row_equiv={st.contiguous_bytes_per_request}"))
 
     # ---- paged telemetry: per-request KV bytes vs the contiguous row -----
     if paged:
@@ -171,6 +252,8 @@ def main(argv=None):
     p.add_argument("--tiny", action="store_true",
                    help="CI smoke shapes (seconds on CPU)")
     p.add_argument("--mode", default="quaff")
+    p.add_argument("--family", default="dense",
+                   choices=["dense", "ssm", "hybrid", "encdec"])
     p.add_argument("--kv-layout", default="contiguous",
                    choices=["contiguous", "paged"])
     p.add_argument("--kv-dtype", default="fp", choices=["fp", "int8"])
@@ -178,9 +261,12 @@ def main(argv=None):
                    help="paged chunked admission; -1 = plen/2 default")
     p.add_argument("--json", metavar="PATH", default=None)
     args = p.parse_args(argv)
-    rows, extra = run(mode=args.mode, tiny=args.tiny,
-                      kv_layout=args.kv_layout, kv_dtype=args.kv_dtype,
-                      prefill_chunk=args.prefill_chunk)
+    if args.family != "dense":
+        rows, extra = run_family(args.family, tiny=args.tiny)
+    else:
+        rows, extra = run(mode=args.mode, tiny=args.tiny,
+                          kv_layout=args.kv_layout, kv_dtype=args.kv_dtype,
+                          prefill_chunk=args.prefill_chunk)
     for r in rows:
         print(f"{r[0]},{r[1]:.1f},{r[2]}")
     if args.json:
@@ -188,6 +274,7 @@ def main(argv=None):
             "benchmark": "bench_serving",
             "tiny": args.tiny,
             "mode": args.mode,
+            "family": args.family,
             "backend": jax.default_backend(),
             "rows": [{"name": r[0], "us_per_call": r[1], "derived": r[2]}
                      for r in rows],

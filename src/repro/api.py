@@ -19,11 +19,12 @@ plumbing.
 
 Every quant mode in the ``QuantBackend`` registry (including modes
 registered by downstream code) works through the same calls. Inference is
-backed by ``repro.serving.Engine`` — a fixed-capacity slot-based KV pool
-where one compiled decode step serves a changing request mix (greedy /
-temperature / top-k / top-p / seeded sampling, per-token streaming,
-EOS-or-budget retirement) — with a lockstep fallback for families whose
-decode state is not a poolable KV cache (hybrid/ssm/encdec).
+backed by ``repro.serving.Engine`` for EVERY family — a fixed-capacity
+slot pool of family-appropriate decode state (KV rows, recurrent
+conv/SSM/mLSTM state, or self-KV + cross-KV) where one compiled decode
+step serves a changing request mix (greedy / temperature / top-k / top-p /
+seeded sampling, per-token streaming, EOS-or-budget retirement). The old
+lockstep loop is gone; ``generate`` is engine-backed everywhere.
 """
 from __future__ import annotations
 
@@ -259,10 +260,12 @@ class QuaffModel:
     def engine(self, max_slots: int = 4, max_seq_len: int = 256,
                fresh: bool = False, **kv_opts):
         """A ``repro.serving.Engine`` over this model (continuous batching:
-        slot-pooled KV cache, mid-decode admission, per-request sampling).
-        ``kv_opts`` pass through to the engine's KV knobs — ``kv_layout=
-        "paged"``, ``kv_dtype="int8"``, ``block_size``, ``n_blocks``,
-        ``prefill_chunk`` (see ``models.config.ServingConfig``). A few
+        slot-pooled decode state for every family, mid-decode admission,
+        per-request sampling). ``kv_opts`` pass through to the engine's
+        state knobs — ``kv_layout="paged"``, ``kv_dtype="int8"``,
+        ``block_size``, ``n_blocks``, ``prefill_chunk``, ``lazy_blocks``
+        (KV families) and ``state_dtype="int8"`` (recurrent families; see
+        ``models.config.ServingConfig``). A few
         engines are cached per (max_slots, max_seq_len, kv knobs) so
         repeated one-shot uses reuse their compiled steps — oldest-evicted
         beyond ``_MAX_CACHED_ENGINES``, since each engine pins a device KV
@@ -288,52 +291,32 @@ class QuaffModel:
         return eng
 
     def generate(self, tokens, max_new: int = 32,
-                 eos_id: Optional[int] = None, pad_id: int = 0) -> jnp.ndarray:
+                 eos_id: Optional[int] = None, pad_id: int = 0,
+                 input_embeds=None) -> jnp.ndarray:
         """Batched generation: (B, S) prompts -> (B, max_new) greedy tokens.
 
         A thin wrapper over a one-shot serving engine (every prompt gets a
-        slot; rows retire independently). With ``eos_id`` set, a row stops
-        at its EOS token and the remainder is ``pad_id``-padded; with
-        ``eos_id=None`` every row spends the exact budget. Families without
-        a slot-poolable KV cache (hybrid/ssm/encdec) take the equivalent
-        lockstep loop."""
+        slot; rows retire independently) — EVERY family routes through
+        ``serving.Engine``; the old lockstep loop is gone. With ``eos_id``
+        set, a row stops at its EOS token and the remainder is
+        ``pad_id``-padded; with ``eos_id=None`` every row spends the exact
+        budget. ``input_embeds`` ((B, seq, d_model), optional) carries
+        per-row encoder frames (encdec) or patch embeddings (vlm)."""
         tokens = np.asarray(tokens)
         bsz = tokens.shape[0]
         if max_new <= 0:
             return jnp.zeros((bsz, 0), jnp.int32)
-        if not M.supports_slot_decode(self.cfg):
-            return self._generate_lockstep(tokens, max_new, eos_id, pad_id)
         from repro.core.peft import n_prefix_tokens
         from repro.serving import GenerationRequest
+        embeds = None if input_embeds is None else np.asarray(input_embeds)
         max_seq = tokens.shape[1] + n_prefix_tokens(self.cfg.peft) + max_new
+        if embeds is not None and self.cfg.family != "encdec":
+            max_seq += embeds.shape[1]      # vlm patches take cache rows
         eng = self.engine(max_slots=bsz, max_seq_len=max_seq)
-        outs = eng.run([GenerationRequest(tokens[i], max_new_tokens=max_new,
-                                          eos_id=eos_id) for i in range(bsz)])
+        outs = eng.run([GenerationRequest(
+            tokens[i], max_new_tokens=max_new, eos_id=eos_id,
+            input_embeds=None if embeds is None else embeds[i])
+            for i in range(bsz)])
         rows = [o.token_ids + [pad_id] * (max_new - o.n_generated)
                 for o in outs]
         return jnp.asarray(np.asarray(rows, np.int32))
-
-    def _generate_lockstep(self, tokens, max_new: int,
-                           eos_id: Optional[int], pad_id: int) -> jnp.ndarray:
-        """Lockstep batched greedy decode (whole batch advances together)."""
-        tokens = jnp.asarray(tokens)
-        bsz, prompt_len = tokens.shape
-        logits, caches = self.prefill({"tokens": tokens}, extra_len=max_new)
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        out = [tok]
-        finished = (tok[:, 0] == eos_id) if eos_id is not None else None
-        for i in range(max_new - 1):
-            if finished is not None and bool(jnp.all(finished)):
-                pad = jnp.full((bsz, 1), pad_id, jnp.int32)
-                out.extend([pad] * (max_new - 1 - i))
-                break
-            logits, caches = self.decode_step(caches, tok, prompt_len + i)
-            nxt = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            if finished is not None:
-                nxt = jnp.where(finished[:, None], pad_id, nxt)
-                out.append(nxt)
-                finished = jnp.logical_or(finished, nxt[:, 0] == eos_id)
-            else:
-                out.append(nxt)
-            tok = nxt
-        return jnp.concatenate(out, axis=1)

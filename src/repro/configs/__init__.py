@@ -30,3 +30,29 @@ def get_config(name: str) -> ModelConfig:
 
 def list_archs() -> List[str]:
     return list(_MODULES)
+
+
+# one representative arch per non-dense family — the per-family serving
+# tests and the bench_serving --family CI gate must drive the SAME model
+FAMILY_DEMO_ARCHS: Dict[str, str] = {
+    "ssm": "xlstm-350m",
+    "hybrid": "zamba2-1.2b",
+    "encdec": "whisper-large-v3",
+    "vlm": "pixtral-12b",
+}
+
+
+def reduced_family_demo(family: str, quant_mode: str = "quaff",
+                        lora_rank: int = 4) -> ModelConfig:
+    """The shared per-family demo recipe (reduced arch, placeholder-init
+    quant mode, small LoRA) used by tests/test_serving_families and
+    benchmarks/bench_serving so CI gates and tests validate one model."""
+    import dataclasses
+
+    from repro.core.peft import PEFTConfig
+    from repro.models.config import QuantConfig
+
+    cfg = get_config(FAMILY_DEMO_ARCHS[family]).reduced()
+    return dataclasses.replace(
+        cfg, quant=QuantConfig(mode=quant_mode),
+        peft=PEFTConfig(method="lora", lora_rank=lora_rank))

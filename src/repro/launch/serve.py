@@ -13,27 +13,28 @@ show the continuous-batching win (EngineStats vs the lockstep equivalent);
 ``--load DIR`` serves a ``QuaffModel.save`` checkpoint instead of a fresh
 random-init model.
 
-KV-cache knobs (repro.serving.paged): ``--kv-layout paged`` swaps the
-per-slot contiguous rows for the block-pool cache (``--block-size`` tokens
-per block), ``--kv-dtype int8`` stores it quantized (~4x fewer KV bytes),
-and ``--prefill-chunk N`` admits prompts N tokens at a time so long
-prompts never stall the decode batch; block-pool telemetry (blocks in
-use, fragmentation, bytes saved vs contiguous) prints after the run.
+EVERY family serves through the engine — dense/moe KV slots, ssm/hybrid
+recurrent-state slots (``--state-dtype int8`` stores the conv/SSM/mLSTM
+state quantized under OSSH-static channel scales), encdec self-KV +
+cross-KV slots. KV-cache knobs (repro.serving.paged, KV families):
+``--kv-layout paged`` swaps the per-slot contiguous rows for the
+block-pool cache (``--block-size`` tokens per block), ``--kv-dtype int8``
+stores it quantized (~4x fewer KV bytes), ``--prefill-chunk N`` admits
+prompts N tokens at a time so long prompts never stall the decode batch,
+and ``--lazy-blocks`` grows block tables at decode time instead of
+reserving max_new up front; pool telemetry prints after the run.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
-import jax
 import numpy as np
 
 from repro import api
 from repro.configs import get_config
 from repro.core.peft import PEFTConfig, n_prefix_tokens
 from repro.data.pipeline import DataConfig, Loader
-from repro.models import model as M
 from repro.models.config import QuantConfig, ServingConfig
 from repro.serving import GenerationRequest, SamplingParams
 
@@ -60,6 +61,12 @@ def main():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="paged only: admit prompts in chunks of N tokens")
+    ap.add_argument("--lazy-blocks", action="store_true",
+                    help="paged only: grow block tables at decode time "
+                         "instead of reserving max_new up front")
+    ap.add_argument("--state-dtype", default="fp", choices=["fp", "int8"],
+                    help="ssm/hybrid only: int8 recurrent-state slots "
+                         "(OSSH-static per-channel scales)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -107,22 +114,8 @@ def main():
         reqs.append(GenerationRequest(prompts[i][:plen], max_new_tokens=max_new,
                                       sampling=sp, on_token=on_token))
 
-    if not M.supports_slot_decode(cfg):
-        # recurrent / enc-dec families: no slot story yet — lockstep drive
-        # through the facade (whole batch advances together)
-        t0 = time.perf_counter()
-        out = model.generate(prompts, max_new=args.max_new)
-        jax.block_until_ready(out)
-        dt = time.perf_counter() - t0
-        total_new = args.requests * args.max_new
-        print(f"[serve] lockstep fallback ({cfg.family}): {args.requests} "
-              f"reqs x {args.prompt_len} prompt + {args.max_new} new in "
-              f"{dt*1e3:.1f} ms ({total_new/max(dt,1e-9):.0f} tok/s)")
-        print(f"sample completion (req 0): "
-              f"{np.asarray(out[0])[:8].tolist()}")
-        return
-
-    # pool must fit prompt + PEFT virtual-token prefix + budget per slot
+    # pool must fit prompt + PEFT virtual-token prefix + budget per slot;
+    # every family rides the engine (the lockstep fallback is gone)
     from repro.serving import Engine
     n_prefix = n_prefix_tokens(cfg.peft)
     scfg = ServingConfig(max_slots=args.slots,
@@ -130,7 +123,9 @@ def main():
                          + args.max_new,
                          kv_layout=args.kv_layout, kv_dtype=args.kv_dtype,
                          block_size=args.block_size,
-                         prefill_chunk=args.prefill_chunk)
+                         prefill_chunk=args.prefill_chunk,
+                         state_dtype=args.state_dtype,
+                         lazy_blocks=args.lazy_blocks)
     engine = Engine.from_config(model, scfg)
     outs = engine.run(reqs)
 
@@ -138,8 +133,9 @@ def main():
     lockstep_slot_steps = args.requests * max(
         r.max_new_tokens for r in reqs)  # lockstep pays max budget everywhere
     print(f"[serve] {args.requests} reqs over {args.slots} slots "
-          f"(pool seq {scfg.max_seq_len}, kv {args.kv_layout}/"
-          f"{args.kv_dtype}, {cfg.name}, {cfg.quant.mode})")
+          f"({cfg.family}, pool seq {scfg.max_seq_len}, kv {args.kv_layout}/"
+          f"{args.kv_dtype}, state {st.state_dtype}, {cfg.name}, "
+          f"{cfg.quant.mode})")
     print(f"prefill: {st.prefills} reqs in {st.prefill_batches} batched "
           f"calls, {st.prefill_time_s*1e3:.1f} ms")
     print(f"decode : {st.decode_steps} steps in {st.decode_time_s*1e3:.1f} ms "
@@ -154,6 +150,15 @@ def main():
               f"{st.kv_bytes_per_request/1024:.1f} KiB/req vs "
               f"{st.contiguous_bytes_per_request/1024:.1f} KiB contiguous "
               f"(saves {st.kv_bytes_saved_vs_contiguous/1024:.1f} KiB/req)")
+        if st.lazy_blocks:
+            print(f"lazy-blocks: {st.block_grows} grows, "
+                  f"{st.block_stalls} stalls, {st.preemptions} preemptions, "
+                  f"reserved-vs-used delta "
+                  f"{st.lazy_blocks_saved_per_request:.1f} blocks/req")
+    elif cfg.family in ("ssm", "hybrid"):
+        print(f"state-pool: {st.state_bytes_per_slot/1024:.1f} KiB/slot "
+              f"({st.state_dtype}; fp equivalent "
+              f"{st.fp_state_bytes_per_slot/1024:.1f} KiB)")
     for o in outs[:3]:
         print(f"  {o.request_id}: prompt {o.prompt_len} -> "
               f"{o.n_generated} tokens ({o.finish_reason}) "

@@ -174,6 +174,15 @@ class ServingConfig:
       prefill_chunk admit prompts in chunks of this many tokens so long
                     prompts never stall the decode batch; 0 = whole-prompt
                     admission. Chunked prefill is paged-only.
+      lazy_blocks   paged-only: admit with the PROMPT block footprint and
+                    grow tables at decode time (stall/preempt
+                    backpressure) instead of reserving max_new up front.
+
+    Recurrent-state precision (ssm/hybrid, repro.serving.state):
+      state_dtype   "fp" = float state; "int8" = quantized conv/SSM/mLSTM
+                    state under OSSH-static per-channel scales (seeded
+                    from the Quaff calibration capture or probed from the
+                    first admitted prompt).
     """
 
     max_slots: int = 4
@@ -183,6 +192,8 @@ class ServingConfig:
     block_size: int = 16
     n_blocks: int = 0
     prefill_chunk: int = 0
+    state_dtype: str = "fp"         # fp | int8 (ssm/hybrid recurrent state)
+    lazy_blocks: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

@@ -127,9 +127,13 @@ def forward(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
         x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(
             act_dtype)[None]
     else:
-        # decode: absolute sinusoidal position looked up from a static table
+        # decode: absolute sinusoidal position looked up from a static
+        # table. (S,) positions are shared across the batch (lockstep);
+        # (B,S) positions are PER ROW — the slot-decode branch, where each
+        # slot of a continuous batch sits at its own absolute position.
         pe = L.sinusoidal_positions(65536, cfg.d_model)
-        x = x + jnp.take(pe, positions, axis=0).astype(act_dtype)[None]
+        pos_emb = jnp.take(pe, positions, axis=0).astype(act_dtype)
+        x = x + (pos_emb[None] if positions.ndim == 1 else pos_emb)
     if "prompt" in adapters:
         x = (PEFT.apply_prompt(x, adapters["prompt"])
              if isinstance(adapters["prompt"], PEFT.PromptParams)
@@ -205,3 +209,15 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int):
                      "v": jnp.zeros(cross_shape, act_dtype)}}
     return jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape).copy(), one)
+
+
+def init_slot_caches(cfg: ModelConfig, n_slots: int, max_len: int):
+    """Slot-pooled decode state (serving.state.CrossAttnPool): self-attn
+    KV with a PER-SLOT write cursor ((L, n_slots) — routes
+    ``layers.attention`` through its per-row cursor branch) plus each
+    request's cross-KV rows (the projected encoder output, written once at
+    admission and static afterwards; zero rows for text-only requests,
+    matching the lockstep no-frames decode)."""
+    caches = init_caches(cfg, n_slots, max_len)
+    caches["self"]["pos"] = jnp.zeros((cfg.n_layers, n_slots), jnp.int32)
+    return caches

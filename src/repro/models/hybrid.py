@@ -96,7 +96,7 @@ def init_params_zamba(key, cfg: ModelConfig):
 
 def forward_zamba(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
                   input_embeds=None, caches=None, positions=None, remat=False,
-                  scope=None, rng=None):
+                  scope=None, rng=None, live=None):
     act_dtype = L.dt(cfg.act_dtype)
     n_stages, per, trailing = zamba_layout(cfg)
     x = L.embed(tokens, frozen["embed"], act_dtype)
@@ -116,7 +116,7 @@ def forward_zamba(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
         h = carry
         params, qs, cache = xs
         h2, new_cache, st = S.mamba_block(h, params, qs, cfg, cache,
-                                          scope=scope)
+                                          scope=scope, live=live)
         return h + h2, (st, new_cache)
 
     mamba_body = L.remat_wrap(mamba_body, remat)
@@ -186,6 +186,19 @@ def init_caches_zamba(cfg: ModelConfig, batch: int, max_len: int):
     return caches
 
 
+def init_slot_caches_zamba(cfg: ModelConfig, n_slots: int, max_len: int):
+    """Slot-pooled decode state: the conv/SSM leaves are already per-row
+    (no seq axis — admission overwrites a slot's column wholesale), and the
+    shared-attention KV cache gets a PER-SLOT write cursor ((n_stages,
+    n_slots) instead of (n_stages,)), routing ``layers.attention`` through
+    its per-row cursor branch exactly like the transformer slot pool."""
+    caches = init_caches_zamba(cfg, n_slots, max_len)
+    if "stage_kv" in caches:
+        n_stages, _, _ = zamba_layout(cfg)
+        caches["stage_kv"]["pos"] = jnp.zeros((n_stages, n_slots), jnp.int32)
+    return caches
+
+
 # ===========================================================================
 # xLSTM
 # ===========================================================================
@@ -242,7 +255,7 @@ def init_params_xlstm(key, cfg: ModelConfig):
 
 def forward_xlstm(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
                   input_embeds=None, caches=None, positions=None, remat=False,
-                  scope=None, rng=None):
+                  scope=None, rng=None, live=None):
     act_dtype = L.dt(cfg.act_dtype)
     n_stages, per_m, trailing = xlstm_layout(cfg)
     x = L.embed(tokens, frozen["embed"], act_dtype)
@@ -262,7 +275,7 @@ def forward_xlstm(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
         if key is not None:
             key, sub = jax.random.split(key)
         h2, new_cache, st = S.mlstm_block(h, params, qs, cfg, cache,
-                                          scope=scope)
+                                          scope=scope, live=live)
         if ad is not None:
             p = cfg.peft
             xn = L.rmsnorm(h, params["norm"], cfg.norm_eps)
@@ -286,7 +299,8 @@ def forward_xlstm(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
             else:
                 m_stats, m_caches = None, None
             h2, new_scache, s_stats = S.slstm_block(h, s_params, s_qs, cfg,
-                                                    s_cache, scope=scope)
+                                                    s_cache, scope=scope,
+                                                    live=live)
             h = hint(h + h2, "act_btd")
             return (h, key), (m_stats, s_stats, m_caches, new_scache)
 
@@ -333,3 +347,12 @@ def init_caches_xlstm(cfg: ModelConfig, batch: int, max_len: int):
         caches["trail_mlstm"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (trailing,) + a.shape).copy(), mc)
     return caches
+
+
+def init_slot_caches_xlstm(cfg: ModelConfig, n_slots: int, max_len: int):
+    """Slot-pooled decode state for xLSTM. Purely recurrent (no KV cache,
+    no seq axis): every leaf is per-row already, so the slot pool IS the
+    batched cache — ``max_len`` is accepted for interface uniformity but
+    does not size anything (O(1) state per slot)."""
+    del max_len
+    return init_caches_xlstm(cfg, n_slots, 0)

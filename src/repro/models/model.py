@@ -34,7 +34,10 @@ def init_params(key, cfg: ModelConfig):
 
 def forward(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
             input_embeds=None, caches=None, positions=None, remat=False,
-            enc_out=None, scope=None, rng=None) -> ModelOut:
+            enc_out=None, scope=None, rng=None, live=None) -> ModelOut:
+    """``live`` ((B,) bool, slot-pooled decode only) masks the RECURRENT
+    state carry per row for the ssm/hybrid families — KV caches need no
+    mask (their per-slot cursors already isolate rows)."""
     if cfg.family in ("dense", "moe", "vlm"):
         return transformer.forward(frozen, adapters, quant_state, tokens, cfg,
                                    input_embeds=input_embeds, caches=caches,
@@ -44,12 +47,12 @@ def forward(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
         return hybrid.forward_zamba(frozen, adapters, quant_state, tokens, cfg,
                                     input_embeds=input_embeds, caches=caches,
                                     positions=positions, remat=remat,
-                                    scope=scope, rng=rng)
+                                    scope=scope, rng=rng, live=live)
     if cfg.family == "ssm":
         return hybrid.forward_xlstm(frozen, adapters, quant_state, tokens, cfg,
                                     input_embeds=input_embeds, caches=caches,
                                     positions=positions, remat=remat,
-                                    scope=scope, rng=rng)
+                                    scope=scope, rng=rng, live=live)
     if cfg.family == "encdec":
         return encdec.forward(frozen, adapters, quant_state, tokens, cfg,
                               input_embeds=input_embeds, caches=caches,
@@ -71,27 +74,33 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int):
 
 
 def supports_slot_decode(cfg: ModelConfig) -> bool:
-    """True for families whose decode state is a plain KV cache — those can
-    be pooled into per-request slots by ``repro.serving.Engine``. Recurrent
-    families (hybrid/ssm) carry conv/SSM state without a seq axis and the
-    enc-dec family needs per-request encoder output; both would need their
-    own slot story.
+    """True for every family in the zoo: decode state — KV cache
+    (dense/moe/vlm), recurrent conv/SSM/mLSTM/sLSTM state (ssm/hybrid), or
+    self-KV + per-request cross-KV (encdec) — pools into per-request slots
+    behind the ``serving.state.DecodeState`` protocol, so
+    ``repro.serving.Engine`` serves all of them with mid-decode admission.
 
-    Caveat (moe): expert-capacity routing pools all batch rows, so under
-    TIGHT capacity a request's logits can shift with pool composition —
-    exactly the batch-composition semantics lockstep decode already has
-    (see tests/test_decode_consistency.py). Dense per-request parity is
-    exact; MoE parity holds when capacity is ample."""
-    return cfg.family in ("dense", "moe")
+    The one batch-composition caveat (moe): expert-capacity routing pools
+    all batch rows, so under TIGHT capacity a request's logits can shift
+    with pool composition — exactly the semantics lockstep decode already
+    has (see tests/test_decode_consistency.py). Dense/recurrent/enc-dec
+    per-request parity is exact; MoE parity holds when capacity is ample."""
+    return cfg.family in ("dense", "moe", "vlm", "ssm", "hybrid", "encdec")
 
 
 def init_slot_caches(cfg: ModelConfig, n_slots: int, max_len: int):
-    """Slot-pooled decode caches (per-slot write cursors) for serving."""
-    if not supports_slot_decode(cfg):
-        raise NotImplementedError(
-            f"slot-pooled decode is only implemented for KV-cache families "
-            f"(dense/moe); got family={cfg.family!r}")
-    return transformer.init_slot_caches(cfg, n_slots, max_len)
+    """Slot-pooled decode state for serving: per-slot KV write cursors for
+    the attention-bearing families, per-row recurrent state for ssm/hybrid,
+    self-KV cursors + per-request cross-KV rows for encdec."""
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.init_slot_caches(cfg, n_slots, max_len)
+    if cfg.family == "hybrid":
+        return hybrid.init_slot_caches_zamba(cfg, n_slots, max_len)
+    if cfg.family == "ssm":
+        return hybrid.init_slot_caches_xlstm(cfg, n_slots, max_len)
+    if cfg.family == "encdec":
+        return encdec.init_slot_caches(cfg, n_slots, max_len)
+    raise ValueError(cfg.family)
 
 
 def has_decode(cfg: ModelConfig) -> bool:

@@ -24,6 +24,18 @@ from repro.runtime.pspec import hint
 CHUNK = 128
 
 
+def _carry(live, new, old):
+    """Masked state carry for slot-pooled decode (repro.serving.state
+    .RecurrentPool): rows whose slot is dead (free / mid-admission) keep
+    their stored state bit-exactly instead of advancing on a don't-care
+    token. ``live`` is (B,) bool; None (single-request decode, train,
+    prefill) passes ``new`` through untouched."""
+    if live is None or old is None or new is None:
+        return new
+    lm = live.reshape(live.shape + (1,) * (new.ndim - 1))
+    return jnp.where(lm, new, old.astype(new.dtype))
+
+
 # ===========================================================================
 # Mamba2 (SSD)
 # ===========================================================================
@@ -127,9 +139,13 @@ def _ssd_chunked(xh, bc, cc, dt, a_log):
     return y, h_last
 
 
-def mamba_block(x, params, states, cfg: ModelConfig, cache=None, scope=None):
+def mamba_block(x, params, states, cfg: ModelConfig, cache=None, scope=None,
+                live=None):
     """x: (B,S,D) -> (y, new_cache, stats). cache: {"conv": (B,K-1,C),
-    "h": (B,H,P,N)} for decode (S==1)."""
+    "h": (B,H,P,N)} for decode (S==1). ``live`` (B,) bool masks the state
+    carry per slot (continuous batching); a capture ``scope`` additionally
+    records per-channel state absmax — the OSSH-static grid that seeds
+    int8 recurrent-state storage (serving.state.RecurrentPool)."""
     qcfg = cfg.quant
     di, p, h, n, conv_dim = mamba_dims(cfg)
     bsz, s, _ = x.shape
@@ -148,11 +164,12 @@ def mamba_block(x, params, states, cfg: ModelConfig, cache=None, scope=None):
     xh = xin.reshape(bsz, s, h, p)
 
     if cache is None:
-        y, _ = _ssd_chunked(xh, bc, cc, dt, params["a_log"])
+        y, state_h = _ssd_chunked(xh, bc, cc, dt, params["a_log"])
         new_h = None
     elif s > 1:
         # prefill: parallel form from a FRESH state + emit the final state
         y, new_h = _ssd_chunked(xh, bc, cc, dt, params["a_log"])
+        state_h = new_h
     else:
         # decode: O(1) recurrence h' = h*exp(dt*A) + dt * B (x) x ; y = C.h
         a = -jnp.exp(params["a_log"].astype(jnp.float32))
@@ -163,6 +180,7 @@ def mamba_block(x, params, states, cfg: ModelConfig, cache=None, scope=None):
         hnew = hprev * jnp.exp(la)[:, :, None, None] + upd
         y = jnp.einsum("bn,bhpn->bhp", cc[:, 0].astype(jnp.float32), hnew)[:, None]
         new_h = hnew
+        state_h = hnew
     y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
     y = y.reshape(bsz, s, di).astype(x.dtype)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
@@ -171,8 +189,20 @@ def mamba_block(x, params, states, cfg: ModelConfig, cache=None, scope=None):
     out, st_out = L.apply_qlinear(y, params["out_proj"], qcfg,
                                   states.get("out_proj"), use_kind="row",
                                   scope=scope)
-    new_cache = None if cache is None else {"conv": new_conv, "h": new_h}
-    return out, new_cache, {"in_proj": st_in, "out_proj": st_out}
+    stats = {"in_proj": st_in, "out_proj": st_out}
+    if scope is not None and scope.capture:
+        # per-channel absmax of the to-be-cached recurrent state: conv rows
+        # (last K-1 raw conv inputs) per conv channel, SSM state per state
+        # channel N. Seeds the int8 RecurrentPool's static grid from the
+        # same calibration set that fixes the activation outlier channels.
+        stats["state"] = {
+            "conv": jnp.max(jnp.abs(conv_in.astype(jnp.float32)), axis=(0, 1)),
+            "h": jnp.max(jnp.abs(state_h), axis=(0, 1, 2)),
+        }
+    new_cache = None if cache is None else {
+        "conv": _carry(live, new_conv, cache["conv"]),
+        "h": _carry(live, new_h, cache["h"])}
+    return out, new_cache, stats
 
 
 def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
@@ -203,8 +233,11 @@ def init_mlstm_block(key, cfg: ModelConfig, qcfg: QuantConfig, param_dtype):
     return params, {"wq": sq, "wk": sk, "wv": sv, "wo": so}
 
 
-def mlstm_block(x, params, states, cfg: ModelConfig, cache=None, scope=None):
-    """x: (B,S,D). cache: {"C": (B,H,P,P), "n": (B,H,P), "m": (B,H)}."""
+def mlstm_block(x, params, states, cfg: ModelConfig, cache=None, scope=None,
+                live=None):
+    """x: (B,S,D). cache: {"C": (B,H,P,P), "n": (B,H,P), "m": (B,H)}.
+    ``live`` masks the state carry per slot; a capture ``scope`` records the
+    matrix memory's per-channel absmax (int8 RecurrentPool seeding)."""
     qcfg = cfg.quant
     bsz, s, d = x.shape
     h = cfg.n_heads
@@ -270,7 +303,23 @@ def mlstm_block(x, params, states, cfg: ModelConfig, cache=None, scope=None):
     y = (y.reshape(bsz, s, d) * o).astype(x.dtype)
     out, st_o = L.apply_qlinear(y, params["wo"], qcfg,
                                 states.get("wo"), use_kind="row", scope=scope)
-    return out, new_cache, {"wq": st_q, "wk": st_k, "wv": st_v, "wo": st_o}
+    stats = {"wq": st_q, "wk": st_k, "wv": st_v, "wo": st_o}
+    if scope is not None and scope.capture:
+        if new_cache is not None:
+            c_cap = new_cache["C"]
+        else:
+            # calibration runs cache-less: emit the end-of-sequence matrix
+            # memory the prefill branch would produce, for its absmax only
+            rel = jnp.cumsum(log_f, axis=1)
+            rel = rel[:, -1:, :] - rel + log_i           # (B,S,H)
+            m_end = jnp.max(rel, axis=1)
+            w_s = jnp.exp(rel - m_end[:, None, :])
+            c_cap = jnp.einsum("bsh,bshp,bshr->bhpr", w_s, v, k)
+        stats["state"] = {"C": jnp.max(jnp.abs(c_cap), axis=(0, 1, 2))}
+    if new_cache is not None and cache is not None:
+        new_cache = {k2: _carry(live, new_cache[k2], cache[k2])
+                     for k2 in new_cache}
+    return out, new_cache, stats
 
 
 def init_mlstm_cache(cfg: ModelConfig, batch: int):
@@ -305,8 +354,10 @@ def init_slstm_block(key, cfg: ModelConfig, qcfg: QuantConfig, param_dtype):
     return params, {"w_in": s_in, "w_out": s_out}
 
 
-def slstm_block(x, params, states, cfg: ModelConfig, cache=None, scope=None):
-    """Stabilized sLSTM (xLSTM Eq. 15-24), per-head recurrence via lax.scan."""
+def slstm_block(x, params, states, cfg: ModelConfig, cache=None, scope=None,
+                live=None):
+    """Stabilized sLSTM (xLSTM Eq. 15-24), per-head recurrence via lax.scan.
+    ``live`` masks the state carry per slot (continuous batching)."""
     qcfg = cfg.quant
     bsz, s, d = x.shape
     h = cfg.n_heads
@@ -348,7 +399,9 @@ def slstm_block(x, params, states, cfg: ModelConfig, cache=None, scope=None):
     out, st_out = L.apply_qlinear(y, params["w_out"], qcfg,
                                   states.get("w_out"), use_kind="row",
                                   scope=scope)
-    new_cache = None if cache is None else {"c": c, "n": n, "h": hp, "m": m}
+    new_cache = None if cache is None else {
+        "c": _carry(live, c, cache["c"]), "n": _carry(live, n, cache["n"]),
+        "h": _carry(live, hp, cache["h"]), "m": _carry(live, m, cache["m"])}
     return out, new_cache, {"w_in": st_in, "w_out": st_out}
 
 

@@ -1,24 +1,35 @@
-"""repro.serving — continuous-batching inference over the facade model.
+"""repro.serving — continuous-batching inference over the facade model,
+for EVERY family in the zoo (dense/moe/vlm/ssm/hybrid/encdec).
 
 Public surface:
 
     Engine             slot-pooled continuous-batching engine; KV knobs
                        kv_layout="contiguous"|"paged", kv_dtype="fp"|"int8",
-                       block_size / n_blocks / prefill_chunk
-    GenerationRequest  prompt + budget + SamplingParams (+ streaming cb)
+                       block_size / n_blocks / prefill_chunk / lazy_blocks,
+                       recurrent-state knob state_dtype="fp"|"int8"
+    GenerationRequest  prompt + budget + SamplingParams (+ streaming cb,
+                       + per-request encoder frames / patch embeddings)
     SamplingParams     greedy / temperature / top-k / top-p, seeded
     RequestOutput      generated ids + finish reason
     EngineStats        tokens/s, per-phase latency, slot occupancy,
-                       block-pool telemetry (paged engines)
+                       decode-state bytes, block-pool telemetry
 
-The block-pool machinery (allocator, int8 KV storage, Pallas block-table
+Decode state is family-agnostic behind the ``DecodeState`` protocol
+(``serving.state``): contiguous ``SlotPool`` rows or the ``PagedPool``
+block cache for KV families, ``RecurrentPool`` conv+SSM/mLSTM/sLSTM state
+for ssm/hybrid (optionally int8 under OSSH-static channel scales), and
+``CrossAttnPool`` self-KV + per-request cross-KV for encdec. The
+block-pool machinery (allocator, int8 KV storage, Pallas block-table
 attention) lives in ``repro.serving.paged``.
 """
 from repro.models.config import ServingConfig
 from repro.serving.engine import Engine
 from repro.serving.params import (EngineStats, GenerationRequest,
                                   RequestOutput, SamplingParams)
-from repro.serving.pool import PagedPool, SlotPool
+from repro.serving.pool import PagedPool, SlotPool, make_decode_state
+from repro.serving.state import CrossAttnPool, DecodeState, RecurrentPool
 
 __all__ = ["Engine", "GenerationRequest", "SamplingParams", "RequestOutput",
-           "EngineStats", "ServingConfig", "SlotPool", "PagedPool"]
+           "EngineStats", "ServingConfig", "SlotPool", "PagedPool",
+           "RecurrentPool", "CrossAttnPool", "DecodeState",
+           "make_decode_state"]

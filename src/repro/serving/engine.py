@@ -1,27 +1,36 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine — family-agnostic.
 
 ONE compiled decode step (``train.steps.build_decode_slots`` /
 ``build_paged_step``) serves a continuously changing request mix over a
-fixed-capacity KV pool:
+fixed-capacity decode-state pool:
 
   * admission — a waiting request is prefilled into any free slot between
     decode steps, while other slots are mid-generation; under
     ``kv_layout="paged"`` admission acquires the request's BLOCK footprint
-    (ceil(need/block_size) blocks) and, with ``prefill_chunk`` set, feeds
-    the prompt in fixed-size chunks so a long prompt never stalls the
-    decode batch — and pending prompts whose next chunk has the same
-    length are prefilled as ONE batched call;
+    and, with ``prefill_chunk`` set, feeds the prompt in fixed-size chunks
+    so a long prompt never stalls the decode batch — pending prompts whose
+    next chunk has the same length are prefilled as ONE batched call;
   * decode — every live slot advances one token per step, each writing at
-    its own cursor and masked by its own length;
-  * retirement — a slot frees on EOS or token budget (plus its KV blocks
-    in paged mode), with no barrier on the rest of the batch.
+    its own cursor (KV) or carrying its own recurrent state, masked by its
+    own liveness;
+  * retirement — a slot frees on EOS or token budget (plus its blocks in
+    paged mode), with no barrier on the rest of the batch.
 
-KV layouts: "contiguous" is the PR 3 per-slot max_seq_len row
-(``pool.SlotPool``); "paged" is the block-pool cache (``pool.PagedPool`` /
-``repro.serving.paged``), optionally int8-quantized (``kv_dtype="int8"``:
-per-channel key scales seeded from the Quaff calibration capture — or
-probed from the first admitted prompt — per-token value scales, ~4x fewer
-KV bytes).
+The engine speaks to decode state ONLY through the ``DecodeState``
+protocol (``serving.state``); ``pool.make_decode_state`` picks the
+implementation per family:
+
+  dense/moe/vlm   contiguous ``SlotPool`` rows or the ``PagedPool`` block
+                  cache (``kv_layout="paged"``, optionally int8 KV w/
+                  OSSH-static key-channel scales, chunked prefill, and
+                  ``lazy_blocks=True`` decode-time table growth with
+                  stall/preempt backpressure);
+  ssm/hybrid      ``RecurrentPool`` conv+SSM/mLSTM/sLSTM state (slot reset
+                  on admit, live-masked carry on advance, optional
+                  ``state_dtype="int8"`` storage under OSSH-static channel
+                  scales seeded from the Quaff calibration capture);
+  encdec          ``CrossAttnPool`` self-KV + per-request cross-KV rows
+                  (``GenerationRequest.input_embeds`` carries the frames).
 
 The engine holds no model state of its own: it reads ``cfg`` / ``frozen`` /
 ``adapters`` / ``quant_state`` off the wrapped model object (duck-typed —
@@ -41,13 +50,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import peft as PEFT
-from repro.models import model as M
 from repro.models.config import ServingConfig
 from repro.serving import sampling
 from repro.serving.paged import kvquant as KVQ
 from repro.serving.params import (EngineStats, GenerationRequest,
                                   RequestOutput, SamplingParams)
-from repro.serving.pool import PagedPool, SlotPool
+from repro.serving.pool import PagedPool, make_decode_state
+from repro.serving.state import check_state_dtype
 from repro.train import steps as S
 
 
@@ -73,20 +82,33 @@ def _jit_prefill_slot(cfg, max_seq_len: int):
 
 
 class _SlotState:
-    """Host-side bookkeeping for one occupied slot. ``remaining`` is the
-    not-yet-prefilled prompt tail (paged chunked admission) — None once the
-    request is decoding."""
+    """Host-side bookkeeping for one request (queued or occupying a slot).
+    ``remaining`` is the not-yet-prefilled prompt tail (paged chunked
+    admission) — None once the request is decoding. After a lazy-block
+    preemption the request re-queues with its generated tokens appended to
+    the pending prompt, so greedy continuation is deterministic."""
 
-    __slots__ = ("req", "request_id", "token_ids", "prompt_len", "last_token",
-                 "remaining")
+    __slots__ = ("req", "request_id", "prompt", "embeds", "pos_offset",
+                 "token_ids", "last_token", "remaining")
 
-    def __init__(self, req: GenerationRequest, request_id: str, prompt_len: int):
+    def __init__(self, req: GenerationRequest, request_id: str,
+                 prompt: np.ndarray, embeds: Optional[np.ndarray],
+                 pos_offset: int = 0):
         self.req = req
         self.request_id = request_id
+        self.prompt = prompt
+        self.embeds = embeds
+        # decoder positions the request's prepended embeddings occupy
+        # BEFORE the token stream (vlm patches; 0 for encdec — frames
+        # live on the encoder side and take no decoder positions)
+        self.pos_offset = pos_offset
         self.token_ids: List[int] = []
-        self.prompt_len = prompt_len
         self.last_token = 0
         self.remaining: Optional[np.ndarray] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.size)
 
     @property
     def n_generated(self) -> int:
@@ -96,9 +118,18 @@ class _SlotState:
     def decoding(self) -> bool:
         return self.remaining is None
 
+    def pending_tokens(self) -> np.ndarray:
+        """Tokens still to prefill: the prompt, plus (after a preemption)
+        everything generated so far."""
+        if not self.token_ids:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.token_ids, np.int32)])
+
 
 class Engine:
-    """Slot-pooled continuous-batching engine over a facade model.
+    """Slot-pooled continuous-batching engine over a facade model — every
+    family in the zoo (dense/moe/vlm/ssm/hybrid/encdec).
 
         engine = Engine(model, max_slots=4, max_seq_len=128)
         outs = engine.run([GenerationRequest(prompt, max_new_tokens=16),
@@ -109,9 +140,12 @@ class Engine:
 
     ``submit``/``step`` expose the loop for callers that interleave their own
     work (the serve launcher); ``run`` drains to completion. Per-token
-    streaming: set ``GenerationRequest.on_token``. Paged / quantized KV and
-    chunked prefill: ``kv_layout="paged"``, ``kv_dtype="int8"``,
-    ``prefill_chunk=N`` (see module docstring).
+    streaming: set ``GenerationRequest.on_token``. Paged / quantized KV,
+    chunked prefill and lazy block growth (KV families): ``kv_layout=
+    "paged"``, ``kv_dtype="int8"``, ``prefill_chunk=N``, ``lazy_blocks=
+    True``. Quantized recurrent state (ssm/hybrid): ``state_dtype="int8"``.
+    Encoder frames / patch embeddings ride per request
+    (``GenerationRequest.input_embeds``).
     """
 
     @classmethod
@@ -121,27 +155,29 @@ class Engine:
                    max_seq_len=serving.max_seq_len,
                    kv_layout=serving.kv_layout, kv_dtype=serving.kv_dtype,
                    block_size=serving.block_size, n_blocks=serving.n_blocks,
-                   prefill_chunk=serving.prefill_chunk)
+                   prefill_chunk=serving.prefill_chunk,
+                   state_dtype=serving.state_dtype,
+                   lazy_blocks=serving.lazy_blocks)
 
     def __init__(self, model, max_slots: int = 4, max_seq_len: int = 256, *,
                  kv_layout: str = "contiguous", kv_dtype: str = "fp",
                  block_size: int = 16, n_blocks: int = 0,
-                 prefill_chunk: int = 0):
+                 prefill_chunk: int = 0, state_dtype: str = "fp",
+                 lazy_blocks: bool = False):
         cfg = model.cfg
-        if not M.supports_slot_decode(cfg):
-            raise NotImplementedError(
-                f"Engine needs a KV-cache family (dense/moe); "
-                f"family={cfg.family!r} is not slot-poolable yet")
         if kv_layout not in ("contiguous", "paged"):
             raise ValueError(f"kv_layout must be 'contiguous' or 'paged', "
                              f"got {kv_layout!r}")
         KVQ.check_kv_dtype(kv_dtype)
+        check_state_dtype(state_dtype)
         if kv_layout != "paged":
             if kv_dtype != "fp":
                 raise ValueError("kv_dtype='int8' needs kv_layout='paged'")
             if prefill_chunk:
                 raise ValueError("chunked prefill (prefill_chunk > 0) needs "
                                  "kv_layout='paged'")
+            if lazy_blocks:
+                raise ValueError("lazy_blocks needs kv_layout='paged'")
         if prefill_chunk < 0:
             raise ValueError(f"prefill_chunk must be >= 0, got {prefill_chunk}")
         self.cfg = cfg
@@ -150,6 +186,7 @@ class Engine:
         self.kv_layout = kv_layout
         self.kv_dtype = kv_dtype
         self.prefill_chunk = prefill_chunk
+        self.lazy_blocks = lazy_blocks
         self._model = model
         self._sample = sampling.make_sampler()
         self._n_prefix = PEFT.n_prefix_tokens(cfg.peft)
@@ -158,25 +195,28 @@ class Engine:
         self._finished: Dict[str, RequestOutput] = {}
         self._pending: List[str] = []               # submitted, not returned
         self._auto_id = itertools.count()
-        self._paged: Optional[PagedPool] = None
         self._probe_fn = None                       # int8 k-scale probe
-        if kv_layout == "paged":
-            self._paged = PagedPool(cfg, max_slots, max_seq_len,
-                                    block_size=block_size, kv_dtype=kv_dtype,
-                                    n_blocks=n_blocks)
-            self._paged_fn = _jit_paged_step(cfg)
-        else:
-            self._pool = SlotPool(cfg, max_slots, max_seq_len)
-            self._decode_fn = _jit_decode_slots(cfg)
-            # one jitted prefill; jit re-specializes per prompt-length shape
-            self._prefill_fn = _jit_prefill_slot(cfg, max_seq_len)
+        # family -> DecodeState dispatch lives in pool.make_decode_state;
+        # NOTHING below branches on cfg.family.
+        self._pool = make_decode_state(
+            cfg, max_slots, max_seq_len, kv_layout=kv_layout,
+            kv_dtype=kv_dtype, block_size=block_size, n_blocks=n_blocks,
+            state_dtype=state_dtype)
+        self._paged: Optional[PagedPool] = (
+            self._pool if isinstance(self._pool, PagedPool) else None)
+        self._step_fn = (_jit_paged_step(cfg) if self._paged is not None
+                         else _jit_decode_slots(cfg))
+        self._prefill_fn = _jit_prefill_slot(cfg, max_seq_len)
         self.stats = EngineStats(
-            n_slots=max_slots, kv_layout=kv_layout, kv_dtype=kv_dtype,
+            n_slots=max_slots, family=cfg.family, kv_layout=kv_layout,
+            kv_dtype=kv_dtype, state_dtype=state_dtype,
+            lazy_blocks=lazy_blocks,
             block_size=self._paged.alloc.block_size if self._paged else 0,
             n_blocks=self._paged.alloc.n_blocks if self._paged else 0,
             contiguous_bytes_per_request=(
                 self._paged.contiguous_bytes_equiv(1) if self._paged
                 else max_seq_len * KVQ.kv_bytes_per_token(cfg, "fp")))
+        self._snapshot_state_bytes()
 
     # ------------------------------------------------------------------
     # submission
@@ -192,12 +232,38 @@ class Engine:
         if req.max_new_tokens < 1:
             raise ValueError(f"max_new_tokens must be >= 1, got "
                              f"{req.max_new_tokens}")
-        need = prompt.size + self._n_prefix + req.max_new_tokens
+        embeds = None
+        if req.input_embeds is not None:
+            if self.cfg.family not in ("encdec", "vlm"):
+                raise ValueError(
+                    f"input_embeds is for the encdec/vlm families; "
+                    f"family={self.cfg.family!r} takes token prompts only")
+            if self._paged is not None:
+                raise ValueError(
+                    "input_embeds requests need kv_layout='contiguous' "
+                    "(paged chunked admission feeds token chunks only)")
+            embeds = np.asarray(req.input_embeds, np.float32)
+            if embeds.ndim != 2 or embeds.shape[-1] != self.cfg.d_model:
+                raise ValueError(
+                    f"input_embeds must be (seq, d_model={self.cfg.d_model}),"
+                    f" got {embeds.shape}")
+            if self.cfg.family == "encdec" and \
+                    embeds.shape[0] != self.cfg.encoder_seq:
+                raise ValueError(
+                    f"encoder frames must span encoder_seq="
+                    f"{self.cfg.encoder_seq} positions, got {embeds.shape[0]}")
+        # vlm patches prepend to the decoder sequence and occupy cache
+        # positions; encoder frames (encdec) do not
+        pos_offset = (embeds.shape[0]
+                      if embeds is not None and self.cfg.family != "encdec"
+                      else 0)
+        need = prompt.size + self._n_prefix + pos_offset + req.max_new_tokens
         if need > self.max_seq_len:
             raise ValueError(
                 f"request needs {need} cache positions (prompt {prompt.size} "
-                f"+ prefix {self._n_prefix} + max_new {req.max_new_tokens}) "
-                f"but the pool is sized max_seq_len={self.max_seq_len}")
+                f"+ prefix {self._n_prefix} + embeds {pos_offset} + max_new "
+                f"{req.max_new_tokens}) but the pool is sized "
+                f"max_seq_len={self.max_seq_len}")
         if self._paged is not None and \
                 self._paged.blocks_for(need) > self._paged.alloc.n_blocks:
             raise ValueError(
@@ -205,10 +271,10 @@ class Engine:
                 f"the pool only has {self._paged.alloc.n_blocks}")
         rid = req.request_id or f"req-{next(self._auto_id)}"
         if rid in self._finished or any(
-                r is not None and r[0] == rid for r in self._waiting) or any(
+                w.request_id == rid for w in self._waiting) or any(
                 s is not None and s.request_id == rid for s in self._slots):
             raise ValueError(f"duplicate request_id {rid!r}")
-        self._waiting.append((rid, req, prompt))
+        self._waiting.append(_SlotState(req, rid, prompt, embeds, pos_offset))
         self._pending.append(rid)
         self.stats.requests_submitted += 1
         return rid
@@ -218,8 +284,7 @@ class Engine:
     # ------------------------------------------------------------------
     @property
     def _n_active(self) -> int:
-        return (self._paged.n_active if self._paged is not None
-                else self._pool.n_active)
+        return self._pool.n_active
 
     @property
     def has_work(self) -> bool:
@@ -269,6 +334,10 @@ class Engine:
     # ------------------------------------------------------------------
     # shared internals
     # ------------------------------------------------------------------
+    def _need_full(self, st: _SlotState) -> int:
+        return (st.prompt_len + self._n_prefix + st.pos_offset
+                + st.req.max_new_tokens)
+
     def _sample_one(self, logits_row, sp: SamplingParams, token_index: int):
         tok = self._sample(
             logits_row,
@@ -298,30 +367,44 @@ class Engine:
             table = self._paged.tables[slot]
             self.stats.kv_bytes_per_request_sum += (
                 table.capacity * self._paged.bytes_per_token())
-            self._paged.release(slot)
-        else:
-            self._pool.release(slot)
+            self.stats.blocks_used_sum += len(table.blocks)
+            self.stats.blocks_reserved_eager_sum += \
+                self._paged.blocks_for(self._need_full(st))
+        self._pool.release(slot)
         self.stats.requests_completed += 1
 
-    # ------------------------------------------------------------------
-    # contiguous layout
-    # ------------------------------------------------------------------
-    def _admit_one(self):
-        rid, req, prompt = self._waiting.popleft()
-        slot = self._pool.acquire()
-        m = self._model
-        t0 = time.perf_counter()
-        logits, row_caches = self._prefill_fn(
-            m.frozen, m.adapters, m.quant_state, jnp.asarray(prompt[None, :]))
-        self._pool.admit(row_caches, slot)
-        tok = self._sample_one(logits, req.sampling, 0)
-        self.stats.prefill_time_s += time.perf_counter() - t0
-        self.stats.prefills += 1
-        self.stats.prefill_batches += 1
+    def _preempt(self, slot: int):
+        """Lazy-block backpressure: evict the request in ``slot`` back to
+        the FRONT of the queue (its blocks free immediately), carrying its
+        generated tokens so the re-prefill continues the same greedy
+        stream. Only reached when every runnable slot is out of blocks —
+        forward progress beats holding a wedged pool.
 
-        st = _SlotState(req, rid, prompt.size)
-        self._slots[slot] = st
-        self._emit_token(st, slot, tok)
+        Caveat (prompt-PEFT): re-prefill assigns positions cursor-wise
+        (prefix included), while the decode convention places generated
+        token g at prompt_len + g (prefix excluded, the legacy lockstep
+        convention) — so with ``n_prefix > 0`` a preempted request's
+        already-generated tokens are re-rotated ``n_prefix`` positions
+        later and the continuation can drift from the un-preempted
+        stream. Without prompt-PEFT (n_prefix == 0, every test/CI
+        config) the continuation is exactly deterministic."""
+        st = self._slots[slot]
+        self._slots[slot] = None
+        self._pool.release(slot)
+        st.remaining = None
+        self._waiting.appendleft(st)
+        self.stats.preemptions += 1
+
+    def _adapters_no_prefix(self):
+        """Adapters with the prompt-PEFT virtual tokens stripped: decode
+        steps (all layouts) and continuation chunks must not re-prepend
+        the prefix — it is already in the cache from the prefill, and a
+        re-prepended prefix would also write n_prefix extra cache positions
+        per step, corrupting the slot cursor."""
+        ad = self._model.adapters
+        if isinstance(ad, dict) and "prompt" in ad:
+            return {k: v for k, v in ad.items() if k != "prompt"}
+        return ad
 
     def _decode_batch_arrays(self, decoding: List[int]):
         """Per-slot host arrays for one batched decode call: fed-back
@@ -330,7 +413,9 @@ class Engine:
 
         The fed-back token is generated token #n_generated (1-based): its
         RoPE position is prompt_len + n_generated - 1, matching the
-        lockstep generate loop's ``prompt_len + i``."""
+        pre-engine lockstep loop's ``prompt_len + i`` — plus the request's
+        ``pos_offset`` when prepended vlm patches occupy the positions
+        before the token stream."""
         b = self.max_slots
         tokens = np.zeros((b, 1), np.int32)
         positions = np.zeros((b,), np.int32)
@@ -342,23 +427,65 @@ class Engine:
             st = self._slots[i]
             sp = st.req.sampling
             tokens[i, 0] = st.last_token
-            positions[i] = st.prompt_len + st.n_generated - 1
+            positions[i] = st.prompt_len + st.pos_offset + st.n_generated - 1
             temps[i] = sp.temperature
             top_ks[i] = sp.top_k
             top_ps[i] = sp.top_p
             keys[i] = sampling.request_key(sp, st.n_generated)
         return tokens, positions, temps, top_ks, top_ps, keys
 
+    def _snapshot_state_bytes(self):
+        bs = self._pool.byte_stats()
+        self.stats.state_bytes_per_slot = bs.get("state_bytes_per_slot", 0)
+        self.stats.fp_state_bytes_per_slot = bs.get(
+            "fp_state_bytes_per_slot", self.stats.state_bytes_per_slot)
+
+    # ------------------------------------------------------------------
+    # direct (non-paged) admission + decode — every family
+    # ------------------------------------------------------------------
+    def _admit_one(self):
+        st = self._waiting.popleft()
+        slot = self._pool.acquire(self._need_full(st))
+        m = self._model
+        t0 = time.perf_counter()
+        pool = self._pool
+        if getattr(pool, "needs_seed", False):
+            # int8 recurrent state: OSSH-static scales from the Quaff
+            # calibration capture; write_prefill probes from this first
+            # row if the capture predates the state entry
+            pool.seed_from_stats(getattr(m, "stats", None))
+        tokens = jnp.asarray(st.pending_tokens()[None, :])
+        if st.embeds is not None:
+            logits, row_caches = self._prefill_fn(
+                m.frozen, m.adapters, m.quant_state, tokens,
+                jnp.asarray(st.embeds[None]))
+        else:
+            logits, row_caches = self._prefill_fn(
+                m.frozen, m.adapters, m.quant_state, tokens)
+        pool.write_prefill(row_caches, slot)
+        tok = self._sample_one(logits, st.req.sampling, st.n_generated)
+        self.stats.prefill_time_s += time.perf_counter() - t0
+        self.stats.prefills += 1
+        self.stats.prefill_batches += 1
+        self._snapshot_state_bytes()
+
+        self._slots[slot] = st
+        self._emit_token(st, slot, tok)
+
     def _decode_once(self):
         m = self._model
         active = [i for i, st in enumerate(self._slots) if st is not None]
+        live = [st is not None for st in self._slots]
         tokens, positions, temps, top_ks, top_ps, keys = \
             self._decode_batch_arrays(active)
 
         t0 = time.perf_counter()
-        logits, self._pool.caches = self._decode_fn(
+        caches = self._pool.live_assemble(live)
+        logits, new_caches = self._step_fn(
             m.frozen, self._adapters_no_prefix(), m.quant_state,
-            self._pool.caches, jnp.asarray(tokens), jnp.asarray(positions))
+            caches, jnp.asarray(tokens), jnp.asarray(positions),
+            self._pool.mask_dead(live))
+        self._pool.update_from(new_caches)
         toks = np.asarray(self._sample(
             logits, jnp.asarray(temps), jnp.asarray(top_ks),
             jnp.asarray(top_ps), jnp.stack(keys)))
@@ -367,37 +494,30 @@ class Engine:
         self.stats.busy_slot_steps += len(active)
 
         for i in active:
+            self._pool.advance(i, 1)
             self._emit_token(self._slots[i], i, int(toks[i]))
 
     # ------------------------------------------------------------------
-    # paged layout
+    # paged layout (KV families)
     # ------------------------------------------------------------------
     def _admit_paged(self):
         """FIFO admission into (slot + block footprint); stops at the first
         request the pool cannot hold RIGHT NOW — it stays queued and admits
-        once retirements free enough blocks (refusal, never a crash)."""
+        once retirements free enough blocks (refusal, never a crash).
+        Lazy mode acquires the PROMPT footprint only; decode grows it."""
         while self._waiting:
-            rid, req, prompt = self._waiting[0]
-            need = prompt.size + self._n_prefix + req.max_new_tokens
-            slot = self._paged.acquire(need)
+            st = self._waiting[0]
+            pending = st.pending_tokens()
+            need = (pending.size + self._n_prefix if self.lazy_blocks
+                    else pending.size + self._n_prefix
+                    + st.req.max_new_tokens - st.n_generated)
+            slot = self._pool.acquire(need)
             if slot is None:
                 self.stats.admission_deferrals += 1
                 break
             self._waiting.popleft()
-            st = _SlotState(req, rid, prompt.size)
-            st.remaining = prompt
+            st.remaining = pending
             self._slots[slot] = st
-
-    def _adapters_no_prefix(self):
-        """Adapters with the prompt-PEFT virtual tokens stripped: decode
-        steps (both layouts) and continuation chunks must not re-prepend
-        the prefix — it is already in the cache from the prefill, and a
-        re-prepended prefix would also write n_prefix extra cache positions
-        per step, corrupting the slot cursor."""
-        ad = self._model.adapters
-        if isinstance(ad, dict) and "prompt" in ad:
-            return {k: v for k, v in ad.items() if k != "prompt"}
-        return ad
 
     def _ensure_k_scales(self, prompt: np.ndarray):
         """Seed the int8 pool's static key-channel grid: from the Quaff
@@ -419,7 +539,9 @@ class Engine:
     def _prefill_paged_chunks(self):
         """Advance every mid-prefill slot by one chunk. Slots whose next
         chunk has the SAME length ride one batched call (same-length
-        admission); jit re-specializes only per distinct (batch, chunk)."""
+        admission); jit re-specializes only per distinct (batch, chunk).
+        Lazy mode: a slot whose chunk cannot get blocks stalls this round
+        (and a victim is preempted if nothing at all can move)."""
         pending = [i for i, st in enumerate(self._slots)
                    if st is not None and not st.decoding]
         if not pending:
@@ -427,12 +549,26 @@ class Engine:
         if self._paged.needs_k_seed:
             self._ensure_k_scales(self._slots[pending[0]].remaining)
         groups: Dict[Tuple[int, bool], List[int]] = {}
+        stalled: List[int] = []
         for i in pending:
             st = self._slots[i]
             clen = st.remaining.size if not self.prefill_chunk else \
                 min(self.prefill_chunk, st.remaining.size)
             first = self._paged.cursor(i) == 0
+            sx = clen + (self._n_prefix if first else 0)
+            if self.lazy_blocks and not self._paged.ensure_capacity(i, sx):
+                self.stats.block_stalls += 1
+                stalled.append(i)
+                continue
             groups.setdefault((clen, first), []).append(i)
+        if not groups:
+            decoding = any(st is not None and st.decoding
+                           for st in self._slots)
+            if stalled and not decoding:
+                # nothing can move: evict the least-progressed prefill
+                victim = min(stalled, key=lambda i: self._paged.cursor(i))
+                self._preempt(victim)
+            return
         m = self._model
         for (clen, first), rows in sorted(groups.items()):
             t0 = time.perf_counter()
@@ -445,7 +581,7 @@ class Engine:
             positions = pos0[:, None] + np.arange(sx, dtype=np.int32)[None, :]
             adapters = m.adapters if first else self._adapters_no_prefix()
             caches = self._paged.gather_caches(rows)
-            logits, new_caches = self._paged_fn(
+            logits, new_caches = self._step_fn(
                 m.frozen, adapters, m.quant_state, caches,
                 jnp.asarray(tokens), jnp.asarray(positions))
             self._paged.update_from(new_caches)
@@ -459,7 +595,8 @@ class Engine:
                 if st.remaining.size == 0:
                     st.remaining = None
                     self.stats.prefills += 1
-                    tok = self._sample_one(logits[r:r + 1], st.req.sampling, 0)
+                    tok = self._sample_one(logits[r:r + 1], st.req.sampling,
+                                           st.n_generated)
                     self._emit_token(st, slot, tok)
 
     def _decode_once_paged(self):
@@ -467,8 +604,24 @@ class Engine:
                     if st is not None and st.decoding]
         if not decoding:
             return
+        if self.lazy_blocks:
+            ready = []
+            for i in decoding:
+                if self._paged.ensure_capacity(i, 1):
+                    ready.append(i)
+                else:
+                    self.stats.block_stalls += 1
+            if not ready:
+                # every decoder is out of blocks and nothing will free
+                # them: preempt the youngest stream (fewest sunk tokens)
+                victim = min(decoding,
+                             key=lambda i: (self._slots[i].n_generated, -i))
+                self._preempt(victim)
+                return
+            decoding = ready
         m = self._model
-        live = [st is not None and st.decoding for st in self._slots]
+        in_step = set(decoding)
+        live = [i in in_step for i in range(self.max_slots)]
         tokens, positions, temps, top_ks, top_ps, keys = \
             self._decode_batch_arrays(decoding)
 
@@ -476,12 +629,11 @@ class Engine:
         frag = self._paged.fragmentation()      # pool state THIS step uses
         self.stats.fragmentation_sum += frag
         self.stats.fragmentation_samples += 1
-        caches = self._paged.gather_caches(list(range(self.max_slots)),
-                                           live=live)
-        logits, new_caches = self._paged_fn(
+        caches = self._pool.live_assemble(live)
+        logits, new_caches = self._step_fn(
             m.frozen, self._adapters_no_prefix(), m.quant_state, caches,
             jnp.asarray(tokens), jnp.asarray(positions[:, None]))
-        self._paged.update_from(new_caches)
+        self._pool.update_from(new_caches)
         toks = np.asarray(self._sample(
             logits, jnp.asarray(temps), jnp.asarray(top_ks),
             jnp.asarray(top_ps), jnp.stack(keys)))
@@ -490,7 +642,7 @@ class Engine:
         self.stats.busy_slot_steps += len(decoding)
 
         for i in decoding:
-            self._paged.advance(i, 1)
+            self._pool.advance(i, 1)
             self._emit_token(self._slots[i], i, int(toks[i]))
 
     def _snapshot_pool_stats(self):
@@ -499,3 +651,4 @@ class Engine:
         st.peak_blocks_in_use = pool.peak_blocks_in_use
         st.fragmentation = pool.fragmentation()
         st.kv_bytes_in_use = pool.bytes_in_use()
+        st.block_grows = pool.n_grows

@@ -39,7 +39,13 @@ class GenerationRequest:
 
     ``on_token(request_id, token_id)`` — optional streaming callback, called
     from the engine loop the moment each token is sampled (before the
-    request completes)."""
+    request completes).
+
+    ``input_embeds`` — per-request precomputed embeddings for the families
+    that take them: (encoder_seq, d_model) encoder frames (encdec) or
+    (n_image_tokens, d_model) patch embeddings (vlm). None = text-only
+    (encdec then decodes against zero cross-KV, exactly like the lockstep
+    no-frames path)."""
 
     prompt: Sequence[int]
     max_new_tokens: int = 32
@@ -47,6 +53,7 @@ class GenerationRequest:
     eos_id: Optional[int] = None
     request_id: Optional[str] = None      # assigned by the engine if None
     on_token: Optional[Callable[[str, int], None]] = None
+    input_embeds: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -81,6 +88,7 @@ class EngineStats:
     row per request) would pin."""
 
     n_slots: int = 0
+    family: str = ""
     requests_submitted: int = 0
     requests_completed: int = 0
     tokens_generated: int = 0
@@ -89,6 +97,11 @@ class EngineStats:
     busy_slot_steps: int = 0
     prefill_time_s: float = 0.0
     decode_time_s: float = 0.0
+
+    # decode-state telemetry (DecodeState.byte_stats; every pool kind)
+    state_dtype: str = "fp"                 # recurrent pools: fp | int8
+    state_bytes_per_slot: int = 0
+    fp_state_bytes_per_slot: int = 0        # int8 pools: the fp equivalent
 
     # KV layout + block-pool telemetry (paged engines)
     kv_layout: str = "contiguous"
@@ -106,6 +119,23 @@ class EngineStats:
     prefill_batches: int = 0
     prefill_chunks: int = 0
     admission_deferrals: int = 0
+
+    # lazy block allocation (paged engines with ``lazy_blocks=True``):
+    # tables grow at decode time instead of reserving max_new up front
+    lazy_blocks: bool = False
+    block_grows: int = 0                    # blocks added mid-decode
+    block_stalls: int = 0                   # slot-steps skipped, pool full
+    preemptions: int = 0                    # victims requeued to unwedge
+    blocks_reserved_eager_sum: int = 0      # what eager would have pinned
+    blocks_used_sum: int = 0                # blocks actually held at retire
+
+    @property
+    def lazy_blocks_saved_per_request(self) -> float:
+        """Mean reserved-vs-used block delta per completed request: blocks
+        the eager policy would have pinned up front minus blocks the lazy
+        table actually grew to."""
+        return ((self.blocks_reserved_eager_sum - self.blocks_used_sum)
+                / max(self.requests_completed, 1))
 
     @property
     def mean_fragmentation(self) -> float:
@@ -148,6 +178,10 @@ class EngineStats:
     def as_dict(self) -> dict:
         out = {
             "n_slots": self.n_slots,
+            "family": self.family,
+            "state_dtype": self.state_dtype,
+            "state_bytes_per_slot": self.state_bytes_per_slot,
+            "fp_state_bytes_per_slot": self.fp_state_bytes_per_slot,
             "requests_submitted": self.requests_submitted,
             "requests_completed": self.requests_completed,
             "tokens_generated": self.tokens_generated,
@@ -180,5 +214,11 @@ class EngineStats:
                     self.kv_bytes_saved_vs_contiguous,
                 "prefill_chunks": self.prefill_chunks,
                 "admission_deferrals": self.admission_deferrals,
+                "lazy_blocks": self.lazy_blocks,
+                "block_grows": self.block_grows,
+                "block_stalls": self.block_stalls,
+                "preemptions": self.preemptions,
+                "lazy_blocks_saved_per_request":
+                    round(self.lazy_blocks_saved_per_request, 2),
             })
         return out

@@ -1,25 +1,31 @@
-"""Fixed-capacity KV pools behind the serving engine.
+"""KV-family ``DecodeState`` pools behind the serving engine.
 
 ``SlotPool`` (contiguous layout) is ONE device pytree shaped like
 ``models.init_slot_caches``: k/v buffers (L, n_slots, max_seq_len,
-kv_heads, head_dim) plus per-slot write cursors (L, n_slots). Admission
-splices a freshly prefilled row into a free slot with one compiled
-``write_slot``; retirement is pure host-side bookkeeping (the slot's
-buffer is fully overwritten by the next admission, and its cursor keeps
-masking it consistently meanwhile).
+kv_heads, head_dim) plus per-slot write cursors (L, n_slots). It is the
+generic ``serving.state.SlotStatePool`` specialized only in its byte
+telemetry — admission splices a freshly prefilled row with the shared
+column splice (``state.splice_slot``); retirement is pure host-side
+bookkeeping (the slot's buffer is fully overwritten by the next
+admission, and its cursor keeps masking it consistently meanwhile).
 
 ``PagedPool`` (block layout, ``repro.serving.paged``) replaces the
 per-slot rows with a shared pool of fixed-size blocks: a request holds
 ceil(need / block_size) blocks through a per-request block table, so
 short requests stop paying for worst-case rows, and ``kv_dtype="int8"``
 stores the pool quantized (~4x fewer KV bytes on top of the paging win).
+With lazy allocation (``Engine(lazy_blocks=True)``) a request is admitted
+with its PROMPT footprint only and ``ensure_capacity`` grows its table
+one block at a time as decode fills it.
+
+``make_decode_state`` is the single family -> pool dispatch point: the
+engine never branches on ``cfg.family`` itself.
 """
 from __future__ import annotations
 
 import math
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -27,77 +33,33 @@ from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.serving.paged import blocks as PB
 from repro.serving.paged import kvquant as KVQ
+from repro.serving.state import (CrossAttnPool, RecurrentPool, SlotStatePool,
+                                 check_state_dtype)
 
 
-def write_slot(pool, row, slot):
-    """Splice single-request caches (leading batch dim 1, from
-    ``train.steps.build_prefill_slot``) into column ``slot`` of the pool.
+class SlotPool(SlotStatePool):
+    """Contiguous per-slot KV rows (dense/moe/vlm). Admission goes through
+    the generic slot-axis splice (``serving.state.splice_slot``)."""
 
-    Works leaf-wise: k/v buffers share the pool's rank (row batch dim == 1);
-    the row's write cursor is (L,) scalar-per-layer and lands in one column
-    of the pool's (L, n_slots) cursor plane."""
-    slot = jnp.asarray(slot, jnp.int32)
-
-    def wr(p, r):
-        if r.ndim == p.ndim:
-            start = (0, slot) + (0,) * (p.ndim - 2)
-            return jax.lax.dynamic_update_slice(p, r.astype(p.dtype), start)
-        return jax.lax.dynamic_update_slice(
-            p, r[:, None].astype(p.dtype), (0, slot))
-
-    return jax.tree.map(wr, pool, row)
-
-
-class SlotPool:
-    """Device caches + host-side free-list for ``n_slots`` concurrent rows."""
-
-    def __init__(self, cfg: ModelConfig, n_slots: int, max_seq_len: int):
-        if n_slots < 1:
-            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
-        self.cfg = cfg
-        self.n_slots = n_slots
-        self.max_seq_len = max_seq_len
-        self.caches = M.init_slot_caches(cfg, n_slots, max_seq_len)
-        self._free: List[int] = list(range(n_slots))
-        self._write = jax.jit(write_slot)
-
-    # ---- host bookkeeping ------------------------------------------------
-    @property
-    def n_free(self) -> int:
-        return len(self._free)
-
-    @property
-    def n_active(self) -> int:
-        return self.n_slots - len(self._free)
-
-    def acquire(self) -> Optional[int]:
-        return self._free.pop(0) if self._free else None
-
-    def release(self, slot: int):
-        if slot in self._free:
-            raise ValueError(f"slot {slot} is already free")
-        self._free.append(slot)
-        self._free.sort()
-
-    # ---- device ----------------------------------------------------------
-    def admit(self, row_caches, slot: int):
-        """Write a prefilled request row into ``slot`` (one compiled call)."""
-        self.caches = self._write(self.caches, row_caches, slot)
+    def byte_stats(self) -> Dict[str, Any]:
+        return {"state_bytes_per_slot":
+                self.max_seq_len * KVQ.kv_bytes_per_token(self.cfg, "fp")}
 
 
 class PagedPool:
     """Block-pool KV cache: device pools + host-side block allocator and
-    per-slot ``BlockTable``s.
+    per-request ``BlockTable``s.
 
-    A slot admission acquires the slot AND its whole block footprint
-    atomically (``acquire`` returns None on either shortage — the engine
-    defers, never crashes); retirement returns both. The device side is
+    A slot admission acquires the slot AND its block footprint atomically
+    (``acquire`` returns None on either shortage — the engine defers,
+    never crashes); retirement returns both. The device side is
     slot-agnostic — pools are indexed by block id only — so any subset of
     slots can ride one compiled call: ``gather_caches(rows)`` assembles the
     cache pytree for those rows (tables + cursors broadcast over layers, the
     per-layer leading axis ``lax.scan`` slices), and ``update_from`` takes
     the written pools back. Rows without a live table read/write the trash
-    page (block 0) and are masked by cursor 0."""
+    page (block 0) and are masked by cursor 0. ``live_assemble`` is the
+    ``DecodeState``-protocol view: all slots, dead ones trash-paged."""
 
     def __init__(self, cfg: ModelConfig, n_slots: int, max_seq_len: int, *,
                  block_size: int = 16, kv_dtype: str = "fp",
@@ -117,6 +79,7 @@ class PagedPool:
         self._free_slots: List[int] = list(range(n_slots))
         self._k_seeded = kv_dtype != "int8"
         self.peak_blocks_in_use = 0
+        self.n_grows = 0
 
     # ---- host bookkeeping ------------------------------------------------
     @property
@@ -135,7 +98,9 @@ class PagedPool:
             self.blocks_for(n_tokens))
 
     def acquire(self, n_tokens: int) -> Optional[int]:
-        """Slot + block footprint for one request, or None (defer)."""
+        """Slot + block footprint for ``n_tokens`` cache positions, or
+        None (defer). Under lazy allocation the engine passes the PROMPT
+        footprint here and grows the table at decode time."""
         if not self._free_slots:
             return None
         blocks = self.alloc.acquire(self.blocks_for(n_tokens))
@@ -146,6 +111,24 @@ class PagedPool:
         self.peak_blocks_in_use = max(self.peak_blocks_in_use,
                                       self.alloc.n_used)
         return slot
+
+    def ensure_capacity(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s table so it can take ``n_tokens`` more cache
+        positions (lazy allocation). True when capacity is already there
+        or the growth succeeded; False = the pool is out of blocks RIGHT
+        NOW (the engine stalls the slot or preempts a victim)."""
+        t = self.tables[slot]
+        if t.n_tokens + n_tokens <= t.capacity:
+            return True
+        need = self.blocks_for(t.n_tokens + n_tokens) - len(t.blocks)
+        got = self.alloc.acquire(need)
+        if got is None:
+            return False
+        t.blocks.extend(got)
+        self.n_grows += need
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.alloc.n_used)
+        return True
 
     def release(self, slot: int):
         table = self.tables[slot]
@@ -197,6 +180,18 @@ class PagedPool:
         caches["pos"] = jnp.asarray(np.broadcast_to(pos, (nl, len(rows))))
         return caches
 
+    # ---- DecodeState protocol views --------------------------------------
+    def write_prefill(self, row_state, slot: int):
+        raise NotImplementedError(
+            "paged admission writes through block tables inside the "
+            "compiled step (chunked prefill), not via a row splice")
+
+    def mask_dead(self, live: List[bool]) -> Optional[jnp.ndarray]:
+        return None                    # trash page + cursor 0 mask dead rows
+
+    def live_assemble(self, live: List[bool]) -> Dict[str, jnp.ndarray]:
+        return self.gather_caches(list(range(self.n_slots)), live=live)
+
     def update_from(self, new_caches: Dict[str, jnp.ndarray]):
         """Take the written pool leaves back (tables/cursors stay host-side;
         the static k_scale rides along unchanged)."""
@@ -223,3 +218,40 @@ class PagedPool:
         active = [t for t in self.tables if t is not None]
         cap = sum(t.capacity for t in active)
         return sum(t.waste for t in active) / cap if cap else 0.0
+
+    def byte_stats(self) -> Dict[str, Any]:
+        return {"blocks_in_use": self.alloc.n_used,
+                "peak_blocks_in_use": self.peak_blocks_in_use,
+                "fragmentation": self.fragmentation(),
+                "kv_bytes_in_use": self.bytes_in_use(),
+                "block_grows": self.n_grows}
+
+
+def make_decode_state(cfg: ModelConfig, max_slots: int, max_seq_len: int, *,
+                      kv_layout: str = "contiguous", kv_dtype: str = "fp",
+                      block_size: int = 16, n_blocks: int = 0,
+                      state_dtype: str = "fp"):
+    """THE family -> ``DecodeState`` dispatch (the engine holds no family
+    if-chains): paged/contiguous KV pools for the attention-cache families,
+    ``RecurrentPool`` for ssm/hybrid, ``CrossAttnPool`` for encdec."""
+    check_state_dtype(state_dtype)
+    if not M.supports_slot_decode(cfg):
+        raise NotImplementedError(
+            f"family={cfg.family!r} has no slot-pooled decode state")
+    fam = cfg.family
+    if kv_layout == "paged" and fam not in ("dense", "moe", "vlm"):
+        raise ValueError(
+            f"kv_layout='paged' pools a KV cache; family={fam!r} "
+            f"decode state is not a paged KV cache")
+    if fam in ("ssm", "hybrid"):
+        return RecurrentPool(cfg, max_slots, max_seq_len,
+                             state_dtype=state_dtype)
+    if state_dtype != "fp":
+        raise ValueError("state_dtype='int8' quantizes recurrent state; "
+                         f"family={fam!r} has none (use kv_dtype for KV)")
+    if kv_layout == "paged":
+        return PagedPool(cfg, max_slots, max_seq_len, block_size=block_size,
+                         kv_dtype=kv_dtype, n_blocks=n_blocks)
+    if fam == "encdec":
+        return CrossAttnPool(cfg, max_slots, max_seq_len)
+    return SlotPool(cfg, max_slots, max_seq_len)

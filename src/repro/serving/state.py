@@ -1,0 +1,388 @@
+"""Family-agnostic decode-state pools: the ``DecodeState`` protocol.
+
+The serving engine no longer knows what a family's decode state IS — it
+talks to a pool through a small verb set:
+
+    acquire / release          slot (+ capacity) bookkeeping
+    write_prefill              splice one prefilled request row into a slot
+    advance                    host-side cursor bookkeeping after a step
+    mask_dead                  per-row liveness for the compiled step
+    live_assemble              the cache pytree one compiled call consumes
+    update_from                take the written state back from the step
+    byte_stats                 telemetry (state bytes per slot, ...)
+
+Three state shapes implement it:
+
+  * KV pools (``pool.SlotPool`` contiguous / ``pool.PagedPool`` blocks) —
+    dense/moe/vlm. Dead rows are masked by their per-slot cursors, so
+    ``mask_dead`` is a no-op there.
+  * ``RecurrentPool`` — ssm/hybrid conv+SSM/mLSTM/sLSTM state. No seq
+    axis: admission overwrites a slot's whole column (slot reset), decode
+    carries state under a per-row ``live`` mask (dead slots stay
+    bit-exact), and ``state_dtype="int8"`` stores the big state leaves
+    quantized under OSSH-STATIC per-channel scales — the same spatial-
+    stability bet Quaff makes for activations: the hot state channels the
+    calibration set (or the first admitted prompt) exposes are the hot
+    channels every later token hits. Scales are seeded once and never
+    rescaled.
+  * ``CrossAttnPool`` — encdec: per-slot self-KV (cursor-masked) plus each
+    request's cross-KV rows (projected encoder output), written once at
+    admission and static afterwards.
+
+The generic machinery (slot-axis inference + column splice) works for any
+pytree a family's ``models.init_slot_caches`` produces: a prefill row is
+structurally a ONE-slot pool, so the axis where its shape differs from the
+pool's is the slot axis — no per-family write code.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.runtime.treepath import path_str
+
+INT8_MAX = 127.0
+STATE_DTYPES = ("fp", "int8")
+
+
+def check_state_dtype(state_dtype: str) -> str:
+    if state_dtype not in STATE_DTYPES:
+        raise ValueError(f"state_dtype must be one of {STATE_DTYPES}, "
+                         f"got {state_dtype!r}")
+    return state_dtype
+
+
+@runtime_checkable
+class DecodeState(Protocol):
+    """What ``serving.Engine`` needs from a pool of per-request decode
+    state — nothing in the engine loop mentions KV caches, block tables or
+    recurrent leaves; it speaks only these verbs."""
+
+    n_slots: int
+    max_seq_len: int
+
+    @property
+    def n_free(self) -> int: ...
+
+    @property
+    def n_active(self) -> int: ...
+
+    def acquire(self, need: int) -> Optional[int]:
+        """A free slot (and, where state is capacity-bounded, the footprint
+        for ``need`` cache positions) — or None to defer admission."""
+        ...
+
+    def release(self, slot: int) -> None: ...
+
+    def advance(self, slot: int, n: int) -> None:
+        """Record ``n`` more positions written for ``slot`` (host cursors;
+        pools whose cursors live on-device make this a no-op)."""
+        ...
+
+    def cursor(self, slot: int) -> int: ...
+
+    def write_prefill(self, row_state: Any, slot: int) -> None: ...
+
+    def mask_dead(self, live: List[bool]) -> Optional[jnp.ndarray]: ...
+
+    def live_assemble(self, live: List[bool]) -> Any: ...
+
+    def update_from(self, new_caches: Any) -> None: ...
+
+    def byte_stats(self) -> Dict[str, Any]: ...
+
+
+# ---------------------------------------------------------------------------
+# Generic slot-pytree machinery
+# ---------------------------------------------------------------------------
+def slot_axes(cfg: ModelConfig, max_seq_len: int) -> Dict[str, Optional[int]]:
+    """Per-leaf slot axis of a family's slot-cache pytree, inferred by
+    abstract-evaluating ``init_slot_caches`` at n_slots=1 vs 2 and diffing
+    shapes — no per-family layout table to maintain."""
+    s1 = jax.eval_shape(lambda: M.init_slot_caches(cfg, 1, max_seq_len))
+    s2 = jax.eval_shape(lambda: M.init_slot_caches(cfg, 2, max_seq_len))
+    axes: Dict[str, Optional[int]] = {}
+    for (p, a), (_, b) in zip(jax.tree_util.tree_flatten_with_path(s1)[0],
+                              jax.tree_util.tree_flatten_with_path(s2)[0]):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y]
+        if len(diffs) > 1:
+            raise ValueError(f"leaf {path_str(p)} varies in more than one "
+                             f"axis with n_slots: {a.shape} vs {b.shape}")
+        axes[path_str(p)] = diffs[0] if diffs else None
+    return axes
+
+
+def splice_slot(pool, row, slot, axes: Dict[str, Optional[int]]):
+    """Write a batch-1 prefill row into column ``slot`` of the pool,
+    leaf-wise along each leaf's slot axis. Slot-invariant leaves (axis
+    None) are replaced wholesale."""
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(pool)
+    flat_r = jax.tree_util.tree_flatten_with_path(row)[0]
+    out = []
+    for (path, p), (_, r) in zip(flat_p, flat_r):
+        ax = axes[path_str(path)]
+        if ax is None or p.shape == r.shape:
+            out.append(r.astype(p.dtype))
+            continue
+        start = [0] * p.ndim
+        start[ax] = slot
+        out.append(jax.lax.dynamic_update_slice(p, r.astype(p.dtype),
+                                                tuple(start)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _flat_by_path(tree) -> Dict[str, Any]:
+    return {path_str(p): leaf
+            for p, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]}
+
+
+class SlotStatePool:
+    """Whole-pytree slot pool: the shared base of every non-paged
+    ``DecodeState``. Device caches come from the family's
+    ``models.init_slot_caches``; admission is one compiled generic column
+    splice; retirement is host-side bookkeeping (the next admission
+    overwrites the slot's entire column — slot reset, no leakage)."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_seq_len: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq_len = max_seq_len
+        self.caches = M.init_slot_caches(cfg, n_slots, max_seq_len)
+        self._axes = slot_axes(cfg, max_seq_len)
+        axes = self._axes
+        self._splice = jax.jit(
+            lambda pool, row, slot: splice_slot(pool, row, slot, axes))
+        self._free: List[int] = list(range(n_slots))
+
+    # ---- host bookkeeping ------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def acquire(self, need: int) -> Optional[int]:
+        """Slot-only admission (state here is not capacity-bounded beyond
+        the pool's sizing, which ``Engine.submit`` validates)."""
+        del need
+        return self._free.pop(0) if self._free else None
+
+    def release(self, slot: int):
+        if slot in self._free:
+            raise ValueError(f"slot {slot} is already free")
+        self._free.append(slot)
+        self._free.sort()
+
+    def advance(self, slot: int, n: int):
+        """No-op: write cursors advance on-device inside the step."""
+
+    def cursor(self, slot: int) -> int:
+        return 0
+
+    # ---- device ----------------------------------------------------------
+    def write_prefill(self, row_state, slot: int):
+        self.caches = self._splice(self.caches, row_state,
+                                   jnp.asarray(slot, jnp.int32))
+
+    def mask_dead(self, live: List[bool]) -> Optional[jnp.ndarray]:
+        """KV cursors already isolate dead rows — no mask needed."""
+        return None
+
+    def live_assemble(self, live: List[bool]):
+        return self.caches
+
+    def update_from(self, new_caches):
+        self.caches = new_caches
+
+    # ---- telemetry -------------------------------------------------------
+    def _fp_bytes_per_slot(self) -> int:
+        total = 0
+        for path, leaf in _flat_by_path(self.caches).items():
+            ax = self._axes[path]
+            per = leaf.size // (leaf.shape[ax] if ax is not None else 1)
+            total += per * jnp.dtype(leaf.dtype).itemsize
+        return total
+
+    def byte_stats(self) -> Dict[str, Any]:
+        return {"state_bytes_per_slot": self._fp_bytes_per_slot()}
+
+
+# ---------------------------------------------------------------------------
+# Recurrent state (ssm / hybrid), optional int8 storage
+# ---------------------------------------------------------------------------
+def _is_quantized_path(path: str) -> bool:
+    """The big recurrent leaves worth quantizing: Mamba conv rows + SSD
+    state, mLSTM matrix memory. Small trackers (gate maxima ``m``,
+    normalizers ``n``, sLSTM vectors) and the hybrid's KV part stay fp."""
+    name = path.split("/")[-1]
+    return (("mamba" in path and name in ("conv", "h"))
+            or ("mlstm" in path and name == "C"))
+
+
+def _quantize_state(caches, scales: Dict[str, jnp.ndarray]):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    out = []
+    for path, leaf in flat:
+        p = path_str(path)
+        if p in scales:
+            q = jnp.round(leaf.astype(jnp.float32) / scales[p])
+            out.append(jnp.clip(q, -INT8_MAX, INT8_MAX).astype(jnp.int8))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _dequantize_state(caches, scales: Dict[str, jnp.ndarray]):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    out = []
+    for path, leaf in flat:
+        p = path_str(path)
+        out.append(leaf.astype(jnp.float32) * scales[p] if p in scales
+                   else leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class RecurrentPool(SlotStatePool):
+    """Per-slot conv+SSM/mLSTM/sLSTM state for the ssm/hybrid families
+    (the hybrid's shared-attention KV rides in the same pytree with its
+    per-slot cursors). No seq axis: a slot's state is O(1), admission
+    resets it wholesale, and decode advances it under the engine's
+    ``live`` mask (``models.ssm._carry``) so dead slots never drift.
+
+    ``state_dtype="int8"`` stores the big leaves (Mamba conv rows + SSD
+    state, mLSTM matrix memory) quantized under per-channel scales that
+    are STATIC for the pool's lifetime (OSSH): seeded from the Quaff
+    calibration capture (``stats[...]["state"]`` absmax recorded by the
+    ssm blocks) or, absent calibration, probed from the first admitted
+    prompt's prefill state. The compiled step always sees fp state —
+    ``live_assemble`` dequantizes, ``update_from`` requantizes — and the
+    static grid makes the dead-row round trip exact (q(dq(x)) == x), so
+    masked-out slots still hold their state bit-for-bit."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_seq_len: int, *,
+                 state_dtype: str = "fp"):
+        check_state_dtype(state_dtype)
+        super().__init__(cfg, n_slots, max_seq_len)
+        self.state_dtype = state_dtype
+        self._qpaths = [p for p in self._axes if _is_quantized_path(p)] \
+            if state_dtype == "int8" else []
+        self.scales: Optional[Dict[str, jnp.ndarray]] = None
+        self.seeded_source: Optional[str] = None
+        self._fp_itemsize = {p: jnp.dtype(leaf.dtype).itemsize
+                             for p, leaf in _flat_by_path(self.caches).items()}
+        if self._qpaths:
+            flat, treedef = jax.tree_util.tree_flatten_with_path(self.caches)
+            self.caches = jax.tree_util.tree_unflatten(treedef, [
+                jnp.zeros(leaf.shape, jnp.int8)
+                if path_str(p) in self._qpaths else leaf
+                for p, leaf in flat])
+            self._quant = jax.jit(_quantize_state)
+            self._dequant = jax.jit(_dequantize_state)
+
+    # ---- OSSH-static scale seeding ---------------------------------------
+    @property
+    def needs_seed(self) -> bool:
+        return bool(self._qpaths) and self.scales is None
+
+    def seed_from_stats(self, stats) -> bool:
+        """Seed the static grid from the Quaff calibration capture
+        (``QuaffModel.stats``): the ssm blocks record per-channel state
+        absmax next to the per-linear input absmax. Returns False when the
+        capture predates the state entry (or no calibration ran)."""
+        if not self.needs_seed or stats is None:
+            return False
+        tree = stats[0] if isinstance(stats, tuple) else stats
+        flat = _flat_by_path(self.caches)
+        scales: Dict[str, jnp.ndarray] = {}
+        for p in self._qpaths:
+            leaf, ax = flat[p], self._axes[p]
+            top, name = p.split("/")[0], p.split("/")[-1]
+            try:
+                a = np.asarray(tree[top]["state"][name], np.float32)
+            except (KeyError, TypeError, IndexError):
+                return False
+            if a.shape != leaf.shape[:ax] + (leaf.shape[-1],):
+                return False
+            a = a.reshape(leaf.shape[:ax]
+                          + (1,) * (leaf.ndim - ax - 1) + (leaf.shape[-1],))
+            scales[p] = jnp.asarray(np.maximum(a, 1e-8) / INT8_MAX)
+        self.scales = scales
+        self.seeded_source = "calibration"
+        return True
+
+    def seed_from_row(self, row_state):
+        """Probe fallback: per-channel absmax of the first admitted
+        prompt's fp prefill state. OSSH makes one prompt a usable seed —
+        the hot state channels it exposes are the hot channels every later
+        token hits."""
+        flat = _flat_by_path(row_state)
+        scales: Dict[str, jnp.ndarray] = {}
+        for p in self._qpaths:
+            leaf, ax = flat[p], self._axes[p]
+            red = tuple(range(ax, leaf.ndim - 1))
+            a = jnp.max(jnp.abs(leaf.astype(jnp.float32)), axis=red,
+                        keepdims=True)
+            scales[p] = jnp.maximum(a, 1e-8) / INT8_MAX
+        self.scales = scales
+        self.seeded_source = "probe"
+
+    # ---- device ----------------------------------------------------------
+    def write_prefill(self, row_state, slot: int):
+        if self._qpaths:
+            if self.needs_seed:          # engine seeds from calib first
+                self.seed_from_row(row_state)
+            row_state = self._quant(row_state, self.scales)
+        super().write_prefill(row_state, slot)
+
+    def mask_dead(self, live: List[bool]) -> Optional[jnp.ndarray]:
+        return jnp.asarray(np.asarray(live, bool))
+
+    def live_assemble(self, live: List[bool]):
+        if self._qpaths:
+            return self._dequant(self.caches, self.scales)
+        return self.caches
+
+    def update_from(self, new_caches):
+        self.caches = (self._quant(new_caches, self.scales)
+                       if self._qpaths else new_caches)
+
+    # ---- telemetry -------------------------------------------------------
+    def byte_stats(self) -> Dict[str, Any]:
+        fp_total, total = 0, 0
+        for path, leaf in _flat_by_path(self.caches).items():
+            ax = self._axes[path]
+            per = leaf.size // (leaf.shape[ax] if ax is not None else 1)
+            fp_total += per * self._fp_itemsize[path]
+            total += per * jnp.dtype(leaf.dtype).itemsize
+        if self.scales is not None:      # static grids amortize over slots
+            total += sum(s.size * 4 for s in self.scales.values()) \
+                // self.n_slots
+        return {"state_bytes_per_slot": total,
+                "fp_state_bytes_per_slot": fp_total,
+                "state_dtype": self.state_dtype}
+
+
+class CrossAttnPool(SlotStatePool):
+    """Enc-dec (whisper) decode state: per-slot self-attention KV rows with
+    per-slot write cursors PLUS each request's cross-attention K/V (the
+    projected encoder output), spliced once at admission and static for
+    the request's lifetime. Requests without encoder frames keep zero
+    cross rows — identical to the lockstep no-frames decode."""
+
+    def byte_stats(self) -> Dict[str, Any]:
+        kh, hd, nl = (self.cfg.n_kv_heads, self.cfg.head_dim,
+                      self.cfg.n_layers)
+        itemsize = jnp.dtype(self.cfg.act_dtype).itemsize
+        cross = nl * 2 * self.cfg.encoder_seq * kh * hd * itemsize
+        return {"state_bytes_per_slot": self._fp_bytes_per_slot(),
+                "cross_kv_bytes_per_slot": cross}

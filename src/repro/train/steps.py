@@ -204,20 +204,27 @@ def build_decode(cfg: ModelConfig):
 # mid-decode or retired on EOS never block the other slots.
 # ---------------------------------------------------------------------------
 def build_prefill_slot(cfg: ModelConfig, cache_len: int):
-    """prefill_slot(frozen, adapters, quant_state, tokens) -> (last-token
-    logits, row caches).
+    """prefill_slot(frozen, adapters, quant_state, tokens, embeds=None) ->
+    (last-token logits, row caches) — FAMILY-AGNOSTIC.
 
-    ``tokens`` is ONE request (1, prompt_len); the returned caches are sized
-    to the pool's ``cache_len`` so the row can be spliced straight into a
-    free slot (serving.pool.write_slot). Under jit, compilation specializes
-    per prompt-length shape automatically."""
+    ``tokens`` is ONE request (1, prompt_len); the returned caches come
+    from ``models.init_slot_caches(cfg, 1, cache_len)`` so the row is
+    structurally a one-slot pool and splices straight into any pool column
+    (serving.state.splice_slot) for every family: KV rows + cursor
+    (dense/moe/vlm), final recurrent state (ssm/hybrid), self-KV + the
+    request's cross-KV (encdec). ``embeds`` carries the per-request
+    encoder frames (encdec) or prepended patch embeddings (vlm). Under
+    jit, compilation specializes per prompt-length shape automatically."""
     n_prefix = PEFT.n_prefix_tokens(cfg.peft)
 
-    def prefill_slot(frozen, adapters, quant_state, tokens):
+    def prefill_slot(frozen, adapters, quant_state, tokens, embeds=None):
         total = tokens.shape[1] + n_prefix
-        caches = M.init_caches(cfg, tokens.shape[0], cache_len)
+        if embeds is not None and cfg.family != "encdec":
+            total += embeds.shape[1]      # vlm: patches prepend to the seq
+        caches = M.init_slot_caches(cfg, tokens.shape[0], cache_len)
         out = M.forward(
             frozen, adapters, quant_state, tokens, cfg, caches=caches,
+            input_embeds=embeds,
             positions=jnp.arange(total, dtype=jnp.int32))
         return out.logits[:, -1, :], out.caches
 
@@ -249,18 +256,23 @@ def build_paged_step(cfg: ModelConfig):
 
 
 def build_decode_slots(cfg: ModelConfig):
-    """decode_slots(frozen, adapters, quant_state, caches, tokens, positions)
-    -> (logits (n_slots, vocab), new_caches).
+    """decode_slots(frozen, adapters, quant_state, caches, tokens,
+    positions, live=None) -> (logits (n_slots, vocab), new_caches) —
+    FAMILY-AGNOSTIC (every non-paged layout).
 
-    ``tokens`` is (n_slots, 1) — each slot's previous token (free slots carry
-    a pad token; their logits are ignored by the engine). ``positions`` is
-    (n_slots,) — each slot's RoPE position (prompt_len + n generated, the
-    same convention the lockstep ``api.QuaffModel.generate`` uses). Write
-    positions and length masks come from the caches' per-slot cursors."""
-    def decode_slots(frozen, adapters, quant_state, caches, tokens, positions):
+    ``tokens`` is (n_slots, 1) — each slot's previous token (free slots
+    carry a pad token; their logits are ignored by the engine).
+    ``positions`` is (n_slots,) — each slot's RoPE / sinusoidal position
+    (prompt_len + n generated, the same convention the lockstep
+    ``api.QuaffModel.generate`` used). KV write positions and length masks
+    come from the caches' per-slot cursors; for the recurrent families
+    ``live`` ((n_slots,) bool) masks the state carry so dead slots keep
+    their stored state bit-exactly."""
+    def decode_slots(frozen, adapters, quant_state, caches, tokens,
+                     positions, live=None):
         out = M.forward(
             frozen, adapters, quant_state, tokens, cfg,
-            caches=caches, positions=positions[:, None])
+            caches=caches, positions=positions[:, None], live=live)
         return out.logits[:, -1, :], out.caches
 
     return decode_slots

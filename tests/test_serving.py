@@ -224,11 +224,20 @@ def test_generate_exact_budget_without_eos(quaff_model, prompts):
         (len(prompts), 0)
 
 
-def test_engine_rejects_non_kv_families():
+def test_engine_knob_family_validation(quaff_model):
+    """Every family builds an Engine now (see test_serving_families), but
+    the state knobs stay family-checked: paged KV is for KV-cache
+    families, int8 state for recurrent ones."""
     import repro.configs as CFGS
     cfg = dataclasses.replace(
         CFGS.get_config("xlstm-350m").reduced(),
         quant=QuantConfig(mode="fp32"), peft=PEFTConfig(method="none"))
     model = api.prepare(cfg)
-    with pytest.raises(NotImplementedError):
-        Engine(model, max_slots=1, max_seq_len=16)
+    eng = Engine(model, max_slots=1, max_seq_len=16)   # accepted (ssm)
+    assert eng.stats.family == "ssm"
+    with pytest.raises(ValueError, match="paged"):
+        Engine(model, max_slots=1, max_seq_len=16, kv_layout="paged")
+    with pytest.raises(ValueError, match="state_dtype"):
+        Engine(quaff_model, max_slots=1, max_seq_len=16, state_dtype="int8")
+    with pytest.raises(ValueError, match="lazy_blocks"):
+        Engine(quaff_model, max_slots=1, max_seq_len=16, lazy_blocks=True)

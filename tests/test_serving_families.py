@@ -1,0 +1,356 @@
+"""Family-agnostic DecodeState pools: the serving engine must serve the
+ssm / hybrid / encdec families token-identically to the pre-engine
+lockstep loop (the old ``api.generate`` fallback, reproduced here on the
+raw step builders), with mid-decode admission, slot-reset isolation,
+int8 recurrent-state storage, and lazy paged-block growth.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs import get_config, reduced_family_demo
+from repro.core.peft import PEFTConfig
+from repro.data.pipeline import DataConfig, Loader, calibration_batches
+from repro.models.config import QuantConfig
+from repro.serving import Engine, GenerationRequest
+from repro.serving.state import RecurrentPool
+
+VOCAB, PROMPT = 512, 8
+
+ARCH = {"ssm": "xlstm-350m", "hybrid": "zamba2-1.2b",
+        "encdec": "whisper-large-v3"}
+
+
+def _family_cfg(family):
+    # shared with benchmarks/bench_serving (CI gates the same model)
+    return reduced_family_demo(family)
+
+
+@pytest.fixture(scope="module")
+def models():
+    return {fam: api.prepare(_family_cfg(fam)) for fam in ARCH}
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    return np.asarray(Loader(DataConfig(vocab_size=VOCAB, seq_len=PROMPT,
+                                        batch_size=4)).batch(0)["tokens"])
+
+
+def _lockstep_reference(model, prompts, max_new, embeds=None):
+    """The pre-engine greedy loop, straight on the step builders (this WAS
+    ``api._generate_lockstep`` before the fallback was deleted)."""
+    tokens = jnp.asarray(prompts)
+    prompt_len = tokens.shape[1]
+    batch = {"tokens": tokens}
+    if embeds is not None:
+        batch["embeds"] = jnp.asarray(embeds)
+    logits, caches = model.prefill(batch, extra_len=max_new)
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    for i in range(max_new - 1):
+        logits, caches = model.decode_step(caches, tok, prompt_len + i)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    return np.asarray(jnp.concatenate(out, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# engine-vs-lockstep greedy parity, every non-KV family
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family", ["ssm", "hybrid", "encdec"])
+def test_family_engine_greedy_parity(models, prompts, family):
+    """Engine greedy decode must be token-identical to the lockstep loop
+    (the acceptance criterion, per family)."""
+    model, max_new = models[family], 8
+    ref = _lockstep_reference(model, prompts, max_new)
+    eng = Engine(model, max_slots=len(prompts),
+                 max_seq_len=PROMPT + max_new)
+    outs = eng.run([GenerationRequest(p, max_new_tokens=max_new)
+                    for p in prompts])
+    got = np.asarray([o.token_ids for o in outs])
+    np.testing.assert_array_equal(ref, got)
+    assert eng.stats.family == family
+    assert eng.stats.requests_completed == len(prompts)
+    assert eng.stats.state_bytes_per_slot > 0
+
+
+@pytest.mark.parametrize("family", ["ssm", "hybrid", "encdec"])
+def test_family_generate_is_engine_backed(models, prompts, family):
+    """facade generate == lockstep reference, through the engine (the
+    lockstep fallback is gone)."""
+    model = models[family]
+    ref = _lockstep_reference(model, prompts, 6)
+    got = np.asarray(model.generate(prompts, max_new=6))
+    np.testing.assert_array_equal(ref, got)
+    assert model._engines, "generate() must route through a cached engine"
+
+
+# ---------------------------------------------------------------------------
+# scheduling: mid-decode admission + interleaved retire/admit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family", ["ssm", "hybrid"])
+def test_family_mid_decode_admission(models, prompts, family):
+    """Requests submitted while others are mid-decode produce the same
+    tokens as a fresh batch run — recurrent-state admission (slot reset +
+    live-masked carry) never perturbs live slots."""
+    model, max_new = models[family], 6
+    ref = _lockstep_reference(model, prompts, max_new)
+    eng = Engine(model, max_slots=2, max_seq_len=PROMPT + max_new)
+    for i in range(2):
+        eng.submit(GenerationRequest(prompts[i], max_new_tokens=max_new,
+                                     request_id=f"r{i}"))
+    eng.step()
+    eng.step()                      # two requests now mid-generation
+    for i in range(2, 4):
+        eng.submit(GenerationRequest(prompts[i], max_new_tokens=max_new,
+                                     request_id=f"r{i}"))
+    outs = {o.request_id: o for o in eng.run()}
+    got = np.asarray([outs[f"r{i}"].token_ids for i in range(4)])
+    np.testing.assert_array_equal(ref, got)
+
+
+@pytest.mark.parametrize("family", ["ssm", "hybrid", "encdec"])
+def test_family_interleaved_retire_admit_budgets(models, prompts, family):
+    """Mixed budgets force retire-then-admit slot reuse; every stream must
+    match its own single-request decode."""
+    model = models[family]
+    budgets = [3, 9, 5, 7]
+    eng = Engine(model, max_slots=2, max_seq_len=PROMPT + max(budgets))
+    outs = eng.run([GenerationRequest(prompts[i], max_new_tokens=b)
+                    for i, b in enumerate(budgets)])
+    for i, (b, out) in enumerate(zip(budgets, outs)):
+        solo = _lockstep_reference(model, prompts[i:i + 1], b)
+        np.testing.assert_array_equal(
+            solo[0], np.asarray(out.token_ids),
+            err_msg=f"{family} request {i} (budget {b}) diverged")
+    assert eng.stats.slot_steps < len(budgets) * max(budgets)
+
+
+# ---------------------------------------------------------------------------
+# slot-reset isolation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family", ["ssm", "hybrid", "encdec"])
+def test_slot_reset_isolation(models, prompts, family):
+    """A retired request's state never leaks into its slot's next tenant:
+    with ONE slot, the second request must match its solo decode exactly."""
+    model, max_new = models[family], 6
+    eng = Engine(model, max_slots=1, max_seq_len=PROMPT + max_new)
+    outs = eng.run([GenerationRequest(prompts[0], max_new_tokens=max_new),
+                    GenerationRequest(prompts[1], max_new_tokens=max_new)])
+    solo = _lockstep_reference(model, prompts[1:2], max_new)
+    np.testing.assert_array_equal(solo[0], np.asarray(outs[1].token_ids))
+
+
+# ---------------------------------------------------------------------------
+# encdec: per-request encoder frames
+# ---------------------------------------------------------------------------
+def test_encdec_engine_with_frames_parity(models, prompts):
+    model, max_new = models["encdec"], 6
+    cfg = model.cfg
+    frames = np.asarray(jax.random.normal(
+        jax.random.PRNGKey(7), (2, cfg.encoder_seq, cfg.d_model)))
+    ref = _lockstep_reference(model, prompts[:2], max_new, embeds=frames)
+    eng = Engine(model, max_slots=2, max_seq_len=PROMPT + max_new)
+    outs = eng.run([GenerationRequest(prompts[i], max_new_tokens=max_new,
+                                      input_embeds=frames[i])
+                    for i in range(2)])
+    got = np.asarray([o.token_ids for o in outs])
+    np.testing.assert_array_equal(ref, got)
+    # frames must actually matter: no-frames decode differs somewhere
+    bare = _lockstep_reference(model, prompts[:2], max_new)
+    assert not np.array_equal(ref, bare)
+
+
+def test_encdec_frames_validation(models):
+    model = models["encdec"]
+    eng = Engine(model, max_slots=1, max_seq_len=PROMPT + 4)
+    bad = np.zeros((3, model.cfg.d_model), np.float32)   # != encoder_seq
+    with pytest.raises(ValueError, match="encoder_seq"):
+        eng.submit(GenerationRequest(np.arange(4), max_new_tokens=2,
+                                     input_embeds=bad))
+
+
+# ---------------------------------------------------------------------------
+# vlm: prepended patch embeddings (engine decode positions must account
+# for the image-token offset — there is no lockstep reference, the old
+# fallback never supported embeds, so the oracle is teacher forcing)
+# ---------------------------------------------------------------------------
+def test_vlm_engine_with_patches_matches_full_forward(prompts):
+    cfg = dataclasses.replace(
+        get_config("pixtral-12b").reduced(),
+        quant=QuantConfig(mode="fp32"), peft=PEFTConfig(method="none"))
+    model = api.prepare(cfg)
+    max_new, bsz = 4, 2
+    toks = prompts[:bsz, :6]
+    patches = np.asarray(jax.random.normal(
+        jax.random.PRNGKey(3), (bsz, cfg.n_image_tokens, cfg.d_model)))
+
+    # teacher-forced oracle: re-run the full forward after each token
+    cur = jnp.asarray(toks)
+    ref = []
+    for _ in range(max_new):
+        logits = model.forward(cur, input_embeds=jnp.asarray(patches)).logits
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        ref.append(np.asarray(nxt))
+        cur = jnp.concatenate([cur, nxt[:, None]], axis=1)
+    ref = np.stack(ref, axis=1)
+
+    got = np.asarray(model.generate(toks, max_new=max_new,
+                                    input_embeds=patches))
+    np.testing.assert_array_equal(ref, got)
+
+
+def test_vlm_paged_rejects_embeds(prompts):
+    cfg = dataclasses.replace(
+        get_config("pixtral-12b").reduced(),
+        quant=QuantConfig(mode="fp32"), peft=PEFTConfig(method="none"))
+    model = api.prepare(cfg)
+    eng = Engine(model, max_slots=1, max_seq_len=64, kv_layout="paged")
+    patches = np.zeros((cfg.n_image_tokens, cfg.d_model), np.float32)
+    with pytest.raises(ValueError, match="contiguous"):
+        eng.submit(GenerationRequest(prompts[0][:4], max_new_tokens=2,
+                                     input_embeds=patches))
+
+
+# ---------------------------------------------------------------------------
+# int8 recurrent state (OSSH-static channel scales)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family", ["ssm", "hybrid"])
+def test_recurrent_pool_int8_roundtrip(models, prompts, family):
+    """Admitting a prefilled row into an int8 pool and reading it back
+    must bound the per-leaf error by one quantization bin (margin check:
+    bin width = channel absmax / 127), with dtype-verified int8 storage."""
+    from repro.serving.state import _is_quantized_path
+    from repro.runtime.treepath import path_str
+    model = models[family]
+    fp = Engine(model, max_slots=2, max_seq_len=PROMPT + 4)
+    q = Engine(model, max_slots=2, max_seq_len=PROMPT + 4,
+               state_dtype="int8")
+    req = GenerationRequest(prompts[0], max_new_tokens=1)
+    fp.run([req])
+    q.run([dataclasses.replace(req, request_id=None)])
+    assert isinstance(q._pool, RecurrentPool)
+    flat_q = jax.tree_util.tree_flatten_with_path(q._pool.caches)[0]
+    flat_f = jax.tree_util.tree_flatten_with_path(
+        q._pool.live_assemble([True, False]))[0]
+    flat_ref = jax.tree_util.tree_flatten_with_path(fp._pool.caches)[0]
+    n_quant = 0
+    for (p, leaf_q), (_, leaf_d), (_, leaf_r) in zip(flat_q, flat_f,
+                                                     flat_ref):
+        ps = path_str(p)
+        if not _is_quantized_path(ps):
+            continue
+        n_quant += 1
+        assert leaf_q.dtype == jnp.int8, ps
+        scale = q._pool.scales[ps]
+        err = np.abs(np.asarray(leaf_d, np.float32)
+                     - np.asarray(leaf_r, np.float32))
+        bound = np.broadcast_to(np.asarray(scale), leaf_d.shape)
+        # one bin of the static grid, plus clip slack for the probe seed
+        assert np.all(err <= 0.75 * bound + 1e-6), \
+            f"{ps}: max err {err.max()} vs bin {bound.max()}"
+    assert n_quant >= 1
+
+
+def test_recurrent_int8_engine_completes_and_saves_bytes(models, prompts):
+    model = models["ssm"]
+    eng = Engine(model, max_slots=2, max_seq_len=PROMPT + 6,
+                 state_dtype="int8")
+    outs = eng.run([GenerationRequest(prompts[i], max_new_tokens=6)
+                    for i in range(3)])
+    assert all(o.n_generated == 6 for o in outs)
+    st = eng.stats
+    assert st.state_dtype == "int8"
+    assert 0 < st.state_bytes_per_slot < st.fp_state_bytes_per_slot
+
+
+def test_recurrent_int8_seeded_from_calibration(prompts):
+    """A calibrated model carries per-channel STATE absmax in its capture;
+    the int8 pool must seed its static grid from it (probe otherwise)."""
+    cfg = _family_cfg("ssm")
+    fp32 = dataclasses.replace(cfg, quant=QuantConfig(mode="fp32"))
+    model = api.prepare(fp32)
+    dcfg = DataConfig(vocab_size=VOCAB, seq_len=PROMPT, batch_size=4)
+    model.calibrate(calibration_batches(dcfg, 2))
+    model.convert("quaff")
+    eng = Engine(model, max_slots=1, max_seq_len=PROMPT + 4,
+                 state_dtype="int8")
+    eng.run([GenerationRequest(prompts[0], max_new_tokens=2)])
+    assert eng._pool.seeded_source == "calibration"
+
+    bare = api.prepare(_family_cfg("ssm"))     # no capture -> probe seed
+    eng2 = Engine(bare, max_slots=1, max_seq_len=PROMPT + 4,
+                  state_dtype="int8")
+    eng2.run([GenerationRequest(prompts[0], max_new_tokens=2)])
+    assert eng2._pool.seeded_source == "probe"
+
+
+# ---------------------------------------------------------------------------
+# lazy paged-block allocation (KV families)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def dense_model():
+    from repro.models.config import ModelConfig
+    c = ModelConfig(
+        name="lazy-test", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=VOCAB, head_dim=16,
+        quant=QuantConfig(mode="fp32"),
+        peft=PEFTConfig(method="none"))
+    return api.prepare(c)
+
+
+def test_lazy_blocks_grow_and_save(dense_model, prompts):
+    """Lazy tables start at the prompt footprint and grow at decode time;
+    EOS-stopping requests pin fewer blocks than the eager max_new
+    reservation, and EngineStats reports the reserved-vs-used delta."""
+    max_new = 16
+    base = Engine(dense_model, max_slots=4, max_seq_len=PROMPT + max_new,
+                  kv_layout="paged", block_size=4)
+    ref0 = base.run([GenerationRequest(prompts[i], max_new_tokens=max_new)
+                     for i in range(4)])
+    eos = [int(o.token_ids[2]) for o in ref0]   # stop each row early
+
+    def reqs():
+        return [GenerationRequest(prompts[i], max_new_tokens=max_new,
+                                  eos_id=eos[i]) for i in range(4)]
+
+    eager = Engine(dense_model, max_slots=4, max_seq_len=PROMPT + max_new,
+                   kv_layout="paged", block_size=4)
+    lazy = Engine(dense_model, max_slots=4, max_seq_len=PROMPT + max_new,
+                  kv_layout="paged", block_size=4, lazy_blocks=True)
+    ref = eager.run(reqs())
+    got = lazy.run(reqs())
+    for a, b in zip(ref, got):
+        assert a.token_ids == b.token_ids
+    st = lazy.stats
+    assert st.block_grows > 0
+    assert st.lazy_blocks_saved_per_request > 0
+    assert st.peak_blocks_in_use <= eager.stats.peak_blocks_in_use
+    assert st.kv_bytes_per_request < eager.stats.kv_bytes_per_request
+
+
+def test_lazy_blocks_preemption_unwedges(dense_model, prompts):
+    """When every decoder is out of blocks, the youngest stream is
+    preempted (requeued with its generated tokens) so the pool makes
+    progress — and the preempted request still finishes with the exact
+    greedy continuation."""
+    max_new = 8
+    # full need = 8 + 8 = 16 positions = 4 blocks/req; a pool of 6 blocks
+    # admits both lazily (2+2), grows each once (3+3), then BOTH stall at
+    # their next growth — only preemption can unwedge it.
+    eng = Engine(dense_model, max_slots=2, max_seq_len=PROMPT + max_new,
+                 kv_layout="paged", block_size=4, n_blocks=6,
+                 lazy_blocks=True)
+    ref = _lockstep_reference(dense_model, prompts[:2], max_new)
+    outs = eng.run([GenerationRequest(prompts[i], max_new_tokens=max_new)
+                    for i in range(2)])
+    got = np.asarray([o.token_ids for o in outs])
+    np.testing.assert_array_equal(ref, got)
+    assert eng.stats.preemptions > 0
+    assert eng.stats.block_stalls > 0
+    assert eng.stats.requests_completed == 2

@@ -1,0 +1,37 @@
+"""repro.analysis: JAX/Pallas-aware static analysis for this repository.
+
+An AST-based (stdlib ``ast``, zero new dependencies) rule framework that
+checks the conventions the rest of the codebase relies on but pytest cannot
+see on CPU interpret mode: jit recompile hazards in serving hot paths,
+tracer leaks inside traced functions, PRNG-key reuse, Pallas kernel-wrapper
+contracts (interpret routing, grid divisibility, accumulator dtypes),
+quantized-value/scale companionship, and ``QuantBackend`` protocol
+completeness.
+
+Mirrors ``core/backend.py``'s one-file-per-rule self-registration pattern:
+each rule lives in ``repro/analysis/rules/<rule>.py``, subclasses ``Rule``,
+and calls ``register()`` at import time. Run it as::
+
+    python -m repro.analysis src tests benchmarks
+
+Findings can be suppressed inline with a justifying comment::
+
+    step = jax.jit(build(cfg))  # repro: noqa[RPR001] fresh cfg per iteration
+
+See ``src/repro/analysis/RULES.md`` for the rule catalogue.
+"""
+
+from repro.analysis.context import ModuleContext, ProjectContext
+from repro.analysis.registry import Finding, Rule, get_rules, register
+from repro.analysis.runner import analyze_paths, analyze_source
+
+__all__ = [
+    "Finding",
+    "ModuleContext",
+    "ProjectContext",
+    "Rule",
+    "analyze_paths",
+    "analyze_source",
+    "get_rules",
+    "register",
+]

@@ -1,0 +1,105 @@
+"""``python -m repro.analysis`` / ``repro-analyze`` command line.
+
+Text findings go to stdout (one per line, ``path:line:col RPRnnn ...``);
+``--json-out`` additionally writes the machine-readable report CI uploads
+as an artifact (mirroring the bench-smoke JSON convention). Exit status is
+1 when any error-severity finding survives suppression, 2 on usage errors,
+0 otherwise — warnings print but never fail the gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Optional, Sequence
+
+from repro.analysis.registry import get_rules
+from repro.analysis.runner import DEFAULT_EXCLUDE_DIRS, analyze_paths
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="repro-analyze",
+        description="JAX/Pallas-aware static analysis for the repro tree.",
+    )
+    p.add_argument(
+        "paths",
+        nargs="*",
+        default=["src", "tests", "benchmarks"],
+        help="files or directories to analyze (default: src tests benchmarks)",
+    )
+    p.add_argument(
+        "--select",
+        help="comma-separated rule ids to run (default: all registered rules)",
+    )
+    p.add_argument(
+        "--format",
+        choices=("text", "json"),
+        default="text",
+        help="stdout format (default: text)",
+    )
+    p.add_argument(
+        "--json-out",
+        metavar="FILE",
+        help="also write the JSON report to FILE (CI artifact)",
+    )
+    p.add_argument(
+        "--list-rules",
+        action="store_true",
+        help="print the rule catalogue and exit",
+    )
+    p.add_argument(
+        "--no-default-excludes",
+        action="store_true",
+        help=f"also analyze {sorted(DEFAULT_EXCLUDE_DIRS)} directories",
+    )
+    return p
+
+
+def _report(findings, n_files) -> dict:
+    return {
+        "tool": "repro.analysis",
+        "files_analyzed": n_files,
+        "errors": sum(1 for f in findings if f.severity == "error"),
+        "warnings": sum(1 for f in findings if f.severity == "warning"),
+        "findings": [f.to_dict() for f in findings],
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    args = _build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for rule in get_rules():
+            print(f"{rule.rule_id} [{rule.severity}] {rule.description}")
+        return 0
+
+    select = [s.strip() for s in args.select.split(",")] if args.select else None
+    exclude = () if args.no_default_excludes else DEFAULT_EXCLUDE_DIRS
+    try:
+        findings, n_files = analyze_paths(args.paths, select=select, exclude_dirs=exclude)
+    except (FileNotFoundError, ValueError) as e:
+        print(f"repro-analyze: {e}", file=sys.stderr)
+        return 2
+
+    report = _report(findings, n_files)
+    if args.format == "json":
+        print(json.dumps(report, indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        print(
+            f"{n_files} files analyzed: {report['errors']} error(s), "
+            f"{report['warnings']} warning(s)"
+        )
+    if args.json_out:
+        with open(args.json_out, "w", encoding="utf-8") as fh:
+            json.dump(report, fh, indent=2)
+            fh.write("\n")
+
+    return 1 if report["errors"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

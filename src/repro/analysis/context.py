@@ -1,0 +1,180 @@
+"""Parsed-file contexts shared by every rule.
+
+``ModuleContext`` wraps one parsed file: the AST plus the derived maps the
+rules keep needing — parent links, import-alias resolution (so ``pl`` in a
+file that did ``from jax.experimental import pallas as pl`` resolves to
+``jax.experimental.pallas``), inline ``# repro: noqa[...]`` suppressions,
+and function enumeration. ``ProjectContext`` is the whole analyzed file set
+with dotted-module lookup for the cross-file rules.
+
+Resolution is purely lexical — no imports are executed; the analyzed files
+are never run.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Set, Tuple, Union
+
+FunctionNode = Union[ast.FunctionDef, ast.AsyncFunctionDef]
+
+#: ``# repro: noqa`` (all rules) or ``# repro: noqa[RPR001,RPR002] why...``
+NOQA_RE = re.compile(r"#\s*repro:\s*noqa(?:\[([A-Za-z0-9_,\s-]+)\])?")
+
+
+def _collect_aliases(tree: ast.AST) -> Dict[str, str]:
+    """Map local names to canonical dotted import paths.
+
+    ``import jax.numpy as jnp``                    -> {"jnp": "jax.numpy"}
+    ``import jax``                                 -> {"jax": "jax"}
+    ``from jax.experimental import pallas as pl``  -> {"pl": "jax...pallas"}
+    ``from functools import partial``              -> {"partial": "functools.partial"}
+    """
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    aliases[a.asname] = a.name
+                else:
+                    # ``import jax.numpy`` binds the top-level name ``jax``
+                    top = a.name.split(".")[0]
+                    aliases[top] = top
+        elif isinstance(node, ast.ImportFrom) and node.module and node.level == 0:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def _collect_noqa(lines: List[str]) -> Dict[int, Optional[Set[str]]]:
+    """1-based line -> suppressed rule-id set, or None meaning all rules."""
+    out: Dict[int, Optional[Set[str]]] = {}
+    for i, line in enumerate(lines, start=1):
+        m = NOQA_RE.search(line)
+        if not m:
+            continue
+        if m.group(1) is None:
+            out[i] = None
+        else:
+            out[i] = {p.strip() for p in m.group(1).split(",") if p.strip()}
+    return out
+
+
+class ModuleContext:
+    """One parsed file plus the lexical maps rules operate on."""
+
+    def __init__(self, path: str, source: str, relpath: Optional[str] = None):
+        self.path = path
+        self.relpath = relpath or path
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.aliases = _collect_aliases(self.tree)
+        self.noqa = _collect_noqa(self.lines)
+        self._parents: Dict[int, ast.AST] = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[id(child)] = parent
+        #: dotted module name ("repro.kernels.common"); set by the runner
+        self.module_name = ""
+
+    # ---- tree navigation ------------------------------------------------
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(id(node))
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self.parent(node)
+        while cur is not None:
+            yield cur
+            cur = self.parent(cur)
+
+    def enclosing_function(self, node: ast.AST) -> Optional[FunctionNode]:
+        for anc in self.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return anc
+        return None
+
+    def functions(self) -> Iterator[FunctionNode]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield node
+
+    def calls(self) -> Iterator[ast.Call]:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call):
+                yield node
+
+    def statement_of(self, node: ast.AST) -> ast.AST:
+        """The enclosing ``ast.stmt`` (the node itself if already one)."""
+        cur: Optional[ast.AST] = node
+        while cur is not None and not isinstance(cur, ast.stmt):
+            cur = self.parent(cur)
+        return cur if cur is not None else node
+
+    # ---- name resolution ------------------------------------------------
+    def qualname(self, node: ast.AST) -> Optional[str]:
+        """Canonical dotted name of a Name/Attribute chain, resolved
+        through this file's imports; None for non-name expressions."""
+        parts: List[str] = []
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        base = self.aliases.get(node.id, node.id)
+        return ".".join([base] + parts[::-1])
+
+    def call_qualname(self, call: ast.Call) -> Optional[str]:
+        return self.qualname(call.func)
+
+    def is_call_to(self, node: ast.AST, *names: str) -> bool:
+        """True if ``node`` is a Call whose resolved function name equals
+        one of ``names`` exactly or by last-segment suffix (``a.b.c``
+        matches ``"c"`` only when ``"c"`` itself is passed undotted)."""
+        if not isinstance(node, ast.Call):
+            return False
+        qn = self.call_qualname(node)
+        if qn is None:
+            return False
+        return any(qn == n or ("." not in n and qn.split(".")[-1] == n) for n in names)
+
+    def unwrap_partial(self, node: ast.AST) -> Tuple[ast.AST, List[ast.keyword]]:
+        """Peel ``functools.partial(f, ...)`` wrappers: returns the innermost
+        callee expression plus every keyword bound along the way."""
+        kws: List[ast.keyword] = []
+        while (
+            isinstance(node, ast.Call)
+            and self.call_qualname(node) == "functools.partial"
+            and node.args
+        ):
+            kws.extend(node.keywords)
+            node = node.args[0]
+        return node, kws
+
+    # ---- suppression ----------------------------------------------------
+    def suppressed(self, rule_id: str, line: int) -> bool:
+        if line not in self.noqa:
+            return False
+        ids = self.noqa[line]
+        return ids is None or rule_id in ids
+
+
+class ProjectContext:
+    """The whole analyzed file set (cross-module rules read this)."""
+
+    def __init__(self, modules: List[ModuleContext]):
+        self.modules = modules
+        self._by_name = {m.module_name: m for m in modules if m.module_name}
+
+    def module(self, dotted: str) -> Optional[ModuleContext]:
+        """Lookup by dotted name, exact or by suffix (so ``repro.core.
+        backend`` is found whether the tree was rooted at src/ or not)."""
+        if dotted in self._by_name:
+            return self._by_name[dotted]
+        for name, mod in self._by_name.items():
+            if name.endswith("." + dotted) or dotted.endswith("." + name):
+                return mod
+        return None

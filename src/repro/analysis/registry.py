@@ -1,0 +1,111 @@
+"""Rule registry: the one extension point for static-analysis checks.
+
+Same shape as ``core/backend.py``'s ``QuantBackend`` registry: a rule is a
+self-registering one-file module under ``repro/analysis/rules/`` that
+subclasses ``Rule`` and calls ``register()`` at import time. The runner
+resolves rules through ``get_rules()`` and never branches on rule ids.
+
+A rule implements one (or both) of two passes:
+
+    check_module(ctx)      -> findings for one parsed file (most rules)
+    check_project(project) -> findings needing the whole file set
+                              (cross-module tables: jit static-arg
+                              signatures, the QuantBackend protocol)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic: a rule id anchored to a file position."""
+
+    rule_id: str
+    severity: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        return (
+            f"{self.path}:{self.line}:{self.col}: "
+            f"{self.rule_id} [{self.severity}] {self.message}"
+        )
+
+
+class Rule:
+    """Protocol base class. Subclass, set ``rule_id``, implement a pass."""
+
+    rule_id: str = ""
+    severity: str = "error"
+    description: str = ""
+
+    # ---- passes (implement at least one) --------------------------------
+    def check_module(self, ctx) -> Iterable[Finding]:
+        """Per-file pass over one ``ModuleContext``."""
+        return ()
+
+    def check_project(self, project) -> Iterable[Finding]:
+        """Whole-file-set pass over a ``ProjectContext``."""
+        return ()
+
+    # ---- helpers --------------------------------------------------------
+    def finding(self, ctx, node, message: str) -> Finding:
+        """Build a Finding anchored at an AST node of ``ctx``'s file."""
+        return Finding(
+            rule_id=self.rule_id,
+            severity=self.severity,
+            path=ctx.relpath,
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0) + 1,
+            message=message,
+        )
+
+
+_REGISTRY: Dict[str, Rule] = {}
+
+
+def register(rule):
+    """Register a rule under its ``.rule_id`` (last wins). Accepts an
+    instance or a Rule subclass (usable as a class decorator)."""
+    instance = rule() if isinstance(rule, type) else rule
+    if not instance.rule_id:
+        raise ValueError(f"{type(instance).__name__} has an empty .rule_id")
+    if instance.severity not in SEVERITIES:
+        raise ValueError(
+            f"{instance.rule_id}: severity {instance.severity!r} not in {SEVERITIES}"
+        )
+    _REGISTRY[instance.rule_id] = instance
+    return rule
+
+
+def _ensure_builtins():
+    # Lazy so importing the registry alone never pulls the rule modules,
+    # and so the builtin rules register no matter which entry point was
+    # imported first — exactly core/backend.py's _ensure_builtins dance.
+    from repro.analysis import rules  # noqa: F401
+
+
+def get_rules(select=None) -> List[Rule]:
+    """All registered rules sorted by id; ``select`` filters to those ids."""
+    _ensure_builtins()
+    rules = [_REGISTRY[k] for k in sorted(_REGISTRY)]
+    if select:
+        wanted = set(select)
+        unknown = wanted - {r.rule_id for r in rules}
+        if unknown:
+            raise ValueError(
+                f"unknown rule ids {sorted(unknown)}; registered: "
+                f"{', '.join(sorted(_REGISTRY))}"
+            )
+        rules = [r for r in rules if r.rule_id in wanted]
+    return rules

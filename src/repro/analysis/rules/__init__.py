@@ -1,0 +1,26 @@
+"""Builtin rule modules — importing this package registers every rule.
+
+One file per rule, mirroring ``repro/core``'s backend layout: each module
+defines a ``Rule`` subclass and calls ``register()`` at import time, so
+``registry.get_rules()`` sees the full catalogue no matter which entry
+point was imported first. See RULES.md (one directory up) for the
+human-readable catalogue.
+"""
+
+from repro.analysis.rules import (
+    rpr001_jit_cache,
+    rpr002_tracer,
+    rpr003_rng,
+    rpr004_pallas,
+    rpr005_scales,
+    rpr006_backend,
+)
+
+__all__ = [
+    "rpr001_jit_cache",
+    "rpr002_tracer",
+    "rpr003_rng",
+    "rpr004_pallas",
+    "rpr005_scales",
+    "rpr006_backend",
+]

@@ -1,0 +1,141 @@
+"""Shared trace-discovery helpers used by the jit/tracer/Pallas rules.
+
+"Traced" means the function body runs under a JAX trace: either the
+function is decorated with a transform (``@jax.jit``,
+``@functools.partial(jax.jit, ...)``) or it is passed by name/lambda/
+partial into a transform or control-flow combinator (``jax.lax.scan``,
+``pl.pallas_call``, ...). Keyword-only parameters are treated as static:
+every in-tree idiom binds them at trace time (jit ``static_argnames``,
+``functools.partial`` closure for kernel bodies).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.context import FunctionNode, ModuleContext
+
+JIT_QUALNAMES = frozenset({"jax.jit", "jax.pjit", "jax.experimental.pjit.pjit"})
+
+#: transforms whose function argument(s) get traced
+TRACE_WRAPPER_QUALNAMES = frozenset(
+    {
+        "jax.jit",
+        "jax.pjit",
+        "jax.vmap",
+        "jax.pmap",
+        "jax.grad",
+        "jax.value_and_grad",
+        "jax.checkpoint",
+        "jax.remat",
+        "jax.custom_vjp",
+        "jax.custom_jvp",
+        "jax.lax.scan",
+        "jax.lax.cond",
+        "jax.lax.switch",
+        "jax.lax.while_loop",
+        "jax.lax.fori_loop",
+        "jax.lax.map",
+        "jax.lax.associative_scan",
+        "jax.experimental.pallas.pallas_call",
+    }
+)
+
+PALLAS_CALL = "jax.experimental.pallas.pallas_call"
+
+
+def is_jit_call(ctx: ModuleContext, node: ast.AST) -> bool:
+    return isinstance(node, ast.Call) and ctx.call_qualname(node) in JIT_QUALNAMES
+
+
+def static_argnames_from_keywords(kws: List[ast.keyword]) -> Set[str]:
+    """String literals named by a ``static_argnames=`` keyword."""
+    names: Set[str] = set()
+    for kw in kws:
+        if kw.arg != "static_argnames":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, str):
+            names.add(v.value)
+        elif isinstance(v, (ast.Tuple, ast.List, ast.Set)):
+            for elt in v.elts:
+                if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                    names.add(elt.value)
+    return names
+
+
+def jit_decoration(
+    ctx: ModuleContext, fn: FunctionNode
+) -> Optional[Tuple[ast.AST, Set[str]]]:
+    """(decorator_node, static_argnames) when ``fn`` is jit-decorated
+    directly or through ``functools.partial(jax.jit, ...)``; else None."""
+    for deco in fn.decorator_list:
+        if ctx.qualname(deco) in JIT_QUALNAMES:
+            return deco, set()
+        if isinstance(deco, ast.Call):
+            inner, kws = ctx.unwrap_partial(deco)
+            if ctx.qualname(inner) in JIT_QUALNAMES:
+                return deco, static_argnames_from_keywords(kws + deco.keywords)
+            if ctx.call_qualname(deco) in JIT_QUALNAMES:
+                return deco, static_argnames_from_keywords(deco.keywords)
+    return None
+
+
+def _functions_by_name(ctx: ModuleContext) -> Dict[str, List[FunctionNode]]:
+    by_name: Dict[str, List[FunctionNode]] = {}
+    for fn in ctx.functions():
+        by_name.setdefault(fn.name, []).append(fn)
+    return by_name
+
+
+def resolve_function_arg(
+    ctx: ModuleContext, node: ast.AST, by_name: Dict[str, List[FunctionNode]]
+) -> List[ast.AST]:
+    """Function bodies named by an argument expression: a bare Name
+    resolving to a local def, a lambda, or either wrapped in partial."""
+    node, _ = ctx.unwrap_partial(node)
+    if isinstance(node, ast.Lambda):
+        return [node]
+    if isinstance(node, ast.Name):
+        return list(by_name.get(node.id, ()))
+    return []
+
+
+def traced_functions(ctx: ModuleContext) -> Dict[ast.AST, Set[str]]:
+    """All function/lambda nodes whose body runs under a trace, mapped to
+    the set of parameter names that are static at trace time."""
+    traced: Dict[ast.AST, Set[str]] = {}
+    by_name = _functions_by_name(ctx)
+
+    def add(fn: ast.AST, static: Set[str]):
+        prev = traced.setdefault(fn, set(static))
+        prev.update(static)
+
+    for fn in ctx.functions():
+        deco = jit_decoration(ctx, fn)
+        if deco is not None:
+            add(fn, deco[1])
+
+    for call in ctx.calls():
+        qn = ctx.call_qualname(call)
+        if qn not in TRACE_WRAPPER_QUALNAMES:
+            continue
+        static = static_argnames_from_keywords(call.keywords)
+        for arg in call.args:
+            for fn in resolve_function_arg(ctx, arg, by_name):
+                add(fn, static)
+
+    # keyword-only params are bound at trace time in every in-tree idiom
+    for fn, static in traced.items():
+        args = fn.args
+        static.update(a.arg for a in args.kwonlyargs)
+    return traced
+
+
+def positional_param_names(fn: ast.AST) -> List[str]:
+    args = fn.args
+    names = [a.arg for a in args.posonlyargs + args.args]
+    if names and names[0] in ("self", "cls"):
+        names = names[1:]
+    return names

@@ -1,0 +1,157 @@
+"""RPR001 — jit-cache-busting.
+
+``jax.jit`` keeps its trace cache on the wrapper object, so a wrapper
+constructed per loop iteration (or constructed-and-immediately-called)
+retraces every execution — the classic silent recompile storm in a serving
+hot loop. Hot paths must build steps once (module level, ``@functools.
+lru_cache`` builders as in ``serving/engine.py``, or an ``is None`` memo
+guard). Separately, arguments declared in ``static_argnames`` become cache
+*keys*: passing an unhashable literal (list/dict/set) raises at best and,
+for freshly-constructed objects, busts the cache at every call.
+
+Flags:
+  * a ``jax.jit(...)`` call lexically inside a ``for``/``while`` loop,
+    unless memoized under an ``x is None`` guard;
+  * ``jax.jit(f)(...)`` — a fresh wrapper invoked immediately;
+  * a call to a known jit-wrapped function passing a list/dict/set
+    literal (or comprehension) for a ``static_argnames`` parameter.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Set
+
+from repro.analysis.context import ModuleContext, ProjectContext
+from repro.analysis.registry import Rule, register
+from repro.analysis.rules.common import (
+    is_jit_call,
+    jit_decoration,
+    static_argnames_from_keywords,
+)
+
+UNHASHABLE_NODES = (
+    ast.List,
+    ast.Dict,
+    ast.Set,
+    ast.ListComp,
+    ast.DictComp,
+    ast.SetComp,
+    ast.GeneratorExp,
+)
+
+
+def _memo_guarded(ctx: ModuleContext, call: ast.Call, loop: ast.AST) -> bool:
+    """True when the jit call sits under an ``if x is None:`` (or
+    ``if not x:``) guard between itself and the loop — the build-once
+    pattern ``train/calibrate.py`` uses."""
+    for anc in ctx.ancestors(call):
+        if anc is loop:
+            return False
+        if not isinstance(anc, ast.If):
+            continue
+        test = anc.test
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            return True
+        if isinstance(test, ast.Compare) and any(
+            isinstance(op, (ast.Is, ast.Eq)) for op in test.ops
+        ):
+            comparators = [test.left] + list(test.comparators)
+            if any(
+                isinstance(c, ast.Constant) and c.value is None for c in comparators
+            ):
+                return True
+    return False
+
+
+def _enclosing_loop(ctx: ModuleContext, call: ast.Call):
+    """Nearest For/While ancestor, stopping at a function boundary (a jit
+    built inside a def that merely *sits* in a loop runs when the def is
+    called, not per iteration)."""
+    for anc in ctx.ancestors(call):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            return None
+        if isinstance(anc, (ast.For, ast.AsyncFor, ast.While)):
+            return anc
+    return None
+
+
+def _jit_static_table(project: ProjectContext) -> Dict[str, Set[str]]:
+    """bare function name -> static_argnames, for every jit-wrapped
+    function in the analyzed set (decorated defs and ``f = jax.jit(g,
+    static_argnames=...)`` assignments)."""
+    table: Dict[str, Set[str]] = {}
+
+    def add(name: str, static: Set[str]):
+        if static:
+            table.setdefault(name, set()).update(static)
+
+    for ctx in project.modules:
+        for fn in ctx.functions():
+            deco = jit_decoration(ctx, fn)
+            if deco is not None:
+                add(fn.name, deco[1])
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Assign) or not is_jit_call(ctx, node.value):
+                continue
+            static = static_argnames_from_keywords(node.value.keywords)
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    add(tgt.id, static)
+    return table
+
+
+@register
+class JitCacheBusting(Rule):
+    rule_id = "RPR001"
+    severity = "error"
+    description = (
+        "jax.jit constructed per loop iteration / invoked immediately, or a "
+        "static_argnames parameter passed an unhashable literal"
+    )
+
+    def check_module(self, ctx: ModuleContext):
+        for call in ctx.calls():
+            # jax.jit(f)(...): fresh wrapper, traced on every execution
+            if isinstance(call.func, ast.Call) and is_jit_call(ctx, call.func):
+                yield self.finding(
+                    ctx,
+                    call,
+                    "jax.jit(...) constructed and called in one expression: the "
+                    "wrapper (and its trace cache) dies immediately, so every "
+                    "execution retraces — bind the jitted function once",
+                )
+            if not is_jit_call(ctx, call):
+                continue
+            loop = _enclosing_loop(ctx, call)
+            if loop is not None and not _memo_guarded(ctx, call, loop):
+                yield self.finding(
+                    ctx,
+                    call,
+                    "jax.jit(...) inside a loop builds a fresh wrapper (fresh "
+                    "trace cache) per iteration — hoist it, memoize under an "
+                    "`is None` guard, or use an lru_cache'd builder as in "
+                    "serving/engine.py",
+                )
+
+    def check_project(self, project: ProjectContext):
+        table = _jit_static_table(project)
+        if not table:
+            return
+        for ctx in project.modules:
+            for call in ctx.calls():
+                qn = ctx.call_qualname(call)
+                if qn is None:
+                    continue
+                static = table.get(qn.split(".")[-1])
+                if not static:
+                    continue
+                for kw in call.keywords:
+                    if kw.arg in static and isinstance(kw.value, UNHASHABLE_NODES):
+                        yield self.finding(
+                            ctx,
+                            kw.value,
+                            f"static_argnames parameter {kw.arg!r} receives an "
+                            "unhashable literal — static args are jit cache keys "
+                            "and must be hashable (use a tuple)",
+                        )

@@ -1,0 +1,150 @@
+"""RPR002 — tracer safety.
+
+Inside a traced function, Python-level control flow on traced values
+(``if``/``while``/``assert`` on an array argument) raises a
+``TracerBoolConversionError`` at best and silently bakes in a branch at
+worst; ``print`` executes at trace time (once), not at run time; and
+mutating a closed-over Python container is a side effect the trace replays
+never see. Static parameters (``static_argnames``, keyword-only params
+bound via ``functools.partial``) are concrete Python values and are fine
+to branch on — the rule exempts them.
+
+Flags, inside any traced function (see ``rules.common.traced_functions``):
+  * ``print(...)`` — use ``jax.debug.print`` / ``pl.debug_print``;
+  * ``if``/``while``/``assert`` whose test references a non-static
+    positional parameter directly by name;
+  * ``.append``/``.extend``/``.add``/``.update``/``.insert``/``.pop``
+    on a name not local to the traced function (closure mutation).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Set
+
+from repro.analysis.context import ModuleContext
+from repro.analysis.registry import Rule, register
+from repro.analysis.rules.common import positional_param_names, traced_functions
+
+MUTATORS = frozenset({"append", "extend", "insert", "add", "update", "pop", "remove"})
+
+
+def _local_names(fn: ast.AST) -> Set[str]:
+    """Parameter names plus every name assigned anywhere in the body."""
+    args = fn.args
+    names = {a.arg for a in args.posonlyargs + args.args + args.kwonlyargs}
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) else [node.target]
+            for tgt in targets:
+                for sub in ast.walk(tgt):
+                    if isinstance(sub, ast.Name):
+                        names.add(sub.id)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            for sub in ast.walk(node.target):
+                if isinstance(sub, ast.Name):
+                    names.add(sub.id)
+        elif isinstance(node, ast.withitem) and node.optional_vars is not None:
+            for sub in ast.walk(node.optional_vars):
+                if isinstance(sub, ast.Name):
+                    names.add(sub.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            names.add(node.name)
+    return names
+
+
+def _own_nodes(ctx: ModuleContext, fn: ast.AST):
+    """Nodes of ``fn``'s body excluding nested function/class bodies —
+    nested defs are separate (possibly untraced) scopes."""
+    for node in ast.walk(fn):
+        if node is fn:
+            continue
+        skip = False
+        for anc in ctx.ancestors(node):
+            if anc is fn:
+                break
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda, ast.ClassDef)):
+                skip = True
+                break
+        if not skip:
+            yield node
+
+
+@register
+class TracerSafety(Rule):
+    rule_id = "RPR002"
+    severity = "error"
+    description = (
+        "Python control flow / print / closure mutation on traced values "
+        "inside a jitted, scanned, or Pallas-called function"
+    )
+
+    def check_module(self, ctx: ModuleContext):
+        for fn, static in traced_functions(ctx).items():
+            suspect = {p for p in positional_param_names(fn) if p not in static}
+            locals_ = _local_names(fn)
+            for node in _own_nodes(ctx, fn):
+                if isinstance(node, ast.Call):
+                    yield from self._check_call(ctx, node, locals_)
+                elif isinstance(node, (ast.If, ast.While, ast.Assert)):
+                    yield from self._check_branch(ctx, node, suspect)
+
+    def _check_call(self, ctx, call: ast.Call, locals_: Set[str]):
+        if isinstance(call.func, ast.Name) and call.func.id == "print":
+            if "print" not in locals_:
+                yield self.finding(
+                    ctx,
+                    call,
+                    "print() inside a traced function runs once at trace time, "
+                    "not per step — use jax.debug.print / pl.debug_print",
+                )
+            return
+        if (
+            isinstance(call.func, ast.Attribute)
+            and call.func.attr in MUTATORS
+            and isinstance(call.func.value, ast.Name)
+            and call.func.value.id not in locals_
+        ):
+            yield self.finding(
+                ctx,
+                call,
+                f"mutating closed-over {call.func.value.id!r} with "
+                f".{call.func.attr}() inside a traced function is a Python "
+                "side effect: it runs at trace time only and is invisible to "
+                "replayed executions",
+            )
+
+    def _check_branch(self, ctx, node, suspect: Set[str]):
+        kind = {ast.If: "if", ast.While: "while", ast.Assert: "assert"}[type(node)]
+        test = node.test
+        for sub in ast.walk(test):
+            if isinstance(sub, ast.Name) and sub.id in suspect:
+                # x.shape / x.ndim / x.dtype are concrete under tracing
+                parent = ctx.parent(sub)
+                if isinstance(parent, ast.Attribute) and parent.attr in (
+                    "shape",
+                    "ndim",
+                    "dtype",
+                    "size",
+                ):
+                    continue
+                # `key in pytree_param` is membership over static dict
+                # structure (e.g. state.py's scale dicts), not a tracer read
+                if (
+                    isinstance(parent, ast.Compare)
+                    and sub in parent.comparators
+                    and any(isinstance(op, (ast.In, ast.NotIn)) for op in parent.ops)
+                ):
+                    continue
+                yield self.finding(
+                    ctx,
+                    node,
+                    f"`{kind}` on traced parameter {sub.id!r}: concretization "
+                    "of a tracer — use jax.lax.cond/select (or mark the "
+                    "argument static) instead of Python control flow",
+                )
+                break

@@ -1,0 +1,210 @@
+"""RPR003 — PRNG-key discipline.
+
+A JAX PRNG key consumed by two random ops yields *identical* (or, via
+``split`` twice, correlated) streams — the silent-correlation bug class.
+Every key must be split or folded before a second consumption.
+
+Per function scope, the rule tracks variables that hold keys (assigned
+from ``jax.random.PRNGKey``/``key``/``split``/``fold_in``, or parameters
+named ``key``/``rng``/``keys``/...) and counts *consumptions*: the key
+appearing as the first argument of any ``jax.random.*`` call (``split``
+and ``fold_in`` consume their operand too — splitting the same parent
+twice is exactly the correlated-stream bug). Distinct constant subscripts
+(``ks[0]`` vs ``ks[1]``) and distinct ``fold_in`` constants are distinct
+streams. Control flow is honored: ``if``/``elif`` branches don't see each
+other's uses, and loop bodies are evaluated twice so a key consumed per
+iteration without an in-loop re-split is caught.
+"""
+
+from __future__ import annotations
+
+import ast
+import copy
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.context import ModuleContext
+from repro.analysis.registry import Rule, register
+
+KEYISH_PARAM = re.compile(r"(^|_)(key|rng|prng)s?\d*$", re.IGNORECASE)
+
+PRODUCERS = frozenset(
+    {"jax.random.PRNGKey", "jax.random.key", "jax.random.split", "jax.random.fold_in"}
+)
+#: jax.random functions that do NOT consume a key operand
+NON_CONSUMING = frozenset(
+    {"jax.random.PRNGKey", "jax.random.key", "jax.random.key_data", "jax.random.wrap_key_data"}
+)
+
+# stream id: (var name, subscript const or None, fold_in const or None)
+StreamId = Tuple[str, Optional[object], Optional[object]]
+
+
+class _ScopeState:
+    __slots__ = ("keyvars", "counts")
+
+    def __init__(self, keyvars: Set[str]):
+        self.keyvars = keyvars
+        self.counts: Dict[StreamId, int] = {}
+
+    def clone(self) -> "_ScopeState":
+        st = _ScopeState(set(self.keyvars))
+        st.counts = copy.copy(self.counts)
+        return st
+
+    def merge(self, other: "_ScopeState"):
+        self.keyvars |= other.keyvars
+        for k, v in other.counts.items():
+            self.counts[k] = max(self.counts.get(k, 0), v)
+
+    def reset_name(self, name: str, is_key: bool):
+        for sid in [s for s in self.counts if s[0] == name]:
+            del self.counts[sid]
+        if is_key:
+            self.keyvars.add(name)
+        else:
+            self.keyvars.discard(name)
+
+
+class _KeyFlow:
+    def __init__(self, rule: "RngKeyDiscipline", ctx: ModuleContext):
+        self.rule = rule
+        self.ctx = ctx
+        self.findings: List = []
+        self._seen: Set[Tuple[int, int, StreamId]] = set()
+
+    # ---- expression side ------------------------------------------------
+    def _stream_of(self, node: ast.AST, st: _ScopeState) -> Optional[StreamId]:
+        if isinstance(node, ast.Name) and node.id in st.keyvars:
+            return (node.id, None, None)
+        if isinstance(node, ast.Subscript) and isinstance(node.value, ast.Name):
+            if node.value.id not in st.keyvars:
+                return None
+            idx = node.slice
+            if isinstance(idx, ast.Constant):
+                return (node.value.id, idx.value, None)
+            return None  # data-dependent index: can't reason statically
+        return None
+
+    def scan_expr(self, expr: ast.AST, st: _ScopeState):
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            qn = self.ctx.call_qualname(node)
+            if qn is None or not qn.startswith("jax.random.") or qn in NON_CONSUMING:
+                continue
+            if not node.args:
+                continue
+            sid = self._stream_of(node.args[0], st)
+            if sid is None:
+                continue
+            if qn == "jax.random.fold_in":
+                fold = node.args[1] if len(node.args) > 1 else None
+                if not isinstance(fold, ast.Constant):
+                    continue  # varying fold value -> distinct streams
+                sid = (sid[0], sid[1], ("fold", fold.value))
+            st.counts[sid] = st.counts.get(sid, 0) + 1
+            if st.counts[sid] == 2:
+                mark = (node.lineno, node.col_offset, sid)
+                if mark not in self._seen:
+                    self._seen.add(mark)
+                    what = sid[0] if sid[1] is None else f"{sid[0]}[{sid[1]!r}]"
+                    self.findings.append(
+                        self.rule.finding(
+                            self.ctx,
+                            node,
+                            f"PRNG key {what} consumed again without an "
+                            "interposing jax.random.split/fold_in — identical "
+                            "or correlated random streams",
+                        )
+                    )
+
+    # ---- statement side -------------------------------------------------
+    def _assign(self, targets: List[ast.AST], value: ast.AST, st: _ScopeState):
+        produced = (
+            isinstance(value, ast.Call) and self.ctx.call_qualname(value) in PRODUCERS
+        )
+        for tgt in targets:
+            if isinstance(tgt, ast.Name):
+                st.reset_name(tgt.id, produced)
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                for elt in tgt.elts:
+                    if isinstance(elt, ast.Name):
+                        st.reset_name(elt.id, produced)
+
+    def visit_block(self, stmts: List[ast.stmt], st: _ScopeState):
+        for stmt in stmts:
+            self.visit_stmt(stmt, st)
+
+    def visit_stmt(self, stmt: ast.stmt, st: _ScopeState):
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # separate scope, analyzed on its own
+        if isinstance(stmt, ast.Assign):
+            self.scan_expr(stmt.value, st)
+            self._assign(stmt.targets, stmt.value, st)
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self.scan_expr(stmt.value, st)
+            self._assign([stmt.target], stmt.value, st)
+        elif isinstance(stmt, ast.AugAssign):
+            self.scan_expr(stmt.value, st)
+        elif isinstance(stmt, ast.If):
+            self.scan_expr(stmt.test, st)
+            body_st = st.clone()
+            self.visit_block(stmt.body, body_st)
+            else_st = st.clone()
+            self.visit_block(stmt.orelse, else_st)
+            st.keyvars.clear()
+            st.counts.clear()
+            body_st.merge(else_st)
+            st.merge(body_st)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self.scan_expr(stmt.iter, st)
+            # two symbolic iterations: catches per-iteration reuse while
+            # accepting the `key, sub = split(key)`-at-top idiom
+            self.visit_block(stmt.body, st)
+            self.visit_block(stmt.body, st)
+            self.visit_block(stmt.orelse, st)
+        elif isinstance(stmt, ast.While):
+            self.scan_expr(stmt.test, st)
+            self.visit_block(stmt.body, st)
+            self.visit_block(stmt.body, st)
+            self.visit_block(stmt.orelse, st)
+        elif isinstance(stmt, ast.With) or isinstance(stmt, ast.AsyncWith):
+            for item in stmt.items:
+                self.scan_expr(item.context_expr, st)
+            self.visit_block(stmt.body, st)
+        elif isinstance(stmt, ast.Try):
+            self.visit_block(stmt.body, st)
+            for handler in stmt.handlers:
+                self.visit_block(handler.body, st)
+            self.visit_block(stmt.orelse, st)
+            self.visit_block(stmt.finalbody, st)
+        elif isinstance(stmt, (ast.Return, ast.Expr)) and stmt.value is not None:
+            self.scan_expr(stmt.value, st)
+        elif isinstance(stmt, (ast.Raise, ast.Assert, ast.Delete)):
+            for sub in ast.iter_child_nodes(stmt):
+                self.scan_expr(sub, st)
+
+
+@register
+class RngKeyDiscipline(Rule):
+    rule_id = "RPR003"
+    severity = "error"
+    description = (
+        "a PRNG key consumed by >=2 random ops without an interposing "
+        "jax.random.split/fold_in"
+    )
+
+    def check_module(self, ctx: ModuleContext):
+        scopes: List[Tuple[List[ast.stmt], Set[str]]] = [(ctx.tree.body, set())]
+        for fn in ctx.functions():
+            params = {
+                a.arg
+                for a in fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs
+                if KEYISH_PARAM.search(a.arg)
+            }
+            scopes.append((fn.body, params))
+        for body, seed in scopes:
+            flow = _KeyFlow(self, ctx)
+            flow.visit_block(body, _ScopeState(seed))
+            yield from flow.findings

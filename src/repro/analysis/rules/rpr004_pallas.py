@@ -1,0 +1,198 @@
+"""RPR004 — Pallas kernel-wrapper contracts.
+
+Every ``pl.pallas_call`` wrapper in this repo must uphold three local
+contracts that only explode on real TPUs (CPU CI runs interpret mode):
+
+  1. the ``interpret=`` flag must be routed through
+     ``kernels.common.interpret_mode`` so ``REPRO_PALLAS_INTERPRET=1``
+     (the switch CI flips) reaches every kernel — a missing or ad-hoc
+     flag silently compiles Mosaic on runners that can't;
+  2. a wrapper that derives its grid with floor division must guard
+     divisibility (``fit_block`` or a ``%``-based assert/raise) — a
+     truncated grid silently drops tail blocks;
+  3. matmul kernels must not accumulate in a narrow float: VMEM scratch
+     accumulators feeding a dot must be f32 (or i32 for integer GEMMs).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.context import ModuleContext
+from repro.analysis.registry import Rule, register
+from repro.analysis.rules.common import PALLAS_CALL
+
+INTERPRET_MODE_SUFFIX = ".interpret_mode"
+NARROW_FLOATS = ("bfloat16", "float16")
+
+
+def _is_interpret_mode_call(ctx: ModuleContext, node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    qn = ctx.call_qualname(node)
+    return qn is not None and (
+        qn == "interpret_mode" or qn.endswith(INTERPRET_MODE_SUFFIX)
+    )
+
+
+def _interpret_routed(ctx: ModuleContext, call: ast.Call, kw: ast.keyword) -> bool:
+    """True when ``interpret=`` is fed by ``interpret_mode(...)`` — directly
+    or through a name assigned from it in the enclosing function."""
+    if _is_interpret_mode_call(ctx, kw.value):
+        return True
+    if not isinstance(kw.value, ast.Name):
+        return False
+    fn = ctx.enclosing_function(call)
+    scope: ast.AST = fn if fn is not None else ctx.tree
+    for node in ast.walk(scope):
+        if not isinstance(node, ast.Assign):
+            continue
+        if any(
+            isinstance(t, ast.Name) and t.id == kw.value.id for t in node.targets
+        ) and _is_interpret_mode_call(ctx, node.value):
+            return True
+    return False
+
+
+def _has_divisibility_guard(ctx: ModuleContext, scope: ast.AST) -> bool:
+    """``fit_block(...)`` anywhere, or a ``%`` inside an assert / raise-y
+    if-test, counts as guarding the grid arithmetic."""
+    def has_mod(expr: ast.AST) -> bool:
+        return any(
+            isinstance(sub, ast.BinOp) and isinstance(sub.op, ast.Mod)
+            for sub in ast.walk(expr)
+        )
+
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Call):
+            qn = ctx.call_qualname(node)
+            if qn is not None and qn.split(".")[-1] == "fit_block":
+                return True
+        if isinstance(node, ast.Assert) and has_mod(node.test):
+            return True
+        if (
+            isinstance(node, ast.If)
+            and any(isinstance(s, ast.Raise) for s in node.body)
+            and has_mod(node.test)
+        ):
+            return True
+    return False
+
+
+def _grid_uses_floordiv(call: ast.Call, scope: ast.AST) -> Optional[ast.AST]:
+    """The offending node when the wrapper computes grid-ish values with
+    ``//`` — either inline in the grid keyword or anywhere in the scope
+    feeding a grid/BlockSpec expression (approximated as: any ``//`` in the
+    wrapper scope when a grid kwarg is present)."""
+    has_grid = any(kw.arg in ("grid", "grid_spec") for kw in call.keywords)
+    if not has_grid:
+        return None
+    for node in ast.walk(scope):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.FloorDiv):
+            return node
+    return None
+
+
+def _kernel_body(ctx: ModuleContext, call: ast.Call):
+    """The FunctionDef of the kernel passed as first argument (possibly
+    through functools.partial), when it lives in this module."""
+    if not call.args:
+        return None
+    inner, _ = ctx.unwrap_partial(call.args[0])
+    if isinstance(inner, ast.Name):
+        for fn in ctx.functions():
+            if fn.name == inner.id:
+                return fn
+    if isinstance(inner, ast.Lambda):
+        return inner
+    return None
+
+
+def _has_dot(body: ast.AST, ctx: ModuleContext) -> bool:
+    for node in ast.walk(body):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.MatMult):
+            return True
+        if isinstance(node, ast.Call):
+            qn = ctx.call_qualname(node)
+            if qn is not None and qn.split(".")[-1] in ("dot_general", "dot", "matmul"):
+                return True
+    return False
+
+
+@register
+class PallasKernelContracts(Rule):
+    rule_id = "RPR004"
+    severity = "error"
+    description = (
+        "pallas_call contracts: interpret routed via kernels.common."
+        "interpret_mode, grid floor-division guarded, matmul accumulators "
+        "not narrow-float"
+    )
+
+    def check_module(self, ctx: ModuleContext):
+        for call in ctx.calls():
+            qn = ctx.call_qualname(call)
+            if qn != PALLAS_CALL:
+                continue
+            yield from self._check_interpret(ctx, call)
+            yield from self._check_grid(ctx, call)
+            yield from self._check_accumulators(ctx, call)
+
+    def _check_interpret(self, ctx, call):
+        kw = next((k for k in call.keywords if k.arg == "interpret"), None)
+        if kw is None:
+            yield self.finding(
+                ctx,
+                call,
+                "pallas_call without interpret=: pass interpret="
+                "interpret_mode(requested) (kernels/common.py) so "
+                "REPRO_PALLAS_INTERPRET=1 reaches this kernel on CPU CI",
+            )
+        elif not _interpret_routed(ctx, call, kw):
+            yield self.finding(
+                ctx,
+                kw.value,
+                "interpret= must be routed through kernels.common."
+                "interpret_mode(...) — an ad-hoc flag ignores the "
+                "REPRO_PALLAS_INTERPRET CI override",
+            )
+
+    def _check_grid(self, ctx, call):
+        fn = ctx.enclosing_function(call)
+        scope = fn if fn is not None else ctx.tree
+        offender = _grid_uses_floordiv(call, scope)
+        if offender is not None and not _has_divisibility_guard(ctx, scope):
+            yield self.finding(
+                ctx,
+                offender,
+                "grid computed with // but no divisibility guard in the "
+                "wrapper: a non-dividing block size silently drops tail "
+                "elements — use fit_block() or assert dim % block == 0",
+            )
+
+    def _check_accumulators(self, ctx, call):
+        body = _kernel_body(ctx, call)
+        if body is None or not _has_dot(body, ctx):
+            return
+        for kw in call.keywords:
+            if kw.arg != "scratch_shapes":
+                continue
+            for node in ast.walk(kw.value):
+                if not isinstance(node, ast.Call):
+                    continue
+                qn = ctx.call_qualname(node)
+                if qn is None or qn.split(".")[-1] not in ("VMEM", "SMEM"):
+                    continue
+                if len(node.args) < 2:
+                    continue
+                dt = ctx.qualname(node.args[1])
+                if dt is not None and dt.split(".")[-1] in NARROW_FLOATS:
+                    yield self.finding(
+                        ctx,
+                        node.args[1],
+                        f"matmul kernel accumulates in {dt.split('.')[-1]}: "
+                        "VMEM accumulator scratch must be f32 (or i32 for "
+                        "integer GEMMs) — narrow-float accumulation loses "
+                        "the epilogue's precision",
+                    )

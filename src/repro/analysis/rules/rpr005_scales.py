@@ -1,0 +1,201 @@
+"""RPR005 — quant-scale flow.
+
+A quantized integer carrier is meaningless without its step size: a value
+produced by ``quantize``/``quantize_grouped`` (which return an
+``(int_carrier, delta)`` pair) or ``pack_int4``/``unpack_int4`` must not
+reach a matmul-like consumer in a scope that never applies a scale. The
+classic silent failure: unpack nibbles, feed the raw int carrier to a
+GEMM, forget ``w_delta`` — numerically plausible garbage at int magnitude.
+
+Module-convention type-flow pass, per function scope:
+
+  * carriers = names bound from a producer call (tuple unpacking tracked,
+    so the companion delta name is known), propagated through
+    ``.reshape``/``.astype``/``.transpose`` chains and plain aliasing;
+  * consumers = ``dot_general``/``dot``/``matmul``/``einsum``/
+    ``int_matmul``/anything named ``*matmul*``, and the ``@`` operator;
+  * a carrier reaching a consumer is flagged when its companion delta is
+    never referenced again in the scope (it "escaped without its scale"),
+    or — for companion-less carriers from pack/unpack — when no scale-ish
+    name (``*delta*``/``*scale*``) appears anywhere in the scope.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.context import ModuleContext
+from repro.analysis.registry import Rule, register
+
+PRODUCER_PAIR = frozenset({"quantize", "quantize_grouped"})
+PRODUCER_SINGLE = frozenset(
+    {"pack_int4", "pack_int4_pallas", "unpack_int4", "unpack_int4_pallas"}
+)
+CONSUMER_NAMES = frozenset({"dot_general", "dot", "matmul", "einsum", "int_matmul"})
+PASSTHROUGH_METHODS = frozenset({"reshape", "astype", "transpose", "swapaxes"})
+SCALEISH = re.compile(r"delta|scale", re.IGNORECASE)
+
+
+def _last_seg(qn: Optional[str]) -> str:
+    return qn.split(".")[-1] if qn else ""
+
+
+def _is_consumer(ctx: ModuleContext, call: ast.Call) -> bool:
+    name = _last_seg(ctx.call_qualname(call))
+    return name in CONSUMER_NAMES or "matmul" in name
+
+
+def _scopes(ctx: ModuleContext):
+    yield ctx.tree
+    yield from ctx.functions()
+
+
+def _own_statements(ctx: ModuleContext, scope: ast.AST) -> List[ast.stmt]:
+    """Statements of this scope only (nested defs are their own scopes)."""
+    out: List[ast.stmt] = []
+
+    def visit(stmts):
+        for s in stmts:
+            if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                continue
+            out.append(s)
+            for field in ("body", "orelse", "finalbody"):
+                visit(getattr(s, field, []) or [])
+            for h in getattr(s, "handlers", []) or []:
+                visit(h.body)
+
+    visit(scope.body)
+    return out
+
+
+@register
+class QuantScaleFlow(Rule):
+    rule_id = "RPR005"
+    severity = "error"
+    description = (
+        "an int carrier from quantize*/pack_int4 reaches a matmul-like "
+        "consumer in a scope that never applies its scale"
+    )
+
+    def check_module(self, ctx: ModuleContext):
+        for scope in _scopes(ctx):
+            yield from self._check_scope(ctx, scope)
+
+    def _check_scope(self, ctx: ModuleContext, scope: ast.AST):
+        stmts = _own_statements(ctx, scope)
+        carriers: Dict[str, Optional[str]] = {}  # carrier name -> delta name
+        produced_at: Dict[str, int] = {}
+
+        # pass 1: producer assignments + carrier propagation
+        for stmt in stmts:
+            if not isinstance(stmt, ast.Assign) or not isinstance(stmt.value, ast.Call):
+                continue
+            call = stmt.value
+            name = _last_seg(ctx.call_qualname(call))
+            tgt = stmt.targets[0]
+            if name in PRODUCER_PAIR and isinstance(tgt, (ast.Tuple, ast.List)):
+                elts = tgt.elts
+                if (
+                    len(elts) >= 2
+                    and isinstance(elts[0], ast.Name)
+                    and isinstance(elts[1], ast.Name)
+                ):
+                    carriers[elts[0].id] = elts[1].id
+                    produced_at[elts[0].id] = stmt.lineno
+            elif name in PRODUCER_SINGLE and isinstance(tgt, ast.Name):
+                carriers[tgt.id] = None
+                produced_at[tgt.id] = stmt.lineno
+            elif isinstance(tgt, ast.Name):
+                src = self._passthrough_source(call)
+                if src is not None and src in carriers:
+                    carriers[tgt.id] = carriers[src]
+                    produced_at[tgt.id] = stmt.lineno
+
+        if not carriers:
+            return
+
+        # pass 2: name loads (for "is the scale ever applied?")
+        loads: Dict[str, int] = {}
+        scaleish_seen = False
+        for stmt in stmts:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                    loads[node.id] = loads.get(node.id, 0) + 1
+                    if SCALEISH.search(node.id):
+                        scaleish_seen = True
+
+        # pass 3: consumers
+        for stmt in stmts:
+            for node in ast.walk(stmt):
+                hits: List[Tuple[str, ast.AST]] = []
+                if isinstance(node, ast.Call) and _is_consumer(ctx, node):
+                    for arg in node.args:
+                        c = self._carrier_of(arg, carriers)
+                        if c is not None:
+                            hits.append((c, node))
+                elif isinstance(node, ast.BinOp) and isinstance(node.op, ast.MatMult):
+                    for side in (node.left, node.right):
+                        c = self._carrier_of(side, carriers)
+                        if c is not None:
+                            hits.append((c, node))
+                for carrier, site in hits:
+                    yield from self._judge(
+                        ctx, scope, carrier, carriers[carrier], site, loads, scaleish_seen
+                    )
+
+    @staticmethod
+    def _passthrough_source(call: ast.Call) -> Optional[str]:
+        """``x.reshape(...)`` / ``x.astype(...)`` chains keep carrier-ness."""
+        func = call.func
+        while isinstance(func, ast.Attribute):
+            if func.attr in PASSTHROUGH_METHODS:
+                base = func.value
+                while isinstance(base, ast.Call):  # x.reshape(..).astype(..)
+                    if not isinstance(base.func, ast.Attribute):
+                        return None
+                    base = base.func.value
+                if isinstance(base, ast.Name):
+                    return base.id
+            return None
+        return None
+
+    @staticmethod
+    def _carrier_of(expr: ast.AST, carriers: Dict[str, Optional[str]]) -> Optional[str]:
+        """Carrier name when ``expr`` is a carrier or a passthrough-method
+        chain rooted at one."""
+        node = expr
+        while True:
+            if isinstance(node, ast.Name):
+                return node.id if node.id in carriers else None
+            if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+                if node.func.attr in PASSTHROUGH_METHODS:
+                    node = node.func.value
+                    continue
+                return None
+            if isinstance(node, ast.Attribute):
+                node = node.value
+                continue
+            return None
+
+    def _judge(self, ctx, scope, carrier, delta, site, loads, scaleish_seen):
+        if delta is not None:
+            # companion known: the delta must be referenced somewhere beyond
+            # its own unpacking, else the carrier escaped scale-less
+            if loads.get(delta, 0) == 0:
+                yield self.finding(
+                    ctx,
+                    site,
+                    f"int carrier {carrier!r} feeds a matmul but its scale "
+                    f"{delta!r} is never applied in this scope — the result "
+                    "is at raw integer magnitude",
+                )
+        elif not scaleish_seen:
+            yield self.finding(
+                ctx,
+                site,
+                f"int carrier {carrier!r} (pack/unpack product) feeds a "
+                "matmul in a scope with no *delta*/*scale* name in sight — "
+                "quantized values must travel with their scales",
+            )

@@ -1,0 +1,210 @@
+"""RPR006 — QuantBackend protocol completeness.
+
+The model layer resolves quant modes through ``core/backend.py``'s
+registry and calls the protocol blind — a backend missing a required
+method or accepting a different signature fails at apply time, deep inside
+a jitted forward, for whichever user first selects that mode. The protocol
+is easy to state and easy to silently violate (OWQ/OutlierTune-style
+schemes each hinge on exactly this kind of per-channel invariant surface).
+
+Project pass: the protocol is parsed out of ``repro.core.backend`` itself
+(required = methods whose body raises NotImplementedError; optional = the
+rest), then every ``QuantBackend`` subclass in the analyzed set is checked:
+
+  * defines every required method;
+  * sets a non-empty ``name`` class attribute;
+  * each overriding method matches the protocol arity: same positional
+    parameter count, and accepts every protocol keyword-only parameter
+    (by name, or via ``**kwargs``);
+  * is actually registered (``@register`` or a ``register(Cls)`` call) —
+    a complete-but-unregistered backend is dead code the registry will
+    never resolve.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.context import ModuleContext, ProjectContext
+from repro.analysis.registry import Rule, register
+
+BACKEND_MODULE = "repro.core.backend"
+BASE_CLASS = "QuantBackend"
+
+
+class _MethodSig:
+    __slots__ = ("name", "n_positional", "kwonly", "has_kwargs")
+
+    def __init__(self, fn: ast.FunctionDef):
+        self.name = fn.name
+        pos = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+        if pos and pos[0] in ("self", "cls"):
+            pos = pos[1:]
+        self.n_positional = len(pos)
+        self.kwonly = {a.arg for a in fn.args.kwonlyargs}
+        self.has_kwargs = fn.args.kwarg is not None
+
+
+def _raises_not_implemented(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Raise):
+            exc = node.exc
+            if isinstance(exc, ast.Call):
+                exc = exc.func
+            if isinstance(exc, ast.Name) and exc.id == "NotImplementedError":
+                return True
+    return False
+
+
+def _protocol_from(
+    backend_mod: ModuleContext,
+) -> Optional[Tuple[Dict[str, _MethodSig], Set[str]]]:
+    """(all protocol method signatures, required method names)."""
+    for node in ast.walk(backend_mod.tree):
+        if isinstance(node, ast.ClassDef) and node.name == BASE_CLASS:
+            sigs: Dict[str, _MethodSig] = {}
+            required: Set[str] = set()
+            for item in node.body:
+                if not isinstance(item, ast.FunctionDef):
+                    continue
+                if item.name.startswith("__"):
+                    continue
+                sigs[item.name] = _MethodSig(item)
+                if _raises_not_implemented(item):
+                    required.add(item.name)
+            return sigs, required
+    return None
+
+
+def _subclasses(ctx: ModuleContext) -> List[ast.ClassDef]:
+    out = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        for base in node.bases:
+            qn = ctx.qualname(base)
+            if qn is not None and qn.split(".")[-1] == BASE_CLASS:
+                out.append(node)
+                break
+    return out
+
+
+def _class_name_attr(cls: ast.ClassDef) -> Optional[str]:
+    """Value of a literal ``name = "..."`` class attribute, if present."""
+    for item in cls.body:
+        targets = []
+        if isinstance(item, ast.Assign):
+            targets = item.targets
+            value = item.value
+        elif isinstance(item, ast.AnnAssign) and item.value is not None:
+            targets = [item.target]
+            value = item.value
+        else:
+            continue
+        for tgt in targets:
+            if isinstance(tgt, ast.Name) and tgt.id == "name":
+                if isinstance(value, ast.Constant) and isinstance(value.value, str):
+                    return value.value
+                return ""  # non-literal: treated as unknown/empty
+    return None
+
+
+def _is_registered(ctx: ModuleContext, cls: ast.ClassDef) -> bool:
+    for deco in cls.decorator_list:
+        node = deco.func if isinstance(deco, ast.Call) else deco
+        qn = ctx.qualname(node)
+        if qn is not None and qn.split(".")[-1] == "register":
+            return True
+    for call in ctx.calls():
+        qn = ctx.call_qualname(call)
+        if qn is None or qn.split(".")[-1] != "register":
+            continue
+        for arg in call.args:
+            if isinstance(arg, ast.Name) and arg.id == cls.name:
+                return True
+            if isinstance(arg, ast.Call) and isinstance(arg.func, ast.Name):
+                if arg.func.id == cls.name:
+                    return True
+    return False
+
+
+@register
+class BackendProtocolCompleteness(Rule):
+    rule_id = "RPR006"
+    severity = "error"
+    description = (
+        "QuantBackend subclasses must register, set .name, implement every "
+        "required protocol method, and match protocol signatures"
+    )
+
+    def check_project(self, project: ProjectContext):
+        backend_mod = project.module(BACKEND_MODULE)
+        if backend_mod is None:
+            return  # protocol source not in the analyzed set
+        proto = _protocol_from(backend_mod)
+        if proto is None:
+            return
+        sigs, required = proto
+
+        for ctx in project.modules:
+            for cls in _subclasses(ctx):
+                if ctx is backend_mod and cls.name == BASE_CLASS:
+                    continue
+                yield from self._check_class(ctx, cls, sigs, required)
+
+    def _check_class(self, ctx, cls, sigs, required):
+        methods = {
+            item.name: item for item in cls.body if isinstance(item, ast.FunctionDef)
+        }
+
+        missing = sorted(required - set(methods))
+        if missing:
+            yield self.finding(
+                ctx,
+                cls,
+                f"QuantBackend subclass {cls.name!r} does not implement "
+                f"required protocol method(s): {', '.join(missing)}",
+            )
+
+        name_value = _class_name_attr(cls)
+        if name_value is None or name_value == "":
+            yield self.finding(
+                ctx,
+                cls,
+                f"QuantBackend subclass {cls.name!r} must set a non-empty "
+                "literal `name` class attribute (the registry key)",
+            )
+
+        for mname, fn in methods.items():
+            proto_sig = sigs.get(mname)
+            if proto_sig is None:
+                continue
+            impl = _MethodSig(fn)
+            if impl.n_positional != proto_sig.n_positional:
+                yield self.finding(
+                    ctx,
+                    fn,
+                    f"{cls.name}.{mname} takes {impl.n_positional} positional "
+                    f"parameter(s) but the protocol defines "
+                    f"{proto_sig.n_positional} — model code calls the "
+                    "protocol blind",
+                )
+            if not impl.has_kwargs:
+                dropped = sorted(proto_sig.kwonly - impl.kwonly)
+                if dropped:
+                    yield self.finding(
+                        ctx,
+                        fn,
+                        f"{cls.name}.{mname} does not accept protocol "
+                        f"keyword-only parameter(s): {', '.join(dropped)}",
+                    )
+
+        if not _is_registered(ctx, cls) and not missing:
+            yield self.finding(
+                ctx,
+                cls,
+                f"QuantBackend subclass {cls.name!r} is never registered — "
+                "call register() (or decorate with @register) at import "
+                "time, or the registry cannot resolve it",
+            )

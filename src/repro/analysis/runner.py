@@ -1,0 +1,145 @@
+"""File collection and rule execution.
+
+``analyze_paths`` walks the given files/directories, parses every ``.py``
+file into a ``ModuleContext``, runs each registered rule's module pass and
+project pass, and filters ``# repro: noqa`` suppressions. Files that fail
+to parse produce an ``RPR000`` parse-error finding instead of crashing the
+run (the analyzer must never be the thing that breaks CI opaquely).
+
+Directories named in ``DEFAULT_EXCLUDE_DIRS`` (caches, checked-in bad
+fixtures) are skipped unless the caller opts out.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.context import ModuleContext, ProjectContext
+from repro.analysis.registry import Finding, get_rules
+
+DEFAULT_EXCLUDE_DIRS = frozenset(
+    {
+        ".git",
+        "__pycache__",
+        ".ruff_cache",
+        ".pytest_cache",
+        "build",
+        "dist",
+        # intentionally-violating rule fixtures live under a fixtures/ dir
+        "fixtures",
+    }
+)
+
+
+def collect_files(
+    paths: Sequence[str], exclude_dirs: Iterable[str] = DEFAULT_EXCLUDE_DIRS
+) -> List[str]:
+    """Expand files/dirs into a sorted list of ``.py`` file paths."""
+    exclude = set(exclude_dirs)
+    out = []
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                out.append(p)
+        elif os.path.isdir(p):
+            for root, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(d for d in dirnames if d not in exclude)
+                for f in sorted(filenames):
+                    if f.endswith(".py"):
+                        out.append(os.path.join(root, f))
+        else:
+            raise FileNotFoundError(f"no such file or directory: {p}")
+    return sorted(dict.fromkeys(out))
+
+
+def _module_name(path: str) -> str:
+    """Dotted module name from a path; ``src/`` roots are stripped so
+    ``src/repro/core/quant.py`` -> ``repro.core.quant``."""
+    parts = os.path.normpath(path).split(os.sep)
+    if parts and parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][: -len(".py")]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    if "src" in parts:
+        parts = parts[parts.index("src") + 1 :]
+    parts = [p for p in parts if p not in ("", ".", "..")]
+    return ".".join(parts)
+
+
+def build_project(files: Sequence[str]) -> Tuple[ProjectContext, List[Finding]]:
+    """Parse every file; unparseable ones become RPR000 findings."""
+    modules, errors = [], []
+    for path in files:
+        with open(path, "r", encoding="utf-8") as f:
+            source = f.read()
+        try:
+            ctx = ModuleContext(path, source, relpath=os.path.relpath(path))
+        except SyntaxError as e:
+            errors.append(
+                Finding(
+                    rule_id="RPR000",
+                    severity="error",
+                    path=os.path.relpath(path),
+                    line=e.lineno or 1,
+                    col=(e.offset or 0) + 1,
+                    message=f"file does not parse: {e.msg}",
+                )
+            )
+            continue
+        ctx.module_name = _module_name(path)
+        modules.append(ctx)
+    return ProjectContext(modules), errors
+
+
+def _apply_noqa(project: ProjectContext, findings: Iterable[Finding]) -> List[Finding]:
+    by_path = {m.relpath: m for m in project.modules}
+    kept = []
+    for f in findings:
+        ctx = by_path.get(f.path)
+        if ctx is not None and ctx.suppressed(f.rule_id, f.line):
+            continue
+        kept.append(f)
+    return kept
+
+
+def analyze_project(
+    project: ProjectContext, select: Optional[Sequence[str]] = None
+) -> List[Finding]:
+    findings: List[Finding] = []
+    rules = get_rules(select)
+    for rule in rules:
+        for ctx in project.modules:
+            findings.extend(rule.check_module(ctx))
+        findings.extend(rule.check_project(project))
+    findings = _apply_noqa(project, findings)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule_id))
+    return findings
+
+
+def analyze_paths(
+    paths: Sequence[str],
+    select: Optional[Sequence[str]] = None,
+    exclude_dirs: Iterable[str] = DEFAULT_EXCLUDE_DIRS,
+) -> Tuple[List[Finding], int]:
+    """Run all (or ``select``-ed) rules over ``paths``.
+
+    Returns (findings, files_analyzed). Parse failures surface as RPR000
+    findings so a broken file fails the gate visibly.
+    """
+    files = collect_files(paths, exclude_dirs)
+    project, parse_errors = build_project(files)
+    findings = parse_errors + analyze_project(project, select)
+    return findings, len(files)
+
+
+def analyze_source(
+    source: str,
+    select: Optional[Sequence[str]] = None,
+    path: str = "<string>",
+) -> List[Finding]:
+    """Analyze one in-memory snippet (the unit-test entry point)."""
+    ctx = ModuleContext(path, source, relpath=path)
+    ctx.module_name = _module_name(path) if path.endswith(".py") else ""
+    project = ProjectContext([ctx])
+    return analyze_project(project, select)

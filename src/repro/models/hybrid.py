@@ -237,13 +237,14 @@ def init_params_xlstm(key, cfg: ModelConfig):
         def init_ad(k):
             return {"lora": PEFT.init_lora(k, cfg.d_model, cfg.d_model,
                                            p.lora_rank)}
+        k_stage, k_trail = jax.random.split(keys[5])
         if n_stages and per_m:
-            ks = jax.random.split(keys[5], n_stages * per_m).reshape(
+            ks = jax.random.split(k_stage, n_stages * per_m).reshape(
                 n_stages, per_m, 2)
             adapters["stage_mlstm"] = jax.vmap(jax.vmap(init_ad))(ks)
         if trailing:
             adapters["trail_mlstm"] = jax.vmap(init_ad)(
-                jax.random.split(keys[5], trailing))
+                jax.random.split(k_trail, trailing))
     elif p.method in ("prompt", "ptuning"):
         adapters["prompt"] = (
             PEFT.init_prompt(keys[5], p.n_virtual_tokens, cfg.d_model)

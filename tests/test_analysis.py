@@ -1,0 +1,669 @@
+"""Tests for repro.analysis: paired good/bad fixtures per rule, noqa
+suppression, CLI exit codes, and a self-check that the shipped tree is
+clean. Fixtures are inline strings (never executed, only parsed) so the
+intentionally-bad code can't trip pytest collection or the analyzer's own
+CI run over tests/."""
+
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import analyze_paths, analyze_source
+from repro.analysis.cli import main as cli_main
+from repro.analysis.registry import get_rules
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def run(src, rule, path="mod.py"):
+    return analyze_source(textwrap.dedent(src), select=[rule], path=path)
+
+
+def ids(findings):
+    return [f.rule_id for f in findings]
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_rule_catalogue():
+    rules = get_rules()
+    assert [r.rule_id for r in rules] == [
+        "RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006",
+    ]
+    assert all(r.severity in ("error", "warning") for r in rules)
+    assert all(r.description for r in rules)
+
+
+def test_select_unknown_rule_raises():
+    with pytest.raises(ValueError):
+        get_rules(["RPR999"])
+
+
+# ------------------------------------------------------------------ RPR001
+
+
+BAD_JIT_IN_LOOP = """
+    import jax
+
+    def serve(xs):
+        out = []
+        for x in xs:
+            f = jax.jit(lambda v: v * 2)
+            out.append(f(x))
+        return out
+"""
+
+GOOD_JIT_HOISTED = """
+    import jax
+
+    def serve(xs):
+        f = jax.jit(lambda v: v * 2)
+        return [f(x) for x in xs]
+"""
+
+GOOD_JIT_MEMO = """
+    import jax
+
+    def serve(xs):
+        f = None
+        out = []
+        for x in xs:
+            if f is None:
+                f = jax.jit(lambda v: v * 2)
+            out.append(f(x))
+        return out
+"""
+
+BAD_JIT_IMMEDIATE = """
+    import jax
+
+    def step(x):
+        return jax.jit(lambda v: v + 1)(x)
+"""
+
+BAD_UNHASHABLE_STATIC = """
+    import jax
+
+    def g(x, shape):
+        return x.reshape(shape)
+
+    f = jax.jit(g, static_argnames=("shape",))
+
+    def use(x):
+        return f(x, shape=[4, 4])
+"""
+
+GOOD_HASHABLE_STATIC = """
+    import jax
+
+    def g(x, shape):
+        return x.reshape(shape)
+
+    f = jax.jit(g, static_argnames=("shape",))
+
+    def use(x):
+        return f(x, shape=(4, 4))
+"""
+
+
+def test_rpr001_jit_in_loop_flagged():
+    assert ids(run(BAD_JIT_IN_LOOP, "RPR001")) == ["RPR001"]
+
+
+def test_rpr001_hoisted_and_memoized_pass():
+    assert run(GOOD_JIT_HOISTED, "RPR001") == []
+    assert run(GOOD_JIT_MEMO, "RPR001") == []
+
+
+def test_rpr001_immediate_invoke_flagged():
+    assert ids(run(BAD_JIT_IMMEDIATE, "RPR001")) == ["RPR001"]
+
+
+def test_rpr001_unhashable_static_arg():
+    assert ids(run(BAD_UNHASHABLE_STATIC, "RPR001")) == ["RPR001"]
+    assert run(GOOD_HASHABLE_STATIC, "RPR001") == []
+
+
+# ------------------------------------------------------------------ RPR002
+
+
+BAD_IF_ON_TRACER = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        if x > 0:
+            return x
+        return -x
+"""
+
+GOOD_STATIC_BRANCH = """
+    import jax
+    from functools import partial
+
+    @partial(jax.jit, static_argnames=("n",))
+    def f(x, n):
+        if n > 1:
+            return x
+        return -x
+"""
+
+GOOD_SHAPE_BRANCH = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        if x.ndim > 1:
+            return x.sum(-1)
+        return x
+"""
+
+GOOD_MEMBERSHIP = """
+    import jax
+
+    @jax.jit
+    def f(x, scales):
+        if "w" in scales:
+            return x * scales["w"]
+        return x
+"""
+
+BAD_PRINT = """
+    import jax
+
+    @jax.jit
+    def f(x):
+        print(x)
+        return x
+"""
+
+BAD_CLOSURE_MUTATION = """
+    import jax
+
+    log = []
+
+    @jax.jit
+    def f(x):
+        log.append(x)
+        return x
+"""
+
+GOOD_UNTRACED = """
+    def f(x):
+        if x > 0:
+            print(x)
+        return x
+"""
+
+
+def test_rpr002_if_on_tracer_flagged():
+    assert ids(run(BAD_IF_ON_TRACER, "RPR002")) == ["RPR002"]
+
+
+def test_rpr002_static_shape_membership_pass():
+    assert run(GOOD_STATIC_BRANCH, "RPR002") == []
+    assert run(GOOD_SHAPE_BRANCH, "RPR002") == []
+    assert run(GOOD_MEMBERSHIP, "RPR002") == []
+
+
+def test_rpr002_print_and_closure_mutation_flagged():
+    assert ids(run(BAD_PRINT, "RPR002")) == ["RPR002"]
+    assert ids(run(BAD_CLOSURE_MUTATION, "RPR002")) == ["RPR002"]
+
+
+def test_rpr002_untraced_function_ignored():
+    assert run(GOOD_UNTRACED, "RPR002") == []
+
+
+# ------------------------------------------------------------------ RPR003
+
+
+BAD_KEY_REUSE = """
+    import jax
+
+    def sample(key):
+        a = jax.random.normal(key, (4,))
+        b = jax.random.normal(key, (4,))
+        return a + b
+"""
+
+GOOD_KEY_SPLIT = """
+    import jax
+
+    def sample(key):
+        k1, k2 = jax.random.split(key)
+        a = jax.random.normal(k1, (4,))
+        b = jax.random.normal(k2, (4,))
+        return a + b
+"""
+
+BAD_KEY_REUSE_IN_LOOP = """
+    import jax
+
+    def sample(key, n):
+        out = []
+        for _ in range(n):
+            out.append(jax.random.normal(key, (4,)))
+        return out
+"""
+
+GOOD_KEY_RESPLIT_IN_LOOP = """
+    import jax
+
+    def sample(key, n):
+        out = []
+        for _ in range(n):
+            key, sub = jax.random.split(key)
+            out.append(jax.random.normal(sub, (4,)))
+        return out
+"""
+
+GOOD_EXCLUSIVE_BRANCHES = """
+    import jax
+
+    def sample(key, uniform):
+        if uniform:
+            return jax.random.uniform(key, (4,))
+        else:
+            return jax.random.normal(key, (4,))
+"""
+
+GOOD_DISTINCT_SUBSCRIPTS = """
+    import jax
+
+    def init(keys):
+        a = jax.random.normal(keys[0], (4,))
+        b = jax.random.normal(keys[1], (4,))
+        return a, b
+"""
+
+BAD_SAME_SUBSCRIPT = """
+    import jax
+
+    def init(keys):
+        a = jax.random.normal(keys[0], (4,))
+        b = jax.random.normal(keys[0], (4,))
+        return a, b
+"""
+
+BAD_DOUBLE_SPLIT = """
+    import jax
+
+    def init(key):
+        ks = jax.random.split(key, 4)
+        more = jax.random.split(key, 2)
+        return ks, more
+"""
+
+
+def test_rpr003_reuse_flagged():
+    assert ids(run(BAD_KEY_REUSE, "RPR003")) == ["RPR003"]
+    assert ids(run(BAD_SAME_SUBSCRIPT, "RPR003")) == ["RPR003"]
+    assert ids(run(BAD_DOUBLE_SPLIT, "RPR003")) == ["RPR003"]
+
+
+def test_rpr003_split_and_branches_pass():
+    assert run(GOOD_KEY_SPLIT, "RPR003") == []
+    assert run(GOOD_EXCLUSIVE_BRANCHES, "RPR003") == []
+    assert run(GOOD_DISTINCT_SUBSCRIPTS, "RPR003") == []
+
+
+def test_rpr003_loop_reuse():
+    assert ids(run(BAD_KEY_REUSE_IN_LOOP, "RPR003")) == ["RPR003"]
+    assert run(GOOD_KEY_RESPLIT_IN_LOOP, "RPR003") == []
+
+
+# ------------------------------------------------------------------ RPR004
+
+
+_PALLAS_PRELUDE = """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    from repro.kernels.common import interpret_mode
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2
+"""
+
+BAD_NO_INTERPRET = _PALLAS_PRELUDE + """
+    def call(x):
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        )(x)
+"""
+
+BAD_ADHOC_INTERPRET = _PALLAS_PRELUDE + """
+    def call(x):
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=True,
+        )(x)
+"""
+
+GOOD_INTERPRET_DIRECT = _PALLAS_PRELUDE + """
+    def call(x, interpret=False):
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=interpret_mode(interpret),
+        )(x)
+"""
+
+GOOD_INTERPRET_VIA_NAME = _PALLAS_PRELUDE + """
+    def call(x, interpret=False):
+        mode = interpret_mode(interpret)
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=mode,
+        )(x)
+"""
+
+BAD_GRID_UNGUARDED = _PALLAS_PRELUDE + """
+    def call(x, block):
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            grid=(x.shape[0] // block,),
+            interpret=interpret_mode(False),
+        )(x)
+"""
+
+GOOD_GRID_ASSERTED = _PALLAS_PRELUDE + """
+    def call(x, block):
+        assert x.shape[0] % block == 0
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            grid=(x.shape[0] // block,),
+            interpret=interpret_mode(False),
+        )(x)
+"""
+
+_MM_PRELUDE = """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+    from repro.kernels.common import interpret_mode
+
+    def mm_kernel(a_ref, b_ref, o_ref, acc_ref):
+        acc_ref[...] += a_ref[...] @ b_ref[...]
+"""
+
+BAD_NARROW_ACC = _MM_PRELUDE + """
+    def call(a, b):
+        return pl.pallas_call(
+            mm_kernel,
+            out_shape=jax.ShapeDtypeStruct((8, 8), a.dtype),
+            scratch_shapes=[pltpu.VMEM((8, 8), jnp.bfloat16)],
+            interpret=interpret_mode(False),
+        )(a, b)
+"""
+
+GOOD_F32_ACC = _MM_PRELUDE + """
+    def call(a, b):
+        return pl.pallas_call(
+            mm_kernel,
+            out_shape=jax.ShapeDtypeStruct((8, 8), a.dtype),
+            scratch_shapes=[pltpu.VMEM((8, 8), jnp.float32)],
+            interpret=interpret_mode(False),
+        )(a, b)
+"""
+
+
+def test_rpr004_interpret_routing():
+    assert ids(run(BAD_NO_INTERPRET, "RPR004")) == ["RPR004"]
+    assert ids(run(BAD_ADHOC_INTERPRET, "RPR004")) == ["RPR004"]
+    assert run(GOOD_INTERPRET_DIRECT, "RPR004") == []
+    assert run(GOOD_INTERPRET_VIA_NAME, "RPR004") == []
+
+
+def test_rpr004_grid_divisibility():
+    assert ids(run(BAD_GRID_UNGUARDED, "RPR004")) == ["RPR004"]
+    assert run(GOOD_GRID_ASSERTED, "RPR004") == []
+
+
+def test_rpr004_accumulator_dtype():
+    assert ids(run(BAD_NARROW_ACC, "RPR004")) == ["RPR004"]
+    assert run(GOOD_F32_ACC, "RPR004") == []
+
+
+# ------------------------------------------------------------------ RPR005
+
+
+BAD_DROPPED_DELTA = """
+    from repro.core.quant import quantize
+
+    def forward(x, w):
+        w_int, w_delta = quantize(w, axis=0)
+        return x @ w_int
+"""
+
+GOOD_DELTA_APPLIED = """
+    from repro.core.quant import quantize
+
+    def forward(x, w):
+        w_int, w_delta = quantize(w, axis=0)
+        return (x @ w_int) * w_delta
+"""
+
+BAD_UNPACK_NO_SCALE = """
+    from repro.core.quant import int_matmul, unpack_int4
+
+    def forward(x_int, w_packed):
+        w_int = unpack_int4(w_packed)
+        return int_matmul(x_int, w_int)
+"""
+
+GOOD_UNPACK_WITH_SCALE = """
+    from repro.core.quant import int_matmul, unpack_int4
+
+    def forward(x_int, w_packed, w_scale):
+        w_int = unpack_int4(w_packed)
+        return int_matmul(x_int, w_int) * w_scale
+"""
+
+BAD_DELTA_LOST_THROUGH_RESHAPE = """
+    from repro.core.quant import quantize
+
+    def forward(x, w):
+        w_int, w_delta = quantize(w, axis=0)
+        w2 = w_int.reshape(-1, 8).astype("int8")
+        return x @ w2
+"""
+
+
+def test_rpr005_dropped_scale_flagged():
+    assert ids(run(BAD_DROPPED_DELTA, "RPR005")) == ["RPR005"]
+    assert ids(run(BAD_UNPACK_NO_SCALE, "RPR005")) == ["RPR005"]
+    assert ids(run(BAD_DELTA_LOST_THROUGH_RESHAPE, "RPR005")) == ["RPR005"]
+
+
+def test_rpr005_scale_applied_passes():
+    assert run(GOOD_DELTA_APPLIED, "RPR005") == []
+    assert run(GOOD_UNPACK_WITH_SCALE, "RPR005") == []
+
+
+# ------------------------------------------------------------------ RPR006
+
+
+_PROTOCOL = """
+    class QuantBackend:
+        name = ""
+
+        def prepare(self, w, bias=None, *, calib=None, bits=8):
+            raise NotImplementedError
+
+        def apply(self, x, weights, *, state=None, bits=8, bwd_int8=True):
+            raise NotImplementedError
+
+        def init_state(self, weights):
+            return None
+
+
+    def register(cls):
+        return cls
+"""
+
+BAD_BACKEND = _PROTOCOL + """
+    class BrokenBackend(QuantBackend):
+        def prepare(self, w):
+            return w
+"""
+
+GOOD_BACKEND = _PROTOCOL + """
+    @register
+    class GoodBackend(QuantBackend):
+        name = "good"
+
+        def prepare(self, w, bias=None, *, calib=None, bits=8):
+            return (w, bias)
+
+        def apply(self, x, weights, *, state=None, bits=8, bwd_int8=True):
+            return x
+"""
+
+UNREGISTERED_BACKEND = _PROTOCOL + """
+    class GhostBackend(QuantBackend):
+        name = "ghost"
+
+        def prepare(self, w, bias=None, *, calib=None, bits=8):
+            return (w, bias)
+
+        def apply(self, x, weights, *, state=None, bits=8, bwd_int8=True):
+            return x
+"""
+
+
+def _run_backend(src):
+    return run(src, "RPR006", path="repro/core/backend.py")
+
+
+def test_rpr006_broken_backend():
+    msgs = [f.message for f in _run_backend(BAD_BACKEND)]
+    assert any("apply" in m and "required" in m for m in msgs)  # missing method
+    assert any("name" in m for m in msgs)  # missing registry key
+    assert any("positional" in m for m in msgs)  # arity mismatch
+    assert any("keyword-only" in m for m in msgs)  # dropped kwonly params
+
+
+def test_rpr006_complete_backend_passes():
+    assert _run_backend(GOOD_BACKEND) == []
+
+
+def test_rpr006_unregistered_backend():
+    msgs = [f.message for f in _run_backend(UNREGISTERED_BACKEND)]
+    assert len(msgs) == 1 and "never registered" in msgs[0]
+
+
+# --------------------------------------------------------------- noqa
+
+
+BAD_KEY_REUSE_NOQA = """
+    import jax
+
+    def sample(key):
+        a = jax.random.normal(key, (4,))
+        b = jax.random.normal(key, (4,))  # repro: noqa[RPR003] shared on purpose
+        return a + b
+"""
+
+BAD_KEY_REUSE_BARE_NOQA = """
+    import jax
+
+    def sample(key):
+        a = jax.random.normal(key, (4,))
+        b = jax.random.normal(key, (4,))  # repro: noqa
+        return a + b
+"""
+
+BAD_KEY_REUSE_WRONG_NOQA = """
+    import jax
+
+    def sample(key):
+        a = jax.random.normal(key, (4,))
+        b = jax.random.normal(key, (4,))  # repro: noqa[RPR001]
+        return a + b
+"""
+
+
+def test_noqa_suppression():
+    assert run(BAD_KEY_REUSE_NOQA, "RPR003") == []
+    assert run(BAD_KEY_REUSE_BARE_NOQA, "RPR003") == []
+    assert ids(run(BAD_KEY_REUSE_WRONG_NOQA, "RPR003")) == ["RPR003"]
+
+
+# ---------------------------------------------------------------- CLI
+
+
+def test_cli_exit_codes(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(BAD_KEY_REUSE))
+    good = tmp_path / "good.py"
+    good.write_text(textwrap.dedent(GOOD_KEY_SPLIT))
+
+    assert cli_main([str(bad)]) == 1
+    assert cli_main([str(good)]) == 0
+    assert cli_main([str(tmp_path / "missing.py"), "--select", "RPR003"]) == 2
+    assert cli_main([str(good), "--select", "RPR999"]) == 2
+
+
+def test_cli_parse_error_is_rpr000(tmp_path, capsys):
+    broken = tmp_path / "broken.py"
+    broken.write_text("def f(:\n")
+    assert cli_main([str(broken)]) == 1
+    assert "RPR000" in capsys.readouterr().out
+
+
+def test_cli_json_report(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(BAD_KEY_REUSE))
+    out = tmp_path / "report.json"
+
+    assert cli_main([str(bad), "--format", "json", "--json-out", str(out)]) == 1
+    printed = json.loads(capsys.readouterr().out)
+    on_disk = json.loads(out.read_text())
+    assert printed == on_disk
+    assert on_disk["tool"] == "repro.analysis"
+    assert on_disk["files_analyzed"] == 1
+    assert on_disk["errors"] == 1
+    f = on_disk["findings"][0]
+    assert f["rule_id"] == "RPR003" and f["line"] > 0 and f["path"]
+
+
+def test_cli_list_rules(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in ("RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006"):
+        assert rid in out
+
+
+def test_cli_fixture_dirs_excluded_by_default(tmp_path):
+    fixture_dir = tmp_path / "fixtures"
+    fixture_dir.mkdir()
+    (fixture_dir / "bad.py").write_text(textwrap.dedent(BAD_KEY_REUSE))
+    assert cli_main([str(tmp_path)]) == 0
+    assert cli_main([str(tmp_path), "--no-default-excludes"]) == 1
+
+
+# ----------------------------------------------------------- self-check
+
+
+def test_shipped_tree_is_clean():
+    """The gate CI enforces: the repo's own code has no error findings."""
+    paths = [
+        str(REPO / d)
+        for d in ("src", "tests", "benchmarks", "examples")
+        if (REPO / d).is_dir()
+    ]
+    findings, n_files = analyze_paths(paths)
+    errors = [f for f in findings if f.severity == "error"]
+    assert not errors, "\n".join(f.render() for f in errors)
+    assert n_files > 50

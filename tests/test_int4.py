@@ -157,13 +157,13 @@ def test_grouped_backward_int8_close_to_fp():
     (16, 512, 32, 8, 4),
 ])
 def test_int4_matmul_fused_vs_ref(t, k, n, g, x_bits):
-    keys = jax.random.split(KEY, 3)
+    keys = jax.random.split(KEY, 4)
     qm = int(quant.qmax_for_bits(x_bits))
     x_int = jax.random.randint(keys[0], (t, k), -qm, qm + 1, jnp.int8)
     w_int = jax.random.randint(keys[1], (k, n), -7, 8, jnp.int8)
     wp = quant.pack_int4(w_int)
     x_delta = jnp.abs(jax.random.normal(keys[2], (t, 1))) / 100 + 1e-3
-    w_delta = jnp.abs(jax.random.normal(keys[0], (g, n))) / 100 + 1e-3
+    w_delta = jnp.abs(jax.random.normal(keys[3], (g, n))) / 100 + 1e-3
     got = int4_matmul.int4_matmul_fused(
         x_int, wp, x_delta, w_delta, block_t=16, block_n=32, block_k=32,
         interpret=True)

@@ -63,9 +63,9 @@ def test_granularity_shapes():
 
 
 def test_int_matmul_exact():
-    k = jax.random.PRNGKey(0)
-    a = jax.random.randint(k, (16, 32), -127, 128, jnp.int8)
-    b = jax.random.randint(k, (32, 8), -127, 128, jnp.int8)
+    ka, kb = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.randint(ka, (16, 32), -127, 128, jnp.int8)
+    b = jax.random.randint(kb, (32, 8), -127, 128, jnp.int8)
     got = quant.int_matmul(a, b)
     want = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
     np.testing.assert_array_equal(np.asarray(got, np.int64), want)

@@ -55,7 +55,7 @@ def test_microbatch_invariance():
         tcfg = TrainConfig(microbatches=mb, remat=False, grad_clip=0.0)
         frozen, adapters, qstate = M.init_params(jax.random.PRNGKey(0), cfg)
         state = S.init_train_state(adapters, qstate, tcfg)
-        step = jax.jit(S.build_train_step(cfg, tcfg))
+        step = jax.jit(S.build_train_step(cfg, tcfg))  # repro: noqa[RPR001] fresh tcfg each iter
         new_state, _ = step(frozen, state, batch)
         results.append(new_state.adapters)
     jax.tree.map(lambda a, b: np.testing.assert_allclose(

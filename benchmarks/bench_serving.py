@@ -17,6 +17,10 @@ parity):
   --kv-layout L      contiguous (default) | paged — block-pool KV cache
   --kv-dtype D       fp (default) | int8 — paged-only quantized KV
   --prefill-chunk N  paged-only chunked admission (default plen/2 when paged)
+  --prefix-share     radix/COW prefix-sharing rows instead: a shared-prefix
+                     workload served with and without sharing, gated on
+                     token-identical output + hit rate + chunks saved, for
+                     BOTH fp and int8 KV
 
 Rows follow the bench_kernels convention: (name, us_per_call, derived).
 ``serving_engine_greedy_parity`` carries ``parity=True/False`` (engine
@@ -31,6 +35,7 @@ paged-vs-contiguous memory comparisons are reproducible from the artifact.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -40,7 +45,7 @@ import numpy as np
 import common
 from repro import api
 from repro.data.pipeline import DataConfig, Loader
-from repro.serving import GenerationRequest, SamplingParams
+from repro.serving import EngineConfig, GenerationRequest, SamplingParams
 
 
 def _lockstep_tokens(model, prompts, max_new):
@@ -79,8 +84,8 @@ def run_family(family: str, tiny: bool = False):
                          "max_new": max_new, "max_seq_len": plen + max_new}
 
     ref = _lockstep_tokens(model, prompts, max_new)
-    eng = model.engine(max_slots=n_req, max_seq_len=plen + max_new,
-                       fresh=True)
+    eng = model.engine(EngineConfig(max_slots=n_req,
+                                    max_seq_len=plen + max_new), fresh=True)
     outs = eng.run([GenerationRequest(p, max_new_tokens=max_new)
                     for p in prompts])
     got = np.asarray([o.token_ids for o in outs])
@@ -91,8 +96,8 @@ def run_family(family: str, tiny: bool = False):
 
     # mixed budgets over a tight pool: the continuous-batching win
     short = max(1, max_new // 4)
-    eng2 = model.engine(max_slots=slots, max_seq_len=plen + max_new,
-                        fresh=True)
+    eng2 = model.engine(EngineConfig(max_slots=slots,
+                                     max_seq_len=plen + max_new), fresh=True)
     eng2.run([GenerationRequest(prompts[i],
                                 max_new_tokens=short if i % 2 else max_new)
               for i in range(n_req)])
@@ -109,8 +114,9 @@ def run_family(family: str, tiny: bool = False):
         f"kv_row_equiv={st.contiguous_bytes_per_request}"))
 
     if family in ("ssm", "hybrid"):
-        eng3 = model.engine(max_slots=slots, max_seq_len=plen + max_new,
-                            fresh=True, state_dtype="int8")
+        eng3 = model.engine(EngineConfig(max_slots=slots,
+                                         max_seq_len=plen + max_new,
+                                         state_dtype="int8"), fresh=True)
         outs3 = eng3.run([GenerationRequest(p, max_new_tokens=max_new)
                           for p in prompts])
         st3 = eng3.stats
@@ -139,6 +145,10 @@ def run(mode: str = "quaff", tiny: bool = False,
     block_size = 4 if tiny else 16          # blocks must subdivide the rows
     kv = dict(kv_layout=kv_layout, kv_dtype=kv_dtype, block_size=block_size,
               prefill_chunk=prefill_chunk) if paged else {}
+
+    def ecfg(n_slots, **over):
+        return EngineConfig(max_slots=n_slots, max_seq_len=plen + max_new,
+                            **{**kv, **over})
     cfg, frozen, adapters, qstate = common.build_mode_model(
         mode, dcfg=common.data_cfg(batch=max(n_req, 4), seq=plen,
                                    vocab=512))
@@ -159,8 +169,7 @@ def run(mode: str = "quaff", tiny: bool = False,
     t0 = time.perf_counter()
     ref = _lockstep_tokens(model, prompts, max_new)
     t_lockstep = time.perf_counter() - t0
-    eng = model.engine(max_slots=n_req, max_seq_len=plen + max_new,
-                       fresh=True, **kv)
+    eng = model.engine(ecfg(n_req), fresh=True)
     outs = eng.run([GenerationRequest(p, max_new_tokens=max_new)
                     for p in prompts])
     got = np.asarray([o.token_ids for o in outs])
@@ -180,8 +189,7 @@ def run(mode: str = "quaff", tiny: bool = False,
                                   max_new_tokens=short if i % 2 else max_new)
                 for i in range(n_req)]
 
-    eng2 = model.engine(max_slots=slots, max_seq_len=plen + max_new,
-                        fresh=True, **kv)
+    eng2 = model.engine(ecfg(slots), fresh=True)
     outs2 = eng2.run(mixed_reqs())
     st = eng2.stats
     lockstep_slot_steps = n_req * max_new
@@ -206,10 +214,7 @@ def run(mode: str = "quaff", tiny: bool = False,
         def mixed_paged(dtype):
             if kv_dtype == dtype:
                 return outs2, st
-            eng = model.engine(max_slots=slots, max_seq_len=plen + max_new,
-                               fresh=True, kv_layout="paged",
-                               kv_dtype=dtype, block_size=block_size,
-                               prefill_chunk=prefill_chunk)
+            eng = model.engine(ecfg(slots, kv_dtype=dtype), fresh=True)
             outs = eng.run(mixed_reqs())
             return outs, eng.stats
 
@@ -235,8 +240,7 @@ def run(mode: str = "quaff", tiny: bool = False,
         extra["int8_stats"] = st4.as_dict()
 
     # ---- seeded sampling path (throughput only) --------------------------
-    eng3 = model.engine(max_slots=slots, max_seq_len=plen + max_new,
-                        fresh=True, **kv)
+    eng3 = model.engine(ecfg(slots), fresh=True)
     eng3.run([GenerationRequest(
         prompts[i], max_new_tokens=short,
         sampling=SamplingParams(temperature=0.8, top_k=50, top_p=0.95,
@@ -244,6 +248,55 @@ def run(mode: str = "quaff", tiny: bool = False,
     rows.append(("serving_engine_sampled",
                  (eng3.stats.prefill_time_s + eng3.stats.decode_time_s) * 1e6,
                  f"tok_s={eng3.stats.decode_tokens_per_s:.1f}"))
+    return rows, extra
+
+
+def run_prefix(mode: str = "quaff", tiny: bool = False):
+    """Radix/COW prefix-sharing rows: a shared-prefix workload (every
+    request opens with the same system-prompt-style tokens) served with and
+    without ``prefix_share``, for BOTH fp and int8 KV. The CI gates read
+    ``parity`` (sharing must be invisible to outputs), ``hit_rate`` and
+    ``chunks_saved`` off the row text."""
+    n_req, slots, plen, max_new = (6, 2, 8, 4) if tiny else (12, 4, 32, 16)
+    block_size = 4 if tiny else 16
+    chunk = plen // 2
+    cfg, frozen, adapters, qstate = common.build_mode_model(
+        mode, dcfg=common.data_cfg(batch=max(n_req, 4), seq=plen, vocab=512))
+    model = api.QuaffModel(cfg, frozen, adapters, qstate)
+    prompts = np.asarray(Loader(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=plen,
+        batch_size=n_req)).batch(0)["tokens"])
+    opener = plen - 2                       # shared system-prompt opener;
+    prompts[:, :opener] = prompts[0, :opener]   # last 2 tokens stay unique
+
+    rows, extra = [], {}
+    extra["workload"] = {"n_requests": n_req, "n_slots": slots,
+                         "prompt_len": plen, "max_new": max_new,
+                         "shared_prefix_len": opener,
+                         "block_size": block_size, "prefill_chunk": chunk}
+
+    base = EngineConfig(max_slots=slots, max_seq_len=plen + max_new,
+                        kv_layout="paged", block_size=block_size,
+                        prefill_chunk=chunk)
+    for dtype in ("fp", "int8"):
+        def run_one(share):
+            eng = model.engine(dataclasses.replace(
+                base, kv_dtype=dtype, prefix_share=share), fresh=True)
+            outs = eng.run([GenerationRequest(p, max_new_tokens=max_new)
+                            for p in prompts])
+            return [o.token_ids for o in outs], eng.stats
+        ref, _ = run_one(False)
+        got, st = run_one(True)
+        parity = ref == got
+        rows.append((
+            f"serving_prefix_share_{dtype}",
+            (st.prefill_time_s + st.decode_time_s) * 1e6,
+            f"parity={parity} hit_rate={st.prefix_hit_rate:.2f} "
+            f"chunks_saved={st.prefill_chunks_saved} "
+            f"tokens_saved={st.prefix_tokens_saved} "
+            f"tok_s={st.decode_tokens_per_s:.1f} cow={st.cow_copies} "
+            f"radix_blocks={st.radix_blocks}"))
+        extra[f"prefix_stats_{dtype}"] = st.as_dict()
     return rows, extra
 
 
@@ -259,9 +312,13 @@ def main(argv=None):
     p.add_argument("--kv-dtype", default="fp", choices=["fp", "int8"])
     p.add_argument("--prefill-chunk", type=int, default=-1,
                    help="paged chunked admission; -1 = plen/2 default")
+    p.add_argument("--prefix-share", action="store_true",
+                   help="emit radix/COW prefix-sharing rows (fp + int8)")
     p.add_argument("--json", metavar="PATH", default=None)
     args = p.parse_args(argv)
-    if args.family != "dense":
+    if args.prefix_share:
+        rows, extra = run_prefix(mode=args.mode, tiny=args.tiny)
+    elif args.family != "dense":
         rows, extra = run_family(args.family, tiny=args.tiny)
     else:
         rows, extra = run(mode=args.mode, tiny=args.tiny,

@@ -10,7 +10,7 @@ from repro import api
 from repro.core.peft import PEFTConfig
 from repro.data.pipeline import DataConfig, Loader
 from repro.models.config import ModelConfig, QuantConfig
-from repro.serving import GenerationRequest, SamplingParams
+from repro.serving import EngineConfig, GenerationRequest, SamplingParams
 
 N_REQ, SLOTS, PROMPT, MAX_NEW = 6, 2, 32, 24
 
@@ -28,7 +28,8 @@ def serve(mode: str):
 
     # mixed budgets: even requests use the full budget, odd ones a quarter —
     # the slot pool backfills retired slots instead of waiting lockstep
-    engine = model.engine(max_slots=SLOTS, max_seq_len=PROMPT + MAX_NEW,
+    engine = model.engine(EngineConfig(max_slots=SLOTS,
+                                       max_seq_len=PROMPT + MAX_NEW),
                           fresh=True)
     outs = engine.run([
         GenerationRequest(prompts[i],

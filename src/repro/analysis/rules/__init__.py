@@ -14,6 +14,7 @@ from repro.analysis.rules import (
     rpr004_pallas,
     rpr005_scales,
     rpr006_backend,
+    rpr010_facade,
 )
 
 __all__ = [
@@ -23,4 +24,5 @@ __all__ = [
     "rpr004_pallas",
     "rpr005_scales",
     "rpr006_backend",
+    "rpr010_facade",
 ]

@@ -1,0 +1,251 @@
+"""RPR010 — facade drift: README examples vs the ``repro.api`` AST.
+
+The README's code fences are the first thing a user copies, and nothing
+executes them: a facade method renamed, a parameter dropped, or a keyword
+added in ``api.py`` leaves the documented calls silently broken until a
+user hits the TypeError. This rule closes that gap statically.
+
+Project pass: parse ``repro.api`` into a signature table (module-level
+functions, ``QuaffModel`` methods and classmethods, the constructor), find
+the README.md that documents it (walking up from ``api.py``'s directory),
+parse every fenced code block that is valid Python, and check each call
+against the table:
+
+  * ``api.X(...)`` / ``QuaffModel.X(...)`` must name a real export;
+  * facade-bound names (assigned from ``api.prepare`` /
+    ``api.QuaffModel.load`` / ``QuaffModel(...)``, plus the conventional
+    name ``model``) must call real ``QuaffModel`` methods;
+  * calls must bind: no more positionals than the signature takes, no
+    unknown keywords (unless the signature has ``**kwargs``), every
+    default-less parameter supplied.
+
+Blocks that do not parse as Python (shell commands, output transcripts)
+are skipped, as is any call using ``*args``/``**kwargs`` splats — the rule
+only flags what it can prove lexically.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.context import ModuleContext, ProjectContext
+from repro.analysis.registry import Finding, Rule, register
+
+API_MODULE = "repro.api"
+FACADE_CLASS = "QuaffModel"
+#: README convention: examples call the facade instance ``model`` even in
+#: fences that elide the assignment that produced it
+CONVENTIONAL_INSTANCE = "model"
+
+
+class _Sig:
+    """Callable signature lexically extracted from a def."""
+
+    __slots__ = ("name", "pos", "required_pos", "kwonly", "required_kwonly",
+                 "has_vararg", "has_kwargs")
+
+    def __init__(self, fn: ast.FunctionDef, skip_self: bool):
+        a = fn.args
+        pos = [x.arg for x in a.posonlyargs + a.args]
+        if skip_self and pos and pos[0] in ("self", "cls"):
+            pos = pos[1:]
+        self.name = fn.name
+        self.pos = pos
+        self.required_pos = pos[:len(pos) - len(a.defaults)]
+        self.kwonly = {x.arg for x in a.kwonlyargs}
+        self.required_kwonly = {x.arg for d, x in
+                                zip(a.kw_defaults, a.kwonlyargs) if d is None}
+        self.has_vararg = a.vararg is not None
+        self.has_kwargs = a.kwarg is not None
+
+
+def _is_property(fn: ast.FunctionDef) -> bool:
+    return any(isinstance(d, ast.Name) and d.id == "property"
+               for d in fn.decorator_list)
+
+
+def _facade_tables(api_mod: ModuleContext
+                   ) -> Tuple[Dict[str, _Sig], Dict[str, _Sig], Set[str]]:
+    """(module functions, QuaffModel methods, non-callable attrs)."""
+    functions: Dict[str, _Sig] = {}
+    methods: Dict[str, _Sig] = {}
+    attrs: Set[str] = set()
+    for node in api_mod.tree.body:
+        if isinstance(node, ast.FunctionDef) and not node.name.startswith("_"):
+            functions[node.name] = _Sig(node, skip_self=False)
+        elif isinstance(node, ast.ClassDef) and node.name == FACADE_CLASS:
+            for item in node.body:
+                if not isinstance(item, ast.FunctionDef):
+                    continue
+                if _is_property(item):
+                    attrs.add(item.name)
+                elif item.name == "__init__" or not item.name.startswith("_"):
+                    methods[item.name] = _Sig(item, skip_self=True)
+    return functions, methods, attrs
+
+
+def _find_readme(api_path: str) -> Optional[str]:
+    """Walk up from ``api.py``'s directory to the README that documents the
+    facade (repo root in the shipped tree, ``tmp_path`` in test fixtures)."""
+    d = os.path.dirname(os.path.abspath(api_path))
+    for _ in range(8):
+        candidate = os.path.join(d, "README.md")
+        if os.path.isfile(candidate):
+            return candidate
+        parent = os.path.dirname(d)
+        if parent == d:
+            break
+        d = parent
+    return None
+
+
+def _code_fences(text: str) -> Iterator[Tuple[int, str]]:
+    """(1-based line of the opening fence, block source) for each fenced
+    block whose tag could be Python (python/py/untagged)."""
+    lines = text.splitlines()
+    open_line, tag, buf = 0, "", []
+    for i, line in enumerate(lines, start=1):
+        stripped = line.strip()
+        if stripped.startswith("```"):
+            if open_line:
+                if tag in ("", "python", "py"):
+                    yield open_line, "\n".join(buf)
+                open_line, buf = 0, []
+            else:
+                open_line, tag = i, stripped[3:].strip().lower()
+        elif open_line:
+            buf.append(line)
+
+
+def _has_splat(call: ast.Call) -> bool:
+    return (any(isinstance(a, ast.Starred) for a in call.args)
+            or any(kw.arg is None for kw in call.keywords))
+
+
+def _check_binding(call: ast.Call, sig: _Sig, label: str) -> List[str]:
+    """Messages for ways ``call`` cannot bind against ``sig``."""
+    if _has_splat(call):
+        return []
+    out = []
+    n_pos = len(call.args)
+    if not sig.has_vararg and n_pos > len(sig.pos):
+        out.append(f"{label} takes {len(sig.pos)} positional argument(s) "
+                   f"but the README call passes {n_pos}")
+    kwnames = {kw.arg for kw in call.keywords}
+    if not sig.has_kwargs:
+        unknown = sorted(kwnames - set(sig.pos) - sig.kwonly)
+        if unknown:
+            out.append(f"{label} has no parameter(s) "
+                       f"{', '.join(repr(k) for k in unknown)}")
+    bound = set(sig.pos[:n_pos]) | kwnames
+    missing = sorted((set(sig.required_pos) | sig.required_kwonly) - bound)
+    if missing:
+        out.append(f"README call leaves required {label} parameter(s) "
+                   f"unbound: {', '.join(missing)}")
+    return out
+
+
+def _bound_instances(ctx: ModuleContext, functions: Dict[str, _Sig]) -> Set[str]:
+    """Names a fence binds to a facade instance (plus the conventional
+    ``model``): assigned from ``api.prepare`` / ``api.QuaffModel.load`` /
+    ``QuaffModel(...)``."""
+    bound = {CONVENTIONAL_INSTANCE}
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)):
+            continue
+        qn = ctx.call_qualname(node.value) or ""
+        parts = qn.split(".")
+        if parts[-1] == FACADE_CLASS or (
+                len(parts) >= 2 and parts[-2] == FACADE_CLASS) or (
+                parts[-1] == "prepare" and "api" in parts):
+            bound.add(node.targets[0].id)
+    return bound
+
+
+def _facade_target(ctx: ModuleContext, call: ast.Call, bound: Set[str]
+                   ) -> Optional[Tuple[str, str]]:
+    """Classify a call against the facade surface. Returns one of
+    ``("function", name)`` for ``api.X(...)``, ``("method", name)`` for
+    ``api.QuaffModel.X(...)`` / ``<instance>.X(...)`` /
+    ``QuaffModel(...)`` (name ``__init__``), else None."""
+    qn = ctx.call_qualname(call)
+    if qn is not None:
+        parts = qn.split(".")
+        if parts[-1] == FACADE_CLASS:
+            return "method", "__init__"
+        if len(parts) >= 2 and parts[-2] == FACADE_CLASS:
+            return "method", parts[-1]
+        if len(parts) >= 2 and parts[-2] == "api":
+            return "function", parts[-1]
+    func = call.func
+    if (isinstance(func, ast.Attribute) and isinstance(func.value, ast.Name)
+            and func.value.id in bound):
+        return "method", func.attr
+    return None
+
+
+@register
+class FacadeDrift(Rule):
+    rule_id = "RPR010"
+    severity = "error"
+    description = (
+        "README code fences must call repro.api exports that exist, with "
+        "arguments their signatures accept"
+    )
+
+    def check_project(self, project: ProjectContext):
+        api_mod = project.module(API_MODULE)
+        if api_mod is None:
+            return
+        functions, methods, attrs = _facade_tables(api_mod)
+        readme = _find_readme(api_mod.path)
+        if readme is None:
+            return
+        with open(readme, "r", encoding="utf-8") as f:
+            text = f.read()
+        rel = os.path.relpath(readme)
+        for fence_line, block in _code_fences(text):
+            try:
+                ctx = ModuleContext(readme, block, relpath=rel)
+            except SyntaxError:
+                continue        # shell commands / output transcripts
+            yield from self._check_fence(ctx, fence_line, rel,
+                                         functions, methods, attrs)
+
+    def _check_fence(self, ctx, fence_line, rel, functions, methods, attrs):
+        bound = _bound_instances(ctx, functions)
+        for call in ctx.calls():
+            target = _facade_target(ctx, call, bound)
+            if target is None:
+                continue
+            kind, name = target
+            if kind == "function":
+                sig = functions.get(name)
+                label = f"api.{name}"
+                known = name in functions
+            else:
+                sig = methods.get(name)
+                label = (FACADE_CLASS if name == "__init__"
+                         else f"{FACADE_CLASS}.{name}")
+                known = name in methods or name in attrs
+            if not known:
+                yield self._finding(rel, fence_line, call,
+                                    f"README documents {label} but repro.api "
+                                    f"defines no such "
+                                    f"{'function' if kind == 'function' else 'method'}")
+                continue
+            if sig is None:     # property accessed as a call elsewhere
+                continue
+            for msg in _check_binding(call, sig, label):
+                yield self._finding(rel, fence_line, call, msg)
+
+    def _finding(self, rel: str, fence_line: int, node: ast.AST,
+                 message: str) -> Finding:
+        return Finding(rule_id=self.rule_id, severity=self.severity,
+                       path=rel, line=fence_line + getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0) + 1,
+                       message=message)

@@ -14,8 +14,8 @@ plumbing.
                                              #  (+ optimizer) w/ fingerprint
     model = api.QuaffModel.load("ckpts/run")  # bit-identical round-trip
     model.generate(prompts, max_new=32, eos_id=2)   # one-shot engine decode
-    engine = model.engine(max_slots=8, max_seq_len=512)   # continuous
-    outs = engine.run([GenerationRequest(...), ...])      #  batching
+    engine = model.engine(EngineConfig(max_slots=8, max_seq_len=512))
+    outs = engine.run([GenerationRequest(...), ...])   # continuous batching
 
 Every quant mode in the ``QuantBackend`` registry (including modes
 registered by downstream code) works through the same calls. Inference is
@@ -29,7 +29,7 @@ lockstep loop is gone; ``generate`` is engine-backed everywhere.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Iterable, List, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -83,7 +83,7 @@ class QuaffModel:
         self._eval_cfg = None
         self._decode_fn = None
         self._prefill_fns: Dict[int, Any] = {}
-        self._engines: Dict[Tuple[int, int], Any] = {}
+        self._engines: Dict[Any, Any] = {}   # EngineConfig -> Engine
         self._train_state = None
         self._train_tcfg = None
         self._step_fn = None
@@ -257,37 +257,40 @@ class QuaffModel:
                                caches, token, jnp.asarray(pos, jnp.int32))
 
     # ---- serving ---------------------------------------------------------
-    def engine(self, max_slots: int = 4, max_seq_len: int = 256,
-               fresh: bool = False, **kv_opts):
+    def engine(self, cfg=None, fresh: bool = False, **legacy):
         """A ``repro.serving.Engine`` over this model (continuous batching:
         slot-pooled decode state for every family, mid-decode admission,
-        per-request sampling). ``kv_opts`` pass through to the engine's
-        state knobs — ``kv_layout="paged"``, ``kv_dtype="int8"``,
-        ``block_size``, ``n_blocks``, ``prefill_chunk``, ``lazy_blocks``
-        (KV families) and ``state_dtype="int8"`` (recurrent families; see
-        ``models.config.ServingConfig``). A few
-        engines are cached per (max_slots, max_seq_len, kv knobs) so
-        repeated one-shot uses reuse their compiled steps — oldest-evicted
-        beyond ``_MAX_CACHED_ENGINES``, since each engine pins a device KV
-        pool; ``fresh=True`` bypasses the cache (e.g. for independent
-        ``EngineStats``)."""
-        from repro.serving import Engine
-        from repro.models.config import ServingConfig
-        # normalize default-valued kwargs out of the cache key so
-        # engine(4, 256) and engine(4, 256, kv_layout="contiguous") share
-        # one cached engine (each pins a device KV pool)
-        defaults = {f.name: f.default
-                    for f in dataclasses.fields(ServingConfig)}
-        key = (max_slots, max_seq_len) + tuple(sorted(
-            (k, v) for k, v in kv_opts.items() if v != defaults.get(k)))
-        eng = None if fresh else self._engines.get(key)
+        per-request sampling). ``cfg`` is a ``serving.EngineConfig`` — THE
+        knob surface (``max_slots`` / ``max_seq_len``, ``kv_layout="paged"``
+        / ``kv_dtype="int8"`` / ``block_size`` / ``n_blocks`` /
+        ``prefill_chunk`` / ``lazy_blocks``, ``prefix_share`` /
+        ``radix_capacity``, ``state_dtype="int8"``); the historical loose
+        spelling ``engine(max_slots=8, kv_layout="paged")`` still works via
+        a warn-once deprecation shim and builds the identical config.
+
+        Engines are cached per config — the frozen dataclass IS the cache
+        key, so equivalent spellings (defaults written out or omitted,
+        legacy kwargs or the dataclass) share one compiled engine.
+        Oldest-evicted beyond ``_MAX_CACHED_ENGINES``, since each engine
+        pins a device KV pool; ``fresh=True`` bypasses the cache (e.g. for
+        independent ``EngineStats``)."""
+        from repro.serving import Engine, EngineConfig
+        from repro.serving.config import from_legacy_kwargs
+        if cfg is None:
+            cfg = from_legacy_kwargs(legacy)
+        elif not isinstance(cfg, EngineConfig):
+            raise TypeError(f"cfg must be an EngineConfig, got {type(cfg)}")
+        elif legacy:
+            raise TypeError(
+                "pass either an EngineConfig or legacy engine knobs, "
+                "not both")
+        eng = None if fresh else self._engines.get(cfg)
         if eng is None:
-            eng = Engine(self, max_slots=max_slots, max_seq_len=max_seq_len,
-                         **kv_opts)
+            eng = Engine(self, cfg)
             if not fresh:
                 while len(self._engines) >= self._MAX_CACHED_ENGINES:
                     self._engines.pop(next(iter(self._engines)))
-                self._engines[key] = eng
+                self._engines[cfg] = eng
         return eng
 
     def generate(self, tokens, max_new: int = 32,
@@ -307,12 +310,12 @@ class QuaffModel:
         if max_new <= 0:
             return jnp.zeros((bsz, 0), jnp.int32)
         from repro.core.peft import n_prefix_tokens
-        from repro.serving import GenerationRequest
+        from repro.serving import EngineConfig, GenerationRequest
         embeds = None if input_embeds is None else np.asarray(input_embeds)
         max_seq = tokens.shape[1] + n_prefix_tokens(self.cfg.peft) + max_new
         if embeds is not None and self.cfg.family != "encdec":
             max_seq += embeds.shape[1]      # vlm patches take cache rows
-        eng = self.engine(max_slots=bsz, max_seq_len=max_seq)
+        eng = self.engine(EngineConfig(max_slots=bsz, max_seq_len=max_seq))
         outs = eng.run([GenerationRequest(
             tokens[i], max_new_tokens=max_new, eos_id=eos_id,
             input_embeds=None if embeds is None else embeds[i])

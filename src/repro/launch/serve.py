@@ -22,7 +22,13 @@ block-pool cache (``--block-size`` tokens per block), ``--kv-dtype int8``
 stores it quantized (~4x fewer KV bytes), ``--prefill-chunk N`` admits
 prompts N tokens at a time so long prompts never stall the decode batch,
 and ``--lazy-blocks`` grows block tables at decode time instead of
-reserving max_new up front; pool telemetry prints after the run.
+reserving max_new up front; ``--prefix-share`` turns on radix/COW prefix
+sharing (``--shared-prefix N`` gives every request the same N-token
+opener so the reuse shows) with ``--radix-capacity`` bounding the blocks
+the index may pin; pool telemetry prints after the run.
+
+Every knob lands in one ``serving.EngineConfig`` — the same dataclass
+``api.QuaffModel.engine`` takes.
 """
 from __future__ import annotations
 
@@ -35,8 +41,8 @@ from repro import api
 from repro.configs import get_config
 from repro.core.peft import PEFTConfig, n_prefix_tokens
 from repro.data.pipeline import DataConfig, Loader
-from repro.models.config import QuantConfig, ServingConfig
-from repro.serving import GenerationRequest, SamplingParams
+from repro.models.config import QuantConfig
+from repro.serving import EngineConfig, GenerationRequest, SamplingParams
 
 
 def main():
@@ -64,6 +70,16 @@ def main():
     ap.add_argument("--lazy-blocks", action="store_true",
                     help="paged only: grow block tables at decode time "
                          "instead of reserving max_new up front")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="paged only: radix/COW prefix sharing — repeated "
+                         "prompt prefixes map cached KV blocks instead of "
+                         "re-prefilling")
+    ap.add_argument("--radix-capacity", type=int, default=0,
+                    help="max blocks the prefix index may pin "
+                         "(0 = unbounded)")
+    ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
+                    help="give every request the same N-token opener "
+                         "(prefix-share showcase workload)")
     ap.add_argument("--state-dtype", default="fp", choices=["fp", "int8"],
                     help="ssm/hybrid only: int8 recurrent-state slots "
                          "(OSSH-static per-channel scales)")
@@ -95,6 +111,9 @@ def main():
                                seq_len=args.prompt_len,
                                batch_size=max(args.requests, 1)))
     prompts = np.asarray(loader.batch(0)["tokens"])
+    if args.shared_prefix:
+        n = min(args.shared_prefix, prompts.shape[1])
+        prompts[:, :n] = prompts[0, :n]     # every request opens identically
     rng = np.random.RandomState(args.seed)
 
     reqs = []
@@ -116,24 +135,25 @@ def main():
 
     # pool must fit prompt + PEFT virtual-token prefix + budget per slot;
     # every family rides the engine (the lockstep fallback is gone)
-    from repro.serving import Engine
     n_prefix = n_prefix_tokens(cfg.peft)
-    scfg = ServingConfig(max_slots=args.slots,
-                         max_seq_len=args.prompt_len + n_prefix
-                         + args.max_new,
-                         kv_layout=args.kv_layout, kv_dtype=args.kv_dtype,
-                         block_size=args.block_size,
-                         prefill_chunk=args.prefill_chunk,
-                         state_dtype=args.state_dtype,
-                         lazy_blocks=args.lazy_blocks)
-    engine = Engine.from_config(model, scfg)
+    ecfg = EngineConfig(max_slots=args.slots,
+                        max_seq_len=args.prompt_len + n_prefix
+                        + args.max_new,
+                        kv_layout=args.kv_layout, kv_dtype=args.kv_dtype,
+                        block_size=args.block_size,
+                        prefill_chunk=args.prefill_chunk,
+                        state_dtype=args.state_dtype,
+                        lazy_blocks=args.lazy_blocks,
+                        prefix_share=args.prefix_share,
+                        radix_capacity=args.radix_capacity)
+    engine = model.engine(ecfg, fresh=True)
     outs = engine.run(reqs)
 
     st = engine.stats
     lockstep_slot_steps = args.requests * max(
         r.max_new_tokens for r in reqs)  # lockstep pays max budget everywhere
     print(f"[serve] {args.requests} reqs over {args.slots} slots "
-          f"({cfg.family}, pool seq {scfg.max_seq_len}, kv {args.kv_layout}/"
+          f"({cfg.family}, pool seq {ecfg.max_seq_len}, kv {args.kv_layout}/"
           f"{args.kv_dtype}, state {st.state_dtype}, {cfg.name}, "
           f"{cfg.quant.mode})")
     print(f"prefill: {st.prefills} reqs in {st.prefill_batches} batched "
@@ -155,6 +175,13 @@ def main():
                   f"{st.block_stalls} stalls, {st.preemptions} preemptions, "
                   f"reserved-vs-used delta "
                   f"{st.lazy_blocks_saved_per_request:.1f} blocks/req")
+        if st.prefix_share:
+            print(f"prefix-share: {st.prefix_hits}/{st.prefix_queries} hits "
+                  f"({st.prefix_hit_rate:.0%}), {st.prefix_tokens_saved} "
+                  f"prefill tokens + {st.prefill_chunks_saved} chunk calls "
+                  f"saved, {st.radix_blocks} blocks indexed "
+                  f"({st.radix_evictions} evicted), {st.cow_copies} COW "
+                  f"copies")
     elif cfg.family in ("ssm", "hybrid"):
         print(f"state-pool: {st.state_bytes_per_slot/1024:.1f} KiB/slot "
               f"({st.state_dtype}; fp equivalent "

@@ -177,12 +177,21 @@ class ServingConfig:
       lazy_blocks   paged-only: admit with the PROMPT block footprint and
                     grow tables at decode time (stall/preempt
                     backpressure) instead of reserving max_new up front.
+      prefix_share  paged-only: radix/COW prefix sharing — index full KV
+                    blocks by token content and map the longest indexed
+                    prefix read-only into new requests.
+      radix_capacity  max blocks the prefix index may pin (0 = unbounded;
+                    leaves still shed LRU-first under pool pressure).
 
     Recurrent-state precision (ssm/hybrid, repro.serving.state):
       state_dtype   "fp" = float state; "int8" = quantized conv/SSM/mLSTM
                     state under OSSH-static per-channel scales (seeded
                     from the Quaff calibration capture or probed from the
                     first admitted prompt).
+
+    This is the training-side mirror of ``repro.serving.EngineConfig``
+    (kept import-light for configs); ``to_engine_config()`` converts, and
+    the serving engine validates there.
     """
 
     max_slots: int = 4
@@ -194,6 +203,21 @@ class ServingConfig:
     prefill_chunk: int = 0
     state_dtype: str = "fp"         # fp | int8 (ssm/hybrid recurrent state)
     lazy_blocks: bool = False
+    prefix_share: bool = False
+    radix_capacity: int = 0
+
+    def to_engine_config(self):
+        """The serving-side ``EngineConfig`` with these knobs (local import:
+        ``models.config`` must stay importable without ``repro.serving``)."""
+        from repro.serving.config import EngineConfig
+        return EngineConfig(
+            max_slots=self.max_slots, max_seq_len=self.max_seq_len,
+            kv_layout=self.kv_layout, kv_dtype=self.kv_dtype,
+            block_size=self.block_size, n_blocks=self.n_blocks,
+            prefill_chunk=self.prefill_chunk, lazy_blocks=self.lazy_blocks,
+            prefix_share=self.prefix_share,
+            radix_capacity=self.radix_capacity,
+            state_dtype=self.state_dtype)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -3,16 +3,20 @@ for EVERY family in the zoo (dense/moe/vlm/ssm/hybrid/encdec).
 
 Public surface:
 
-    Engine             slot-pooled continuous-batching engine; KV knobs
-                       kv_layout="contiguous"|"paged", kv_dtype="fp"|"int8",
-                       block_size / n_blocks / prefill_chunk / lazy_blocks,
-                       recurrent-state knob state_dtype="fp"|"int8"
+    Engine             slot-pooled continuous-batching engine
+    EngineConfig       THE engine knob surface (frozen dataclass):
+                       max_slots / max_seq_len, kv_layout="contiguous"|
+                       "paged", kv_dtype="fp"|"int8", block_size / n_blocks /
+                       prefill_chunk / lazy_blocks, prefix_share /
+                       radix_capacity, state_dtype="fp"|"int8"; loose-kwarg
+                       spellings keep working via a warn-once shim
     GenerationRequest  prompt + budget + SamplingParams (+ streaming cb,
                        + per-request encoder frames / patch embeddings)
     SamplingParams     greedy / temperature / top-k / top-p, seeded
     RequestOutput      generated ids + finish reason
     EngineStats        tokens/s, per-phase latency, slot occupancy,
-                       decode-state bytes, block-pool telemetry
+                       decode-state bytes, block-pool + prefix-share
+                       telemetry
 
 Decode state is family-agnostic behind the ``DecodeState`` protocol
 (``serving.state``): contiguous ``SlotPool`` rows or the ``PagedPool``
@@ -23,13 +27,14 @@ block-pool machinery (allocator, int8 KV storage, Pallas block-table
 attention) lives in ``repro.serving.paged``.
 """
 from repro.models.config import ServingConfig
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Engine
 from repro.serving.params import (EngineStats, GenerationRequest,
                                   RequestOutput, SamplingParams)
 from repro.serving.pool import PagedPool, SlotPool, make_decode_state
 from repro.serving.state import CrossAttnPool, DecodeState, RecurrentPool
 
-__all__ = ["Engine", "GenerationRequest", "SamplingParams", "RequestOutput",
-           "EngineStats", "ServingConfig", "SlotPool", "PagedPool",
-           "RecurrentPool", "CrossAttnPool", "DecodeState",
+__all__ = ["Engine", "EngineConfig", "GenerationRequest", "SamplingParams",
+           "RequestOutput", "EngineStats", "ServingConfig", "SlotPool",
+           "PagedPool", "RecurrentPool", "CrossAttnPool", "DecodeState",
            "make_decode_state"]

@@ -1,0 +1,161 @@
+"""``EngineConfig`` — the one knob surface of the serving engine.
+
+The engine's options grew one keyword at a time (PR 3 slots, PR 4 paged +
+quantized KV + chunked prefill, PR 5 recurrent state + lazy blocks, now
+prefix sharing), leaving every caller to thread eight loose kwargs through
+``api.QuaffModel.engine`` / ``Engine`` / ``ServingConfig`` / the serve
+launcher. This module collapses that sprawl into one frozen dataclass:
+
+    from repro.serving import EngineConfig
+    engine = model.engine(EngineConfig(max_slots=8, max_seq_len=512,
+                                       kv_layout="paged", kv_dtype="int8",
+                                       prefix_share=True))
+
+Validation lives in ``__post_init__`` so a bad combination fails at
+construction, not deep inside the engine; the dataclass is frozen (and
+therefore hashable), so it doubles as the engine cache key in
+``api.QuaffModel.engine`` — equivalent spellings (defaults written out or
+omitted, legacy kwargs or the dataclass) land on the same compiled engine.
+
+Legacy keyword spellings (``engine(max_slots=8, kv_layout="paged")``)
+keep working through ``from_legacy_kwargs``, which warns once per process
+and builds the identical dataclass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Dict
+
+from repro.serving.paged.kvquant import check_kv_dtype
+from repro.serving.state import check_state_dtype
+
+KV_LAYOUTS = ("contiguous", "paged")
+
+#: process-wide warn-once latch for the legacy kwarg shim (tests reset it
+#: via ``_reset_legacy_warning`` to assert the warning fires)
+_legacy_warned = False
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Every serving-engine knob, validated and frozen.
+
+    Pool sizing:
+      max_slots      concurrent requests sharing the decode-state pool.
+      max_seq_len    cache positions per request (prompt + PEFT prefix +
+                     max_new must fit).
+
+    KV layout / precision (attention-cache families, ``serving.paged``):
+      kv_layout      "contiguous" = one max_seq_len row per slot;
+                     "paged" = block-pool cache behind per-request block
+                     tables.
+      kv_dtype       "fp" passthrough or "int8" quantized KV (OSSH-static
+                     per-channel key scales, per-token value scales).
+      block_size     tokens per KV block (paged only).
+      n_blocks       pool capacity in blocks; 0 = worst case
+                     (max_slots * ceil(max_seq_len / block_size)).
+      prefill_chunk  admit prompts in chunks of N tokens (paged only);
+                     0 = whole-prompt admission.
+      lazy_blocks    paged only: admit with the PROMPT footprint and grow
+                     tables at decode time (stall/preempt backpressure).
+
+    Prefix sharing (paged only, ``serving.paged.radix``):
+      prefix_share   index full KV blocks by their token content and map
+                     the longest indexed prefix copy-on-write into new
+                     requests, so repeated system prompts / few-shot
+                     prefixes prefill once.
+      radix_capacity max blocks the radix index may pin (LRU-leaf
+                     eviction beyond it); 0 = unbounded — the index still
+                     sheds leaves under block-pool pressure.
+
+    Recurrent-state precision (ssm/hybrid, ``serving.state``):
+      state_dtype    "fp" or "int8" quantized conv/SSM/mLSTM state under
+                     OSSH-static per-channel scales.
+    """
+
+    max_slots: int = 4
+    max_seq_len: int = 256
+    kv_layout: str = "contiguous"
+    kv_dtype: str = "fp"
+    block_size: int = 16
+    n_blocks: int = 0
+    prefill_chunk: int = 0
+    lazy_blocks: bool = False
+    prefix_share: bool = False
+    radix_capacity: int = 0
+    state_dtype: str = "fp"
+
+    def __post_init__(self):
+        if self.max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {self.max_slots}")
+        if self.max_seq_len < 1:
+            raise ValueError(
+                f"max_seq_len must be >= 1, got {self.max_seq_len}")
+        if self.kv_layout not in KV_LAYOUTS:
+            raise ValueError(f"kv_layout must be 'contiguous' or 'paged', "
+                             f"got {self.kv_layout!r}")
+        check_kv_dtype(self.kv_dtype)
+        check_state_dtype(self.state_dtype)
+        if self.block_size < 1:
+            raise ValueError(
+                f"block_size must be >= 1, got {self.block_size}")
+        if self.n_blocks < 0:
+            raise ValueError(f"n_blocks must be >= 0, got {self.n_blocks}")
+        if self.prefill_chunk < 0:
+            raise ValueError(
+                f"prefill_chunk must be >= 0, got {self.prefill_chunk}")
+        if self.radix_capacity < 0:
+            raise ValueError(
+                f"radix_capacity must be >= 0, got {self.radix_capacity}")
+        if self.kv_layout != "paged":
+            if self.kv_dtype != "fp":
+                raise ValueError("kv_dtype='int8' needs kv_layout='paged'")
+            if self.prefill_chunk:
+                raise ValueError("chunked prefill (prefill_chunk > 0) needs "
+                                 "kv_layout='paged'")
+            if self.lazy_blocks:
+                raise ValueError("lazy_blocks needs kv_layout='paged'")
+            if self.prefix_share:
+                raise ValueError("prefix_share needs kv_layout='paged' "
+                                 "(sharing is block-granular)")
+            if self.radix_capacity:
+                raise ValueError("radix_capacity needs kv_layout='paged' "
+                                 "and prefix_share=True")
+        elif self.radix_capacity and not self.prefix_share:
+            raise ValueError("radix_capacity needs prefix_share=True")
+
+
+def from_legacy_kwargs(kwargs: Dict[str, Any]) -> EngineConfig:
+    """Deprecation shim: build an ``EngineConfig`` from the historical
+    loose-kwarg spelling (``max_slots=8, kv_layout="paged", ...``).
+
+    Unknown names raise ``TypeError`` exactly like the old signature did;
+    a non-empty legacy spelling emits one ``DeprecationWarning`` per
+    process. The returned dataclass is identical to writing
+    ``EngineConfig(**kwargs)`` directly, so both spellings share engine
+    caches keyed on the config."""
+    valid = {f.name for f in dataclasses.fields(EngineConfig)}
+    unknown = set(kwargs) - valid
+    if unknown:
+        raise TypeError(
+            f"unknown engine option(s) {sorted(unknown)}; "
+            f"EngineConfig fields are {sorted(valid)}")
+    if kwargs:
+        global _legacy_warned
+        if not _legacy_warned:
+            _legacy_warned = True
+            warnings.warn(
+                "passing loose engine knobs "
+                f"({', '.join(sorted(kwargs))}) is deprecated; build an "
+                "EngineConfig and pass it as the single config argument "
+                "(engine(EngineConfig(...)) / Engine(model, "
+                "EngineConfig(...)))",
+                DeprecationWarning, stacklevel=3)
+    return EngineConfig(**kwargs)
+
+
+def _reset_legacy_warning():
+    """Test hook: re-arm the warn-once latch."""
+    global _legacy_warned
+    _legacy_warned = False

@@ -52,11 +52,11 @@ import numpy as np
 from repro.core import peft as PEFT
 from repro.models.config import ServingConfig
 from repro.serving import sampling
+from repro.serving.config import EngineConfig, from_legacy_kwargs
 from repro.serving.paged import kvquant as KVQ
 from repro.serving.params import (EngineStats, GenerationRequest,
                                   RequestOutput, SamplingParams)
 from repro.serving.pool import PagedPool, make_decode_state
-from repro.serving.state import check_state_dtype
 from repro.train import steps as S
 
 
@@ -89,7 +89,8 @@ class _SlotState:
     the pending prompt, so greedy continuation is deterministic."""
 
     __slots__ = ("req", "request_id", "prompt", "embeds", "pos_offset",
-                 "token_ids", "last_token", "remaining")
+                 "token_ids", "last_token", "remaining", "n_shared",
+                 "prefix_key")
 
     def __init__(self, req: GenerationRequest, request_id: str,
                  prompt: np.ndarray, embeds: Optional[np.ndarray],
@@ -105,6 +106,8 @@ class _SlotState:
         self.token_ids: List[int] = []
         self.last_token = 0
         self.remaining: Optional[np.ndarray] = None
+        self.n_shared = 0                    # cache positions prefix-shared
+        self.prefix_key: Optional[Tuple[int, ...]] = None
 
     @property
     def prompt_len(self) -> int:
@@ -131,7 +134,7 @@ class Engine:
     """Slot-pooled continuous-batching engine over a facade model — every
     family in the zoo (dense/moe/vlm/ssm/hybrid/encdec).
 
-        engine = Engine(model, max_slots=4, max_seq_len=128)
+        engine = Engine(model, EngineConfig(max_slots=4, max_seq_len=128))
         outs = engine.run([GenerationRequest(prompt, max_new_tokens=16),
                            GenerationRequest(prompt2, max_new_tokens=64,
                                              sampling=SamplingParams(
@@ -140,58 +143,55 @@ class Engine:
 
     ``submit``/``step`` expose the loop for callers that interleave their own
     work (the serve launcher); ``run`` drains to completion. Per-token
-    streaming: set ``GenerationRequest.on_token``. Paged / quantized KV,
-    chunked prefill and lazy block growth (KV families): ``kv_layout=
-    "paged"``, ``kv_dtype="int8"``, ``prefill_chunk=N``, ``lazy_blocks=
-    True``. Quantized recurrent state (ssm/hybrid): ``state_dtype="int8"``.
-    Encoder frames / patch embeddings ride per request
-    (``GenerationRequest.input_embeds``).
+    streaming: set ``GenerationRequest.on_token``. Every knob lives on
+    ``EngineConfig``: paged / quantized KV, chunked prefill and lazy block
+    growth (``kv_layout="paged"``, ``kv_dtype="int8"``, ``prefill_chunk=N``,
+    ``lazy_blocks=True``), radix/COW prefix sharing (``prefix_share=True``,
+    ``radix_capacity=N``), quantized recurrent state for ssm/hybrid
+    (``state_dtype="int8"``). The historical loose-kwarg spelling
+    (``Engine(model, max_slots=4, kv_layout="paged")``) still works through
+    a warn-once deprecation shim. Encoder frames / patch embeddings ride
+    per request (``GenerationRequest.input_embeds``).
     """
 
     @classmethod
-    def from_config(cls, model, serving: ServingConfig) -> "Engine":
-        """Build from a ``models.config.ServingConfig``."""
-        return cls(model, max_slots=serving.max_slots,
-                   max_seq_len=serving.max_seq_len,
-                   kv_layout=serving.kv_layout, kv_dtype=serving.kv_dtype,
-                   block_size=serving.block_size, n_blocks=serving.n_blocks,
-                   prefill_chunk=serving.prefill_chunk,
-                   state_dtype=serving.state_dtype,
-                   lazy_blocks=serving.lazy_blocks)
+    def from_config(cls, model, serving) -> "Engine":
+        """Build from an ``EngineConfig`` (or the training-side
+        ``models.config.ServingConfig``, which converts)."""
+        if isinstance(serving, ServingConfig):
+            serving = serving.to_engine_config()
+        return cls(model, serving)
 
-    def __init__(self, model, max_slots: int = 4, max_seq_len: int = 256, *,
-                 kv_layout: str = "contiguous", kv_dtype: str = "fp",
-                 block_size: int = 16, n_blocks: int = 0,
-                 prefill_chunk: int = 0, state_dtype: str = "fp",
-                 lazy_blocks: bool = False):
+    def __init__(self, model, config: Optional[EngineConfig] = None,
+                 max_seq_len: Optional[int] = None, **legacy):
+        if isinstance(config, EngineConfig):
+            if max_seq_len is not None or legacy:
+                raise TypeError(
+                    "pass either an EngineConfig or legacy engine knobs, "
+                    "not both")
+        else:
+            # legacy spelling: Engine(model, max_slots, max_seq_len,
+            # kv_layout=..., ...) — warn-once shim, identical validation
+            if config is not None:
+                legacy["max_slots"] = config
+            if max_seq_len is not None:
+                legacy["max_seq_len"] = max_seq_len
+            config = from_legacy_kwargs(legacy)
         cfg = model.cfg
-        if kv_layout not in ("contiguous", "paged"):
-            raise ValueError(f"kv_layout must be 'contiguous' or 'paged', "
-                             f"got {kv_layout!r}")
-        KVQ.check_kv_dtype(kv_dtype)
-        check_state_dtype(state_dtype)
-        if kv_layout != "paged":
-            if kv_dtype != "fp":
-                raise ValueError("kv_dtype='int8' needs kv_layout='paged'")
-            if prefill_chunk:
-                raise ValueError("chunked prefill (prefill_chunk > 0) needs "
-                                 "kv_layout='paged'")
-            if lazy_blocks:
-                raise ValueError("lazy_blocks needs kv_layout='paged'")
-        if prefill_chunk < 0:
-            raise ValueError(f"prefill_chunk must be >= 0, got {prefill_chunk}")
+        self.config = config
         self.cfg = cfg
-        self.max_slots = max_slots
-        self.max_seq_len = max_seq_len
-        self.kv_layout = kv_layout
-        self.kv_dtype = kv_dtype
-        self.prefill_chunk = prefill_chunk
-        self.lazy_blocks = lazy_blocks
+        self.max_slots = config.max_slots
+        self.max_seq_len = config.max_seq_len
+        self.kv_layout = config.kv_layout
+        self.kv_dtype = config.kv_dtype
+        self.prefill_chunk = config.prefill_chunk
+        self.lazy_blocks = config.lazy_blocks
+        self.prefix_share = config.prefix_share
         self._model = model
         self._sample = sampling.make_sampler()
         self._n_prefix = PEFT.n_prefix_tokens(cfg.peft)
         self._waiting: collections.deque = collections.deque()
-        self._slots: List[Optional[_SlotState]] = [None] * max_slots
+        self._slots: List[Optional[_SlotState]] = [None] * config.max_slots
         self._finished: Dict[str, RequestOutput] = {}
         self._pending: List[str] = []               # submitted, not returned
         self._auto_id = itertools.count()
@@ -199,23 +199,27 @@ class Engine:
         # family -> DecodeState dispatch lives in pool.make_decode_state;
         # NOTHING below branches on cfg.family.
         self._pool = make_decode_state(
-            cfg, max_slots, max_seq_len, kv_layout=kv_layout,
-            kv_dtype=kv_dtype, block_size=block_size, n_blocks=n_blocks,
-            state_dtype=state_dtype)
+            cfg, config.max_slots, config.max_seq_len,
+            kv_layout=config.kv_layout, kv_dtype=config.kv_dtype,
+            block_size=config.block_size, n_blocks=config.n_blocks,
+            state_dtype=config.state_dtype,
+            prefix_share=config.prefix_share,
+            radix_capacity=config.radix_capacity)
         self._paged: Optional[PagedPool] = (
             self._pool if isinstance(self._pool, PagedPool) else None)
         self._step_fn = (_jit_paged_step(cfg) if self._paged is not None
                          else _jit_decode_slots(cfg))
-        self._prefill_fn = _jit_prefill_slot(cfg, max_seq_len)
+        self._prefill_fn = _jit_prefill_slot(cfg, config.max_seq_len)
         self.stats = EngineStats(
-            n_slots=max_slots, family=cfg.family, kv_layout=kv_layout,
-            kv_dtype=kv_dtype, state_dtype=state_dtype,
-            lazy_blocks=lazy_blocks,
+            n_slots=config.max_slots, family=cfg.family,
+            kv_layout=config.kv_layout, kv_dtype=config.kv_dtype,
+            state_dtype=config.state_dtype, lazy_blocks=config.lazy_blocks,
+            prefix_share=config.prefix_share,
             block_size=self._paged.alloc.block_size if self._paged else 0,
             n_blocks=self._paged.alloc.n_blocks if self._paged else 0,
             contiguous_bytes_per_request=(
                 self._paged.contiguous_bytes_equiv(1) if self._paged
-                else max_seq_len * KVQ.kv_bytes_per_token(cfg, "fp")))
+                else config.max_seq_len * KVQ.kv_bytes_per_token(cfg, "fp")))
         self._snapshot_state_bytes()
 
     # ------------------------------------------------------------------
@@ -500,23 +504,52 @@ class Engine:
     # ------------------------------------------------------------------
     # paged layout (KV families)
     # ------------------------------------------------------------------
+    def _prefix_key(self, pending: np.ndarray) -> Tuple[int, ...]:
+        """Radix key for a request's prefill stream: the PEFT prefix
+        positions as negative sentinels (every request of this engine
+        prepends the same virtual tokens — they share by construction but
+        must occupy key positions so block boundaries line up), then the
+        pending prompt tokens."""
+        return tuple(range(-self._n_prefix, 0)) + tuple(
+            int(t) for t in pending)
+
     def _admit_paged(self):
         """FIFO admission into (slot + block footprint); stops at the first
         request the pool cannot hold RIGHT NOW — it stays queued and admits
         once retirements free enough blocks (refusal, never a crash).
-        Lazy mode acquires the PROMPT footprint only; decode grows it."""
+        Lazy mode acquires the PROMPT footprint only; decode grows it.
+        With ``prefix_share`` the pool maps the longest indexed prefix
+        into the table read-only and only the tail stays in ``remaining``
+        — prefill work already cached is never redone."""
         while self._waiting:
             st = self._waiting[0]
             pending = st.pending_tokens()
             need = (pending.size + self._n_prefix if self.lazy_blocks
                     else pending.size + self._n_prefix
                     + st.req.max_new_tokens - st.n_generated)
-            slot = self._pool.acquire(need)
+            if self.prefix_share:
+                key = self._prefix_key(pending)
+                slot = self._paged.acquire_prefix(
+                    key, need, min_share=self._n_prefix)
+            else:
+                key, slot = None, self._pool.acquire(need)
             if slot is None:
                 self.stats.admission_deferrals += 1
                 break
             self._waiting.popleft()
-            st.remaining = pending
+            st.prefix_key = key
+            st.n_shared = self._paged.cursor(slot)
+            if st.n_shared:
+                # the shared region covers the PEFT prefix plus the first
+                # n_shared - n_prefix prompt tokens; prefill only the tail
+                st.remaining = pending[st.n_shared - self._n_prefix:]
+                chunk = self.prefill_chunk
+                if chunk:
+                    self.stats.prefill_chunks_saved += (
+                        -(-(pending.size) // chunk)
+                        - -(-(st.remaining.size) // chunk))
+            else:
+                st.remaining = pending
             self._slots[slot] = st
 
     def _ensure_k_scales(self, prompt: np.ndarray):
@@ -560,6 +593,11 @@ class Engine:
                 self.stats.block_stalls += 1
                 stalled.append(i)
                 continue
+            if not self._paged.prepare_write(i, sx):
+                # COW target unavailable: treat like a block stall
+                self.stats.block_stalls += 1
+                stalled.append(i)
+                continue
             groups.setdefault((clen, first), []).append(i)
         if not groups:
             decoding = any(st is not None and st.decoding
@@ -595,6 +633,10 @@ class Engine:
                 if st.remaining.size == 0:
                     st.remaining = None
                     self.stats.prefills += 1
+                    if self.prefix_share and st.prefix_key is not None:
+                        # prefill complete: the cursor spans exactly the
+                        # keyed region — index its full blocks for reuse
+                        self._paged.index_insert(slot, st.prefix_key)
                     tok = self._sample_one(logits[r:r + 1], st.req.sampling,
                                            st.n_generated)
                     self._emit_token(st, slot, tok)
@@ -604,13 +646,17 @@ class Engine:
                     if st is not None and st.decoding]
         if not decoding:
             return
-        if self.lazy_blocks:
+        if self.lazy_blocks or self.prefix_share:
             ready = []
             for i in decoding:
-                if self._paged.ensure_capacity(i, 1):
-                    ready.append(i)
-                else:
+                if self.lazy_blocks and not self._paged.ensure_capacity(i, 1):
                     self.stats.block_stalls += 1
+                elif not self._paged.prepare_write(i, 1):
+                    # write would land in a shared block and no COW target
+                    # is available — stall this stream for the round
+                    self.stats.block_stalls += 1
+                else:
+                    ready.append(i)
             if not ready:
                 # every decoder is out of blocks and nothing will free
                 # them: preempt the youngest stream (fewest sunk tokens)
@@ -652,3 +698,20 @@ class Engine:
         st.fragmentation = pool.fragmentation()
         st.kv_bytes_in_use = pool.bytes_in_use()
         st.block_grows = pool.n_grows
+        if pool.radix is not None:
+            st.prefix_queries = pool.prefix_queries
+            st.prefix_hits = pool.prefix_hits
+            st.shared_blocks = pool.alloc.n_shared
+            st.prefix_tokens_saved = pool.prefix_tokens_saved
+            st.cow_copies = pool.cow_copies
+            st.radix_blocks = pool.radix.n_blocks
+            st.radix_evictions = pool.radix_evictions
+
+    def reset_prefix_cache(self):
+        """Flush the radix index and release its pinned blocks. Call after
+        swapping / further fine-tuning the served adapters: cached KV was
+        computed under the OLD weights and must not be mapped into new
+        requests. No-op without ``prefix_share``."""
+        if self._paged is not None:
+            self._paged.drop_radix()
+            self._snapshot_pool_stats()

@@ -22,12 +22,18 @@ TRASH_BLOCK = 0   # block id 0 is never allocated; free rows write/read it
 
 
 class BlockAllocator:
-    """Free-list over block ids ``1..n_blocks`` (0 is the trash page).
+    """Refcounted free-list over block ids ``1..n_blocks`` (0 is trash).
 
-    ``acquire(n)`` hands out ``n`` ids or ``None`` when the pool cannot
-    satisfy the request right now — the engine turns that into admission
-    deferral, never a crash. Released ids return to the free list and are
-    reused lowest-id-first (keeps tables dense and tests deterministic).
+    ``acquire(n)`` hands out ``n`` ids (each at refcount 1) or ``None``
+    when the pool cannot satisfy the request right now — the engine turns
+    that into admission deferral, never a crash. ``fork(blocks)`` takes an
+    extra reference on already-allocated ids (copy-on-write prefix
+    sharing: a block mapped into several block tables — or pinned by the
+    radix index — carries one reference per mapping). ``release``
+    decrements; an id returns to the free list only when its LAST
+    reference drops, so a shared block can never be freed while any table
+    or index still maps it. Freed ids are reused lowest-id-first (keeps
+    tables dense and tests deterministic).
     """
 
     def __init__(self, n_blocks: int, block_size: int):
@@ -38,6 +44,7 @@ class BlockAllocator:
         self.n_blocks = n_blocks
         self.block_size = block_size
         self._free: List[int] = list(range(1, n_blocks + 1))
+        self._ref: Dict[int, int] = {}      # allocated id -> refcount
 
     # ---- sizing ----------------------------------------------------------
     def blocks_for(self, n_tokens: int) -> int:
@@ -53,6 +60,11 @@ class BlockAllocator:
     def n_used(self) -> int:
         return self.n_blocks - len(self._free)
 
+    @property
+    def n_shared(self) -> int:
+        """Blocks currently mapped more than once (refcount > 1)."""
+        return sum(1 for r in self._ref.values() if r > 1)
+
     def can_acquire(self, n: int) -> bool:
         return n <= len(self._free)
 
@@ -60,21 +72,44 @@ class BlockAllocator:
         if n > len(self._free):
             return None
         out, self._free = self._free[:n], self._free[n:]
+        for b in out:
+            self._ref[b] = 1
         return out
+
+    def refcount(self, block: int) -> int:
+        """Current reference count (0 = free/never allocated)."""
+        return self._ref.get(block, 0)
+
+    def fork(self, blocks: List[int]):
+        """Take one extra reference on each of ``blocks`` (all must be
+        allocated): the COW half of prefix sharing — a forked block is
+        read-only until its refcount drops back to 1."""
+        for b in blocks:
+            if self._ref.get(b, 0) < 1:
+                raise ValueError(f"cannot fork unallocated block {b}")
+        for b in blocks:
+            self._ref[b] += 1
 
     def release(self, blocks: List[int]):
         for b in blocks:
             if not 1 <= b <= self.n_blocks:
                 raise ValueError(f"block id {b} outside pool 1..{self.n_blocks}")
-            if b in self._free:
+            if self._ref.get(b, 0) < 1:
                 raise ValueError(f"block {b} is already free")
-        self._free.extend(blocks)
+        freed = []
+        for b in blocks:
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                freed.append(b)
+        self._free.extend(freed)
         self._free.sort()
 
     # ---- occupancy -------------------------------------------------------
     def stats(self) -> Dict[str, float]:
         return {"n_blocks": self.n_blocks, "block_size": self.block_size,
                 "blocks_in_use": self.n_used, "blocks_free": self.n_free,
+                "shared_blocks": self.n_shared,
                 "utilization": self.n_used / self.n_blocks}
 
 

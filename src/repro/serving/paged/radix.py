@@ -1,0 +1,165 @@
+"""Hash-keyed radix index over full KV blocks (prefix sharing).
+
+Serving millions of users means millions of requests opening with the
+same system prompt / few-shot prefix. The paged cache already describes a
+request as a list of fixed-size blocks, and (for ``kv_dtype="int8"``)
+OSSH-static key-channel scales make the quantized blocks bitwise
+request-independent — so a block whose ``block_size`` positions hold a
+known token chunk can be mapped read-only into ANY later request whose
+stream opens with the same chunks. This module is the host-side lookup
+structure for that reuse:
+
+  * a node per FULL block, keyed by the hash chain of its token chunk and
+    every chunk before it — a radix tree flattened into a dict, where the
+    chain key encodes the whole path so lookup is one dict probe per
+    block;
+  * the chain is rooted in a ``scope`` string (kv_dtype + model
+    fingerprint), so an fp pool and an int8 pool — or two different
+    models — can never cross-share a block id;
+  * the index OWNS one reference per indexed block (``BlockAllocator.
+    fork``): a block stays resident after its writing request retires,
+    which is the whole point — and is unevictable from the pool while any
+    table still maps it;
+  * leaves evict LRU-first: under ``capacity`` pressure at insert time,
+    or on demand (``evict``) when the block pool itself runs dry.
+
+Partial blocks are never indexed: a request's tail block keeps being
+written by decode, while an indexed block must be immutable. The pool
+enforces that side with COW (``PagedPool.prepare_write``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Sequence, Tuple
+
+
+def _chain_key(parent_key: str, chunk: Sequence[int]) -> str:
+    h = hashlib.sha1(parent_key.encode("utf-8"))
+    h.update(b"|")
+    h.update(",".join(str(int(t)) for t in chunk).encode("utf-8"))
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class _Node:
+    key: str
+    parent_key: str
+    block: int
+    tick: int               # last match/insert touch (LRU eviction order)
+    n_children: int = 0
+
+
+class RadixIndex:
+    """Longest-indexed-prefix lookup over token streams, block-granular.
+
+    The caller (``PagedPool``) owns all refcount bookkeeping: ``insert``
+    reports which blocks the index newly took over (fork these), and
+    ``evict``/``drop_all`` report which blocks it let go (release these).
+    The index itself never touches the allocator or device pools.
+    """
+
+    def __init__(self, block_size: int, scope: str = "",
+                 capacity: int = 0):
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        if capacity < 0:
+            raise ValueError(f"capacity must be >= 0, got {capacity}")
+        self.block_size = block_size
+        self.scope = scope
+        self.capacity = capacity
+        self._root = hashlib.sha1(
+            ("radix:" + scope).encode("utf-8")).hexdigest()
+        self._nodes: Dict[str, _Node] = {}
+        self._tick = 0
+
+    # ---- introspection ---------------------------------------------------
+    @property
+    def n_blocks(self) -> int:
+        return len(self._nodes)
+
+    def blocks(self) -> List[int]:
+        return [n.block for n in self._nodes.values()]
+
+    # ---- lookup ----------------------------------------------------------
+    def match(self, tokens: Sequence[int]) -> List[int]:
+        """Block ids of the longest indexed prefix of ``tokens`` (full
+        chunks only). Touches the matched path for LRU."""
+        self._tick += 1
+        blocks: List[int] = []
+        key = self._root
+        bs = self.block_size
+        for i in range(len(tokens) // bs):
+            key = _chain_key(key, tokens[i * bs:(i + 1) * bs])
+            node = self._nodes.get(key)
+            if node is None:
+                break
+            node.tick = self._tick
+            blocks.append(node.block)
+        return blocks
+
+    # ---- insertion -------------------------------------------------------
+    def insert(self, tokens: Sequence[int], blocks: Sequence[int]
+               ) -> Tuple[List[int], List[int]]:
+        """Index ``blocks[i]`` as holding chunk ``i`` of ``tokens`` (only
+        ``len(blocks)`` full chunks are considered; ``tokens`` may run
+        longer). Chunks already indexed keep their existing block — the
+        caller's duplicate stays private to its request.
+
+        Returns ``(newly_owned, evicted)``: blocks the index just took a
+        mapping on (caller must ``fork``) and blocks it dropped to honor
+        ``capacity`` (caller must ``release``). Fork before releasing, so
+        a block both inserted and immediately evicted stays refcount-
+        consistent."""
+        self._tick += 1
+        new_owned: List[int] = []
+        key = self._root
+        bs = self.block_size
+        n = min(len(blocks), len(tokens) // bs)
+        for i in range(n):
+            child = _chain_key(key, tokens[i * bs:(i + 1) * bs])
+            node = self._nodes.get(child)
+            if node is None:
+                node = _Node(child, key, int(blocks[i]), self._tick)
+                self._nodes[child] = node
+                parent = self._nodes.get(key)
+                if parent is not None:
+                    parent.n_children += 1
+                new_owned.append(node.block)
+            else:
+                node.tick = self._tick
+            key = child
+        evicted = []
+        if self.capacity:
+            evicted = self.evict(len(self._nodes) - self.capacity)
+        return new_owned, evicted
+
+    # ---- eviction --------------------------------------------------------
+    def _pop(self, node: _Node) -> int:
+        del self._nodes[node.key]
+        parent = self._nodes.get(node.parent_key)
+        if parent is not None:
+            parent.n_children -= 1
+        return node.block
+
+    def evict(self, n: int) -> List[int]:
+        """Drop up to ``n`` leaves, least-recently-touched first (an inner
+        node becomes evictable once its children go). Returns the dropped
+        block ids for the caller to release."""
+        out: List[int] = []
+        while len(out) < n:
+            leaves = [nd for nd in self._nodes.values()
+                      if nd.n_children == 0]
+            if not leaves:
+                break
+            victim = min(leaves, key=lambda nd: (nd.tick, nd.key))
+            out.append(self._pop(victim))
+        return out
+
+    def drop_all(self) -> List[int]:
+        """Clear the index (e.g. after the served adapters change — the
+        cached KV no longer matches the model). Returns every owned block
+        id for the caller to release."""
+        out = self.blocks()
+        self._nodes.clear()
+        return out

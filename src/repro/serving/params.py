@@ -129,6 +129,23 @@ class EngineStats:
     blocks_reserved_eager_sum: int = 0      # what eager would have pinned
     blocks_used_sum: int = 0                # blocks actually held at retire
 
+    # radix/COW prefix sharing (paged engines with ``prefix_share=True``)
+    prefix_share: bool = False
+    prefix_queries: int = 0                 # admissions that probed the index
+    prefix_hits: int = 0                    # admissions that mapped blocks
+    shared_blocks: int = 0                  # gauge: blocks mapped > once now
+    prefix_tokens_saved: int = 0            # cache positions not re-prefilled
+    prefill_chunks_saved: int = 0           # chunk calls sharing avoided
+    cow_copies: int = 0                     # private copies of shared blocks
+    radix_blocks: int = 0                   # gauge: blocks the index pins
+    radix_evictions: int = 0                # leaves dropped under pressure
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prefix-index probes that mapped at least one shared
+        block (repeated-prefix workloads should sit near 1 after warmup)."""
+        return self.prefix_hits / max(self.prefix_queries, 1)
+
     @property
     def lazy_blocks_saved_per_request(self) -> float:
         """Mean reserved-vs-used block delta per completed request: blocks
@@ -198,7 +215,11 @@ class EngineStats:
             "kv_layout": self.kv_layout,
             "kv_dtype": self.kv_dtype,
         }
-        if self.kv_layout == "paged":
+        # telemetry sections key off which pool FEATURES are active (a
+        # block pool exists, the prefix index exists), not off layout
+        # strings — a spelling drift in ``kv_layout`` can't silently drop
+        # a whole section
+        if self.n_blocks:
             out.update({
                 "block_size": self.block_size,
                 "n_blocks": self.n_blocks,
@@ -220,5 +241,18 @@ class EngineStats:
                 "preemptions": self.preemptions,
                 "lazy_blocks_saved_per_request":
                     round(self.lazy_blocks_saved_per_request, 2),
+            })
+        if self.prefix_share:
+            out.update({
+                "prefix_share": self.prefix_share,
+                "prefix_queries": self.prefix_queries,
+                "prefix_hits": self.prefix_hits,
+                "prefix_hit_rate": round(self.prefix_hit_rate, 4),
+                "shared_blocks": self.shared_blocks,
+                "prefix_tokens_saved": self.prefix_tokens_saved,
+                "prefill_chunks_saved": self.prefill_chunks_saved,
+                "cow_copies": self.cow_copies,
+                "radix_blocks": self.radix_blocks,
+                "radix_evictions": self.radix_evictions,
             })
         return out

@@ -23,8 +23,9 @@ engine never branches on ``cfg.family`` itself.
 """
 from __future__ import annotations
 
+import hashlib
 import math
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -33,6 +34,7 @@ from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.serving.paged import blocks as PB
 from repro.serving.paged import kvquant as KVQ
+from repro.serving.paged.radix import RadixIndex
 from repro.serving.state import (CrossAttnPool, RecurrentPool, SlotStatePool,
                                  check_state_dtype)
 
@@ -63,7 +65,8 @@ class PagedPool:
 
     def __init__(self, cfg: ModelConfig, n_slots: int, max_seq_len: int, *,
                  block_size: int = 16, kv_dtype: str = "fp",
-                 n_blocks: int = 0):
+                 n_blocks: int = 0, prefix_share: bool = False,
+                 radix_capacity: int = 0):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         KVQ.check_kv_dtype(kv_dtype)
@@ -80,6 +83,22 @@ class PagedPool:
         self._k_seeded = kv_dtype != "int8"
         self.peak_blocks_in_use = 0
         self.n_grows = 0
+        # prefix sharing: the radix index pins one reference per indexed
+        # block; its scope ties cached blocks to THIS pool's quantization
+        # grid and model shape (an fp and an int8 pool of the same model
+        # must never cross-share block content)
+        self.radix: Optional[RadixIndex] = None
+        if prefix_share:
+            scope = f"{kv_dtype}:" + hashlib.sha1(
+                repr(cfg).encode("utf-8")).hexdigest()
+            self.radix = RadixIndex(block_size, scope=scope,
+                                    capacity=radix_capacity)
+        self.prefix_queries = 0
+        self.prefix_hits = 0
+        self.shared_blocks_mapped = 0
+        self.prefix_tokens_saved = 0
+        self.cow_copies = 0
+        self.radix_evictions = 0
 
     # ---- host bookkeeping ------------------------------------------------
     @property
@@ -97,13 +116,29 @@ class PagedPool:
         return bool(self._free_slots) and self.alloc.can_acquire(
             self.blocks_for(n_tokens))
 
+    def _acquire_with_evict(self, n: int) -> Optional[List[int]]:
+        """``alloc.acquire`` that sheds radix leaves under pressure: an
+        index-pinned block whose LAST reference is the index frees the
+        moment its leaf drops, so cached-but-unmapped prefixes yield to
+        live requests. Blocks still mapped by a table only lose the index
+        reference (they stay resident — unevictable while refcount > 1)."""
+        while True:
+            got = self.alloc.acquire(n)
+            if got is not None or self.radix is None:
+                return got
+            dropped = self.radix.evict(1)
+            if not dropped:
+                return None
+            self.radix_evictions += len(dropped)
+            self.alloc.release(dropped)
+
     def acquire(self, n_tokens: int) -> Optional[int]:
         """Slot + block footprint for ``n_tokens`` cache positions, or
         None (defer). Under lazy allocation the engine passes the PROMPT
         footprint here and grows the table at decode time."""
         if not self._free_slots:
             return None
-        blocks = self.alloc.acquire(self.blocks_for(n_tokens))
+        blocks = self._acquire_with_evict(self.blocks_for(n_tokens))
         if blocks is None:
             return None
         slot = self._free_slots.pop(0)
@@ -121,7 +156,7 @@ class PagedPool:
         if t.n_tokens + n_tokens <= t.capacity:
             return True
         need = self.blocks_for(t.n_tokens + n_tokens) - len(t.blocks)
-        got = self.alloc.acquire(need)
+        got = self._acquire_with_evict(need)
         if got is None:
             return False
         t.blocks.extend(got)
@@ -129,6 +164,114 @@ class PagedPool:
         self.peak_blocks_in_use = max(self.peak_blocks_in_use,
                                       self.alloc.n_used)
         return True
+
+    # ---- prefix sharing (radix + COW) ------------------------------------
+    def acquire_prefix(self, key: Sequence[int], n_tokens: int,
+                       min_share: int = 0) -> Optional[int]:
+        """Prefix-aware ``acquire``: walk the longest indexed prefix of
+        ``key`` (the request's prefill token stream), map those blocks
+        read-only into the new table, and allocate private blocks for the
+        rest of the ``n_tokens`` footprint. The returned slot's cursor
+        already sits at the shared length — the engine prefills only the
+        tail.
+
+        Shares are capped at ``len(key) - 1`` positions (at least one tail
+        token is always re-prefilled: the first sampled token needs its
+        logits) and dropped entirely below ``min_share`` positions (a share
+        that does not cover the whole PEFT prefix is useless — continuation
+        chunks cannot write prefix positions). Matched blocks are forked
+        BEFORE the private allocation so the eviction loop it may trigger
+        can never free them."""
+        if self.radix is None:
+            return self.acquire(n_tokens)
+        if not self._free_slots:
+            return None
+        self.prefix_queries += 1
+        bs = self.alloc.block_size
+        shared = self.radix.match(key)[:max(len(key) - 1, 0) // bs]
+        if len(shared) * bs < max(min_share, 1):
+            shared = []
+        if not shared:
+            return self.acquire(n_tokens)
+        self.alloc.fork(shared)
+        got = self._acquire_with_evict(
+            self.blocks_for(n_tokens) - len(shared))
+        if got is None:
+            self.alloc.release(shared)
+            return None
+        slot = self._free_slots.pop(0)
+        self.tables[slot] = PB.BlockTable(
+            list(shared) + got, bs, n_tokens=len(shared) * bs)
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.alloc.n_used)
+        self.prefix_hits += 1
+        self.shared_blocks_mapped += len(shared)
+        self.prefix_tokens_saved += len(shared) * bs
+        return slot
+
+    def index_insert(self, slot: int, key: Sequence[int]):
+        """Index ``slot``'s FULL, already-written blocks under ``key``
+        (called when the request's prefill completes — ``key`` spans
+        exactly the prefilled positions). The index forks each block it
+        newly pins; capacity evictions release AFTER the forks, so a block
+        inserted and immediately LRU-evicted never dips to refcount 0
+        while mapped."""
+        if self.radix is None:
+            return
+        t = self.tables[slot]
+        bs = self.alloc.block_size
+        n_full = min(len(t.blocks), t.n_tokens // bs, len(key) // bs)
+        new_refs, evicted = self.radix.insert(key, t.blocks[:n_full])
+        self.alloc.fork(new_refs)
+        if evicted:
+            self.radix_evictions += len(evicted)
+            self.alloc.release(evicted)
+
+    def prepare_write(self, slot: int, n_tokens: int) -> bool:
+        """Copy-on-write barrier: before the compiled step writes
+        ``n_tokens`` positions at ``slot``'s cursor, replace any block in
+        the write range that is mapped elsewhere (refcount > 1) with a
+        private copy. In the monotonic engine flow writes start past the
+        shared region, so this never fires — it is the safety net that
+        makes sharing an invariant rather than a convention. False = the
+        pool cannot supply a copy target right now (caller stalls)."""
+        t = self.tables[slot]
+        if t is None or self.radix is None:
+            return True
+        bs = self.alloc.block_size
+        lo, hi = t.n_tokens // bs, (t.n_tokens + n_tokens - 1) // bs
+        for idx in range(lo, min(hi, len(t.blocks) - 1) + 1):
+            src = t.blocks[idx]
+            if self.alloc.refcount(src) <= 1:
+                continue
+            got = self._acquire_with_evict(1)
+            if got is None:
+                return False
+            dst = got[0]
+            self._copy_block(src, dst)
+            t.blocks[idx] = dst
+            self.alloc.release([src])
+            self.cow_copies += 1
+        return True
+
+    def _copy_block(self, src: int, dst: int):
+        """Device-side block copy: every pool leaf with a block axis
+        (k/v pools and the per-token v_scale; the static k_scale grid has
+        no block axis and is shared by construction)."""
+        for key, arr in self.pools.items():
+            if key == "k_scale":
+                continue
+            self.pools[key] = arr.at[:, dst].set(arr[:, src])
+
+    def drop_radix(self):
+        """Flush the prefix index and release every block it pinned (the
+        serve launcher calls this when the adapters change mid-flight —
+        cached KV from the old weights must not leak into new requests)."""
+        if self.radix is None:
+            return
+        dropped = self.radix.drop_all()
+        if dropped:
+            self.alloc.release(dropped)
 
     def release(self, slot: int):
         table = self.tables[slot]
@@ -220,17 +363,24 @@ class PagedPool:
         return sum(t.waste for t in active) / cap if cap else 0.0
 
     def byte_stats(self) -> Dict[str, Any]:
-        return {"blocks_in_use": self.alloc.n_used,
-                "peak_blocks_in_use": self.peak_blocks_in_use,
-                "fragmentation": self.fragmentation(),
-                "kv_bytes_in_use": self.bytes_in_use(),
-                "block_grows": self.n_grows}
+        out = {"blocks_in_use": self.alloc.n_used,
+               "peak_blocks_in_use": self.peak_blocks_in_use,
+               "fragmentation": self.fragmentation(),
+               "kv_bytes_in_use": self.bytes_in_use(),
+               "block_grows": self.n_grows}
+        if self.radix is not None:
+            out.update({"radix_blocks": self.radix.n_blocks,
+                        "shared_blocks": self.alloc.n_shared,
+                        "prefix_hits": self.prefix_hits,
+                        "cow_copies": self.cow_copies})
+        return out
 
 
 def make_decode_state(cfg: ModelConfig, max_slots: int, max_seq_len: int, *,
                       kv_layout: str = "contiguous", kv_dtype: str = "fp",
                       block_size: int = 16, n_blocks: int = 0,
-                      state_dtype: str = "fp"):
+                      state_dtype: str = "fp", prefix_share: bool = False,
+                      radix_capacity: int = 0):
     """THE family -> ``DecodeState`` dispatch (the engine holds no family
     if-chains): paged/contiguous KV pools for the attention-cache families,
     ``RecurrentPool`` for ssm/hybrid, ``CrossAttnPool`` for encdec."""
@@ -251,7 +401,9 @@ def make_decode_state(cfg: ModelConfig, max_slots: int, max_seq_len: int, *,
                          f"family={fam!r} has none (use kv_dtype for KV)")
     if kv_layout == "paged":
         return PagedPool(cfg, max_slots, max_seq_len, block_size=block_size,
-                         kv_dtype=kv_dtype, n_blocks=n_blocks)
+                         kv_dtype=kv_dtype, n_blocks=n_blocks,
+                         prefix_share=prefix_share,
+                         radix_capacity=radix_capacity)
     if fam == "encdec":
         return CrossAttnPool(cfg, max_slots, max_seq_len)
     return SlotPool(cfg, max_slots, max_seq_len)

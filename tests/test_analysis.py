@@ -32,6 +32,7 @@ def test_rule_catalogue():
     rules = get_rules()
     assert [r.rule_id for r in rules] == [
         "RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006",
+        "RPR010",
     ]
     assert all(r.severity in ("error", "warning") for r in rules)
     assert all(r.description for r in rules)
@@ -563,6 +564,108 @@ def test_rpr006_unregistered_backend():
     assert len(msgs) == 1 and "never registered" in msgs[0]
 
 
+# ------------------------------------------------------------------ RPR010
+
+
+FACADE_API = """
+    def prepare(cfg, seed=0):
+        return QuaffModel(cfg, None, None, None)
+
+    class QuaffModel:
+        def __init__(self, cfg, frozen, adapters, quant_state):
+            self.cfg = cfg
+
+        def convert(self, mode):
+            return self
+
+        def finetune(self, tcfg, loader, steps, start_step=None):
+            return {}
+
+        def engine(self, cfg=None, fresh=False, **legacy):
+            return None
+
+        @classmethod
+        def load(cls, directory, step=None):
+            return cls(None, None, None, None)
+
+        @property
+        def stats(self):
+            return {}
+    """
+
+GOOD_README = """\
+# demo
+
+```python
+from repro import api
+
+model = api.prepare(cfg)
+model.convert("quaff")
+model.finetune(tcfg, loader, steps=40)
+eng = model.engine(anything_goes=1)   # **legacy swallows unknown kwargs
+m2 = api.QuaffModel.load("ckpts/demo")
+```
+
+```bash
+model.no_such_thing()   # shell fence: never parsed as Python
+```
+"""
+
+DRIFTED_README = """\
+# demo
+
+```python
+from repro import api
+
+model = api.prepare(cfg, seed=0, ratio=0.05)   # unknown kwarg
+model.quantize("quaff")                        # renamed method
+model.convert()                                # required arg dropped
+api.make_model(cfg)                            # nonexistent function
+```
+"""
+
+
+def _run_facade(tmp_path, readme_text):
+    api_dir = tmp_path / "src" / "repro"
+    api_dir.mkdir(parents=True)
+    (api_dir / "api.py").write_text(textwrap.dedent(FACADE_API))
+    (tmp_path / "README.md").write_text(readme_text)
+    findings, _ = analyze_paths([str(tmp_path / "src")], select=["RPR010"])
+    return findings
+
+
+def test_rpr010_matching_readme_passes(tmp_path):
+    assert _run_facade(tmp_path, GOOD_README) == []
+
+
+def test_rpr010_drifted_readme_fails(tmp_path):
+    findings = _run_facade(tmp_path, DRIFTED_README)
+    msgs = [f.message for f in findings]
+    assert any("ratio" in m for m in msgs)            # unknown kwarg
+    assert any("quantize" in m for m in msgs)         # renamed method
+    assert any("mode" in m and "unbound" in m for m in msgs)
+    assert any("make_model" in m for m in msgs)       # nonexistent function
+    # findings anchor to the README, inside the fence
+    assert all(f.path.endswith("README.md") for f in findings)
+    assert all(f.line > 3 for f in findings)
+    assert all(f.severity == "error" for f in findings)
+
+
+def test_rpr010_no_readme_no_findings(tmp_path):
+    api_dir = tmp_path / "src" / "repro"
+    api_dir.mkdir(parents=True)
+    (api_dir / "api.py").write_text(textwrap.dedent(FACADE_API))
+    findings, _ = analyze_paths([str(tmp_path / "src")], select=["RPR010"])
+    assert findings == []
+
+
+def test_rpr010_shipped_readme_matches_facade():
+    """The acceptance gate: the repo's own README examples bind against
+    the real repro.api signatures."""
+    findings, _ = analyze_paths([str(REPO / "src")], select=["RPR010"])
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
 # --------------------------------------------------------------- noqa
 
 
@@ -641,7 +744,8 @@ def test_cli_json_report(tmp_path, capsys):
 def test_cli_list_rules(capsys):
     assert cli_main(["--list-rules"]) == 0
     out = capsys.readouterr().out
-    for rid in ("RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006"):
+    for rid in ("RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006",
+                "RPR010"):
         assert rid in out
 
 

@@ -1,0 +1,378 @@
+"""Radix/COW prefix sharing over the paged KV pool + the unified
+EngineConfig surface.
+
+Covers: refcounted block allocator invariants (a block referenced by any
+table or the index is never freed or re-issued), the RadixIndex
+(match/insert, LRU-leaf eviction, capacity bound), PagedPool prefix
+admission (cold miss then hit, COW safety net, radix leaves yielding to
+live requests under block pressure), engine-level token-identical output
+with prefix sharing on for BOTH fp and int8 KV with
+``prefill_chunks_saved > 0``, the EngineConfig validation/deprecation
+shim (legacy kwargs build the identical frozen config, warn exactly
+once, and share the engine-cache entry), and feature-gated
+``EngineStats.as_dict`` telemetry.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.peft import PEFTConfig
+from repro.data.pipeline import DataConfig, Loader, calibration_batches
+from repro.models.config import ModelConfig, QuantConfig, ServingConfig
+from repro.serving import Engine, EngineConfig, GenerationRequest
+from repro.serving.config import _reset_legacy_warning, from_legacy_kwargs
+from repro.serving.paged.blocks import BlockAllocator
+from repro.serving.paged.radix import RadixIndex
+from repro.serving.params import EngineStats
+from repro.serving.pool import PagedPool
+
+VOCAB, PROMPT = 128, 8
+OPENER = 6      # shared prompt opener length used by the engine tests
+
+
+def _tiny_cfg(mode="fp32", **over):
+    base = dict(
+        name="prefix-test", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=VOCAB, head_dim=16,
+        quant=QuantConfig(mode=mode),
+        peft=PEFTConfig(method="lora", lora_rank=4))
+    base.update(over)
+    return ModelConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def quaff_model():
+    dcfg = DataConfig(vocab_size=VOCAB, seq_len=PROMPT, batch_size=4)
+    model = api.prepare(_tiny_cfg())
+    model.calibrate(calibration_batches(dcfg, 2))
+    model.convert("quaff")
+    return model
+
+
+@pytest.fixture(scope="module")
+def shared_prompts():
+    """4 prompts sharing a 6-token opener (spans one full block at
+    block_size=4, plus a partial block that must never be shared)."""
+    toks = np.asarray(Loader(DataConfig(
+        vocab_size=VOCAB, seq_len=PROMPT, batch_size=4)).batch(0)["tokens"])
+    toks[:, :OPENER] = toks[0, :OPENER]
+    return toks
+
+
+# ---------------------------------------------------------------------------
+# allocator refcounts
+# ---------------------------------------------------------------------------
+def test_fork_refcount_lifecycle():
+    alloc = BlockAllocator(n_blocks=6, block_size=4)
+    a = alloc.acquire(2)
+    assert [alloc.refcount(b) for b in a] == [1, 1]
+    alloc.fork(a)
+    assert [alloc.refcount(b) for b in a] == [2, 2]
+    assert alloc.n_shared == 2 and alloc.n_free == 4
+
+    alloc.release(a)            # one ref down: still allocated
+    assert [alloc.refcount(b) for b in a] == [1, 1]
+    assert alloc.n_free == 4 and alloc.n_shared == 0
+    alloc.release(a)            # last ref: actually freed
+    assert [alloc.refcount(b) for b in a] == [0, 0]
+    assert alloc.n_free == 6
+
+
+def test_shared_block_never_reissued_while_referenced():
+    """The allocator invariant the whole COW scheme rests on: a block with
+    a live reference is never handed to another request."""
+    alloc = BlockAllocator(n_blocks=4, block_size=4)
+    shared = alloc.acquire(2)
+    alloc.fork(shared)
+    alloc.release(shared)       # forked ref still live
+    grabbed = alloc.acquire(2)  # must come from the 2 untouched blocks
+    assert grabbed is not None and not (set(grabbed) & set(shared))
+    assert alloc.acquire(1) is None     # pool genuinely exhausted now
+
+
+def test_fork_unallocated_raises():
+    alloc = BlockAllocator(n_blocks=4, block_size=4)
+    with pytest.raises(ValueError):
+        alloc.fork([3])
+
+
+# ---------------------------------------------------------------------------
+# radix index
+# ---------------------------------------------------------------------------
+def test_radix_match_insert_roundtrip():
+    idx = RadixIndex(block_size=4)
+    toks = list(range(12))
+    new_owned, evicted = idx.insert(toks, [7, 8, 9])
+    assert new_owned == [7, 8, 9] and evicted == []
+    assert idx.match(toks) == [7, 8, 9]
+    assert idx.match(toks[:8]) == [7, 8]        # full-chunk prefix
+    assert idx.match(toks[:7]) == [7]           # partial chunk ignored
+    divergent = toks[:4] + [99, 99, 99, 99]
+    assert idx.match(divergent) == [7]          # diverges after block 1
+
+
+def test_radix_reinsert_owns_nothing_new():
+    idx = RadixIndex(block_size=4)
+    idx.insert(list(range(8)), [1, 2])
+    new_owned, evicted = idx.insert(list(range(8)), [3, 4])
+    assert new_owned == [] and evicted == []    # existing nodes keep blocks
+    assert idx.match(list(range(8))) == [1, 2]
+
+
+def test_radix_lru_leaf_eviction():
+    idx = RadixIndex(block_size=4)
+    idx.insert(list(range(12)), [1, 2, 3])      # chain of 3
+    dropped = idx.evict(1)
+    assert dropped == [3]                       # deepest leaf, never the root
+    assert idx.match(list(range(12))) == [1, 2]
+    assert idx.n_blocks == 2
+
+
+def test_radix_capacity_bound():
+    idx = RadixIndex(block_size=4, capacity=2)
+    a = list(range(8))
+    b = [50 + t for t in range(8)]
+    idx.insert(a, [1, 2])
+    idx.match(a)                                # refresh a's LRU ticks
+    new_owned, evicted = idx.insert(b, [3, 4])
+    assert idx.n_blocks <= 2
+    assert evicted                              # something had to go
+    assert set(evicted) <= {1, 2, 3, 4}
+
+
+def test_radix_drop_all():
+    idx = RadixIndex(block_size=4)
+    idx.insert(list(range(8)), [1, 2])
+    assert sorted(idx.drop_all()) == [1, 2]
+    assert idx.n_blocks == 0 and idx.match(list(range(8))) == []
+
+
+# ---------------------------------------------------------------------------
+# paged pool: prefix admission, COW, pressure eviction
+# ---------------------------------------------------------------------------
+def _pool(n_slots=2, n_blocks=8, **over):
+    kw = dict(block_size=4, kv_dtype="fp", n_blocks=n_blocks,
+              prefix_share=True)
+    kw.update(over)
+    return PagedPool(_tiny_cfg(), n_slots, max_seq_len=16, **kw)
+
+
+def test_pool_cold_miss_then_hit():
+    pool = _pool()
+    key = tuple(range(8))
+    s0 = pool.acquire_prefix(key, 8)
+    assert s0 is not None and pool.cursor(s0) == 0      # cold: nothing shared
+    pool.advance(s0, 8)
+    pool.index_insert(s0, key)
+    pool.release(s0)
+    assert pool.radix.n_blocks == 2     # both full blocks outlive the slot
+
+    s1 = pool.acquire_prefix(key, 8)
+    # identical request: shares capped at (len-1)//bs = 1 block — the last
+    # token always re-prefills so logits come from a real forward pass
+    assert pool.cursor(s1) == 4
+    assert pool.prefix_hits == 1 and pool.prefix_tokens_saved == 4
+    shared_block = pool.tables[s1].blocks[0]
+    assert pool.alloc.refcount(shared_block) == 2       # index + this table
+
+
+def test_pool_min_share_drops_partial_peft_cover():
+    pool = _pool()
+    key = tuple(range(8))
+    s0 = pool.acquire_prefix(key, 8)
+    pool.advance(s0, 8)
+    pool.index_insert(s0, key)
+    pool.release(s0)
+    # a PEFT prefix longer than the matchable span: share must drop to zero
+    s1 = pool.acquire_prefix(key, 8, min_share=6)
+    assert pool.cursor(s1) == 0
+
+
+def test_pool_cow_safety_net():
+    pool = _pool()
+    key = tuple(range(8))
+    s0 = pool.acquire_prefix(key, 8)
+    pool.advance(s0, 8)
+    pool.index_insert(s0, key)
+    pool.release(s0)
+    s1 = pool.acquire_prefix(key, 8)
+    shared_block = pool.tables[s1].blocks[0]
+    assert pool.alloc.refcount(shared_block) == 2
+
+    # natural flow never writes inside a shared block (writes start at the
+    # block-aligned cursor) — force it to prove the safety net holds
+    pool.tables[s1].n_tokens = 2
+    assert pool.prepare_write(s1, 1)
+    assert pool.cow_copies == 1
+    new_block = pool.tables[s1].blocks[0]
+    assert new_block != shared_block                    # private copy
+    assert pool.alloc.refcount(shared_block) == 1       # index ref intact
+    assert pool.alloc.refcount(new_block) == 1
+
+
+def test_pool_radix_yields_under_block_pressure():
+    pool = _pool(n_slots=2, n_blocks=4)
+    key = tuple(range(8))
+    s0 = pool.acquire_prefix(key, 8)        # 2 blocks
+    pool.advance(s0, 8)
+    pool.index_insert(s0, key)
+    pool.release(s0)                        # index still pins both
+    assert pool.alloc.n_free == 2
+
+    other = tuple(100 + t for t in range(12))
+    s1 = pool.acquire_prefix(other, 12)     # needs 3: must shed a leaf
+    assert s1 is not None
+    assert pool.radix_evictions >= 1
+    assert pool.radix.n_blocks < 2
+    # mapped blocks were never eviction candidates: the survivor chain is
+    # intact from the root, and s1 holds 3 live blocks
+    assert len(pool.tables[s1].blocks) == 3
+
+
+def test_pool_drop_radix_frees_everything():
+    pool = _pool()
+    key = tuple(range(8))
+    s0 = pool.acquire_prefix(key, 8)
+    pool.advance(s0, 8)
+    pool.index_insert(s0, key)
+    pool.release(s0)
+    assert pool.alloc.n_free < pool.alloc.n_blocks
+    pool.drop_radix()
+    assert pool.radix.n_blocks == 0
+    assert pool.alloc.n_free == pool.alloc.n_blocks
+
+
+# ---------------------------------------------------------------------------
+# engine: token-identical sharing, fp AND int8 KV
+# ---------------------------------------------------------------------------
+def _ecfg(**over):
+    kw = dict(max_slots=2, max_seq_len=PROMPT + 8, kv_layout="paged",
+              block_size=4, prefill_chunk=4)
+    kw.update(over)
+    return EngineConfig(**kw)
+
+
+@pytest.mark.parametrize("kv_dtype", ["fp", "int8"])
+def test_engine_prefix_share_token_identical(quaff_model, shared_prompts,
+                                             kv_dtype):
+    max_new = 8
+    reqs = lambda: [GenerationRequest(p, max_new_tokens=max_new)
+                    for p in shared_prompts]
+    ref_eng = Engine(quaff_model, _ecfg(kv_dtype=kv_dtype))
+    ref = np.asarray([o.token_ids for o in ref_eng.run(reqs())])
+
+    eng = Engine(quaff_model, _ecfg(kv_dtype=kv_dtype, prefix_share=True))
+    got = np.asarray([o.token_ids for o in eng.run(reqs())])
+    np.testing.assert_array_equal(ref, got)
+
+    st = eng.stats
+    assert st.prefix_share and st.prefix_queries == len(shared_prompts)
+    assert st.prefix_hits > 0
+    assert st.prefill_chunks_saved > 0      # the acceptance gate
+    assert st.prefix_tokens_saved > 0
+    assert st.radix_blocks > 0              # retired prompts stayed indexed
+
+
+def test_engine_second_run_hits_harder(quaff_model, shared_prompts):
+    eng = Engine(quaff_model, _ecfg(prefix_share=True))
+    reqs = lambda: [GenerationRequest(p, max_new_tokens=4)
+                    for p in shared_prompts]
+    eng.run(reqs())
+    first_hits = eng.stats.prefix_hits
+    eng.run(reqs())     # identical prompts: every admission can now match
+    assert eng.stats.prefix_hits >= first_hits + len(shared_prompts)
+
+
+def test_engine_reset_prefix_cache(quaff_model, shared_prompts):
+    eng = Engine(quaff_model, _ecfg(prefix_share=True))
+    reqs = lambda: [GenerationRequest(p, max_new_tokens=4)
+                    for p in shared_prompts]
+    ref = np.asarray([o.token_ids for o in eng.run(reqs())])
+    assert eng.stats.radix_blocks > 0
+    eng.reset_prefix_cache()
+    assert eng.stats.radix_blocks == 0
+    # cold again, and still token-identical
+    got = np.asarray([o.token_ids for o in eng.run(reqs())])
+    np.testing.assert_array_equal(ref, got)
+
+
+def test_engine_radix_capacity_respected(quaff_model, shared_prompts):
+    eng = Engine(quaff_model, _ecfg(prefix_share=True, radix_capacity=1))
+    eng.run([GenerationRequest(p, max_new_tokens=4) for p in shared_prompts])
+    assert eng.stats.radix_blocks <= 1
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig: validation, legacy shim, engine cache
+# ---------------------------------------------------------------------------
+def test_engine_config_validation():
+    with pytest.raises(ValueError, match="prefix_share needs"):
+        EngineConfig(prefix_share=True)                 # contiguous layout
+    with pytest.raises(ValueError, match="radix_capacity needs"):
+        EngineConfig(kv_layout="paged", radix_capacity=8)
+    with pytest.raises(ValueError, match="kv_dtype"):
+        EngineConfig(kv_dtype="int8")
+    with pytest.raises(ValueError, match="max_slots"):
+        EngineConfig(max_slots=0)
+
+
+def test_legacy_kwargs_build_identical_config_and_warn_once():
+    _reset_legacy_warning()
+    with pytest.warns(DeprecationWarning):
+        cfg = from_legacy_kwargs(dict(max_slots=8, max_seq_len=64,
+                                      kv_layout="paged", kv_dtype="int8",
+                                      block_size=4))
+    assert cfg == EngineConfig(max_slots=8, max_seq_len=64,
+                               kv_layout="paged", kv_dtype="int8",
+                               block_size=4)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        from_legacy_kwargs(dict(max_slots=2))           # second use: silent
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]
+
+
+def test_legacy_kwargs_unknown_name_raises():
+    with pytest.raises(TypeError, match="unknown engine"):
+        from_legacy_kwargs(dict(max_slots=2, block_sizee=4))
+
+
+def test_engine_cache_keyed_on_config(quaff_model):
+    cfg = EngineConfig(max_slots=2, max_seq_len=16)
+    e1 = quaff_model.engine(cfg)
+    # equivalent legacy spelling resolves to the SAME cached engine
+    e2 = quaff_model.engine(max_slots=2, max_seq_len=16)
+    assert e1 is e2
+    assert quaff_model.engine(cfg, fresh=True) is not e1
+    with pytest.raises(TypeError, match="not both"):
+        quaff_model.engine(cfg, max_slots=2)
+    with pytest.raises(TypeError, match="EngineConfig"):
+        quaff_model.engine({"max_slots": 2})
+
+
+def test_serving_config_to_engine_config():
+    scfg = ServingConfig(max_slots=3, max_seq_len=32, kv_layout="paged",
+                         kv_dtype="int8", block_size=4, prefill_chunk=8,
+                         prefix_share=True, radix_capacity=16)
+    ecfg = scfg.to_engine_config()
+    assert isinstance(ecfg, EngineConfig)
+    assert (ecfg.max_slots, ecfg.max_seq_len) == (3, 32)
+    assert (ecfg.kv_layout, ecfg.kv_dtype) == ("paged", "int8")
+    assert (ecfg.prefix_share, ecfg.radix_capacity) == (True, 16)
+
+
+# ---------------------------------------------------------------------------
+# feature-gated telemetry
+# ---------------------------------------------------------------------------
+def test_as_dict_keys_follow_features_not_layout_strings():
+    bare = EngineStats().as_dict()
+    assert "peak_blocks_in_use" not in bare and "prefix_hits" not in bare
+    # block telemetry keys off an actual block pool, not the layout string
+    blocks = EngineStats(kv_layout="paged-v2", n_blocks=8).as_dict()
+    assert "peak_blocks_in_use" in blocks and "prefix_hits" not in blocks
+    shared = EngineStats(n_blocks=8, prefix_share=True,
+                         prefix_queries=4, prefix_hits=3).as_dict()
+    assert shared["prefix_hits"] == 3
+    assert shared["prefix_hit_rate"] == 0.75

@@ -14,6 +14,7 @@ from repro.analysis.rules import (
     rpr004_pallas,
     rpr005_scales,
     rpr006_backend,
+    rpr009_interpret,
     rpr010_facade,
 )
 
@@ -24,5 +25,6 @@ __all__ = [
     "rpr004_pallas",
     "rpr005_scales",
     "rpr006_backend",
+    "rpr009_interpret",
     "rpr010_facade",
 ]

@@ -1,0 +1,138 @@
+"""RPR009 — every public kernel wrapper must have an interpret-mode test.
+
+Pallas kernels only execute on an accelerator (or under ``interpret=True``
+on CPU), so a kernel wrapper without an interpret-mode test is code CI
+never runs: grid math, BlockSpec index maps, and scratch sizing can all be
+wrong and the suite stays green until someone lands on real hardware. The
+repo's convention is that each public wrapper takes an ``interpret``
+flag and at least one test calls it with ``interpret=True`` so the full
+kernel body runs in CI's CPU job.
+
+Project pass:
+
+  * kernel modules = any analyzed file with a ``kernels`` directory
+    segment in its path (``src/repro/kernels/``,
+    ``src/repro/serving/paged/kernels/``);
+  * targets = public module-level functions there that accept a
+    parameter literally named ``interpret`` (private ``_helpers``,
+    ``*_auto`` dispatchers without the flag, and pure-jnp references
+    are naturally excluded);
+  * coverage = a call in any test module (``test_*.py`` basename or a
+    ``tests`` path segment) passing the literal keyword
+    ``interpret=True`` whose resolved callee name matches the wrapper —
+    by final segment, with the dotted prefix (when present) required to
+    be import-path-compatible with the kernel module so a same-named
+    function elsewhere cannot vouch for it.
+
+If the analyzed set contains no test modules at all (e.g. a src-only
+invocation) the rule stays silent — coverage cannot be assessed.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Set, Tuple
+
+from repro.analysis.context import ModuleContext, ProjectContext
+from repro.analysis.registry import Rule, register
+
+FLAG = "interpret"
+
+
+def _path_segments(relpath: str) -> List[str]:
+    return relpath.replace("\\", "/").split("/")
+
+
+def _is_kernel_module(ctx: ModuleContext) -> bool:
+    return "kernels" in _path_segments(ctx.relpath)[:-1]
+
+
+def _is_test_module(ctx: ModuleContext) -> bool:
+    segs = _path_segments(ctx.relpath)
+    return segs[-1].startswith("test_") or "tests" in segs[:-1]
+
+
+def _params(fn: ast.FunctionDef) -> Set[str]:
+    a = fn.args
+    return {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+
+
+def _wrappers(ctx: ModuleContext) -> Iterator[ast.FunctionDef]:
+    """Public module-level functions taking an ``interpret`` parameter."""
+    for node in ctx.tree.body:
+        if not isinstance(node, ast.FunctionDef):
+            continue
+        if node.name.startswith("_"):
+            continue
+        if FLAG in _params(node):
+            yield node
+
+
+def _prefix_compatible(prefix: str, module_name: str) -> bool:
+    """Does a call spelled ``prefix.fn(...)`` plausibly import from
+    ``module_name``? Accepts exact/suffix-rooted matches and ancestor
+    packages re-exporting the wrapper (``from repro.kernels import f``)."""
+    if not prefix or not module_name:
+        return True  # bare local name / unnamed module: lenient
+    if prefix == module_name:
+        return True
+    if module_name.endswith("." + prefix) or prefix.endswith("." + module_name):
+        return True
+    return module_name.startswith(prefix + ".")
+
+
+def _interpret_true_calls(ctx: ModuleContext) -> Iterator[Tuple[str, str]]:
+    """(final callee segment, dotted prefix) for every ``interpret=True``
+    literal-keyword call in a test module."""
+    for call in ctx.calls():
+        hit = any(
+            kw.arg == FLAG
+            and isinstance(kw.value, ast.Constant)
+            and kw.value.value is True
+            for kw in call.keywords
+        )
+        if not hit:
+            continue
+        qn = ctx.call_qualname(call)
+        if qn is None:
+            continue
+        parts = qn.split(".")
+        yield parts[-1], ".".join(parts[:-1])
+
+
+@register
+class KernelInterpretCoverage(Rule):
+    rule_id = "RPR009"
+    severity = "error"
+    description = (
+        "public kernels/ wrappers taking an `interpret` flag must be "
+        "exercised by at least one test with interpret=True"
+    )
+
+    def check_project(self, project: ProjectContext):
+        kernel_mods = [m for m in project.modules if _is_kernel_module(m)]
+        test_mods = [m for m in project.modules if _is_test_module(m)]
+        if not kernel_mods or not test_mods:
+            return
+
+        # name -> set of dotted prefixes seen at interpret=True call sites
+        covered: Dict[str, Set[str]] = {}
+        for tm in test_mods:
+            for name, prefix in _interpret_true_calls(tm):
+                covered.setdefault(name, set()).add(prefix)
+
+        for ctx in kernel_mods:
+            for fn in _wrappers(ctx):
+                prefixes = covered.get(fn.name)
+                if prefixes is not None and any(
+                    _prefix_compatible(p, ctx.module_name) for p in prefixes
+                ):
+                    continue
+                yield self.finding(
+                    ctx,
+                    fn,
+                    f"kernel wrapper {fn.name!r} is never called with "
+                    "interpret=True from any test — the Pallas body never "
+                    "runs in CI's CPU job; add an interpret-mode test "
+                    "(see tests/test_kernels.py for the idiom)",
+                )

@@ -79,6 +79,10 @@ class QuaffModel:
         self.adapters = adapters
         self.quant_state = quant_state
         self.stats = None           # calibration artifacts (absmax, scores)
+        #: monotonic counter over served-weight changes: finetune()/convert()
+        #: bump it, and a serving Engine watching this model re-scopes its
+        #: prefix cache on the next step (stale KV auto-invalidation)
+        self.weights_version = 0
         self._eval_fn = None
         self._eval_cfg = None
         self._decode_fn = None
@@ -127,6 +131,7 @@ class QuaffModel:
             self.cfg, quant=dataclasses.replace(self.cfg.quant, mode=mode))
         self._invalidate_compiled()
         self._train_state = None
+        self.weights_version += 1
         return self
 
     # ---- training -------------------------------------------------------
@@ -161,6 +166,7 @@ class QuaffModel:
         self._train_state = state
         self.adapters = state.adapters
         self.quant_state = state.quant
+        self.weights_version += 1
         return [float(l) for l in losses]
 
     # ---- checkpoint lifecycle -------------------------------------------

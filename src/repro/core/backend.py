@@ -73,6 +73,11 @@ class QuantBackend:
     """Protocol base class. Subclass, set ``name``, implement prepare/apply."""
 
     name: str = ""
+    #: frozen-weights format this backend consumes; backends sharing a
+    #: carrier accept each other's prepared trees byte-for-byte (int4 and
+    #: int4_w4a8 both read Int4Weights). "" means the carrier is the mode
+    #: itself. Self-speculative decoding pairs draft/target by carrier.
+    weight_carrier: str = ""
     #: convert() supplies calibration-time activation absmax to prepare()
     wants_absmax: bool = False
     #: convert() supplies selected outlier channel indices to prepare()

@@ -66,6 +66,7 @@ class _Int4Backend(QuantBackend):
     """w4a4: packed 4-bit weights x per-token 4-bit activations."""
 
     name = "int4"
+    weight_carrier = "int4"
 
     def prepare(self, w, bias=None, *, calib=None, bits=8):
         # bits is the config-wide knob; this backend is 4-bit by definition

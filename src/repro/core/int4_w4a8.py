@@ -21,6 +21,7 @@ X_BITS = 8
 @register
 class _Int4W4A8Backend(QuantBackend):
     name = "int4_w4a8"
+    weight_carrier = "int4"
 
     def prepare(self, w, bias=None, *, calib=None, bits=8):
         group_size = calib.group_size if calib is not None else 0

@@ -27,6 +27,13 @@ sharing (``--shared-prefix N`` gives every request the same N-token
 opener so the reuse shows) with ``--radix-capacity`` bounding the blocks
 the index may pin; pool telemetry prints after the run.
 
+Dispatch amortization (repro.serving.spec): ``--decode-steps N`` runs N
+decode iterations per engine step inside one compiled scan (in-graph
+EOS/budget masking); ``--spec-decode --spec-backend quaff@4 --spec-k 4``
+turns on self-speculative decoding — draft tokens under the cheaper
+backend over the SAME weights, one batched verify pass, greedy output
+token-identical — and prints acceptance telemetry after the run.
+
 Every knob lands in one ``serving.EngineConfig`` — the same dataclass
 ``api.QuaffModel.engine`` takes.
 """
@@ -80,6 +87,18 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0, metavar="N",
                     help="give every request the same N-token opener "
                          "(prefix-share showcase workload)")
+    ap.add_argument("--decode-steps", type=int, default=1,
+                    help="run N decode iterations per engine step inside "
+                         "one compiled scan (in-graph EOS/budget masking)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="self-speculative decoding: draft under "
+                         "--spec-backend, verify with one batched target "
+                         "pass (greedy output is token-identical)")
+    ap.add_argument("--spec-backend", default="",
+                    help="draft backend, 'mode' or 'mode@bits' (e.g. "
+                         "quaff@4); must share the target's weight_carrier")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens per speculation cycle")
     ap.add_argument("--state-dtype", default="fp", choices=["fp", "int8"],
                     help="ssm/hybrid only: int8 recurrent-state slots "
                          "(OSSH-static per-channel scales)")
@@ -145,7 +164,11 @@ def main():
                         state_dtype=args.state_dtype,
                         lazy_blocks=args.lazy_blocks,
                         prefix_share=args.prefix_share,
-                        radix_capacity=args.radix_capacity)
+                        radix_capacity=args.radix_capacity,
+                        decode_steps=args.decode_steps,
+                        spec_decode=args.spec_decode,
+                        spec_backend=args.spec_backend,
+                        spec_k=args.spec_k)
     engine = model.engine(ecfg, fresh=True)
     outs = engine.run(reqs)
 
@@ -163,6 +186,14 @@ def main():
           f"{st.occupancy:.0%})")
     print(f"slot-steps: {st.slot_steps} continuous vs "
           f"{lockstep_slot_steps} lockstep-equivalent")
+    if st.spec_decode or st.scheduled_steps > 1:
+        print(f"dispatch: {st.decode_dispatches} dispatches for "
+              f"{st.decode_steps} steps "
+              f"({st.steps_per_dispatch:.2f} steps/dispatch)")
+    if st.spec_decode:
+        print(f"spec: {st.spec_backend} k={st.spec_k} — "
+              f"{st.accepted_tokens}/{st.draft_tokens} drafts accepted "
+              f"({st.acceptance_rate:.0%})")
     if args.kv_layout == "paged":
         print(f"kv-pool: {st.peak_blocks_in_use}/{st.n_blocks} blocks peak "
               f"(x{st.block_size} tok), fragmentation "

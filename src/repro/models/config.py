@@ -183,6 +183,18 @@ class ServingConfig:
       radix_capacity  max blocks the prefix index may pin (0 = unbounded;
                     leaves still shed LRU-first under pool pressure).
 
+    Dispatch amortization (repro.serving.spec):
+      decode_steps  run N decode iterations per engine step inside one
+                    compiled scan (in-graph EOS/budget masking); 1 = the
+                    classic one-token-per-dispatch loop.
+      spec_decode   self-speculative decoding: draft spec_k tokens under
+                    the cheaper spec_backend (same frozen weights via the
+                    QuantBackend registry), verify with one batched
+                    target pass. Mutually exclusive with decode_steps>1.
+      spec_backend  draft backend, "mode" or "mode@bits" (e.g.
+                    "quaff@4"); must share the target's weight_carrier.
+      spec_k        draft tokens per speculation cycle.
+
     Recurrent-state precision (ssm/hybrid, repro.serving.state):
       state_dtype   "fp" = float state; "int8" = quantized conv/SSM/mLSTM
                     state under OSSH-static per-channel scales (seeded
@@ -205,6 +217,10 @@ class ServingConfig:
     lazy_blocks: bool = False
     prefix_share: bool = False
     radix_capacity: int = 0
+    decode_steps: int = 1
+    spec_decode: bool = False
+    spec_backend: str = ""
+    spec_k: int = 4
 
     def to_engine_config(self):
         """The serving-side ``EngineConfig`` with these knobs (local import:
@@ -217,7 +233,9 @@ class ServingConfig:
             prefill_chunk=self.prefill_chunk, lazy_blocks=self.lazy_blocks,
             prefix_share=self.prefix_share,
             radix_capacity=self.radix_capacity,
-            state_dtype=self.state_dtype)
+            state_dtype=self.state_dtype,
+            decode_steps=self.decode_steps, spec_decode=self.spec_decode,
+            spec_backend=self.spec_backend, spec_k=self.spec_k)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -241,6 +241,7 @@ def attention(
     adapters: Optional[Dict[str, Any]] = None,
     kv_override: Optional[jnp.ndarray] = None,        # cross-attention input
     cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # cached (k,v)
+    exact_kv_reads: bool = False,      # int8 pools: no within-call fp override
     scope: Optional[StatsScope] = None,
     rng: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]], Dict[str, Any]]:
@@ -324,9 +325,9 @@ def attention(
         if s_len == 1 and _PAGED_PALLAS and not cfg.sliding_window:
             # decode hot path: fused gather-dequant-attention kernel. The
             # kernel reads every position — the current token included —
-            # from the pool, so on int8 pools it skips the jnp path's
-            # read-after-write fp override below (a one-position
-            # approximation; fp pools are exact either way).
+            # from the pool; the jnp s_len==1 branch below reads the same
+            # way, so the two decode paths are numerically aligned on int8
+            # pools (fp pools are exact either way).
             from repro.serving.paged.kernels.paged_attention import (
                 paged_attention_auto)
             out = paged_attention_auto(
@@ -343,12 +344,17 @@ def attention(
             t_len = bt.shape[1] * blk
             kf = kf.reshape(bsz, t_len, kh, hd)
             vf = vf.reshape(bsz, t_len, kh, hd)
-            if quantized:
-                # read-after-write fidelity: this step's own tokens attend
-                # in fp straight from registers — the pool's int8 copy is
-                # for FUTURE steps. Makes whole-prompt prefill exact vs the
-                # contiguous fp path; only already-retired positions carry
-                # quantization error.
+            if quantized and s_len > 1 and not exact_kv_reads:
+                # PREFILL read-after-write fidelity: this chunk's own
+                # tokens attend in fp straight from registers — the pool's
+                # int8 copy is for FUTURE steps. Makes whole-prompt prefill
+                # exact vs the contiguous fp path; only already-retired
+                # positions carry quantization error. Single-token DECODE
+                # skips it (reads its own position quantized, matching the
+                # fused kernel), and speculative verification passes
+                # ``exact_kv_reads=True`` so its K+1-wide chunk sees
+                # byte-identical KV to the sequential decode it must
+                # reproduce token-for-token.
                 row = jnp.arange(bsz, dtype=jnp.int32)[:, None]
                 kf = kf.at[row, tpos].set(k.astype(kf.dtype))
                 vf = vf.at[row, tpos].set(v.astype(vf.dtype))

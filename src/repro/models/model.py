@@ -34,14 +34,21 @@ def init_params(key, cfg: ModelConfig):
 
 def forward(frozen, adapters, quant_state, tokens, cfg: ModelConfig, *,
             input_embeds=None, caches=None, positions=None, remat=False,
-            enc_out=None, scope=None, rng=None, live=None) -> ModelOut:
+            enc_out=None, scope=None, rng=None, live=None,
+            exact_kv_reads=False) -> ModelOut:
     """``live`` ((B,) bool, slot-pooled decode only) masks the RECURRENT
     state carry per row for the ssm/hybrid families — KV caches need no
-    mask (their per-slot cursors already isolate rows)."""
+    mask (their per-slot cursors already isolate rows).
+
+    ``exact_kv_reads`` (int8 paged KV only) makes a multi-token chunk read
+    its OWN positions back quantized from the pool instead of the prefill
+    path's within-call fp override — speculative verification needs its
+    K+1-wide chunk to see byte-identical KV to sequential decode."""
     if cfg.family in ("dense", "moe", "vlm"):
         return transformer.forward(frozen, adapters, quant_state, tokens, cfg,
                                    input_embeds=input_embeds, caches=caches,
                                    positions=positions, remat=remat,
+                                   exact_kv_reads=exact_kv_reads,
                                    scope=scope, rng=rng)
     if cfg.family == "hybrid":
         return hybrid.forward_zamba(frozen, adapters, quant_state, tokens, cfg,

@@ -93,12 +93,14 @@ def init_params(key, cfg: ModelConfig):
 
 
 def _block_apply(x, block, qstate, adapters, cfg: ModelConfig, *,
-                 positions, is_global, cache, scope=None, rng=None):
+                 positions, is_global, cache, exact_kv_reads=False,
+                 scope=None, rng=None):
     attn_in = L.rmsnorm(x, block["norm1"], cfg.norm_eps)
     attn_out, new_cache, attn_stats = L.attention(
         attn_in, block["attn"], qstate["attn"], cfg,
         positions=positions, is_global=is_global, cache=cache,
-        adapters=adapters, scope=scope, rng=rng)
+        adapters=adapters, exact_kv_reads=exact_kv_reads,
+        scope=scope, rng=rng)
     x = hint(x + attn_out, "act_btd")
     ffn_in = L.rmsnorm(x, block["norm2"], cfg.norm_eps)
     if cfg.n_experts:
@@ -123,6 +125,7 @@ def forward(
     caches: Optional[Any] = None,                 # stacked (L, ...) KV caches
     positions: Optional[jnp.ndarray] = None,      # decode: (S,) absolute pos
     remat: bool = False,
+    exact_kv_reads: bool = False,      # int8 KV: skip within-call fp override
     scope=None,                                   # StatsScope (calibration)
     rng: Optional[jnp.ndarray] = None,            # train-time dropout key
 ) -> ModelOut:
@@ -157,7 +160,7 @@ def forward(
         h, new_cache, stats, aux = _block_apply(
             h, block, qs, bad, cfg,
             positions=positions, is_global=glob, cache=cache,
-            scope=scope, rng=sub)
+            exact_kv_reads=exact_kv_reads, scope=scope, rng=sub)
         return (h, key), (stats, aux, new_cache)
 
     body = L.remat_wrap(body, remat)

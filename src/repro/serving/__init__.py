@@ -8,7 +8,10 @@ Public surface:
                        max_slots / max_seq_len, kv_layout="contiguous"|
                        "paged", kv_dtype="fp"|"int8", block_size / n_blocks /
                        prefill_chunk / lazy_blocks, prefix_share /
-                       radix_capacity, state_dtype="fp"|"int8"; loose-kwarg
+                       radix_capacity, state_dtype="fp"|"int8",
+                       decode_steps=N (N decode iterations per compiled
+                       dispatch), spec_decode / spec_backend / spec_k
+                       (self-speculative decoding); loose-kwarg
                        spellings keep working via a warn-once shim
     GenerationRequest  prompt + budget + SamplingParams (+ streaming cb,
                        + per-request encoder frames / patch embeddings)
@@ -24,7 +27,9 @@ block cache for KV families, ``RecurrentPool`` conv+SSM/mLSTM/sLSTM state
 for ssm/hybrid (optionally int8 under OSSH-static channel scales), and
 ``CrossAttnPool`` self-KV + per-request cross-KV for encdec. The
 block-pool machinery (allocator, int8 KV storage, Pallas block-table
-attention) lives in ``repro.serving.paged``.
+attention) lives in ``repro.serving.paged``; multi-step scheduled decode
+and Quaff self-speculative decoding (draft and target as two quant
+backends over ONE frozen weight tree) live in ``repro.serving.spec``.
 """
 from repro.models.config import ServingConfig
 from repro.serving.config import EngineConfig

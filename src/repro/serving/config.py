@@ -72,6 +72,24 @@ class EngineConfig:
     Recurrent-state precision (ssm/hybrid, ``serving.state``):
       state_dtype    "fp" or "int8" quantized conv/SSM/mLSTM state under
                      OSSH-static per-channel scales.
+
+    Scheduled / speculative decode (``serving.spec``):
+      decode_steps   decode iterations per compiled dispatch: the engine
+                     runs N steps inside one jitted scan with in-graph
+                     EOS/budget masking (dead rows advance as no-ops),
+                     amortizing host scheduling N-fold. 1 = classic
+                     one-step loop.
+      spec_decode    self-speculative decoding: draft K tokens per cycle
+                     under a cheap-activation backend over the SAME frozen
+                     weights, verify all K in one batched target pass.
+                     Greedy output is token-identical to non-speculative
+                     decode by construction. Mutually exclusive with
+                     decode_steps > 1.
+      spec_backend   draft execution mode, "mode" or "mode@bits"
+                     (e.g. "int4_w4a8", "quaff@4"); must share the
+                     target's weight carrier so both passes read one
+                     frozen tree. Required when spec_decode=True.
+      spec_k         draft tokens per speculation cycle (>= 1).
     """
 
     max_slots: int = 4
@@ -85,6 +103,10 @@ class EngineConfig:
     prefix_share: bool = False
     radix_capacity: int = 0
     state_dtype: str = "fp"
+    decode_steps: int = 1
+    spec_decode: bool = False
+    spec_backend: str = ""
+    spec_k: int = 4
 
     def __post_init__(self):
         if self.max_slots < 1:
@@ -124,6 +146,22 @@ class EngineConfig:
                                  "and prefix_share=True")
         elif self.radix_capacity and not self.prefix_share:
             raise ValueError("radix_capacity needs prefix_share=True")
+        if self.decode_steps < 1:
+            raise ValueError(
+                f"decode_steps must be >= 1, got {self.decode_steps}")
+        if self.spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {self.spec_k}")
+        if self.spec_decode:
+            if not self.spec_backend:
+                raise ValueError("spec_decode=True needs a spec_backend "
+                                 "('mode' or 'mode@bits', e.g. 'int4_w4a8')")
+            if self.decode_steps != 1:
+                raise ValueError(
+                    "spec_decode and decode_steps > 1 are mutually "
+                    "exclusive (a speculation cycle already batches "
+                    "spec_k + 1 positions per dispatch)")
+        elif self.spec_backend:
+            raise ValueError("spec_backend is set but spec_decode=False")
 
 
 def from_legacy_kwargs(kwargs: Dict[str, Any]) -> EngineConfig:

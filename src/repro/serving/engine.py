@@ -56,7 +56,10 @@ from repro.serving.config import EngineConfig, from_legacy_kwargs
 from repro.serving.paged import kvquant as KVQ
 from repro.serving.params import (EngineStats, GenerationRequest,
                                   RequestOutput, SamplingParams)
-from repro.serving.pool import PagedPool, make_decode_state
+from repro.serving.pool import PagedPool, SlotPool, make_decode_state
+from repro.serving.spec import drafter as SPEC
+from repro.serving.spec import schedule as SCHED
+from repro.serving.spec import verify as SVER
 from repro.train import steps as S
 
 
@@ -210,11 +213,38 @@ class Engine:
         self._step_fn = (_jit_paged_step(cfg) if self._paged is not None
                          else _jit_decode_slots(cfg))
         self._prefill_fn = _jit_prefill_slot(cfg, config.max_seq_len)
+        # multi-step scheduled decode / self-speculative decoding
+        # (serving.spec): both fold several logical decode steps into one
+        # compiled dispatch; speculation additionally needs a KV pool whose
+        # provisional writes roll back by cursor arithmetic
+        self._multistep_fn = (
+            SCHED.jit_multistep_decode(cfg, config.decode_steps)
+            if config.decode_steps > 1 else None)
+        self._drafter: Optional[SPEC.Drafter] = None
+        self._verify_fn = None
+        if config.spec_decode:
+            if not isinstance(self._pool, (SlotPool, PagedPool)):
+                raise ValueError(
+                    f"spec_decode needs a KV pool (families dense/moe/vlm); "
+                    f"family={cfg.family!r} decode state cannot roll back "
+                    "provisional writes")
+            self._drafter = SPEC.Drafter(cfg, config.spec_backend,
+                                         config.spec_k)
+            self._verify_fn = SVER.jit_spec_verify(cfg, config.spec_k)
+        # served-weights version: a finetune()/convert() on the wrapped
+        # model bumps it, and the engine auto-flushes the prefix index —
+        # cached KV from the old weights must never map into new requests
+        self._weights_version = getattr(model, "weights_version", 0)
+        if self._paged is not None:
+            self._paged.set_weights_version(self._weights_version)
         self.stats = EngineStats(
             n_slots=config.max_slots, family=cfg.family,
             kv_layout=config.kv_layout, kv_dtype=config.kv_dtype,
             state_dtype=config.state_dtype, lazy_blocks=config.lazy_blocks,
             prefix_share=config.prefix_share,
+            scheduled_steps=config.decode_steps,
+            spec_decode=config.spec_decode, spec_backend=config.spec_backend,
+            spec_k=config.spec_k if config.spec_decode else 0,
             block_size=self._paged.alloc.block_size if self._paged else 0,
             n_blocks=self._paged.alloc.n_blocks if self._paged else 0,
             contiguous_bytes_per_request=(
@@ -296,18 +326,44 @@ class Engine:
 
     def step(self) -> bool:
         """One engine iteration: admit into free slots, advance prefill
-        chunks (paged), then one batched decode step. Returns ``has_work``."""
+        chunks (paged), then one batched decode dispatch (a single step, a
+        ``decode_steps``-long compiled window, or a draft+verify
+        speculation cycle). Returns ``has_work``."""
+        self._check_weights_version()
         if self._paged is not None:
             self._admit_paged()
             self._prefill_paged_chunks()
-            self._decode_once_paged()
+            self._decode_dispatch()
             self._snapshot_pool_stats()
         else:
             while self._waiting and self._pool.n_free:
                 self._admit_one()
             if self._pool.n_active:
-                self._decode_once()
+                self._decode_dispatch()
         return self.has_work
+
+    def _decode_dispatch(self):
+        if self._drafter is not None:
+            self._decode_spec()
+        elif self._multistep_fn is not None:
+            self._decode_multistep()
+        elif self._paged is not None:
+            self._decode_once_paged()
+        else:
+            self._decode_once()
+
+    def _check_weights_version(self):
+        """Auto-invalidate stale prefix KV: ``api.QuaffModel`` bumps
+        ``weights_version`` on every ``finetune()``/``convert()``, and a
+        version change re-scopes the radix index (dropping every cached
+        block) — no manual ``reset_prefix_cache()`` call needed."""
+        v = getattr(self._model, "weights_version", 0)
+        if v == self._weights_version:
+            return
+        self._weights_version = v
+        if self._paged is not None:
+            self._paged.set_weights_version(v)
+            self._snapshot_pool_stats()
 
     def run(self, requests: Iterable[GenerationRequest] = ()
             ) -> List[RequestOutput]:
@@ -495,6 +551,7 @@ class Engine:
             jnp.asarray(top_ps), jnp.stack(keys)))
         self.stats.decode_time_s += time.perf_counter() - t0
         self.stats.decode_steps += 1
+        self.stats.decode_dispatches += 1
         self.stats.busy_slot_steps += len(active)
 
         for i in active:
@@ -641,30 +698,41 @@ class Engine:
                                            st.n_generated)
                     self._emit_token(st, slot, tok)
 
-    def _decode_once_paged(self):
+    def _ready_paged(self, window: int) -> List[int]:
+        """Decoding slots whose next ``window`` cache positions are backed
+        by blocks: lazy tables grow (``ensure_capacity``) and shared blocks
+        in the write range get private copies (``prepare_write``) — a slot
+        failing either stalls this round. When nothing at all can move,
+        the youngest stream (fewest sunk tokens) is preempted. A slot only
+        needs capacity for the positions it can still COMMIT (its budget);
+        window writes past that land on the trash page and die with the
+        row."""
         decoding = [i for i, st in enumerate(self._slots)
                     if st is not None and st.decoding]
+        if not decoding or not (self.lazy_blocks or self.prefix_share):
+            return decoding
+        ready = []
+        for i in decoding:
+            st = self._slots[i]
+            w = min(window, st.req.max_new_tokens - st.n_generated)
+            if self.lazy_blocks and not self._paged.ensure_capacity(i, w):
+                self.stats.block_stalls += 1
+            elif not self._paged.prepare_write(i, w):
+                # write would land in a shared block and no COW target
+                # is available — stall this stream for the round
+                self.stats.block_stalls += 1
+            else:
+                ready.append(i)
+        if not ready:
+            victim = min(decoding,
+                         key=lambda i: (self._slots[i].n_generated, -i))
+            self._preempt(victim)
+        return ready
+
+    def _decode_once_paged(self):
+        decoding = self._ready_paged(1)
         if not decoding:
             return
-        if self.lazy_blocks or self.prefix_share:
-            ready = []
-            for i in decoding:
-                if self.lazy_blocks and not self._paged.ensure_capacity(i, 1):
-                    self.stats.block_stalls += 1
-                elif not self._paged.prepare_write(i, 1):
-                    # write would land in a shared block and no COW target
-                    # is available — stall this stream for the round
-                    self.stats.block_stalls += 1
-                else:
-                    ready.append(i)
-            if not ready:
-                # every decoder is out of blocks and nothing will free
-                # them: preempt the youngest stream (fewest sunk tokens)
-                victim = min(decoding,
-                             key=lambda i: (self._slots[i].n_generated, -i))
-                self._preempt(victim)
-                return
-            decoding = ready
         m = self._model
         in_step = set(decoding)
         live = [i in in_step for i in range(self.max_slots)]
@@ -685,11 +753,164 @@ class Engine:
             jnp.asarray(top_ps), jnp.stack(keys)))
         self.stats.decode_time_s += time.perf_counter() - t0
         self.stats.decode_steps += 1
+        self.stats.decode_dispatches += 1
         self.stats.busy_slot_steps += len(decoding)
 
         for i in decoding:
             self._pool.advance(i, 1)
             self._emit_token(self._slots[i], i, int(toks[i]))
+
+    # ------------------------------------------------------------------
+    # multi-step scheduled decode / speculative decoding (serving.spec)
+    # ------------------------------------------------------------------
+    def _decode_rows(self, window: int) -> Tuple[List[int], List[bool]]:
+        """(decoding slots, per-slot live mask) for one spec/multi-step
+        dispatch — paged slots additionally pass the ``window``-wide block
+        backpressure check; stalled rows sit the window out entirely (they
+        are dead in the gather, so the graph neither reads nor writes
+        them)."""
+        if self._paged is not None:
+            decoding = self._ready_paged(window)
+        else:
+            decoding = [i for i, st in enumerate(self._slots)
+                        if st is not None]
+        in_step = set(decoding)
+        return decoding, [i in in_step for i in range(self.max_slots)]
+
+    def _decode_multistep(self):
+        """One ``decode_steps``-long compiled window: sampling, feedback
+        and EOS/budget death all happen in-graph (``spec.schedule``); the
+        host replays the emit mask afterwards so streaming callbacks,
+        retirement and paged cursors see exactly the committed tokens."""
+        n = self.config.decode_steps
+        decoding, live = self._decode_rows(n)
+        if not decoding:
+            return
+        m = self._model
+        tokens, positions, temps, top_ks, top_ps, _ = \
+            self._decode_batch_arrays(decoding)
+        b = self.max_slots
+        eos_ids = np.full((b,), -1, np.int32)
+        budgets = np.ones((b,), np.int32)
+        keys = [[jax.random.PRNGKey(0)] * b for _ in range(n)]
+        for i in decoding:
+            st = self._slots[i]
+            sp = st.req.sampling
+            if st.req.eos_id is not None:
+                eos_ids[i] = st.req.eos_id
+            budgets[i] = st.req.max_new_tokens - st.n_generated
+            for s in range(n):
+                # the one-step loop's exact key stream: seeded sampling is
+                # bit-identical whichever window size emitted the token
+                keys[s][i] = sampling.request_key(sp, st.n_generated + s)
+
+        t0 = time.perf_counter()
+        if self._paged is not None:
+            self.stats.fragmentation_sum += self._paged.fragmentation()
+            self.stats.fragmentation_samples += 1
+        caches = self._pool.live_assemble(live)
+        toks, emits, new_caches = self._multistep_fn(
+            m.frozen, self._adapters_no_prefix(), m.quant_state, caches,
+            jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.stack([jnp.stack(row) for row in keys]),
+            jnp.asarray(temps), jnp.asarray(top_ks), jnp.asarray(top_ps),
+            jnp.asarray(eos_ids), jnp.asarray(budgets),
+            jnp.asarray(np.asarray(live)), self._pool.mask_dead(live))
+        self._pool.update_from(new_caches)
+        toks, emits = np.asarray(toks), np.asarray(emits)
+        self.stats.decode_time_s += time.perf_counter() - t0
+        self.stats.decode_steps += n
+        self.stats.decode_dispatches += 1
+        self.stats.busy_slot_steps += int(emits.sum())
+
+        for i in decoding:
+            st = self._slots[i]
+            # advance BEFORE the emit walk: retirement snapshots the block
+            # table. emits[:, i] is a prefix of Trues, so the walk breaks
+            # at the row's in-graph death — which is byte-for-byte the
+            # _emit_token retirement rule, so the two always agree.
+            self._pool.advance(i, int(emits[:, i].sum()))
+            for s in range(n):
+                if not emits[s, i]:
+                    break
+                self._emit_token(st, i, int(toks[s, i]))
+
+    def _decode_spec(self):
+        """One speculation cycle = TWO dispatches for up to ``spec_k + 1``
+        tokens per row: a K-step draft scan under the cheap-activation
+        backend (``spec.drafter`` — its cache writes are discarded), then
+        one batched target pass scoring all K+1 positions against the
+        PRE-draft caches (``spec.verify``). Rollback of rejected positions
+        is cursor arithmetic: in-graph for contiguous slots, a host
+        ``advance(i, counts)`` short of the chunk for block tables."""
+        k = self.config.spec_k
+        decoding, live = self._decode_rows(k + 1)
+        if not decoding:
+            return
+        m = self._model
+        tokens, positions, temps, top_ks, top_ps, _ = \
+            self._decode_batch_arrays(decoding)
+        b = self.max_slots
+        zero = jax.random.PRNGKey(0)
+        draft_keys = [[zero] * b for _ in range(k)]
+        seq_keys = [[zero] * (k + 1) for _ in range(b)]
+        for i in decoding:
+            st = self._slots[i]
+            sp = st.req.sampling
+            for j in range(k):
+                # proposals draw from a DISJOINT fold_in stream; reusing
+                # the sequential keys would correlate draft and verify
+                # draws and bias rejection sampling
+                draft_keys[j][i] = sampling.request_key(
+                    sp, SPEC.DRAFT_FOLD + st.n_generated + j)
+            for j in range(k + 1):
+                seq_keys[i][j] = sampling.request_key(sp, st.n_generated + j)
+        temps, top_ks, top_ps = (jnp.asarray(temps), jnp.asarray(top_ks),
+                                 jnp.asarray(top_ps))
+
+        t0 = time.perf_counter()
+        if self._paged is not None:
+            self.stats.fragmentation_sum += self._paged.fragmentation()
+            self.stats.fragmentation_samples += 1
+        caches = self._pool.live_assemble(live)
+        tok0 = jnp.asarray(tokens)
+        d_toks, d_logits = self._drafter.propose(
+            m.frozen, self._adapters_no_prefix(), m.quant_state, caches,
+            tok0, jnp.asarray(positions),
+            jnp.stack([jnp.stack(row) for row in draft_keys]),
+            temps, top_ks, top_ps)
+        chunk = jnp.concatenate([tok0, jnp.transpose(d_toks)], axis=1)
+        vpos = (jnp.asarray(positions)[:, None]
+                + jnp.arange(k + 1, dtype=jnp.int32)[None, :])
+        counts, out_toks, new_caches = self._verify_fn(
+            m.frozen, self._adapters_no_prefix(), m.quant_state, caches,
+            chunk, vpos, jnp.transpose(d_toks),
+            jnp.transpose(d_logits, (1, 0, 2)), temps, top_ks, top_ps,
+            jnp.stack([jnp.stack(row) for row in seq_keys]),
+            jnp.asarray(np.asarray(live)))
+        self._pool.update_from(new_caches)
+        counts, out_toks = np.asarray(counts), np.asarray(out_toks)
+        self.stats.decode_time_s += time.perf_counter() - t0
+        rows = counts[decoding]
+        self.stats.decode_steps += int(rows.max())
+        self.stats.decode_dispatches += 2
+        self.stats.busy_slot_steps += int(rows.sum())
+        self.stats.draft_tokens += k * len(decoding)
+        self.stats.accepted_tokens += int((rows - 1).sum())
+
+        for i in decoding:
+            st = self._slots[i]
+            c = int(counts[i])
+            # verification is blind to EOS/budget, so clamp the cursor to
+            # the row's budget (its _ready_paged-ensured window); the emit
+            # walk retires the row at EOS or budget and stops emitting —
+            # over-committed trailing tokens die with the slot.
+            self._pool.advance(
+                i, min(c, st.req.max_new_tokens - st.n_generated))
+            for j in range(c):
+                self._emit_token(st, i, int(out_toks[i, j]))
+                if self._slots[i] is not st:
+                    break
 
     def _snapshot_pool_stats(self):
         st, pool = self.stats, self._paged

@@ -129,6 +129,20 @@ class EngineStats:
     blocks_reserved_eager_sum: int = 0      # what eager would have pinned
     blocks_used_sum: int = 0                # blocks actually held at retire
 
+    # multi-step scheduled decode + speculative decoding (serving.spec):
+    # ``decode_steps`` keeps its logical meaning (one count per generated-
+    # token opportunity) — ``decode_dispatches`` counts compiled decode
+    # calls, so steps_per_dispatch measures the host-scheduling
+    # amortization (N for decode_steps=N windows, the mean committed run
+    # for speculation)
+    scheduled_steps: int = 1                # configured decode_steps
+    spec_decode: bool = False
+    spec_backend: str = ""
+    spec_k: int = 0
+    decode_dispatches: int = 0              # compiled decode calls issued
+    draft_tokens: int = 0                   # proposals the drafter made
+    accepted_tokens: int = 0                # proposals verification kept
+
     # radix/COW prefix sharing (paged engines with ``prefix_share=True``)
     prefix_share: bool = False
     prefix_queries: int = 0                 # admissions that probed the index
@@ -171,6 +185,19 @@ class EngineStats:
     def kv_bytes_saved_vs_contiguous(self) -> float:
         """Per-request bytes the paged layout saved vs a contiguous fp row."""
         return self.contiguous_bytes_per_request - self.kv_bytes_per_request
+
+    @property
+    def steps_per_dispatch(self) -> float:
+        """Logical decode steps amortized per compiled decode call: N for
+        a drained ``decode_steps=N`` engine, mean committed tokens per
+        cycle under speculation, 1.0 for the classic loop."""
+        return self.decode_steps / max(self.decode_dispatches, 1)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of draft proposals verification committed (correction
+        and bonus tokens excluded — this measures the DRAFTER)."""
+        return self.accepted_tokens / max(self.draft_tokens, 1)
 
     @property
     def slot_steps(self) -> int:
@@ -241,6 +268,21 @@ class EngineStats:
                 "preemptions": self.preemptions,
                 "lazy_blocks_saved_per_request":
                     round(self.lazy_blocks_saved_per_request, 2),
+            })
+        if self.spec_decode or self.scheduled_steps > 1:
+            out.update({
+                "scheduled_steps": self.scheduled_steps,
+                "decode_dispatches": self.decode_dispatches,
+                "steps_per_dispatch": round(self.steps_per_dispatch, 4),
+            })
+        if self.spec_decode:
+            out.update({
+                "spec_decode": self.spec_decode,
+                "spec_backend": self.spec_backend,
+                "spec_k": self.spec_k,
+                "draft_tokens": self.draft_tokens,
+                "accepted_tokens": self.accepted_tokens,
+                "acceptance_rate": round(self.acceptance_rate, 4),
             })
         if self.prefix_share:
             out.update({

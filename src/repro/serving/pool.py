@@ -85,13 +85,15 @@ class PagedPool:
         self.n_grows = 0
         # prefix sharing: the radix index pins one reference per indexed
         # block; its scope ties cached blocks to THIS pool's quantization
-        # grid and model shape (an fp and an int8 pool of the same model
-        # must never cross-share block content)
+        # grid, model shape AND served-weights version (an fp and an int8
+        # pool of the same model must never cross-share block content, and
+        # KV cached under pre-finetune weights must never map into
+        # requests served by the new adapters)
         self.radix: Optional[RadixIndex] = None
+        self._radix_capacity = radix_capacity
+        self._weights_version = 0
         if prefix_share:
-            scope = f"{kv_dtype}:" + hashlib.sha1(
-                repr(cfg).encode("utf-8")).hexdigest()
-            self.radix = RadixIndex(block_size, scope=scope,
+            self.radix = RadixIndex(block_size, scope=self._radix_scope(),
                                     capacity=radix_capacity)
         self.prefix_queries = 0
         self.prefix_hits = 0
@@ -262,6 +264,27 @@ class PagedPool:
             if key == "k_scale":
                 continue
             self.pools[key] = arr.at[:, dst].set(arr[:, src])
+
+    def _radix_scope(self) -> str:
+        return (f"{self.kv_dtype}:v{self._weights_version}:"
+                + hashlib.sha1(repr(self.cfg).encode("utf-8")).hexdigest())
+
+    def set_weights_version(self, version: int):
+        """Pin the prefix index to served-weights ``version``. A version
+        change (``api.QuaffModel`` bumps it on every ``finetune()`` /
+        ``convert()``) flushes the index and rebuilds it under a re-salted
+        scope, so stale prefix KV can never be mapped into requests served
+        by the new weights — the engine calls this automatically; no
+        manual ``reset_prefix_cache()`` needed."""
+        if version == self._weights_version:
+            return
+        self._weights_version = version
+        if self.radix is None:
+            return
+        self.drop_radix()
+        self.radix = RadixIndex(self.alloc.block_size,
+                                scope=self._radix_scope(),
+                                capacity=self._radix_capacity)
 
     def drop_radix(self):
         """Flush the prefix index and release every block it pinned (the

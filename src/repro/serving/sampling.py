@@ -22,22 +22,17 @@ def request_key(params: SamplingParams, token_index: int) -> jnp.ndarray:
     return jax.random.fold_in(jax.random.PRNGKey(params.seed), token_index)
 
 
-def sample_tokens(logits: jnp.ndarray, temperature: jnp.ndarray,
-                  top_k: jnp.ndarray, top_p: jnp.ndarray,
-                  keys: jnp.ndarray) -> jnp.ndarray:
-    """logits (B, V) f32; temperature/top_p (B,) f32; top_k (B,) i32;
-    keys (B, 2) PRNG keys. Returns (B,) int32 token ids.
+def _filter_logits(lg: jnp.ndarray, top_k: jnp.ndarray,
+                   top_p: jnp.ndarray) -> jnp.ndarray:
+    """Top-k + top-p truncation over already-temperature-scaled logits
+    (B, V): keep the top-k logits, then the smallest prefix of the
+    remaining distribution with cumulative probability >= top_p (the
+    max-probability token always survives). Dropped entries go to -inf.
 
-    Rows with ``temperature <= 0`` take the argmax (exactly the lockstep
-    greedy path). Others: scale by temperature, keep the top-k logits, then
-    the smallest prefix of the remaining distribution with cumulative
-    probability >= top_p (the max-probability token always survives), and
-    draw categorically with the row's key."""
-    v = logits.shape[-1]
-    logits = logits.astype(jnp.float32)
-    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-
-    lg = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    Shared between ``sample_tokens`` and ``speculative_verify`` — rejection
+    sampling must score draft proposals against EXACTLY the distribution
+    sequential decode would have sampled from."""
+    v = lg.shape[-1]
     desc = jnp.sort(lg, axis=-1)[:, ::-1]                       # (B, V) desc
     # top-k: threshold at the k-th largest logit (k<=0 keeps everything)
     k_idx = jnp.clip(jnp.where(top_k > 0, top_k, v) - 1, 0, v - 1)
@@ -49,11 +44,120 @@ def sample_tokens(logits: jnp.ndarray, temperature: jnp.ndarray,
     cum = jnp.cumsum(probs, axis=-1)
     keep = (cum - probs) < top_p[:, None]        # prefix up to mass >= top_p
     cutoff = jnp.min(jnp.where(keep, desc, jnp.inf), axis=-1, keepdims=True)
-    lg = jnp.where(lg < cutoff, -jnp.inf, lg)
+    return jnp.where(lg < cutoff, -jnp.inf, lg)
 
+
+def sample_tokens(logits: jnp.ndarray, temperature: jnp.ndarray,
+                  top_k: jnp.ndarray, top_p: jnp.ndarray,
+                  keys: jnp.ndarray) -> jnp.ndarray:
+    """logits (B, V) f32; temperature/top_p (B,) f32; top_k (B,) i32;
+    keys (B, 2) PRNG keys. Returns (B,) int32 token ids.
+
+    Rows with ``temperature <= 0`` take the argmax (exactly the lockstep
+    greedy path). Others: scale by temperature, truncate with
+    ``_filter_logits`` and draw categorically with the row's key."""
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = _filter_logits(logits / jnp.maximum(temperature, 1e-6)[:, None],
+                        top_k, top_p)
     drawn = jax.vmap(jax.random.categorical)(keys, lg).astype(jnp.int32)
     return jnp.where(temperature > 0.0, drawn, greedy)
 
 
 def make_sampler():
     return jax.jit(sample_tokens)
+
+
+def _filtered_probs(logits: jnp.ndarray, temperature: jnp.ndarray,
+                    top_k: jnp.ndarray, top_p: jnp.ndarray) -> jnp.ndarray:
+    """(B, N, V) logits -> (B, N, V) per-position sampling distributions
+    under each row's (temperature, top_k, top_p)."""
+    b, n, v = logits.shape
+    lg = logits / jnp.maximum(temperature, 1e-6)[:, None, None]
+    fl = _filter_logits(lg.reshape(b * n, v),
+                        jnp.repeat(top_k, n), jnp.repeat(top_p, n))
+    return jax.nn.softmax(fl, axis=-1).reshape(b, n, v)
+
+
+def speculative_verify(target_logits: jnp.ndarray,
+                       draft_tokens: jnp.ndarray,
+                       draft_logits: jnp.ndarray,
+                       temperature: jnp.ndarray, top_k: jnp.ndarray,
+                       top_p: jnp.ndarray, keys: jnp.ndarray):
+    """Score K draft tokens against one batched target pass.
+
+    ``target_logits`` (B, K+1, V): position j holds the target logits for
+    the token AFTER ``[t0, d_1..d_j]`` (the verify chunk feeds the last
+    committed token followed by the K proposals, so the forward's causal
+    read-after-write yields every conditional at once). ``draft_tokens``
+    (B, K) and ``draft_logits`` (B, K, V) are the drafter's proposals and
+    raw logits; ``temperature``/``top_p`` (B,) f32, ``top_k`` (B,) i32;
+    ``keys`` (B, K+1, 2) one PRNG key per position.
+
+    Returns ``(counts, out_tokens)``: row i commits
+    ``out_tokens[i, :counts[i]]`` (1 <= counts <= K+1).
+
+    Greedy rows (temperature <= 0): ``out_tokens`` is the target argmax at
+    every position and ``counts - 1`` is the length of the leading run of
+    draft tokens matching it — the committed stream is the target argmax
+    prefix, token-identical to sequential greedy decode by construction.
+
+    Sampled rows: standard rejection sampling (Leviathan et al.) over the
+    SAME top-k/top-p-filtered distributions sequential decode samples
+    from. Proposal d_{j+1} is accepted with probability
+    min(1, p_j(d)/q_j(d)); the first rejection resamples from
+    norm(max(p_j - q_j, 0)); accepting all K earns a bonus token from
+    p_K. The committed marginals match sequential sampling exactly (the
+    drawn stream differs — speculation consumes randomness differently)."""
+    b, kp1, v = target_logits.shape
+    k = kp1 - 1
+    tl = target_logits.astype(jnp.float32)
+    greedy_toks = jnp.argmax(tl, axis=-1).astype(jnp.int32)     # (B, K+1)
+
+    # per-position subkeys: one stream for accept draws, one for resamples
+    sub = jax.vmap(lambda kk: jax.random.split(kk, 2))(keys.reshape(-1, 2))
+    u_keys = sub[:, 0].reshape(b, kp1, 2)
+    r_keys = sub[:, 1].reshape(b, kp1, 2)
+
+    p = _filtered_probs(tl, temperature, top_k, top_p)          # (B, K+1, V)
+    if k:
+        g_match = greedy_toks[:, :k] == draft_tokens            # (B, K)
+        g_m = jnp.sum(jnp.cumprod(g_match.astype(jnp.int32), axis=-1),
+                      axis=-1)                                  # leading run
+        q = _filtered_probs(draft_logits.astype(jnp.float32),
+                            temperature, top_k, top_p)          # (B, K, V)
+        d_idx = draft_tokens[..., None]
+        p_d = jnp.take_along_axis(p[:, :k], d_idx, axis=-1)[..., 0]
+        q_d = jnp.take_along_axis(q, d_idx, axis=-1)[..., 0]
+        u = jax.vmap(jax.random.uniform)(
+            u_keys[:, :k].reshape(b * k, 2)).reshape(b, k)
+        accept = u * jnp.maximum(q_d, 1e-20) < p_d              # (B, K)
+        s_m = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=-1),
+                      axis=-1)
+        # residual distribution at each position (used only at the first
+        # rejection); all-zero residual (p == q) falls back to p
+        res = jnp.maximum(p[:, :k] - q, 0.0)
+        res_sum = jnp.sum(res, axis=-1, keepdims=True)
+        res = jnp.where(res_sum > 0, res / jnp.maximum(res_sum, 1e-20),
+                        p[:, :k])
+        corr = jax.vmap(jax.random.categorical)(
+            r_keys[:, :k].reshape(b * k, 2),
+            jnp.log(res.reshape(b * k, v) + 1e-30)
+        ).reshape(b, k).astype(jnp.int32)
+    else:
+        g_m = jnp.zeros((b,), jnp.int32)
+        s_m = jnp.zeros((b,), jnp.int32)
+        corr = jnp.zeros((b, 0), jnp.int32)
+    bonus = jax.vmap(jax.random.categorical)(
+        r_keys[:, k], jnp.log(p[:, k] + 1e-30)).astype(jnp.int32)
+
+    repl = jnp.concatenate([corr, bonus[:, None]], axis=1)      # (B, K+1)
+    d_pad = jnp.concatenate(
+        [draft_tokens, jnp.zeros((b, 1), jnp.int32)], axis=1)
+    idx = jnp.arange(kp1, dtype=jnp.int32)[None, :]
+    out_s = jnp.where(idx < s_m[:, None], d_pad, repl)
+
+    sampled = temperature > 0.0
+    counts = jnp.where(sampled, s_m, g_m).astype(jnp.int32) + 1
+    out = jnp.where(sampled[:, None], out_s, greedy_toks)
+    return counts, out.astype(jnp.int32)

@@ -1,0 +1,34 @@
+"""Scheduled multi-step decode + Quaff self-speculative decoding.
+
+Two ways to spend fewer host dispatches per generated token, both knobs
+on ``serving.EngineConfig``:
+
+  * ``decode_steps=N`` — run N decode iterations inside one compiled
+    scan with in-graph EOS/budget masking (``schedule``);
+  * ``spec_decode=True, spec_backend="mode[@bits]", spec_k=K`` — draft K
+    tokens under a cheap-activation backend over the same frozen weights
+    (``drafter``), then score all K in one batched target pass
+    (``verify``); greedy output is token-identical to non-speculative
+    decode by construction.
+"""
+from repro.serving.spec.drafter import (DRAFT_FOLD, Drafter,
+                                        draft_model_config,
+                                        parse_spec_backend)
+from repro.serving.spec.schedule import (build_draft_scan,
+                                         build_multistep_decode,
+                                         jit_draft_scan,
+                                         jit_multistep_decode)
+from repro.serving.spec.verify import build_spec_verify, jit_spec_verify
+
+__all__ = [
+    "DRAFT_FOLD",
+    "Drafter",
+    "build_draft_scan",
+    "build_multistep_decode",
+    "build_spec_verify",
+    "draft_model_config",
+    "jit_draft_scan",
+    "jit_multistep_decode",
+    "jit_spec_verify",
+    "parse_spec_backend",
+]

@@ -1,0 +1,101 @@
+"""Self-speculative drafting: the SAME weights under cheaper activations.
+
+Classic speculative decoding needs a second, smaller draft model. Quaff's
+registry makes the draft free: every ``QuantBackend`` is an execution
+mode over one frozen weight tree, so the draft pass is simply the target
+model run under a lower-precision-activation backend — ``int4`` drafts
+for an ``int4_w4a8`` target read the identical packed nibbles with 4-bit
+instead of 8-bit activations, and ``quaff@4`` drafts for a ``quaff``
+target coarsen only the runtime activation quantization (``QuantConfig.
+bits`` is apply-time; the stored ``w_int`` never changes). No second
+checkpoint, no extra weight memory, no KV duplication: the drafter runs
+against the live pools and its cache writes are thrown away (verification
+re-reads the pre-draft state).
+
+Backend pairing is validated through ``QuantBackend.weight_carrier``:
+draft and target must consume the same frozen-weights format, otherwise
+the draft forward would misread the tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.backend import get_backend
+from repro.models.config import ModelConfig
+from repro.serving.spec import schedule
+
+#: fold_in offset separating the drafter's PRNG stream from the request's
+#: sequential sampling stream (token indices never reach 2**30; reusing
+#: the sequential keys for proposals would correlate draft and verify
+#: draws and bias rejection sampling)
+DRAFT_FOLD = 1 << 30
+
+
+def parse_spec_backend(spec: str) -> Tuple[str, Optional[int]]:
+    """Split a ``spec_backend`` string ``"mode"`` / ``"mode@bits"``
+    (e.g. ``"int4"``, ``"quaff@4"``) into (mode, bits-or-None)."""
+    mode, _, bits = spec.partition("@")
+    if not mode:
+        raise ValueError(f"empty mode in spec_backend {spec!r}")
+    if not bits:
+        return mode, None
+    try:
+        b = int(bits)
+    except ValueError:
+        raise ValueError(
+            f"spec_backend {spec!r}: bits suffix must be an integer"
+        ) from None
+    if b < 1:
+        raise ValueError(f"spec_backend {spec!r}: bits must be >= 1")
+    return mode, b
+
+
+def draft_model_config(cfg: ModelConfig, spec_backend: str) -> ModelConfig:
+    """The draft-pass ``ModelConfig``: ``cfg`` with its quant mode (and
+    optionally apply-time activation bits) swapped for the draft backend.
+
+    Raises when the draft backend's ``weight_carrier`` differs from the
+    target's — the two passes share one frozen tree, so they must agree
+    on its format. Per-layer quant STATE (Quaff momentum scales) rides
+    along unchanged for the same reason: same carrier, same state shape.
+    """
+    mode, bits = parse_spec_backend(spec_backend)
+    target = get_backend(cfg.quant.mode)
+    draft = get_backend(mode)          # raises on an unregistered mode
+    t_carrier = target.weight_carrier or target.name
+    d_carrier = draft.weight_carrier or draft.name
+    if t_carrier != d_carrier:
+        raise ValueError(
+            f"spec_backend {spec_backend!r} (weight carrier {d_carrier!r}) "
+            f"cannot draft for target mode {cfg.quant.mode!r} (carrier "
+            f"{t_carrier!r}): draft and target read the same frozen "
+            "weights, so their backends must share a weight_carrier")
+    quant = dataclasses.replace(
+        cfg.quant, mode=mode,
+        **({"bits": bits} if bits is not None else {}))
+    return dataclasses.replace(cfg, quant=quant)
+
+
+class Drafter:
+    """K-token draft proposer for one engine.
+
+    Holds the draft ``ModelConfig`` and the jitted draft scan; stateless
+    with respect to the pools — the engine hands it the assembled caches
+    and discards everything but the proposals and their logits."""
+
+    def __init__(self, cfg: ModelConfig, spec_backend: str, k: int):
+        if k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {k}")
+        self.target_cfg = cfg
+        self.cfg = draft_model_config(cfg, spec_backend)
+        self.spec_backend = spec_backend
+        self.k = k
+        self._fn = schedule.jit_draft_scan(self.cfg, k)
+
+    def propose(self, frozen, adapters, quant_state, caches, tokens,
+                positions, keys, temps, top_ks, top_ps):
+        """(d_toks (K, B) int32, d_logits (K, B, V) f32). ``keys`` must be
+        the DRAFT_FOLD-offset stream, not the request's sequential keys."""
+        return self._fn(frozen, adapters, quant_state, caches, tokens,
+                        positions, keys, temps, top_ks, top_ps)

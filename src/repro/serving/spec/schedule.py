@@ -1,0 +1,118 @@
+"""Multi-step scheduled decode: N decode iterations inside ONE compiled call.
+
+The classic engine loop pays one host round-trip per generated token:
+assemble the batch, dispatch the jitted step, pull logits back, sample,
+re-dispatch. ``build_multistep_decode`` folds ``num_steps`` of that loop
+into a single ``lax.scan`` — the sampled token feeds straight back into the
+next forward on-device, and EOS / token-budget death is handled IN-GRAPH by
+masking: a dead row keeps riding the scan as a no-op (it re-feeds its last
+token and its writes land past its committed cursor, exactly where the
+one-step engine's free slots already scribble), so the batch never
+re-shapes mid-window and host scheduling cost is amortized N-fold.
+
+The in-graph death condition is byte-for-byte the engine's retirement rule
+(``Engine._emit_token``): a row dies after emitting its EOS token or its
+``budget``-th token of the window. The host replays the emit mask after
+the window, so streaming callbacks, retirement bookkeeping and paged
+cursor advances all see exactly the tokens the graph committed.
+
+``build_draft_scan`` is the same scan specialized for speculative
+drafting (``serving.spec.drafter``): no death masking — proposals are
+provisional by definition — and it returns the per-step logits so
+verification can rejection-sample against the draft distribution. The
+draft caches are DISCARDED by the caller: verification re-reads the
+pre-draft pools, so draft writes never pollute committed KV state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving import sampling
+
+
+def build_multistep_decode(cfg: ModelConfig, num_steps: int):
+    """multistep(frozen, adapters, quant_state, caches, tokens, positions,
+    keys, temps, top_ks, top_ps, eos_ids, budgets, alive, live=None)
+    -> (toks (N, B) int32, emits (N, B) bool, final caches).
+
+    ``tokens`` (B, 1) fed-back last tokens; ``positions`` (B,) the fed-back
+    token's RoPE position (step s uses ``positions + s``); ``keys``
+    (N, B, 2) per-(step, row) sampling keys — precomputed host-side from
+    ``sampling.request_key`` so seeded streams are bit-identical to the
+    one-step loop; ``eos_ids`` (B,) int32 with -1 for "no EOS"; ``budgets``
+    (B,) int32 tokens each row may still emit; ``alive`` (B,) bool rows
+    decoding at window start. ``emits[s, i]`` marks a token the host must
+    emit; dead and free rows produce emits=False no-op steps.
+    """
+    if num_steps < 1:
+        raise ValueError(f"num_steps must be >= 1, got {num_steps}")
+
+    def multistep(frozen, adapters, quant_state, caches, tokens, positions,
+                  keys, temps, top_ks, top_ps, eos_ids, budgets, alive,
+                  live=None):
+        def step(carry, xs):
+            caches, tok, alive_c, emitted = carry
+            s, keys_s = xs
+            out = M.forward(frozen, adapters, quant_state, tok, cfg,
+                            caches=caches, positions=(positions + s)[:, None],
+                            live=live)
+            nxt = sampling.sample_tokens(
+                out.logits[:, -1, :], temps, top_ks, top_ps, keys_s)
+            emit = alive_c
+            emitted = emitted + emit.astype(jnp.int32)
+            alive_n = alive_c & (nxt != eos_ids) & (emitted < budgets)
+            tok = jnp.where(emit, nxt, tok[:, 0])[:, None]
+            return (out.caches, tok, alive_n, emitted), (nxt, emit)
+
+        carry0 = (caches, tokens, alive, jnp.zeros_like(positions))
+        xs = (jnp.arange(num_steps, dtype=jnp.int32), keys)
+        (caches, _, _, _), (toks, emits) = jax.lax.scan(step, carry0, xs)
+        return toks, emits, caches
+
+    return multistep
+
+
+def build_draft_scan(cfg: ModelConfig, num_steps: int):
+    """draft(frozen, adapters, quant_state, caches, tokens, positions,
+    keys, temps, top_ks, top_ps) -> (toks (K, B) int32, logits (K, B, V)).
+
+    ``cfg`` is the DRAFT model config (cheap-activation backend over the
+    target's frozen weights — ``serving.spec.drafter``). No death masking:
+    every proposal is provisional until verification. The final draft
+    caches are intentionally not returned — the caller verifies against
+    the pre-draft pools and commits only accepted positions.
+    """
+    if num_steps < 1:
+        raise ValueError(f"num_steps must be >= 1, got {num_steps}")
+
+    def draft(frozen, adapters, quant_state, caches, tokens, positions,
+              keys, temps, top_ks, top_ps):
+        def step(carry, xs):
+            caches, tok = carry
+            s, keys_s = xs
+            out = M.forward(frozen, adapters, quant_state, tok, cfg,
+                            caches=caches, positions=(positions + s)[:, None])
+            lg = out.logits[:, -1, :].astype(jnp.float32)
+            nxt = sampling.sample_tokens(lg, temps, top_ks, top_ps, keys_s)
+            return (out.caches, nxt[:, None]), (nxt, lg)
+
+        xs = (jnp.arange(num_steps, dtype=jnp.int32), keys)
+        _, (toks, logits) = jax.lax.scan(step, (caches, tokens), xs)
+        return toks, logits
+
+    return draft
+
+
+@functools.lru_cache(maxsize=64)
+def jit_multistep_decode(cfg: ModelConfig, num_steps: int):
+    return jax.jit(build_multistep_decode(cfg, num_steps))
+
+
+@functools.lru_cache(maxsize=64)
+def jit_draft_scan(cfg: ModelConfig, num_steps: int):
+    return jax.jit(build_draft_scan(cfg, num_steps))

@@ -1,0 +1,90 @@
+"""Speculative verification: one batched target pass scores K drafts.
+
+The verify chunk for a row is ``[t0, d_1 .. d_K]`` — the last COMMITTED
+token followed by the K draft proposals — fed at absolute positions
+``p .. p+K`` against the PRE-draft caches. The attention paths already
+handle multi-token rows (chunked prefill uses the same math): each
+position's KV is written at its cursor slot and the causal within-chunk
+mask gives position j logits conditioned on everything up to and
+including d_j. One dispatch therefore yields every conditional
+p(. | prefix, t0, d_1..d_j) for j = 0..K at once, and
+``sampling.speculative_verify`` turns those into per-row commit counts —
+greedy rows commit the target-argmax prefix (token-identical to
+sequential decode by construction), sampled rows run standard rejection
+sampling over the same filtered distributions.
+
+Rollback is free by cursor arithmetic: rejected positions' KV stays in
+the row's private blocks (COW already fenced shared prefixes) but the
+committed cursor stops at ``counts``, so attention's length mask hides
+them and the next cycle's chunk overwrites them. On the paged pool the
+host truncates the block table (``advance(i, counts)``); on the
+contiguous pool ``_shift_cursors`` rewrites the in-cache per-slot
+cursors in-graph before they leave the jitted call.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving import sampling
+
+
+def _shift_cursors(new_caches, chunk_len: int, counts, commit):
+    """Rewrite every per-slot write cursor from ``pre + chunk_len`` (the
+    forward advanced all rows by the full chunk) to ``pre + counts`` for
+    committing rows and ``pre`` for riders. Cursor leaves are the dict
+    entries named "pos" ((L, B) contiguous slot caches, (L, B) paged —
+    the paged copy is advisory: ``PagedPool.update_from`` only takes the
+    pool leaves back and the host block table is the real cursor)."""
+    shift = jnp.where(commit, counts, 0) - chunk_len            # (B,)
+
+    def fix(tree):
+        if isinstance(tree, dict):
+            return {k: (v + shift if k == "pos" else fix(v))
+                    for k, v in tree.items()}
+        return tree
+
+    return fix(new_caches)
+
+
+def build_spec_verify(cfg: ModelConfig, k: int):
+    """verify(frozen, adapters, quant_state, caches, chunk, positions,
+    draft_tokens, draft_logits, temps, top_ks, top_ps, keys, commit)
+    -> (counts (B,) int32, out_tokens (B, K+1) int32, new caches).
+
+    ``chunk`` (B, K+1) = [t0, d_1..d_K]; ``positions`` (B, K+1) absolute;
+    ``keys`` (B, K+1, 2) the row's sequential sampling keys for token
+    indices n_generated .. n_generated+K; ``commit`` (B,) bool marks rows
+    actually speculating (riders keep cursor and commit nothing —
+    ``counts`` is forced to 0 for them).
+    """
+    if k < 1:
+        raise ValueError(f"spec_k must be >= 1, got {k}")
+
+    def verify(frozen, adapters, quant_state, caches, chunk, positions,
+               draft_tokens, draft_logits, temps, top_ks, top_ps, keys,
+               commit):
+        # exact_kv_reads: the chunk must score each draft against the SAME
+        # (quantized, on int8 pools) KV bytes sequential decode would have
+        # read — greedy token-identity is only "by construction" when the
+        # two paths see identical inputs.
+        out = M.forward(frozen, adapters, quant_state, chunk, cfg,
+                        caches=caches, positions=positions,
+                        exact_kv_reads=True)
+        counts, out_toks = sampling.speculative_verify(
+            out.logits.astype(jnp.float32), draft_tokens, draft_logits,
+            temps, top_ks, top_ps, keys)
+        counts = jnp.where(commit, counts, 0)
+        new_caches = _shift_cursors(out.caches, k + 1, counts, commit)
+        return counts, out_toks, new_caches
+
+    return verify
+
+
+@functools.lru_cache(maxsize=64)
+def jit_spec_verify(cfg: ModelConfig, k: int):
+    return jax.jit(build_spec_verify(cfg, k))

@@ -32,7 +32,7 @@ def test_rule_catalogue():
     rules = get_rules()
     assert [r.rule_id for r in rules] == [
         "RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006",
-        "RPR010",
+        "RPR009", "RPR010",
     ]
     assert all(r.severity in ("error", "warning") for r in rules)
     assert all(r.description for r in rules)
@@ -564,6 +564,103 @@ def test_rpr006_unregistered_backend():
     assert len(msgs) == 1 and "never registered" in msgs[0]
 
 
+# ------------------------------------------------------------------ RPR009
+
+
+KERNEL_MOD = """
+    def fit_block(n, cap):                       # no interpret param
+        return min(n, cap)
+
+    def _rowmax_kernel(x_ref, o_ref):            # private helper
+        pass
+
+    def rowmax_fused(x, *, interpret=False):
+        return x
+
+    def scale_quant_fused(x, scales, *, interpret=False):
+        return x * scales
+"""
+
+COVERING_TEST = """
+    from pkg.kernels.quant import rowmax_fused, scale_quant_fused
+
+    def test_rowmax():
+        assert rowmax_fused(1, interpret=True)
+
+    def test_scale_quant():
+        assert scale_quant_fused(2, 3, interpret=True)
+"""
+
+PARTIAL_TEST = """
+    from pkg.kernels.quant import rowmax_fused, scale_quant_fused
+
+    def test_rowmax():
+        assert rowmax_fused(1, interpret=True)
+
+    def test_scale_quant_compiled_only():
+        assert scale_quant_fused(2, 3, interpret=False)
+"""
+
+FOREIGN_TEST = """
+    from other.helpers import scale_quant_fused
+    from pkg.kernels.quant import rowmax_fused
+
+    def test_rowmax():
+        assert rowmax_fused(1, interpret=True)
+
+    def test_unrelated_same_name():
+        assert scale_quant_fused(2, 3, interpret=True)
+"""
+
+
+def _run_interpret(tmp_path, test_src, kernel_src=KERNEL_MOD):
+    kdir = tmp_path / "src" / "pkg" / "kernels"
+    kdir.mkdir(parents=True)
+    (kdir / "quant.py").write_text(textwrap.dedent(kernel_src))
+    tdir = tmp_path / "tests"
+    tdir.mkdir()
+    (tdir / "test_quant.py").write_text(textwrap.dedent(test_src))
+    findings, _ = analyze_paths(
+        [str(tmp_path / "src"), str(tmp_path / "tests")], select=["RPR009"])
+    return findings
+
+
+def test_rpr009_covered_wrappers_pass(tmp_path):
+    assert _run_interpret(tmp_path, COVERING_TEST) == []
+
+
+def test_rpr009_uncovered_wrapper_flagged(tmp_path):
+    findings = _run_interpret(tmp_path, PARTIAL_TEST)
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.rule_id == "RPR009" and f.severity == "error"
+    assert "scale_quant_fused" in f.message and f.path.endswith("quant.py")
+
+
+def test_rpr009_foreign_same_name_does_not_vouch(tmp_path):
+    # interpret=True on an identically-named function imported from a
+    # different package must not count as coverage of the kernel wrapper
+    msgs = [f.message for f in _run_interpret(tmp_path, FOREIGN_TEST)]
+    assert len(msgs) == 1 and "scale_quant_fused" in msgs[0]
+
+
+def test_rpr009_silent_without_test_modules(tmp_path):
+    kdir = tmp_path / "src" / "pkg" / "kernels"
+    kdir.mkdir(parents=True)
+    (kdir / "quant.py").write_text(textwrap.dedent(KERNEL_MOD))
+    findings, _ = analyze_paths([str(tmp_path / "src")], select=["RPR009"])
+    assert findings == []  # coverage is unknowable with no tests analyzed
+
+
+def test_rpr009_noqa_suppression(tmp_path):
+    noqa_kernel = KERNEL_MOD.replace(
+        "def scale_quant_fused(x, scales, *, interpret=False):",
+        "def scale_quant_fused(x, scales, *, interpret=False):"
+        "  # repro: noqa[RPR009] GPU-only",
+    )
+    assert _run_interpret(tmp_path, PARTIAL_TEST, noqa_kernel) == []
+
+
 # ------------------------------------------------------------------ RPR010
 
 
@@ -745,7 +842,7 @@ def test_cli_list_rules(capsys):
     assert cli_main(["--list-rules"]) == 0
     out = capsys.readouterr().out
     for rid in ("RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006",
-                "RPR010"):
+                "RPR009", "RPR010"):
         assert rid in out
 
 

@@ -1,0 +1,283 @@
+"""serving.spec: multi-step scheduled decode and self-speculative decoding.
+
+The contract under test is TOKEN IDENTITY: for greedy requests, a
+``decode_steps=N`` engine and a ``spec_decode`` engine must emit exactly
+the byte-for-byte streams of the classic one-token-per-dispatch engine on
+the SAME kv layout — across contiguous/paged/int8 pools, mid-decode
+admission, EOS inside a scheduled window, and prefix sharing. Seeded
+sampling must survive multi-step scheduling unchanged (same per-token key
+derivation); speculative sampling is distributionally correct, so sampled
+rows only get shape/termination checks here.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.peft import PEFTConfig
+from repro.data.pipeline import DataConfig, Loader, calibration_batches
+from repro.models.config import ModelConfig, QuantConfig
+from repro.serving import Engine, GenerationRequest, SamplingParams
+from repro.serving.config import EngineConfig
+from repro.serving.spec import draft_model_config, parse_spec_backend
+
+VOCAB, PROMPT, MAX_NEW = 128, 8, 8
+
+LAYOUTS = {
+    "contiguous": {},
+    "paged": {"kv_layout": "paged"},
+    "paged-int8": {"kv_layout": "paged", "kv_dtype": "int8"},
+    "paged-prefix": {"kv_layout": "paged", "prefix_share": True},
+}
+
+
+def _tiny_cfg(mode="fp32"):
+    return ModelConfig(
+        name="spec-test", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=VOCAB, head_dim=16,
+        quant=QuantConfig(mode=mode),
+        peft=PEFTConfig(method="lora", lora_rank=4))
+
+
+@pytest.fixture(scope="module")
+def quaff_model():
+    dcfg = DataConfig(vocab_size=VOCAB, seq_len=PROMPT, batch_size=4)
+    model = api.prepare(_tiny_cfg())
+    model.calibrate(calibration_batches(dcfg, 2))
+    model.convert("quaff")
+    return model
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    return np.asarray(Loader(DataConfig(vocab_size=VOCAB, seq_len=PROMPT,
+                                        batch_size=4)).batch(0)["tokens"])
+
+
+def _engine(model, **kw):
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_seq_len", PROMPT + MAX_NEW)
+    return Engine(model, EngineConfig(**kw))
+
+
+def _run(model, prompts, cfg_kw, sampling=None, eos_id=None,
+         max_new=MAX_NEW):
+    eng = _engine(model, **cfg_kw)
+    outs = eng.run([
+        GenerationRequest(p, max_new_tokens=max_new, eos_id=eos_id,
+                          sampling=sampling or SamplingParams())
+        for p in prompts])
+    return outs, eng
+
+
+def _token_matrix(outs):
+    width = max(len(o.token_ids) for o in outs)
+    return np.asarray([list(o.token_ids) + [-1] * (width - len(o.token_ids))
+                       for o in outs])
+
+
+# ---------------------------------------------------------------------------
+# multi-step scheduled decode
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("layout", sorted(LAYOUTS), ids=sorted(LAYOUTS))
+def test_multistep_greedy_parity(quaff_model, prompts, layout):
+    """decode_steps=4 must be token-identical to decode_steps=1 on the
+    same kv layout — the in-graph EOS/budget masking is a pure reshaping
+    of the dispatch schedule, never of the math."""
+    base, _ = _run(quaff_model, prompts, LAYOUTS[layout])
+    got, eng = _run(quaff_model, prompts,
+                    {**LAYOUTS[layout], "decode_steps": 4})
+    np.testing.assert_array_equal(_token_matrix(base), _token_matrix(got))
+    d = eng.stats.as_dict()
+    assert d["steps_per_dispatch"] > 1.0
+    assert eng.stats.decode_dispatches < eng.stats.decode_steps
+
+
+def test_multistep_mid_decode_admission(quaff_model, prompts):
+    """Requests admitted while others sit mid-window decode the same
+    streams as a fresh batch — scan windows never perturb live slots."""
+    base, _ = _run(quaff_model, prompts, {})
+    eng = _engine(quaff_model, max_slots=2, decode_steps=3)
+    for i in range(2):
+        eng.submit(GenerationRequest(prompts[i], max_new_tokens=MAX_NEW,
+                                     request_id=f"r{i}"))
+    eng.step()
+    eng.step()                          # two requests now mid-generation
+    for i in range(2, 4):
+        eng.submit(GenerationRequest(prompts[i], max_new_tokens=MAX_NEW,
+                                     request_id=f"r{i}"))
+    outs = {o.request_id: o for o in eng.run()}
+    got = np.asarray([outs[f"r{i}"].token_ids for i in range(4)])
+    np.testing.assert_array_equal(_token_matrix(base), got)
+
+
+def test_multistep_eos_mid_window(quaff_model, prompts):
+    """A row hitting EOS inside a scheduled window must stop exactly where
+    the one-step engine stops, and the window's remaining iterations must
+    not leak tokens into its stream."""
+    base, _ = _run(quaff_model, prompts, {})
+    eos = int(_token_matrix(base)[0][2])   # forces a mid-window stop
+    ref, _ = _run(quaff_model, prompts, {}, eos_id=eos)
+    got, _ = _run(quaff_model, prompts, {"decode_steps": 4}, eos_id=eos)
+    np.testing.assert_array_equal(_token_matrix(ref), _token_matrix(got))
+    assert [o.finish_reason for o in ref] == [o.finish_reason for o in got]
+    assert any(o.finish_reason == "eos" for o in got)
+    assert any(len(o.token_ids) < MAX_NEW for o in got)
+
+
+def test_multistep_seeded_sampling_parity(quaff_model, prompts):
+    """Seeded sampling keys are derived per TOKEN INDEX, not per dispatch,
+    so the scan window must reproduce the sequential draws exactly."""
+    sp = SamplingParams(temperature=0.9, top_k=20, top_p=0.95, seed=13)
+    base, _ = _run(quaff_model, prompts, {}, sampling=sp)
+    got, _ = _run(quaff_model, prompts, {"decode_steps": 3}, sampling=sp)
+    np.testing.assert_array_equal(_token_matrix(base), _token_matrix(got))
+
+
+# ---------------------------------------------------------------------------
+# self-speculative decoding
+# ---------------------------------------------------------------------------
+SPEC = {"spec_decode": True, "spec_backend": "quaff@8", "spec_k": 3}
+
+
+@pytest.mark.parametrize("layout", sorted(LAYOUTS), ids=sorted(LAYOUTS))
+def test_spec_greedy_identity(quaff_model, prompts, layout):
+    """The acceptance criterion: greedy spec decode is token-identical to
+    non-speculative decode — for fp AND int8 KV (the verify chunk reads
+    the same quantized bytes sequential decode would have read)."""
+    base, _ = _run(quaff_model, prompts, LAYOUTS[layout])
+    got, eng = _run(quaff_model, prompts, {**LAYOUTS[layout], **SPEC})
+    np.testing.assert_array_equal(_token_matrix(base), _token_matrix(got))
+    d = eng.stats.as_dict()
+    assert d["acceptance_rate"] > 0.0
+    assert d["steps_per_dispatch"] > 0.5
+    assert eng.stats.draft_tokens > 0
+    assert eng.stats.accepted_tokens > 0
+
+
+def test_spec_eos_and_budget_rollback(quaff_model, prompts):
+    """EOS inside an accepted draft run and budgets not divisible by the
+    cycle length both truncate exactly like sequential decode."""
+    base, _ = _run(quaff_model, prompts, {}, max_new=7)
+    eos = int(_token_matrix(base)[1][3])
+    ref, _ = _run(quaff_model, prompts, {}, eos_id=eos, max_new=7)
+    got, _ = _run(quaff_model, prompts, SPEC, eos_id=eos, max_new=7)
+    np.testing.assert_array_equal(_token_matrix(ref), _token_matrix(got))
+    assert [o.finish_reason for o in ref] == [o.finish_reason for o in got]
+
+
+def test_spec_per_request_sampling_composes(quaff_model, prompts):
+    """Greedy and seeded-sampled requests share one spec engine: greedy
+    rows keep token identity; sampled rows run rejection sampling
+    (distributionally correct, not bit-identical) and must still
+    terminate with full budgets."""
+    base, _ = _run(quaff_model, prompts, {})
+    sps = [SamplingParams(),
+           SamplingParams(temperature=0.8, top_k=16, seed=7),
+           SamplingParams(),
+           SamplingParams(temperature=1.1, top_p=0.9, seed=11)]
+    eng = _engine(quaff_model, **SPEC)
+    outs = eng.run([GenerationRequest(p, max_new_tokens=MAX_NEW, sampling=sp)
+                    for p, sp in zip(prompts, sps)])
+    got = _token_matrix(outs)
+    for i in (0, 2):                      # greedy rows: exact identity
+        np.testing.assert_array_equal(_token_matrix(base)[i], got[i])
+    for o in outs:
+        assert len(o.token_ids) == MAX_NEW
+        assert all(0 <= t < VOCAB for t in o.token_ids)
+
+
+def test_spec_stats_gating(quaff_model, prompts):
+    """as_dict only grows the new sections when the features are on."""
+    _, plain = _run(quaff_model, prompts, {})
+    d = plain.stats.as_dict()
+    assert "steps_per_dispatch" not in d and "acceptance_rate" not in d
+
+    _, ms = _run(quaff_model, prompts, {"decode_steps": 2})
+    d = ms.stats.as_dict()
+    assert "steps_per_dispatch" in d and "acceptance_rate" not in d
+
+    _, spec = _run(quaff_model, prompts, SPEC)
+    d = spec.stats.as_dict()
+    assert d["spec_backend"] == "quaff@8"
+    assert d["spec_k"] == 3
+    assert 0.0 < d["acceptance_rate"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# config + backend-pairing validation
+# ---------------------------------------------------------------------------
+def test_config_validation():
+    kw = dict(max_slots=2, max_seq_len=32)
+    with pytest.raises(ValueError):
+        EngineConfig(decode_steps=0, **kw)
+    with pytest.raises(ValueError):
+        EngineConfig(spec_decode=True, **kw)            # backend required
+    with pytest.raises(ValueError):
+        EngineConfig(spec_backend="quaff@8", **kw)      # spec_decode off
+    with pytest.raises(ValueError):
+        EngineConfig(spec_decode=True, spec_backend="quaff@8", spec_k=0,
+                     **kw)
+    with pytest.raises(ValueError):                     # mutually exclusive
+        EngineConfig(spec_decode=True, spec_backend="quaff@8",
+                     decode_steps=2, **kw)
+
+
+def test_parse_spec_backend():
+    assert parse_spec_backend("quaff") == ("quaff", None)
+    assert parse_spec_backend("quaff@4") == ("quaff", 4)
+    assert parse_spec_backend("int4") == ("int4", None)
+    for bad in ("", "@4", "quaff@x", "quaff@0"):
+        with pytest.raises(ValueError):
+            parse_spec_backend(bad)
+
+
+def test_draft_config_carrier_pairing():
+    cfg = _tiny_cfg()
+    quaff_cfg = dataclasses.replace(
+        cfg, quant=dataclasses.replace(cfg.quant, mode="quaff"))
+    draft = draft_model_config(quaff_cfg, "quaff@4")
+    assert draft.quant.mode == "quaff" and draft.quant.bits == 4
+    assert draft.d_model == quaff_cfg.d_model
+    # int4 weights cannot be drafted by a backend reading fp/quaff trees
+    int4_cfg = dataclasses.replace(
+        cfg, quant=dataclasses.replace(cfg.quant, mode="int4_w4a8"))
+    with pytest.raises(ValueError, match="carrier"):
+        draft_model_config(int4_cfg, "quaff@8")
+
+
+def test_spec_engine_rejects_mismatched_carrier(quaff_model):
+    with pytest.raises(ValueError, match="carrier"):
+        _engine(quaff_model, spec_decode=True, spec_backend="int4")
+
+
+# ---------------------------------------------------------------------------
+# prefix-cache invalidation on weight updates (satellite of this PR)
+# ---------------------------------------------------------------------------
+def test_weights_version_bump_rescopes_radix(quaff_model, prompts):
+    """After a finetune/convert bumps ``model.weights_version``, the next
+    engine step must drop every radix-cached block automatically — stale
+    prefix KV from the old weights can never be mapped into new requests."""
+    eng = _engine(quaff_model, kv_layout="paged", prefix_share=True,
+                  block_size=4)
+    eng.run([GenerationRequest(prompts[0], max_new_tokens=4)])  # warm it
+    eng.run([GenerationRequest(prompts[0], max_new_tokens=4)
+             for _ in range(2)])
+    assert eng.stats.prefix_hits > 0          # the cache is warm and used
+    old_scope = eng._paged.radix.scope
+    warm_blocks = eng._paged.radix.n_blocks
+    assert warm_blocks > 0
+
+    version = quaff_model.weights_version
+    try:
+        quaff_model.weights_version = version + 1   # what finetune() does
+        eng.run([GenerationRequest(prompts[0], max_new_tokens=4)])
+        assert eng._paged.radix.scope != old_scope
+
+        # same-version re-runs keep the scope (no spurious flushes)
+        scope = eng._paged.radix.scope
+        eng.run([GenerationRequest(prompts[0], max_new_tokens=4)])
+        assert eng._paged.radix.scope == scope
+    finally:
+        quaff_model.weights_version = version       # module-scoped fixture

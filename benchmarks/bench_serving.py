@@ -49,8 +49,26 @@ import numpy as np
 
 import common
 from repro import api
+from repro import obs as OBS
 from repro.data.pipeline import DataConfig, Loader
 from repro.serving import EngineConfig, GenerationRequest, SamplingParams
+
+
+def _metrics_obs():
+    return OBS.Obs.from_config(OBS.ObsConfig(metrics=True))
+
+
+def _latency_rows(obs, suffix):
+    """p50/p95 TTFT + inter-token latency rows off the engine's obs
+    histograms (us_per_call column = p95 in µs, the tail the row gates)."""
+    rows = []
+    for kind, hist in (("ttft", "ttft_s"), ("itl", "itl_s")):
+        h = obs.metrics.histogram(hist)
+        p50, p95 = h.percentile(50.0), h.percentile(95.0)
+        rows.append((f"serving_{kind}_{suffix}", p95 * 1e6,
+                     f"p50={p50 * 1e3:.2f}ms p95={p95 * 1e3:.2f}ms "
+                     f"n={h.as_dict()['count']}"))
+    return rows
 
 
 def _lockstep_tokens(model, prompts, max_new):
@@ -194,7 +212,8 @@ def run(mode: str = "quaff", tiny: bool = False,
                                   max_new_tokens=short if i % 2 else max_new)
                 for i in range(n_req)]
 
-    eng2 = model.engine(ecfg(slots), fresh=True)
+    obs2 = _metrics_obs()
+    eng2 = model.engine(ecfg(slots), fresh=True, obs=obs2)
     outs2 = eng2.run(mixed_reqs())
     st = eng2.stats
     lockstep_slot_steps = n_req * max_new
@@ -210,6 +229,8 @@ def run(mode: str = "quaff", tiny: bool = False,
             "serving_dense_state_bytes", 0.0,
             f"family=dense state_bytes_per_slot={st.state_bytes_per_slot} "
             f"kv_row_equiv={st.contiguous_bytes_per_request}"))
+        rows += _latency_rows(obs2, "contiguous")
+        extra["latency_contiguous"] = obs2.metrics.snapshot()["histograms"]
 
     # ---- paged telemetry: per-request KV bytes vs the contiguous row -----
     if paged:
@@ -218,12 +239,14 @@ def run(mode: str = "quaff", tiny: bool = False,
         # throughput rows — reuse eng2 when it already is the right one
         def mixed_paged(dtype):
             if kv_dtype == dtype:
-                return outs2, st
-            eng = model.engine(ecfg(slots, kv_dtype=dtype), fresh=True)
+                return outs2, st, obs2
+            obs = _metrics_obs()
+            eng = model.engine(ecfg(slots, kv_dtype=dtype), fresh=True,
+                               obs=obs)
             outs = eng.run(mixed_reqs())
-            return outs, eng.stats
+            return outs, eng.stats, obs
 
-        outs_fp, st_fp = mixed_paged("fp")
+        outs_fp, st_fp, _ = mixed_paged("fp")
         rows.append((
             "serving_paged_kv_bytes", 0.0,
             f"bytes_per_req={st_fp.kv_bytes_per_request:.0f}"
@@ -233,7 +256,7 @@ def run(mode: str = "quaff", tiny: bool = False,
         # int8 sibling of the same mixed workload: ~4x fewer KV bytes on
         # top of the paging win (greedy tokens may shift within int8
         # precision on this random micro model; the bytes are the gate)
-        outs4, st4 = mixed_paged("int8")
+        outs4, st4, obs4 = mixed_paged("int8")
         same = sum(int(np.array_equal(a.token_ids, b.token_ids))
                    for a, b in zip(outs_fp, outs4))
         rows.append((
@@ -243,6 +266,8 @@ def run(mode: str = "quaff", tiny: bool = False,
             f"<{st_fp.kv_bytes_per_request:.0f}=paged_fp "
             f"streams_matching_fp={same}/{n_req}"))
         extra["int8_stats"] = st4.as_dict()
+        rows += _latency_rows(obs4, "paged_int8")
+        extra["latency_paged_int8"] = obs4.metrics.snapshot()["histograms"]
 
     # ---- seeded sampling path (throughput only) --------------------------
     eng3 = model.engine(ecfg(slots), fresh=True)

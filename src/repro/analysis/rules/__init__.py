@@ -16,6 +16,7 @@ from repro.analysis.rules import (
     rpr006_backend,
     rpr009_interpret,
     rpr010_facade,
+    rpr011_timing,
 )
 
 __all__ = [
@@ -27,4 +28,5 @@ __all__ = [
     "rpr006_backend",
     "rpr009_interpret",
     "rpr010_facade",
+    "rpr011_timing",
 ]

@@ -1,0 +1,80 @@
+"""RPR011 — runtime timing in ``src/repro/`` must go through ``repro.obs``.
+
+The observability layer (``repro/obs/``) owns the monotonic clock:
+``obs.clock.now()`` is the one sanctioned ``time.perf_counter`` site, and
+``Obs.phase_begin``/``phase_end`` share a single clock read between the
+``EngineStats`` accumulators, the Chrome-trace span, and the latency
+histograms. A stray ``time.perf_counter()`` (or ``time.monotonic()``)
+elsewhere in the library splinters that contract three ways:
+
+  * the measurement is invisible to traces and metrics (a phantom cost
+    no exported artifact accounts for);
+  * tests cannot fake it — ``obs.clock.set_source`` swaps the clock for
+    deterministic fakes, but only for call sites that use it;
+  * disabled-mode guarantees break silently: ``Obs`` promises that a
+    null observer adds *zero* extra timer calls, which is only auditable
+    when every timer call is routed through the one module.
+
+Flagged: calls resolving to ``time.perf_counter``, ``time.monotonic``
+(and their ``_ns`` variants) in modules under a ``repro`` package
+directory, excluding ``repro/obs/`` itself. Tests, benchmarks, and
+examples are outside the library and exempt. Wall-clock calls
+(``time.time``) are not flagged — they mean calendar time (heartbeats,
+artifact stamps), not durations.
+
+Fix: use ``repro.obs.clock.now()`` for raw timestamps, or an
+``Obs.phase_begin``/``phase_end`` pair when the duration should also
+feed a trace span and a histogram. Suppress a deliberate exception with
+``# repro: noqa[RPR011]`` and a justifying comment.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.context import ModuleContext
+from repro.analysis.registry import Rule, register
+
+CLOCK_CALLS = frozenset(
+    {
+        "time.perf_counter",
+        "time.perf_counter_ns",
+        "time.monotonic",
+        "time.monotonic_ns",
+    }
+)
+
+
+def _path_segments(relpath: str) -> List[str]:
+    return relpath.replace("\\", "/").split("/")
+
+
+def _in_scope(ctx: ModuleContext) -> bool:
+    """Library modules only: under a ``repro`` dir but not ``repro/obs/``."""
+    dirs = _path_segments(ctx.relpath)[:-1]
+    return "repro" in dirs and "obs" not in dirs
+
+
+@register
+class MonotonicClockOutsideObs(Rule):
+    rule_id = "RPR011"
+    severity = "error"
+    description = (
+        "time.perf_counter/time.monotonic in src/repro/ outside obs/ — "
+        "route timing through repro.obs.clock (or Obs.phase_begin/end)"
+    )
+
+    def check_module(self, ctx: ModuleContext):
+        if not _in_scope(ctx):
+            return
+        for call in ctx.calls():
+            qn = ctx.call_qualname(call)
+            if qn in CLOCK_CALLS:
+                yield self.finding(
+                    ctx,
+                    call,
+                    f"direct {qn}() call in library code — timing must go "
+                    "through repro.obs.clock.now() (testable via "
+                    "set_source) or an Obs.phase_begin/phase_end pair so "
+                    "the same clock read feeds stats, trace, and metrics",
+                )

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as OBS
 from repro.core import backend as BK
 from repro.models import model as M
 from repro.models.config import ModelConfig, QuantConfig, TrainConfig
@@ -79,6 +80,9 @@ class QuaffModel:
         self.adapters = adapters
         self.quant_state = quant_state
         self.stats = None           # calibration artifacts (absmax, scores)
+        #: OSSH drift observations from finetune(ossh_monitor_every=N):
+        #: list of (step, {layer: obs.LayerDrift}) in observation order
+        self.ossh_drift: List[Any] = []
         #: monotonic counter over served-weight changes: finetune()/convert()
         #: bump it, and a serving Engine watching this model re-scopes its
         #: prefix cache on the next step (stale KV auto-invalidation)
@@ -137,7 +141,8 @@ class QuaffModel:
     # ---- training -------------------------------------------------------
     def finetune(self, tcfg: TrainConfig, loader, steps: int,
                  start_step: Optional[int] = None,
-                 log_every: int = 0) -> List[float]:
+                 log_every: int = 0, obs=None,
+                 ossh_monitor_every: int = 0) -> List[float]:
         """Run ``steps`` train steps (adapters + quant state advance in
         place); returns the per-step loss history.
 
@@ -145,7 +150,15 @@ class QuaffModel:
         moments, the step counter (which also keys dropout), and the data
         position carry over — including across a ``save``/``load`` pair. A
         different ``tcfg`` re-initializes the optimizer. ``start_step`` only
-        overrides the loader batch index."""
+        overrides the loader batch index.
+
+        ``obs`` (a ``repro.obs.Obs``) wraps each step in a ``train_step``
+        span and receives the drift telemetry. ``ossh_monitor_every=N``
+        turns on the OSSH drift monitor: every N steps the outlier channel
+        sets are recomputed on a fixed monitor batch and diffed against
+        the calibration sets (requires ``calibrate()`` to have run on this
+        model); observations accumulate on ``self.ossh_drift`` as
+        ``(step, {layer: LayerDrift})`` pairs."""
         if self._train_state is None or tcfg != self._train_tcfg:
             self._train_state = S.init_train_state(self.adapters,
                                                    self.quant_state, tcfg)
@@ -153,16 +166,38 @@ class QuaffModel:
             self._train_tcfg = tcfg
         elif self._step_fn is None:     # restored state (load) — re-jit only
             self._step_fn = jax.jit(S.build_train_step(self.cfg, tcfg))
+        obs = obs if obs is not None else OBS.NULL_OBS
         state = self._train_state
         begin = int(state.step) if start_step is None else start_step
+        monitor = None
+        if ossh_monitor_every:
+            if self.stats is None:
+                raise ValueError(
+                    "ossh_monitor_every needs the calibration outlier sets "
+                    "as the drift baseline; call .calibrate(batches) (before "
+                    ".convert) so model.stats is populated")
+            monitor = OBS.DriftMonitor(
+                self.frozen, self.cfg, self.stats,
+                tokens=loader.batch(begin)["tokens"],
+                ratio=self.cfg.quant.outlier_ratio, obs=obs)
         losses = []  # device arrays; host sync deferred to the end
         for i in range(begin, begin + steps):
             batch = jax.tree.map(jnp.asarray, loader.batch(i))
-            state, metrics = self._step_fn(self.frozen, state, batch)
+            with obs.span("train_step", cat="train", tid=OBS.TID_TRAIN,
+                          step=i):
+                state, metrics = self._step_fn(self.frozen, state, batch)
             losses.append(metrics["loss"])
             if log_every and i % log_every == 0:
                 print(f"step {i:5d}  loss {float(metrics['loss']):.4f}  "
                       f"gnorm {float(metrics['grad_norm']):.3f}")
+            if monitor is not None and (i - begin + 1) % ossh_monitor_every == 0:
+                with obs.span("ossh_monitor", cat="train",
+                              tid=OBS.TID_TRAIN, step=i):
+                    drifts = monitor.observe(state.adapters, state.quant,
+                                             step=i)
+                self.ossh_drift.append((i, drifts))
+                if log_every:
+                    print(OBS.format_report(drifts, step=i))
         self._train_state = state
         self.adapters = state.adapters
         self.quant_state = state.quant
@@ -263,7 +298,7 @@ class QuaffModel:
                                caches, token, jnp.asarray(pos, jnp.int32))
 
     # ---- serving ---------------------------------------------------------
-    def engine(self, cfg=None, fresh: bool = False, **legacy):
+    def engine(self, cfg=None, fresh: bool = False, obs=None, **legacy):
         """A ``repro.serving.Engine`` over this model (continuous batching:
         slot-pooled decode state for every family, mid-decode admission,
         per-request sampling). ``cfg`` is a ``serving.EngineConfig`` — THE
@@ -279,7 +314,12 @@ class QuaffModel:
         legacy kwargs or the dataclass) share one compiled engine.
         Oldest-evicted beyond ``_MAX_CACHED_ENGINES``, since each engine
         pins a device KV pool; ``fresh=True`` bypasses the cache (e.g. for
-        independent ``EngineStats``)."""
+        independent ``EngineStats``).
+
+        ``obs`` (a ``repro.obs.Obs``) attaches tracing/metrics. It is NOT
+        part of the cache key — a cache hit rebinds the cached engine's
+        handle when ``obs`` is given and leaves it untouched when omitted,
+        so observability never forces a pool rebuild."""
         from repro.serving import Engine, EngineConfig
         from repro.serving.config import from_legacy_kwargs
         if cfg is None:
@@ -292,11 +332,13 @@ class QuaffModel:
                 "not both")
         eng = None if fresh else self._engines.get(cfg)
         if eng is None:
-            eng = Engine(self, cfg)
+            eng = Engine(self, cfg, obs=obs)
             if not fresh:
                 while len(self._engines) >= self._MAX_CACHED_ENGINES:
                     self._engines.pop(next(iter(self._engines)))
                 self._engines[cfg] = eng
+        elif obs is not None:
+            eng.set_obs(obs)
         return eng
 
     def generate(self, tokens, max_new: int = 32,

@@ -45,6 +45,7 @@ import dataclasses
 import numpy as np
 
 from repro import api
+from repro import obs as OBS
 from repro.configs import get_config
 from repro.core.peft import PEFTConfig, n_prefix_tokens
 from repro.data.pipeline import DataConfig, Loader
@@ -108,6 +109,14 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--stream", action="store_true",
                     help="print per-token stream events for request 0")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(load in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write a metrics snapshot (TTFT/ITL/queue/e2e "
+                         "histograms + engine counters)")
+    ap.add_argument("--metrics-fmt", default="json",
+                    choices=["json", "prometheus"])
     args = ap.parse_args()
 
     if args.load:
@@ -169,7 +178,14 @@ def main():
                         spec_decode=args.spec_decode,
                         spec_backend=args.spec_backend,
                         spec_k=args.spec_k)
-    engine = model.engine(ecfg, fresh=True)
+    obs = None
+    if args.trace_out or args.metrics_out:
+        # metrics ride along whenever tracing is on (and vice versa isn't
+        # forced) — the latency summary below needs the histograms
+        obs = OBS.Obs.from_config(OBS.ObsConfig(
+            trace_path=args.trace_out, metrics=True,
+            metrics_path=args.metrics_out, metrics_fmt=args.metrics_fmt))
+    engine = model.engine(ecfg, fresh=True, obs=obs)
     outs = engine.run(reqs)
 
     st = engine.stats
@@ -217,10 +233,23 @@ def main():
         print(f"state-pool: {st.state_bytes_per_slot/1024:.1f} KiB/slot "
               f"({st.state_dtype}; fp equivalent "
               f"{st.fp_state_bytes_per_slot/1024:.1f} KiB)")
+    if obs is not None and obs.metrics is not None:
+        def pct(name, p):
+            return obs.metrics.histogram(name).percentile(p) * 1e3
+        print(f"latency : ttft p50 {pct('ttft_s', 50):.1f}ms / "
+              f"p95 {pct('ttft_s', 95):.1f}ms — itl p50 "
+              f"{pct('itl_s', 50):.1f}ms / p95 {pct('itl_s', 95):.1f}ms — "
+              f"queue p95 {pct('queue_s', 95):.1f}ms — "
+              f"e2e p95 {pct('e2e_s', 95):.1f}ms")
     for o in outs[:3]:
         print(f"  {o.request_id}: prompt {o.prompt_len} -> "
               f"{o.n_generated} tokens ({o.finish_reason}) "
+              f"queue {o.queue_s*1e3:.1f}ms ttft {o.ttft_s*1e3:.1f}ms "
+              f"e2e {o.e2e_s*1e3:.1f}ms "
               f"{o.token_ids[:8]}{'...' if o.n_generated > 8 else ''}")
+    if obs is not None:
+        for kind, path in obs.export().items():
+            print(f"[obs] {kind} written to {path}")
 
 
 if __name__ == "__main__":

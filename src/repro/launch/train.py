@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import api
+from repro import obs as OBS
 from repro.checkpoint.manager import CheckpointManager, config_fingerprint
 from repro.configs import get_config
 from repro.core.peft import PEFTConfig
@@ -82,6 +83,17 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--crash-at", type=int, default=0,
                     help="fault-injection: raise at this step (testing)")
+    ap.add_argument("--ossh-monitor-every", type=int, default=0,
+                    metavar="N",
+                    help="every N steps, recompute the top-k outlier "
+                         "channel sets and report Jaccard overlap vs the "
+                         "calibration sets (OSSH drift; quantized modes "
+                         "only)")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write a Chrome trace-event JSON of the run")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write a metrics snapshot (step timing + OSSH "
+                         "drift gauges)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -125,26 +137,52 @@ def main():
     hb_path = os.path.join(args.ckpt_dir, "heartbeat.json")
     os.makedirs(args.ckpt_dir, exist_ok=True)
 
+    obs = OBS.NULL_OBS
+    if args.trace_out or args.metrics_out:
+        obs = OBS.Obs.from_config(OBS.ObsConfig(
+            trace_path=args.trace_out, metrics=True,
+            metrics_path=args.metrics_out))
+    monitor = None
+    if args.ossh_monitor_every:
+        if model.stats is None:
+            print("[obs] --ossh-monitor-every ignored: no calibration "
+                  "stats (fp32 mode has no outlier sets to drift)")
+        else:
+            monitor = OBS.DriftMonitor(
+                frozen, cfg, model.stats,
+                tokens=loader.batch(0)["tokens"],
+                ratio=cfg.quant.outlier_ratio, obs=obs)
+
     for i in range(start, args.steps):
         if args.crash_at and i == args.crash_at:
             raise RuntimeError(f"fault injection at step {i}")
-        t0 = time.perf_counter()
+        t0 = obs.phase_begin("train_step", cat="train",
+                             tid=OBS.TID_TRAIN, step=i)
         batch = jax.tree.map(jnp.asarray, loader.batch(i))
         state, metrics = step_fn(frozen, state, batch)
         jax.block_until_ready(metrics["loss"])
-        dt = time.perf_counter() - t0
+        dt = obs.phase_end("train_step", t0, cat="train",
+                           tid=OBS.TID_TRAIN, hist="train_step_s")
         watchdog.observe(i, dt)
         heartbeat(hb_path, i)
         if i % args.log_every == 0 or i == args.steps - 1:
             print(f"step {i:5d} loss {float(metrics['loss']):.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "
                   f"{dt*1e3:.0f}ms")
+        if monitor is not None and (i + 1) % args.ossh_monitor_every == 0:
+            with obs.span("ossh_monitor", cat="train", tid=OBS.TID_TRAIN,
+                          step=i):
+                drifts = monitor.observe(state.adapters, state.quant,
+                                         step=i)
+            print(OBS.format_report(drifts, step=i))
         if (i + 1) % args.ckpt_every == 0:
             mgr.save(i + 1, state, {"arch": cfg.name,
                                     "config_fingerprint": fp})
     mgr.save(args.steps, state, {"arch": cfg.name, "final": True,
                                  "config_fingerprint": fp})
     mgr.wait()
+    for kind, path in obs.export().items():
+        print(f"[obs] {kind} written to {path}")
     print(f"[done] {args.steps} steps; stragglers flagged: "
           f"{len(watchdog.flagged)}; checkpoints in {args.ckpt_dir}")
 

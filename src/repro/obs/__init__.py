@@ -1,0 +1,222 @@
+"""repro.obs — unified tracing + metrics + OSSH drift telemetry.
+
+One object (:class:`Obs`) carries the whole observability surface through
+the stack: the engine, the train loops and the launchers all take an
+``obs=`` handle and never construct their own timers. Three layers:
+
+  * ``obs.clock`` — THE monotonic timebase (sole sanctioned
+    ``time.perf_counter`` call site in ``src/repro``; rule RPR011
+    enforces this);
+  * ``obs.trace`` — nestable spans + per-request async lanes exported as
+    Chrome trace-event JSON (Perfetto-loadable), with optional
+    ``jax.profiler`` start/stop hooks;
+  * ``obs.metrics`` — counters/gauges/fixed-bucket histograms (TTFT,
+    inter-token latency, queue wait, e2e) with JSON snapshot and
+    Prometheus text exposition;
+  * ``obs.drift`` — the OSSH drift monitor (live Jaccard overlap of
+    outlier channel sets vs calibration).
+
+Disabled mode is a true no-op: :data:`NULL_OBS` hands out the module
+singleton :data:`NULL_SPAN` (no clock reads, no allocations) and every
+metric call returns before touching a registry. Code that needs a
+timestamp *regardless* of observability (``EngineStats`` throughput
+accounting pre-dates this package and CI gates on it) reads
+``clock.now()`` through the :meth:`Obs.phase_begin` /
+:meth:`Obs.phase_end` pair — those share ONE clock read between the
+stats field and the trace event, so enabling tracing adds no extra timer
+calls to the hot path.
+
+Typical wiring::
+
+    obs = Obs.from_config(ObsConfig(trace=True, metrics=True,
+                                    trace_path="trace.json"))
+    eng = model.engine(EngineConfig(max_slots=4), obs=obs)
+    ... run requests ...
+    obs.export()          # writes trace.json (+ metrics if configured)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+from repro.obs import clock
+from repro.obs.drift import DriftMonitor, LayerDrift, format_report
+from repro.obs.metrics import (DEFAULT_LATENCY_BUCKETS, Counter, Gauge,
+                               Histogram, MetricsRegistry, mutation_count)
+from repro.obs.trace import (TID_ENGINE, TID_TRAIN, Span, Tracer,
+                             validate_chrome_trace)
+
+__all__ = [
+    "Obs", "ObsConfig", "NULL_OBS", "NULL_SPAN", "NullSpan",
+    "Tracer", "Span", "validate_chrome_trace", "TID_ENGINE", "TID_TRAIN",
+    "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "DEFAULT_LATENCY_BUCKETS", "mutation_count",
+    "DriftMonitor", "LayerDrift", "format_report", "clock",
+]
+
+
+@dataclass(frozen=True)
+class ObsConfig:
+    """What to collect and where to put it. ``trace_path`` /
+    ``metrics_path`` imply enabling their layer, so CLI flags map 1:1."""
+    trace: bool = False
+    metrics: bool = False
+    trace_path: Optional[str] = None
+    metrics_path: Optional[str] = None
+    metrics_fmt: str = "json"             # "json" | "prometheus"
+    jax_profiler_dir: Optional[str] = None
+
+    @property
+    def trace_enabled(self) -> bool:
+        return self.trace or self.trace_path is not None
+
+    @property
+    def metrics_enabled(self) -> bool:
+        return self.metrics or self.metrics_path is not None
+
+
+class NullSpan:
+    """The disabled span: enter/exit touch nothing — not even the clock.
+    ``elapsed_s`` stays 0.0; callers that need real elapsed time use
+    ``Obs.phase_begin``/``phase_end`` instead of reading it."""
+
+    __slots__ = ()
+    elapsed_s = 0.0
+
+    def __enter__(self) -> "NullSpan":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        return False
+
+
+#: module-level singleton — ``obs.span(...)`` when disabled returns THIS
+#: object, so the disabled path allocates nothing per call.
+NULL_SPAN = NullSpan()
+
+
+class Obs:
+    """Live observability handle: ``tracer`` and/or ``metrics`` are None
+    when that layer is off, and every delegating method checks exactly
+    one attribute before doing work."""
+
+    def __init__(self, config: Optional[ObsConfig] = None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
+        self.config = config or ObsConfig()
+        self.tracer = tracer
+        self.metrics = metrics
+        self._profiling = False
+
+    @classmethod
+    def from_config(cls, config: Optional[ObsConfig]) -> "Obs":
+        if config is None:
+            return NULL_OBS
+        return cls(config,
+                   tracer=Tracer() if config.trace_enabled else None,
+                   metrics=(MetricsRegistry()
+                            if config.metrics_enabled else None))
+
+    @property
+    def enabled(self) -> bool:
+        return self.tracer is not None or self.metrics is not None
+
+    # ---- trace delegation ------------------------------------------------
+    def span(self, name: str, cat: str = "serve", tid: int = TID_ENGINE,
+             annotate: bool = False, **args):
+        if self.tracer is None:
+            return NULL_SPAN
+        return self.tracer.span(name, cat=cat, tid=tid, annotate=annotate,
+                                **args)
+
+    def instant(self, name: str, cat: str = "serve",
+                tid: int = TID_ENGINE, **args):
+        if self.tracer is not None:
+            self.tracer.instant(name, cat=cat, tid=tid, **args)
+
+    def async_begin(self, name: str, async_id: str, **args):
+        if self.tracer is not None:
+            self.tracer.async_begin(name, async_id, **args)
+
+    def async_instant(self, name: str, async_id: str, **args):
+        if self.tracer is not None:
+            self.tracer.async_instant(name, async_id, **args)
+
+    def async_end(self, name: str, async_id: str, **args):
+        if self.tracer is not None:
+            self.tracer.async_end(name, async_id, **args)
+
+    def counter(self, name: str, values: Dict[str, float],
+                tid: int = TID_TRAIN):
+        if self.tracer is not None:
+            self.tracer.counter(name, values, tid=tid)
+
+    # ---- shared-timestamp phase timing -----------------------------------
+    # EngineStats accounting needs wall time whether or not obs is on;
+    # these share the single clock read with the trace event so tracing
+    # adds zero extra timer calls.
+    def phase_begin(self, name: str, cat: str = "serve",
+                    tid: int = TID_ENGINE, **args) -> float:
+        t0 = clock.now()
+        if self.tracer is not None:
+            self.tracer._begin(name, cat, t0, args, tid)
+        return t0
+
+    def phase_end(self, name: str, t0: float, cat: str = "serve",
+                  tid: int = TID_ENGINE, hist: Optional[str] = None,
+                  labels: Optional[Dict[str, str]] = None) -> float:
+        t1 = clock.now()
+        if self.tracer is not None:
+            self.tracer._end(name, cat, t1, tid)
+        dt = t1 - t0
+        if self.metrics is not None and hist is not None:
+            self.metrics.observe(hist, dt, labels)
+        return dt
+
+    # ---- metrics delegation ----------------------------------------------
+    def inc(self, name: str, amount: float = 1.0,
+            labels: Optional[Dict[str, str]] = None):
+        if self.metrics is not None:
+            self.metrics.inc(name, amount, labels)
+
+    def set_gauge(self, name: str, value: float,
+                  labels: Optional[Dict[str, str]] = None):
+        if self.metrics is not None:
+            self.metrics.set_gauge(name, value, labels)
+
+    def observe(self, name: str, value: float,
+                labels: Optional[Dict[str, str]] = None):
+        if self.metrics is not None:
+            self.metrics.observe(name, value, labels)
+
+    # ---- jax.profiler hooks ----------------------------------------------
+    def start_jax_profiler(self):
+        """Start a device trace when ``jax_profiler_dir`` is configured;
+        spans created with ``annotate=True`` show up inside it."""
+        if self.config.jax_profiler_dir and not self._profiling:
+            import jax.profiler
+            jax.profiler.start_trace(self.config.jax_profiler_dir)
+            self._profiling = True
+
+    def stop_jax_profiler(self):
+        if self._profiling:
+            import jax.profiler
+            jax.profiler.stop_trace()
+            self._profiling = False
+
+    # ---- export ----------------------------------------------------------
+    def export(self) -> Dict[str, str]:
+        """Write whatever was configured; returns {kind: path}."""
+        self.stop_jax_profiler()
+        out: Dict[str, str] = {}
+        if self.tracer is not None and self.config.trace_path:
+            out["trace"] = self.tracer.write(self.config.trace_path)
+        if self.metrics is not None and self.config.metrics_path:
+            out["metrics"] = self.metrics.write(self.config.metrics_path,
+                                                self.config.metrics_fmt)
+        return out
+
+
+#: the disabled singleton — a plain Obs with both layers off. Safe to
+#: share: it holds no state and mutates nothing.
+NULL_OBS = Obs()

@@ -1,0 +1,36 @@
+"""The instrumented monotonic clock — the ONE place in ``src/repro`` that
+may read a performance timer.
+
+Every wall-time measurement in the tree (engine phase timing, span
+begin/end stamps, per-request latency marks, the train launcher's
+straggler watchdog) routes through :func:`now`, so traces, metrics and
+``EngineStats`` all share a single timebase and the static-analysis gate
+RPR011 can enforce that no ad-hoc ``time.perf_counter()`` deltas creep
+back into the hot paths.
+
+Tests monkeypatch :data:`_source` (via :func:`set_source`) to drive a fake
+clock; production code never touches it.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+#: the underlying timer — ``time.perf_counter`` is monotonic, unaffected by
+#: wall-clock adjustments, and the highest-resolution timer CPython offers
+_source: Callable[[], float] = time.perf_counter
+
+
+def now() -> float:
+    """Seconds on the process-wide monotonic timebase (float, ns-ish
+    resolution). Differences are meaningful; absolute values are not."""
+    return _source()
+
+
+def set_source(fn: Callable[[], float]) -> Callable[[], float]:
+    """Swap the timer (tests: deterministic fake clocks). Returns the
+    previous source so callers can restore it."""
+    global _source
+    prev = _source
+    _source = fn
+    return prev

@@ -1,0 +1,174 @@
+"""OSSH drift monitor: live telemetry for the paper's central hypothesis.
+
+Quaff's calibration picks top-k outlier channel *positions* per layer and
+then assumes those positions stay put across fine-tuning (the Outlier
+Spatial Stability Hypothesis, paper §3.2 / Figure 2). This monitor turns
+that assumption into a measurement: every N train steps it reruns a
+``StatsScope(capture=True)`` forward on a fixed monitor batch (the same
+mechanism calibration used, so scores are commensurable), re-ranks the
+top-k channels per layer under the same per-layer-type budgets, and
+compares against the calibration-time sets:
+
+  * **jaccard** — |base ∩ cur| / |base ∪ cur| per stacked layer row,
+    reported as mean/min across the stack;
+  * **stable / entered / exited** — channel counts (both sets have size
+    k, so entered == exited == k - stable per row).
+
+Jaccard near 1.0 means OSSH is holding and the frozen outlier sets (and
+any int8 decode-state scales derived from them) remain valid; a falling
+curve is the earliest possible warning that re-calibration is due.
+
+Results flow three ways: returned as ``LayerDrift`` rows, set as gauges
+on the obs metrics registry (``ossh_jaccard{layer=...}``), and emitted as
+Chrome-trace counter events so Perfetto renders the drift as a time
+series alongside the train-step spans.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import outliers as OUT
+
+
+@dataclass
+class LayerDrift:
+    """Drift of one instrumented linear layer vs its calibration set."""
+    layer: str            # normalized layer path, e.g. "ffn/down"
+    k: int                # outlier budget for this layer type
+    n_rows: int           # stacked rows compared (depth x experts)
+    jaccard: float        # mean Jaccard overlap across rows
+    jaccard_min: float    # worst row
+    stable: int           # total channels present in both sets
+    entered: int          # total channels new in the live set
+    exited: int           # total channels that left the calibration set
+
+
+def _single_batch_scores(st: np.ndarray, ratio: float) -> np.ndarray:
+    """xi hit + magnitude tiebreak for ONE capture batch — the same
+    ranking capture_stats builds, collapsed to a single forward."""
+    med = np.median(st, axis=-1, keepdims=True)
+    hit = (st > ratio * np.maximum(med, 1e-8)).astype(np.float32)
+    return hit + st / (np.max(st, axis=-1, keepdims=True) + 1e-9)
+
+
+class DriftMonitor:
+    """Periodic OSSH checker bound to one converted model.
+
+    ``calib_stats`` is the ``(absmax_tree, score_tree)`` pair produced by
+    ``calibrate.capture_stats`` (what ``QuaffModel.calibrate`` stores as
+    ``model.stats``); the baseline top-k sets are recomputed from it with
+    the model's own budgets so they match what ``convert`` froze into the
+    weights. ``observe`` is cheap relative to a train step (one jitted
+    forward on the monitor batch) but not free — call it every N steps,
+    not every step.
+    """
+
+    def __init__(self, frozen, cfg, calib_stats, tokens,
+                 embeds: Optional[Any] = None, ratio: float = 20.0,
+                 obs: Optional[Any] = None):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import backend as BK
+        from repro.models import model as M
+        from repro.train import calibrate as C
+
+        self._ratio = ratio
+        self._obs = obs
+        self._tokens = jnp.asarray(tokens)
+        self._embeds = None if embeds is None else jnp.asarray(embeds)
+
+        budgets = cfg.quant.budgets
+
+        def run(adapters, quant_state):
+            return M.forward(frozen, adapters, quant_state, self._tokens,
+                             cfg, input_embeds=self._embeds,
+                             scope=BK.CAPTURE).stats
+        self._fwd = jax.jit(run)
+
+        # baseline: calibration-time top-k channel sets per stacked row
+        self._base: Dict[str, List[set]] = {}
+        self._k: Dict[str, int] = {}
+        for key, score in C._stats_lookup(calib_stats[1]).items():
+            lname = key.split("/")[-1]
+            ltype = C.LAYER_TYPE_MAP.get(lname, lname)
+            c_in = score.shape[-1]
+            k = OUT.outlier_count(c_in, ltype, budgets)
+            idx = C._topk_indices(score, k).reshape((-1, k))
+            self._base[key] = [set(row.tolist()) for row in idx]
+            self._k[key] = k
+
+    def observe(self, adapters, quant_state,
+                step: Optional[int] = None) -> Dict[str, LayerDrift]:
+        """Recompute live top-k sets and diff against calibration."""
+        import jax
+
+        from repro.train import calibrate as C
+
+        live = C._stats_lookup(jax.device_get(
+            self._fwd(adapters, quant_state)))
+        out: Dict[str, LayerDrift] = {}
+        for key, base_rows in self._base.items():
+            st = live.get(key)
+            if st is None:
+                continue
+            k = self._k[key]
+            score = _single_batch_scores(st.reshape((-1, st.shape[-1])),
+                                         self._ratio)
+            cur = C._topk_indices(score, k)
+            # stats stack can be shorter than the calib stack (MoE share)
+            n = min(len(base_rows), cur.shape[0])
+            jac, stable = [], 0
+            for row in range(n):
+                b, c = base_rows[row], set(cur[row].tolist())
+                inter = len(b & c)
+                union = len(b | c)
+                jac.append(inter / union if union else 1.0)
+                stable += inter
+            entered = n * k - stable
+            out[key] = LayerDrift(
+                layer=key, k=k, n_rows=n,
+                jaccard=float(np.mean(jac)) if jac else 1.0,
+                jaccard_min=float(np.min(jac)) if jac else 1.0,
+                stable=stable, entered=entered, exited=entered)
+        self._emit(out, step)
+        return out
+
+    # ---- obs fan-out -----------------------------------------------------
+    def _emit(self, drifts: Dict[str, LayerDrift], step: Optional[int]):
+        obs = self._obs
+        if obs is None or not drifts:
+            return
+        if obs.metrics is not None:
+            for d in drifts.values():
+                labels = {"layer": d.layer}
+                obs.metrics.set_gauge("ossh_jaccard", d.jaccard, labels)
+                obs.metrics.set_gauge("ossh_jaccard_min", d.jaccard_min,
+                                      labels)
+                obs.metrics.inc("ossh_channels_entered", d.entered, labels)
+                obs.metrics.inc("ossh_channels_exited", d.exited, labels)
+            mean = float(np.mean([d.jaccard for d in drifts.values()]))
+            obs.metrics.set_gauge("ossh_jaccard_mean", mean)
+            if step is not None:
+                obs.metrics.set_gauge("ossh_monitor_step", float(step))
+        if obs.tracer is not None:
+            obs.tracer.counter(
+                "ossh_jaccard",
+                {d.layer: d.jaccard for d in drifts.values()})
+
+
+def format_report(drifts: Dict[str, LayerDrift],
+                  step: Optional[int] = None) -> str:
+    """One log line per observation, densest-info-first."""
+    if not drifts:
+        return "ossh-drift: no instrumented layers"
+    mean = np.mean([d.jaccard for d in drifts.values()])
+    worst = min(drifts.values(), key=lambda d: d.jaccard_min)
+    head = f"ossh-drift step={step} " if step is not None else "ossh-drift "
+    per = " ".join(f"{d.layer}={d.jaccard:.3f}"
+                   for d in sorted(drifts.values(), key=lambda d: d.layer))
+    return (f"{head}mean_jaccard={mean:.3f} "
+            f"worst={worst.layer}:{worst.jaccard_min:.3f} {per}")

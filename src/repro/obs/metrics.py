@@ -1,0 +1,244 @@
+"""Metrics registry: counters / gauges / histograms with label sets.
+
+Everything is plain host-side Python — a metric mutation is a dict lookup
+plus a float add, cheap enough for per-token call sites. Histograms use
+fixed buckets (log-spaced latency buckets by default, ~0.1 ms .. 60 s)
+so recording is O(log n_buckets) and percentile queries are
+linear-interpolated from cumulative counts, the same estimate Prometheus'
+``histogram_quantile`` computes server-side.
+
+Export paths:
+
+  * :meth:`MetricsRegistry.snapshot` — plain-dict JSON (counters as
+    values, histograms with bucket counts + derived p50/p95/p99);
+  * :meth:`MetricsRegistry.to_prometheus` — text exposition format
+    (``# TYPE`` headers, ``_bucket{le=...}`` / ``_sum`` / ``_count``
+    series) for scrape-style consumption.
+
+A module-level :func:`mutation_count` tallies every registry write; the
+disabled-mode test pins it to prove obs-off leaves the registry
+untouched.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+#: default latency buckets (seconds): log-spaced 100 µs .. 60 s, plus +inf.
+#: Wide enough for queue waits on a loaded engine, fine enough near the
+#: bottom to resolve interp-mode decode steps.
+DEFAULT_LATENCY_BUCKETS: Tuple[float, ...] = (
+    1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2,
+    0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0,
+)
+
+_mutations = 0
+
+
+def mutation_count() -> int:
+    """Total registry writes since import (all registries). The
+    disabled-mode no-op test snapshots this before/after a run."""
+    return _mutations
+
+
+def _labels_key(labels: Optional[Dict[str, str]]) -> Tuple[Tuple[str, str], ...]:
+    if not labels:
+        return ()
+    return tuple(sorted(labels.items()))
+
+
+class Counter:
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def add(self, amount: float = 1.0):
+        global _mutations
+        _mutations += 1
+        self.value += amount
+
+
+class Gauge:
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def set(self, value: float):
+        global _mutations
+        _mutations += 1
+        self.value = value
+
+
+class Histogram:
+    """Fixed-bucket histogram; ``buckets`` are inclusive upper bounds,
+    an implicit +inf bucket catches the rest."""
+
+    __slots__ = ("name", "buckets", "counts", "total", "sum", "min", "max")
+
+    def __init__(self, name: str,
+                 buckets: Sequence[float] = DEFAULT_LATENCY_BUCKETS):
+        self.name = name
+        self.buckets = tuple(buckets)
+        self.counts = [0] * (len(self.buckets) + 1)
+        self.total = 0
+        self.sum = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def observe(self, value: float):
+        global _mutations
+        _mutations += 1
+        i = 0
+        for i, ub in enumerate(self.buckets):
+            if value <= ub:
+                break
+        else:
+            i = len(self.buckets)
+        self.counts[i] += 1
+        self.total += 1
+        self.sum += value
+        if value < self.min:
+            self.min = value
+        if value > self.max:
+            self.max = value
+
+    def percentile(self, p: float) -> float:
+        """Linear interpolation within the bucket holding the p-quantile
+        (Prometheus ``histogram_quantile`` semantics). Accurate to a
+        bucket width; the obs test checks it against numpy quantiles with
+        exactly that tolerance. Returns nan when empty."""
+        if self.total == 0:
+            return float("nan")
+        rank = (p / 100.0) * self.total
+        cum = 0
+        for i, c in enumerate(self.counts):
+            cum += c
+            if cum >= rank and c > 0:
+                lo = self.buckets[i - 1] if i > 0 else 0.0
+                hi = self.buckets[i] if i < len(self.buckets) else self.max
+                frac = (rank - (cum - c)) / c
+                return lo + (hi - lo) * frac
+        return self.max
+
+    def as_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {
+            "count": self.total,
+            "sum": self.sum,
+            "buckets": {("%g" % ub): c
+                        for ub, c in zip(self.buckets, self.counts)},
+            "overflow": self.counts[-1],
+        }
+        if self.total:
+            d.update(min=self.min, max=self.max,
+                     mean=self.sum / self.total,
+                     p50=self.percentile(50), p95=self.percentile(95),
+                     p99=self.percentile(99))
+        return d
+
+
+class MetricsRegistry:
+    """Name+labels -> metric. ``counter/gauge/histogram`` get-or-create;
+    the convenience ``inc/set_gauge/observe`` wrappers are what hot paths
+    call (one line, no instance juggling)."""
+
+    def __init__(self):
+        self._counters: Dict[Tuple[str, tuple], Counter] = {}
+        self._gauges: Dict[Tuple[str, tuple], Gauge] = {}
+        self._hists: Dict[Tuple[str, tuple], Histogram] = {}
+
+    # ---- get-or-create ---------------------------------------------------
+    def counter(self, name: str, labels: Optional[Dict[str, str]] = None
+                ) -> Counter:
+        key = (name, _labels_key(labels))
+        c = self._counters.get(key)
+        if c is None:
+            c = self._counters[key] = Counter(name)
+        return c
+
+    def gauge(self, name: str, labels: Optional[Dict[str, str]] = None
+              ) -> Gauge:
+        key = (name, _labels_key(labels))
+        g = self._gauges.get(key)
+        if g is None:
+            g = self._gauges[key] = Gauge(name)
+        return g
+
+    def histogram(self, name: str, labels: Optional[Dict[str, str]] = None,
+                  buckets: Sequence[float] = DEFAULT_LATENCY_BUCKETS
+                  ) -> Histogram:
+        key = (name, _labels_key(labels))
+        h = self._hists.get(key)
+        if h is None:
+            h = self._hists[key] = Histogram(name, buckets)
+        return h
+
+    # ---- hot-path wrappers -----------------------------------------------
+    def inc(self, name: str, amount: float = 1.0,
+            labels: Optional[Dict[str, str]] = None):
+        self.counter(name, labels).add(amount)
+
+    def set_gauge(self, name: str, value: float,
+                  labels: Optional[Dict[str, str]] = None):
+        self.gauge(name, labels).set(value)
+
+    def observe(self, name: str, value: float,
+                labels: Optional[Dict[str, str]] = None):
+        self.histogram(name, labels).observe(value)
+
+    # ---- export ----------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        def render(items, fn):
+            out: Dict[str, Any] = {}
+            for (name, labels), metric in sorted(items):
+                key = name if not labels else (
+                    name + "{" + ",".join(f"{k}={v}" for k, v in labels)
+                    + "}")
+                out[key] = fn(metric)
+            return out
+        return {
+            "counters": render(self._counters.items(), lambda c: c.value),
+            "gauges": render(self._gauges.items(), lambda g: g.value),
+            "histograms": render(self._hists.items(),
+                                 lambda h: h.as_dict()),
+        }
+
+    def to_prometheus(self) -> str:
+        lines: List[str] = []
+
+        def fmt_labels(labels: tuple, extra: str = "") -> str:
+            parts = [f'{k}="{v}"' for k, v in labels]
+            if extra:
+                parts.append(extra)
+            return "{" + ",".join(parts) + "}" if parts else ""
+
+        for (name, labels), c in sorted(self._counters.items()):
+            lines.append(f"# TYPE {name} counter")
+            lines.append(f"{name}{fmt_labels(labels)} {c.value:g}")
+        for (name, labels), g in sorted(self._gauges.items()):
+            lines.append(f"# TYPE {name} gauge")
+            lines.append(f"{name}{fmt_labels(labels)} {g.value:g}")
+        for (name, labels), h in sorted(self._hists.items()):
+            lines.append(f"# TYPE {name} histogram")
+            cum = 0
+            for ub, cnt in zip(h.buckets, h.counts):
+                cum += cnt
+                le = 'le="%g"' % ub
+                lines.append(f"{name}_bucket{fmt_labels(labels, le)} {cum}")
+            cum += h.counts[-1]
+            inf_lbl = fmt_labels(labels, 'le="+Inf"')
+            lines.append(f"{name}_bucket{inf_lbl} {cum}")
+            lines.append(f"{name}_sum{fmt_labels(labels)} {h.sum:g}")
+            lines.append(f"{name}_count{fmt_labels(labels)} {h.total}")
+        return "\n".join(lines) + "\n"
+
+    def write(self, path: str, fmt: str = "json") -> str:
+        with open(path, "w") as f:
+            if fmt == "prometheus":
+                f.write(self.to_prometheus())
+            else:
+                json.dump(self.snapshot(), f, indent=1)
+        return path

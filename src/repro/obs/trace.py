@@ -1,0 +1,211 @@
+"""Trace layer: nestable wall-time spans exported as Chrome trace-event
+JSON (the ``{"traceEvents": [...]}`` format Perfetto / ``chrome://tracing``
+load directly).
+
+Span discipline is strict B/E bracketing per track (``tid``): entering a
+span appends a ``"B"`` event, exiting appends the matching ``"E"``, so
+nested spans render as a flame graph and the export is schema-valid by
+construction (the CI serve-smoke gate re-checks balance anyway). Three
+more event kinds cover the serving lifecycle:
+
+  * ``instant`` — zero-duration marks (request enqueue/admit/retire);
+  * async ``b``/``n``/``e`` — per-request lanes keyed by request id, so
+    one request's enqueue -> admit -> first-token -> retire story reads
+    as a single horizontal track across the engine's batched dispatches;
+  * ``C`` counters — time series (the OSSH drift monitor emits per-layer
+    Jaccard overlap this way, turning Figure-2-style offline analysis
+    into a live Perfetto track).
+
+Timestamps come from ``obs.clock`` (microseconds relative to the
+tracer's construction). Optional ``jax.profiler`` coupling: when a span
+is created with ``annotate=True`` the region is additionally wrapped in a
+``jax.profiler.TraceAnnotation`` so device traces started through
+``Obs.jax_profile()`` carry the same region names.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, List, Optional
+
+from repro.obs import clock
+
+#: default tracks; anything else can pass an explicit tid
+TID_ENGINE = 0
+TID_TRAIN = 1
+
+
+class Span:
+    """One live span: a context manager appending B on enter / E on exit.
+
+    ``elapsed_s`` is valid after exit (0.0 before). Spans are cheap but
+    not free (two clock reads + two dict appends); the disabled path
+    never constructs one — see ``obs.NULL_SPAN``.
+    """
+
+    __slots__ = ("_tracer", "name", "cat", "args", "tid", "_annotation",
+                 "t0", "elapsed_s")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str,
+                 args: Dict[str, Any], tid: int, annotate: bool):
+        self._tracer = tracer
+        self.name = name
+        self.cat = cat
+        self.args = args
+        self.tid = tid
+        self.t0 = 0.0
+        self.elapsed_s = 0.0
+        self._annotation = None
+        if annotate:                      # couple to an active jax profile
+            import jax.profiler
+            self._annotation = jax.profiler.TraceAnnotation(name)
+
+    def __enter__(self) -> "Span":
+        self.t0 = clock.now()
+        self._tracer._begin(self.name, self.cat, self.t0, self.args,
+                            self.tid)
+        if self._annotation is not None:
+            self._annotation.__enter__()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        if self._annotation is not None:
+            self._annotation.__exit__(exc_type, exc, tb)
+        t1 = clock.now()
+        self.elapsed_s = t1 - self.t0
+        self._tracer._end(self.name, self.cat, t1, self.tid)
+        return False
+
+
+class Tracer:
+    """Append-only trace-event buffer with per-track span stacks."""
+
+    def __init__(self, process_name: str = "repro"):
+        self._epoch = clock.now()
+        self._events: List[Dict[str, Any]] = []
+        self._stacks: Dict[int, List[str]] = {}
+        self._event({"name": "process_name", "ph": "M", "pid": 0, "tid": 0,
+                     "args": {"name": process_name}})
+        for tid, name in ((TID_ENGINE, "engine"), (TID_TRAIN, "train")):
+            self._event({"name": "thread_name", "ph": "M", "pid": 0,
+                         "tid": tid, "args": {"name": name}})
+
+    # ---- raw event plumbing ---------------------------------------------
+    def _ts(self, t: float) -> float:
+        return (t - self._epoch) * 1e6        # trace-event ts is in µs
+
+    def _event(self, ev: Dict[str, Any]):
+        self._events.append(ev)
+
+    def _begin(self, name: str, cat: str, t: float, args: Dict[str, Any],
+               tid: int):
+        self._stacks.setdefault(tid, []).append(name)
+        self._event({"name": name, "cat": cat, "ph": "B", "pid": 0,
+                     "tid": tid, "ts": self._ts(t), "args": args})
+
+    def _end(self, name: str, cat: str, t: float, tid: int):
+        stack = self._stacks.get(tid, [])
+        if stack and stack[-1] == name:
+            stack.pop()
+        self._event({"name": name, "cat": cat, "ph": "E", "pid": 0,
+                     "tid": tid, "ts": self._ts(t)})
+
+    # ---- public event kinds ---------------------------------------------
+    def span(self, name: str, cat: str = "serve", tid: int = TID_ENGINE,
+             annotate: bool = False, **args) -> Span:
+        return Span(self, name, cat, args, tid, annotate)
+
+    def instant(self, name: str, cat: str = "serve", tid: int = TID_ENGINE,
+                **args):
+        """Zero-duration mark (enqueue/admit/retire and friends)."""
+        self._event({"name": name, "cat": cat, "ph": "i", "s": "t",
+                     "pid": 0, "tid": tid, "ts": self._ts(clock.now()),
+                     "args": args})
+
+    def async_begin(self, name: str, async_id: str, cat: str = "request",
+                    **args):
+        """Open a per-request lane; ``async_id`` (the request id) keys the
+        matching instants/end so Perfetto draws one track per request."""
+        self._event({"name": name, "cat": cat, "ph": "b", "id": async_id,
+                     "pid": 0, "tid": TID_ENGINE,
+                     "ts": self._ts(clock.now()), "args": args})
+
+    def async_instant(self, name: str, async_id: str, cat: str = "request",
+                      **args):
+        self._event({"name": name, "cat": cat, "ph": "n", "id": async_id,
+                     "pid": 0, "tid": TID_ENGINE,
+                     "ts": self._ts(clock.now()), "args": args})
+
+    def async_end(self, name: str, async_id: str, cat: str = "request",
+                  **args):
+        self._event({"name": name, "cat": cat, "ph": "e", "id": async_id,
+                     "pid": 0, "tid": TID_ENGINE,
+                     "ts": self._ts(clock.now()), "args": args})
+
+    def counter(self, name: str, values: Dict[str, float],
+                cat: str = "metrics", tid: int = TID_TRAIN):
+        """Counter track sample (``ph: "C"``): ``values`` maps series name
+        to value; repeated calls build the time series."""
+        self._event({"name": name, "cat": cat, "ph": "C", "pid": 0,
+                     "tid": tid, "ts": self._ts(clock.now()),
+                     "args": dict(values)})
+
+    # ---- export ----------------------------------------------------------
+    @property
+    def n_events(self) -> int:
+        return len(self._events)
+
+    def events(self) -> List[Dict[str, Any]]:
+        """The raw event list (shared, do not mutate)."""
+        return self._events
+
+    def open_spans(self) -> Dict[int, List[str]]:
+        """tid -> names of spans entered but not yet exited (should be
+        empty at export time; exported anyway — Perfetto tolerates it)."""
+        return {tid: list(stack)
+                for tid, stack in self._stacks.items() if stack}
+
+    def to_chrome_trace(self) -> Dict[str, Any]:
+        return {"traceEvents": list(self._events),
+                "displayTimeUnit": "ms"}
+
+    def write(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome_trace(), f)
+        return path
+
+
+def validate_chrome_trace(payload: Any) -> Optional[str]:
+    """Schema sanity for an exported trace: returns an error string or
+    None. Checks what Perfetto actually needs — a ``traceEvents`` list,
+    per-event ``ph``/``name``, numeric ``ts`` where required, and B/E
+    balance per (pid, tid) with LIFO nesting. Shared by the obs tests and
+    the CI serve-smoke gate."""
+    if not isinstance(payload, dict) or "traceEvents" not in payload:
+        return "missing traceEvents"
+    stacks: Dict[Any, List[str]] = {}
+    for i, ev in enumerate(payload["traceEvents"]):
+        if not isinstance(ev, dict):
+            return f"event {i} is not an object"
+        ph = ev.get("ph")
+        if not isinstance(ev.get("name"), str) or not isinstance(ph, str):
+            return f"event {i} lacks name/ph"
+        if ph != "M" and not isinstance(ev.get("ts"), (int, float)):
+            return f"event {i} ({ev['name']!r}) lacks a numeric ts"
+        if ph in ("b", "n", "e") and "id" not in ev:
+            return f"async event {i} ({ev['name']!r}) lacks an id"
+        if ph in ("B", "E"):
+            key = (ev.get("pid", 0), ev.get("tid", 0))
+            stack = stacks.setdefault(key, [])
+            if ph == "B":
+                stack.append(ev["name"])
+            elif not stack:
+                return f"event {i}: E {ev['name']!r} with no open B"
+            elif stack[-1] != ev["name"]:
+                return (f"event {i}: E {ev['name']!r} closes "
+                        f"{stack[-1]!r} (interleaved spans)")
+            else:
+                stack.pop()
+    for key, stack in stacks.items():
+        if stack:
+            return f"unclosed span(s) {stack} on track {key}"
+    return None

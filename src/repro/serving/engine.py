@@ -42,7 +42,6 @@ from __future__ import annotations
 import collections
 import functools
 import itertools
-import time
 from typing import Dict, Iterable, List, Optional, Tuple
 
 import jax
@@ -51,6 +50,7 @@ import numpy as np
 
 from repro.core import peft as PEFT
 from repro.models.config import ServingConfig
+from repro.obs import NULL_OBS, clock
 from repro.serving import sampling
 from repro.serving.config import EngineConfig, from_legacy_kwargs
 from repro.serving.paged import kvquant as KVQ
@@ -93,7 +93,7 @@ class _SlotState:
 
     __slots__ = ("req", "request_id", "prompt", "embeds", "pos_offset",
                  "token_ids", "last_token", "remaining", "n_shared",
-                 "prefix_key")
+                 "prefix_key", "t_submit", "t_admit", "t_first", "t_last")
 
     def __init__(self, req: GenerationRequest, request_id: str,
                  prompt: np.ndarray, embeds: Optional[np.ndarray],
@@ -111,6 +111,13 @@ class _SlotState:
         self.remaining: Optional[np.ndarray] = None
         self.n_shared = 0                    # cache positions prefix-shared
         self.prefix_key: Optional[Tuple[int, ...]] = None
+        # lifecycle marks on the obs clock; feed RequestOutput.queue_s /
+        # ttft_s / e2e_s. A preempted request keeps its original marks —
+        # latency is measured from the caller's submit, not the re-admit.
+        self.t_submit = 0.0
+        self.t_admit = 0.0
+        self.t_first = 0.0
+        self.t_last = 0.0
 
     @property
     def prompt_len(self) -> int:
@@ -158,15 +165,15 @@ class Engine:
     """
 
     @classmethod
-    def from_config(cls, model, serving) -> "Engine":
+    def from_config(cls, model, serving, obs=None) -> "Engine":
         """Build from an ``EngineConfig`` (or the training-side
         ``models.config.ServingConfig``, which converts)."""
         if isinstance(serving, ServingConfig):
             serving = serving.to_engine_config()
-        return cls(model, serving)
+        return cls(model, serving, obs=obs)
 
     def __init__(self, model, config: Optional[EngineConfig] = None,
-                 max_seq_len: Optional[int] = None, **legacy):
+                 max_seq_len: Optional[int] = None, obs=None, **legacy):
         if isinstance(config, EngineConfig):
             if max_seq_len is not None or legacy:
                 raise TypeError(
@@ -183,6 +190,9 @@ class Engine:
         cfg = model.cfg
         self.config = config
         self.cfg = cfg
+        # observability handle — NOT part of EngineConfig (and so not part
+        # of the api-level engine cache key); rebind with set_obs()
+        self._obs = obs if obs is not None else NULL_OBS
         self.max_slots = config.max_slots
         self.max_seq_len = config.max_seq_len
         self.kv_layout = config.kv_layout
@@ -252,6 +262,17 @@ class Engine:
                 else config.max_seq_len * KVQ.kv_bytes_per_token(cfg, "fp")))
         self._snapshot_state_bytes()
 
+    def set_obs(self, obs):
+        """Rebind the observability handle (``None`` disables). The
+        api-level engine cache reuses compiled engines across calls with
+        different obs configs, so the handle must be swappable without a
+        rebuild."""
+        self._obs = obs if obs is not None else NULL_OBS
+
+    @property
+    def obs(self):
+        return self._obs
+
     # ------------------------------------------------------------------
     # submission
     # ------------------------------------------------------------------
@@ -308,9 +329,14 @@ class Engine:
                 w.request_id == rid for w in self._waiting) or any(
                 s is not None and s.request_id == rid for s in self._slots):
             raise ValueError(f"duplicate request_id {rid!r}")
-        self._waiting.append(_SlotState(req, rid, prompt, embeds, pos_offset))
+        st = _SlotState(req, rid, prompt, embeds, pos_offset)
+        st.t_submit = clock.now()
+        self._waiting.append(st)
         self._pending.append(rid)
         self.stats.requests_submitted += 1
+        self._obs.inc("requests_submitted")
+        self._obs.async_begin("request", rid, prompt_len=int(prompt.size),
+                              max_new=req.max_new_tokens)
         return rid
 
     # ------------------------------------------------------------------
@@ -412,6 +438,18 @@ class Engine:
         st.token_ids.append(tok)
         st.last_token = tok
         self.stats.tokens_generated += 1
+        t = clock.now()
+        if st.t_first == 0.0:
+            st.t_first = t
+            self._obs.observe("ttft_s", t - st.t_submit)
+            self._obs.async_instant("first_token", st.request_id)
+        else:
+            # inter-token latency between consecutive emissions; tokens
+            # committed by one multi-step/spec dispatch emit back-to-back
+            # and so record near-zero gaps — that IS the caller-visible
+            # arrival pattern, not an artifact
+            self._obs.observe("itl_s", t - st.t_last)
+        st.t_last = t
         if st.req.on_token is not None:
             st.req.on_token(st.request_id, tok)
         hit_eos = st.req.eos_id is not None and tok == st.req.eos_id
@@ -421,7 +459,14 @@ class Engine:
     def _retire(self, st: _SlotState, slot: int, reason: str):
         self._finished[st.request_id] = RequestOutput(
             request_id=st.request_id, prompt_len=st.prompt_len,
-            token_ids=st.token_ids, finish_reason=reason)
+            token_ids=st.token_ids, finish_reason=reason,
+            queue_s=st.t_admit - st.t_submit,
+            ttft_s=st.t_first - st.t_submit,
+            e2e_s=st.t_last - st.t_submit)
+        self._obs.observe("e2e_s", st.t_last - st.t_submit)
+        self._obs.inc("requests_completed")
+        self._obs.async_end("request", st.request_id, reason=reason,
+                            n_tokens=st.n_generated)
         self._slots[slot] = None
         if self._paged is not None:
             table = self._paged.tables[slot]
@@ -454,6 +499,8 @@ class Engine:
         st.remaining = None
         self._waiting.appendleft(st)
         self.stats.preemptions += 1
+        self._obs.inc("preemptions")
+        self._obs.async_instant("preempt", st.request_id)
 
     def _adapters_no_prefix(self):
         """Adapters with the prompt-PEFT virtual tokens stripped: decode
@@ -507,7 +554,12 @@ class Engine:
         st = self._waiting.popleft()
         slot = self._pool.acquire(self._need_full(st))
         m = self._model
-        t0 = time.perf_counter()
+        t0 = self._obs.phase_begin("prefill", req=st.request_id,
+                                   prompt_len=st.prompt_len)
+        if st.t_admit == 0.0:
+            st.t_admit = t0
+            self._obs.observe("queue_s", t0 - st.t_submit)
+            self._obs.async_instant("admit", st.request_id)
         pool = self._pool
         if getattr(pool, "needs_seed", False):
             # int8 recurrent state: OSSH-static scales from the Quaff
@@ -524,7 +576,8 @@ class Engine:
                 m.frozen, m.adapters, m.quant_state, tokens)
         pool.write_prefill(row_caches, slot)
         tok = self._sample_one(logits, st.req.sampling, st.n_generated)
-        self.stats.prefill_time_s += time.perf_counter() - t0
+        self.stats.prefill_time_s += self._obs.phase_end(
+            "prefill", t0, hist="prefill_s")
         self.stats.prefills += 1
         self.stats.prefill_batches += 1
         self._snapshot_state_bytes()
@@ -539,7 +592,7 @@ class Engine:
         tokens, positions, temps, top_ks, top_ps, keys = \
             self._decode_batch_arrays(active)
 
-        t0 = time.perf_counter()
+        t0 = self._obs.phase_begin("decode", n_slots=len(active))
         caches = self._pool.live_assemble(live)
         logits, new_caches = self._step_fn(
             m.frozen, self._adapters_no_prefix(), m.quant_state,
@@ -549,7 +602,8 @@ class Engine:
         toks = np.asarray(self._sample(
             logits, jnp.asarray(temps), jnp.asarray(top_ks),
             jnp.asarray(top_ps), jnp.stack(keys)))
-        self.stats.decode_time_s += time.perf_counter() - t0
+        self.stats.decode_time_s += self._obs.phase_end(
+            "decode", t0, hist="decode_dispatch_s")
         self.stats.decode_steps += 1
         self.stats.decode_dispatches += 1
         self.stats.busy_slot_steps += len(active)
@@ -594,6 +648,10 @@ class Engine:
                 self.stats.admission_deferrals += 1
                 break
             self._waiting.popleft()
+            if st.t_admit == 0.0:
+                st.t_admit = clock.now()
+                self._obs.observe("queue_s", st.t_admit - st.t_submit)
+                self._obs.async_instant("admit", st.request_id)
             st.prefix_key = key
             st.n_shared = self._paged.cursor(slot)
             if st.n_shared:
@@ -666,7 +724,8 @@ class Engine:
             return
         m = self._model
         for (clen, first), rows in sorted(groups.items()):
-            t0 = time.perf_counter()
+            t0 = self._obs.phase_begin("prefill", chunk=clen,
+                                       rows=len(rows))
             tokens = np.stack(
                 [self._slots[s].remaining[:clen] for s in rows])
             # the first chunk prepends the PEFT prefix inside the forward,
@@ -680,7 +739,8 @@ class Engine:
                 m.frozen, adapters, m.quant_state, caches,
                 jnp.asarray(tokens), jnp.asarray(positions))
             self._paged.update_from(new_caches)
-            self.stats.prefill_time_s += time.perf_counter() - t0
+            self.stats.prefill_time_s += self._obs.phase_end(
+                "prefill", t0, hist="prefill_s")
             self.stats.prefill_batches += 1
             self.stats.prefill_chunks += len(rows)
             for r, slot in enumerate(rows):
@@ -739,7 +799,7 @@ class Engine:
         tokens, positions, temps, top_ks, top_ps, keys = \
             self._decode_batch_arrays(decoding)
 
-        t0 = time.perf_counter()
+        t0 = self._obs.phase_begin("decode", n_slots=len(decoding))
         frag = self._paged.fragmentation()      # pool state THIS step uses
         self.stats.fragmentation_sum += frag
         self.stats.fragmentation_samples += 1
@@ -751,7 +811,8 @@ class Engine:
         toks = np.asarray(self._sample(
             logits, jnp.asarray(temps), jnp.asarray(top_ks),
             jnp.asarray(top_ps), jnp.stack(keys)))
-        self.stats.decode_time_s += time.perf_counter() - t0
+        self.stats.decode_time_s += self._obs.phase_end(
+            "decode", t0, hist="decode_dispatch_s")
         self.stats.decode_steps += 1
         self.stats.decode_dispatches += 1
         self.stats.busy_slot_steps += len(decoding)
@@ -804,7 +865,8 @@ class Engine:
                 # bit-identical whichever window size emitted the token
                 keys[s][i] = sampling.request_key(sp, st.n_generated + s)
 
-        t0 = time.perf_counter()
+        t0 = self._obs.phase_begin("decode", n_slots=len(decoding),
+                                   steps=n)
         if self._paged is not None:
             self.stats.fragmentation_sum += self._paged.fragmentation()
             self.stats.fragmentation_samples += 1
@@ -818,7 +880,8 @@ class Engine:
             jnp.asarray(np.asarray(live)), self._pool.mask_dead(live))
         self._pool.update_from(new_caches)
         toks, emits = np.asarray(toks), np.asarray(emits)
-        self.stats.decode_time_s += time.perf_counter() - t0
+        self.stats.decode_time_s += self._obs.phase_end(
+            "decode", t0, hist="decode_dispatch_s")
         self.stats.decode_steps += n
         self.stats.decode_dispatches += 1
         self.stats.busy_slot_steps += int(emits.sum())
@@ -868,20 +931,24 @@ class Engine:
         temps, top_ks, top_ps = (jnp.asarray(temps), jnp.asarray(top_ks),
                                  jnp.asarray(top_ps))
 
-        t0 = time.perf_counter()
+        t0 = self._obs.phase_begin("decode", n_slots=len(decoding),
+                                   kind="spec", k=k)
         if self._paged is not None:
             self.stats.fragmentation_sum += self._paged.fragmentation()
             self.stats.fragmentation_samples += 1
         caches = self._pool.live_assemble(live)
         tok0 = jnp.asarray(tokens)
+        td = self._obs.phase_begin("draft")
         d_toks, d_logits = self._drafter.propose(
             m.frozen, self._adapters_no_prefix(), m.quant_state, caches,
             tok0, jnp.asarray(positions),
             jnp.stack([jnp.stack(row) for row in draft_keys]),
             temps, top_ks, top_ps)
+        self._obs.phase_end("draft", td, hist="spec_draft_s")
         chunk = jnp.concatenate([tok0, jnp.transpose(d_toks)], axis=1)
         vpos = (jnp.asarray(positions)[:, None]
                 + jnp.arange(k + 1, dtype=jnp.int32)[None, :])
+        tv = self._obs.phase_begin("verify")
         counts, out_toks, new_caches = self._verify_fn(
             m.frozen, self._adapters_no_prefix(), m.quant_state, caches,
             chunk, vpos, jnp.transpose(d_toks),
@@ -890,7 +957,9 @@ class Engine:
             jnp.asarray(np.asarray(live)))
         self._pool.update_from(new_caches)
         counts, out_toks = np.asarray(counts), np.asarray(out_toks)
-        self.stats.decode_time_s += time.perf_counter() - t0
+        self._obs.phase_end("verify", tv, hist="spec_verify_s")
+        self.stats.decode_time_s += self._obs.phase_end(
+            "decode", t0, hist="decode_dispatch_s")
         rows = counts[decoding]
         self.stats.decode_steps += int(rows.max())
         self.stats.decode_dispatches += 2

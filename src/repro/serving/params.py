@@ -58,12 +58,24 @@ class GenerationRequest:
 
 @dataclasses.dataclass
 class RequestOutput:
-    """Completed request: generated ids + why generation stopped."""
+    """Completed request: generated ids + why generation stopped.
+
+    The latency fields are measured on the obs clock (``repro.obs.clock``)
+    from the caller's ``submit`` call: ``queue_s`` until first admission,
+    ``ttft_s`` until the first sampled token, ``e2e_s`` until retirement.
+    They are always populated — no observability config needed — so
+    callers get per-request latency without scraping aggregate stats. A
+    preempted-and-resumed request keeps its original submit mark (its
+    queue/ttft reflect the first admission; the preemption shows up in
+    ``e2e_s``)."""
 
     request_id: str
     prompt_len: int
     token_ids: List[int]
     finish_reason: str          # "eos" | "length"
+    queue_s: float = 0.0        # submit -> admitted into a slot
+    ttft_s: float = 0.0         # submit -> first token sampled
+    e2e_s: float = 0.0          # submit -> retired
 
     @property
     def n_generated(self) -> int:
@@ -85,7 +97,15 @@ class EngineStats:
     ``prefill_chunks`` per-request chunk advances; ``fragmentation`` is the
     allocated-but-unwritten fraction of in-use blocks; the ``kv_bytes_*``
     fields compare against what the contiguous layout (one fp max_seq_len
-    row per request) would pin."""
+    row per request) would pin.
+
+    The ``*_time_s`` fields are backed by the obs layer: every value
+    accumulated here is the return of an ``Obs.phase_begin``/``phase_end``
+    pair on ``repro.obs.clock``, which simultaneously emits the trace
+    span and feeds the metrics histograms (``prefill_s`` /
+    ``decode_dispatch_s``) when those layers are enabled — one clock
+    read, three consumers. No code in the engine reads
+    ``time.perf_counter`` directly (rule RPR011)."""
 
     n_slots: int = 0
     family: str = ""

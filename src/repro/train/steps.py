@@ -76,9 +76,14 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig):
 
     def loss_fn(adapters, frozen, quant_state, mb, rng):
         remat = tcfg.remat_policy if tcfg.remat else False
-        out = M.forward(
-            frozen, adapters, quant_state, mb["tokens"], cfg,
-            input_embeds=mb.get("embeds"), remat=remat, rng=rng)
+        # named_scope: phase labels for device profiles (jax.profiler /
+        # Obs.start_jax_profiler) — the fused jitted step has no host
+        # boundaries to span, so this is where fwd/bwd/quant/optim
+        # attribution comes from
+        with jax.named_scope("fwd"):
+            out = M.forward(
+                frozen, adapters, quant_state, mb["tokens"], cfg,
+                input_embeds=mb.get("embeds"), remat=remat, rng=rng)
         logits, stats, aux = out.logits, out.stats, out.aux_loss
         if n_prefix:
             logits = logits[:, n_prefix:, :]
@@ -104,8 +109,9 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig):
         def micro(carry, xs):
             mb, key = xs
             g_acc, loss_acc, aux_acc = carry
-            (_, (loss, aux, stats)), grads = grad_fn(
-                state.adapters, frozen, state.quant, mb, key)
+            with jax.named_scope("bwd"):
+                (_, (loss, aux, stats)), grads = grad_fn(
+                    state.adapters, frozen, state.quant, mb, key)
             g_acc = jax.tree.map(lambda a, g: a + g, g_acc, grads)
             return (g_acc, loss_acc + loss, aux_acc + aux), stats
 
@@ -116,15 +122,18 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig):
         # momentum update uses the LAST microbatch's stats (freshest)
         stats = jax.tree.map(lambda s: s[-1], stats_all)
 
-        new_adapters, new_opt, opt_metrics = adamw.update(
-            grads, state.opt, state.adapters,
-            lr=tcfg.learning_rate, beta1=tcfg.beta1, beta2=tcfg.beta2,
-            weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip,
-            compress=tcfg.grad_compression)
+        with jax.named_scope("optim"):
+            new_adapters, new_opt, opt_metrics = adamw.update(
+                grads, state.opt, state.adapters,
+                lr=tcfg.learning_rate, beta1=tcfg.beta1, beta2=tcfg.beta2,
+                weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip,
+                compress=tcfg.grad_compression)
 
         new_quant = state.quant
         if _has_scale_state(state.quant):
-            new_quant = update_quant_state(state.quant, stats, cfg.quant.gamma)
+            with jax.named_scope("quant"):
+                new_quant = update_quant_state(state.quant, stats,
+                                               cfg.quant.gamma)
 
         metrics = {
             "loss": loss_sum / nmb,

@@ -32,7 +32,7 @@ def test_rule_catalogue():
     rules = get_rules()
     assert [r.rule_id for r in rules] == [
         "RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006",
-        "RPR009", "RPR010",
+        "RPR009", "RPR010", "RPR011",
     ]
     assert all(r.severity in ("error", "warning") for r in rules)
     assert all(r.description for r in rules)
@@ -763,6 +763,77 @@ def test_rpr010_shipped_readme_matches_facade():
     assert findings == [], "\n".join(f.render() for f in findings)
 
 
+# ------------------------------------------------------------------ RPR011
+
+
+BAD_DIRECT_CLOCK = """
+    import time
+
+    def admit(slot):
+        t0 = time.perf_counter()
+        slot.run()
+        return time.perf_counter() - t0
+"""
+
+BAD_CLOCK_FROM_IMPORT = """
+    from time import monotonic
+
+    def tick():
+        return monotonic()
+"""
+
+GOOD_OBS_CLOCK = """
+    from repro.obs import clock
+
+    def admit(slot):
+        t0 = clock.now()
+        slot.run()
+        return clock.now() - t0
+"""
+
+GOOD_WALL_CLOCK = """
+    import time
+
+    def heartbeat(path, step):
+        return {"step": step, "time": time.time()}
+"""
+
+BAD_CLOCK_NOQA = """
+    import time
+
+    def legacy():
+        return time.monotonic()  # repro: noqa[RPR011] pre-obs shim
+"""
+
+LIB = "src/repro/serving/engine.py"
+
+
+def test_rpr011_flags_direct_clock_in_library():
+    assert ids(run(BAD_DIRECT_CLOCK, "RPR011", path=LIB)) == [
+        "RPR011", "RPR011"]
+    assert ids(run(BAD_CLOCK_FROM_IMPORT, "RPR011", path=LIB)) == ["RPR011"]
+
+
+def test_rpr011_good_patterns_pass():
+    assert run(GOOD_OBS_CLOCK, "RPR011", path=LIB) == []
+    assert run(GOOD_WALL_CLOCK, "RPR011", path=LIB) == []
+
+
+def test_rpr011_scope():
+    # obs/ itself is the sanctioned home of the clock
+    assert run(BAD_DIRECT_CLOCK, "RPR011",
+               path="src/repro/obs/clock.py") == []
+    # tests/benchmarks are outside the library
+    assert run(BAD_DIRECT_CLOCK, "RPR011",
+               path="benchmarks/bench_serving.py") == []
+    assert run(BAD_DIRECT_CLOCK, "RPR011",
+               path="tests/test_serving.py") == []
+
+
+def test_rpr011_noqa():
+    assert run(BAD_CLOCK_NOQA, "RPR011", path=LIB) == []
+
+
 # --------------------------------------------------------------- noqa
 
 
@@ -842,7 +913,7 @@ def test_cli_list_rules(capsys):
     assert cli_main(["--list-rules"]) == 0
     out = capsys.readouterr().out
     for rid in ("RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006",
-                "RPR009", "RPR010"):
+                "RPR009", "RPR010", "RPR011"):
         assert rid in out
 
 

@@ -1,0 +1,253 @@
+"""repro.obs: span nesting + Chrome-trace schema, histogram percentile
+math vs numpy, disabled-mode no-op guarantees, engine wiring (per-request
+latency fields, trace + latency histograms), and the OSSH drift monitor
+on a margin-checked fixture with engineered stable outlier channels."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro import obs as OBS
+from repro.core.peft import PEFTConfig
+from repro.data.pipeline import DataConfig, Loader
+from repro.models.config import ModelConfig, QuantConfig, TrainConfig
+from repro.obs import clock
+from repro.serving import Engine, EngineConfig, GenerationRequest
+
+VOCAB, PROMPT = 128, 8
+
+
+def _tiny_cfg(mode="fp32"):
+    return ModelConfig(
+        name="obs-test", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab_size=VOCAB, head_dim=16,
+        quant=QuantConfig(mode=mode),
+        peft=PEFTConfig(method="lora", lora_rank=4))
+
+
+@pytest.fixture
+def fake_clock():
+    """Deterministic clock: each read advances 1ms."""
+    state = {"t": 0.0}
+
+    def tick():
+        state["t"] += 1e-3
+        return state["t"]
+
+    prev = clock.set_source(tick)
+    yield state
+    clock.set_source(prev)
+
+
+# ---------------------------------------------------------------- trace
+
+
+def test_span_nesting_and_chrome_schema(fake_clock, tmp_path):
+    tr = OBS.Tracer()
+    with tr.span("outer", cat="test", a=1):
+        with tr.span("inner", cat="test"):
+            tr.instant("mark", cat="test")
+        tr.counter("depth", {"value": 1})
+    tr.async_begin("request", 7, prompt_len=4)
+    tr.async_instant("request", 7, "first_token")
+    tr.async_end("request", 7, reason="length")
+    assert tr.open_spans() == {}
+
+    payload = tr.to_chrome_trace()
+    assert OBS.validate_chrome_trace(payload) is None
+    evs = [e for e in payload["traceEvents"] if e["ph"] != "M"]
+    names = [e["name"] for e in evs]
+    # B/E properly nested: inner closes before outer
+    assert names.index("inner") > names.index("outer")
+    b_inner = next(e for e in evs if e["name"] == "inner" and e["ph"] == "B")
+    e_inner = next(e for e in evs if e["name"] == "inner" and e["ph"] == "E")
+    b_outer = next(e for e in evs if e["name"] == "outer" and e["ph"] == "B")
+    e_outer = next(e for e in evs if e["name"] == "outer" and e["ph"] == "E")
+    assert b_outer["ts"] < b_inner["ts"] <= e_inner["ts"] < e_outer["ts"]
+    # async lane events carry a shared id
+    reqs = [e for e in evs if e["name"] == "request"]
+    assert {e["ph"] for e in reqs} == {"b", "n", "e"}
+    assert len({e["id"] for e in reqs}) == 1
+
+    out = tmp_path / "trace.json"
+    tr.write(str(out))
+    assert OBS.validate_chrome_trace(json.loads(out.read_text())) is None
+
+
+def test_unbalanced_trace_is_rejected():
+    tr = OBS.Tracer()
+    tr._begin("dangling", "test", clock.now(), {}, OBS.TID_ENGINE)
+    err = OBS.validate_chrome_trace(tr.to_chrome_trace())
+    assert err is not None and "dangling" in err
+
+
+# -------------------------------------------------------------- metrics
+
+
+def test_histogram_percentiles_match_numpy():
+    rng = np.random.default_rng(0)
+    samples = rng.uniform(0.001, 1.0, size=2000)
+    h = OBS.Histogram("lat_s", buckets=OBS.DEFAULT_LATENCY_BUCKETS)
+    for s in samples:
+        h.observe(float(s))
+    for p in (50.0, 95.0, 99.0):
+        true = float(np.quantile(samples, p / 100.0))
+        est = h.percentile(p)
+        # bucket-width accuracy: the estimate interpolates inside the
+        # bucket containing the true quantile
+        edges = [0.0] + list(OBS.DEFAULT_LATENCY_BUCKETS)
+        hi = next(b for b in edges[1:] if true <= b)
+        lo = edges[edges.index(hi) - 1]
+        assert lo <= est <= hi, (p, true, est, lo, hi)
+    d = h.as_dict()
+    assert d["count"] == 2000
+    assert d["sum"] == pytest.approx(float(samples.sum()), rel=1e-6)
+    assert d["min"] == pytest.approx(samples.min())
+    assert d["max"] == pytest.approx(samples.max())
+
+
+def test_histogram_empty_and_overflow():
+    h = OBS.Histogram("x", buckets=(1.0, 2.0))
+    assert np.isnan(h.percentile(50.0))
+    h.observe(5.0)  # beyond the last bucket -> overflow bucket
+    # overflow interpolates between the last edge and the observed max
+    assert 2.0 <= h.percentile(50.0) <= 5.0
+    assert h.percentile(100.0) == pytest.approx(5.0)
+
+
+def test_registry_snapshot_and_prometheus():
+    reg = OBS.MetricsRegistry()
+    reg.inc("requests", 2)
+    reg.set_gauge("jaccard", 0.75, labels={"layer": "wq"})
+    reg.observe("ttft_s", 0.05)
+    snap = reg.snapshot()
+    assert snap["counters"]["requests"] == 2
+    assert snap["gauges"]["jaccard{layer=wq}"] == 0.75
+    assert snap["histograms"]["ttft_s"]["count"] == 1
+    text = reg.to_prometheus()
+    assert "# TYPE requests counter" in text
+    assert 'jaccard{layer="wq"} 0.75' in text
+    assert 'ttft_s_bucket{le="+Inf"} 1' in text
+    assert "ttft_s_count 1" in text
+
+
+# -------------------------------------------------------- disabled mode
+
+
+def test_disabled_mode_is_true_noop():
+    before = OBS.mutation_count()
+    obs = OBS.NULL_OBS
+    assert not obs.enabled
+    # span path: the module singleton, no allocation, no clock
+    s = obs.span("anything", cat="x", step=3)
+    assert s is OBS.NULL_SPAN
+    with s:
+        pass
+    assert s.elapsed_s == 0.0
+    obs.inc("c")
+    obs.set_gauge("g", 1.0)
+    obs.observe("h", 0.5)
+    obs.instant("i")
+    obs.async_begin("r", 1)
+    obs.async_end("r", 1)
+    obs.counter("k", {"v": 1})
+    assert obs.export() == {}
+    assert OBS.mutation_count() == before  # zero registry mutations
+
+
+def test_null_obs_phase_pair_still_times(fake_clock):
+    """EngineStats accounting must work with observability off: the
+    phase pair reads the clock (CI gates on decode tokens/s > 0) but
+    emits nothing."""
+    obs = OBS.NULL_OBS
+    t0 = obs.phase_begin("decode")
+    dt = obs.phase_end("decode", t0, hist="decode_dispatch_s")
+    assert dt == pytest.approx(1e-3)  # exactly two fake-clock ticks
+
+
+# ------------------------------------------------------- engine wiring
+
+
+def test_engine_request_latency_and_trace():
+    model = api.prepare(_tiny_cfg())
+    obs = OBS.Obs.from_config(OBS.ObsConfig(trace=True, metrics=True))
+    eng = Engine(model, EngineConfig(max_slots=2, max_seq_len=PROMPT + 4),
+                 obs=obs)
+    prompts = np.asarray(Loader(DataConfig(
+        vocab_size=VOCAB, seq_len=PROMPT, batch_size=3)).batch(0)["tokens"])
+    outs = eng.run([GenerationRequest(p, max_new_tokens=4) for p in prompts])
+
+    # satellite: RequestOutput latency fields always populated
+    for o in outs:
+        assert o.ttft_s > 0.0
+        assert o.e2e_s >= o.ttft_s
+        assert o.queue_s >= 0.0
+    # 3 requests on 2 slots: someone waited in the queue
+    assert max(o.queue_s for o in outs) > 0.0
+
+    payload = obs.tracer.to_chrome_trace()
+    assert OBS.validate_chrome_trace(payload) is None
+    names = {e["name"] for e in payload["traceEvents"]}
+    assert {"prefill", "decode", "request", "first_token"} <= names
+
+    snap = obs.metrics.snapshot()
+    assert snap["counters"]["requests_submitted"] == 3
+    assert snap["counters"]["requests_completed"] == 3
+    assert snap["histograms"]["ttft_s"]["count"] == 3
+    assert snap["histograms"]["itl_s"]["count"] == 3 * (4 - 1)
+    assert snap["histograms"]["e2e_s"]["count"] == 3
+
+
+# --------------------------------------------------------- OSSH drift
+
+
+def test_ossh_drift_monitor_on_finetune():
+    """Margin-checked fixture: inflating a few embedding columns 40x
+    makes those channels dominate every layer's input magnitude (RMSNorm
+    normalizes per token, preserving channel dominance), so the top-k
+    outlier sets are genuinely stable under a few optimizer steps — the
+    monitor must report near-perfect overlap, not coincidence."""
+    dcfg = DataConfig(vocab_size=VOCAB, seq_len=PROMPT, batch_size=4)
+    loader = Loader(dcfg)
+    model = api.prepare(_tiny_cfg())
+    emb = np.array(model.frozen["embed"]["tokens"])
+    emb[:, [3, 17, 41]] *= 40.0
+    model.frozen["embed"]["tokens"] = emb
+    model.calibrate([loader.batch(0)])
+    model.convert("quaff")
+
+    tcfg = TrainConfig(microbatches=1, remat=False, learning_rate=1e-4)
+    obs = OBS.Obs.from_config(OBS.ObsConfig(trace=True, metrics=True))
+    model.finetune(tcfg, loader, steps=4, obs=obs, ossh_monitor_every=2)
+
+    assert len(model.ossh_drift) == 2
+    total_stable = total_entered = 0
+    for step, drifts in model.ossh_drift:
+        assert drifts, "monitor produced no per-layer observations"
+        for ld in drifts.values():
+            assert 0.0 <= ld.jaccard <= 1.0
+            assert 0.0 <= ld.jaccard_min <= 1.0
+            assert ld.entered == ld.exited  # both sets have size k
+            total_stable += ld.stable
+            total_entered += ld.entered
+    # engineered outliers survive a few small steps: overwhelmingly stable
+    assert total_stable >= total_entered
+    mean_jac = np.mean([ld.jaccard for _, d in model.ossh_drift
+                        for ld in d.values()])
+    assert mean_jac > 0.8
+
+    # telemetry flowed into gauges + the trace
+    snap = obs.metrics.snapshot()
+    assert any(k.startswith("ossh_jaccard") for k in snap["gauges"])
+    names = {e["name"] for e in obs.tracer.events()}
+    assert "ossh_monitor" in names and "train_step" in names
+
+
+def test_ossh_monitor_requires_calibration():
+    model = api.prepare(_tiny_cfg())  # never calibrated
+    loader = Loader(DataConfig(vocab_size=VOCAB, seq_len=PROMPT,
+                               batch_size=4))
+    tcfg = TrainConfig(microbatches=1, remat=False)
+    with pytest.raises(ValueError, match="calibrate"):
+        model.finetune(tcfg, loader, steps=1, ossh_monitor_every=1)

@@ -26,6 +26,13 @@ parity):
                      tokens/s win over the decode_steps=1 baseline) and
                      quaff@8 self-speculation (greedy identity for fp AND
                      int8 KV, acceptance rate, steps/dispatch)
+  --unified-step     unified mixed-batch step rows instead: a staggered
+                     workload (ragged prompt lengths + budgets, so
+                     admissions land mid-decode) served with
+                     unified_step=True vs the two-dispatch baseline on
+                     all four KV layouts (contiguous / paged / paged-int8
+                     / paged-prefix), gated on greedy token identity,
+                     pad_tokens_saved > 0, and a tokens/s win
 
 Rows follow the bench_kernels convention: (name, us_per_call, derived).
 ``serving_engine_greedy_parity`` carries ``parity=True/False`` (engine
@@ -403,6 +410,95 @@ def run_spec(mode: str = "quaff", tiny: bool = False):
     return rows, extra
 
 
+def run_unified(mode: str = "quaff", tiny: bool = False):
+    """Unified mixed-batch step rows: the SAME staggered workload (ragged
+    prompt lengths and decode budgets, more requests than slots, so fresh
+    admissions land while neighbours still decode) served with
+    ``unified_step=True`` against the classic two-dispatch engine on all
+    four KV layouts. The CI gates read ``parity`` (greedy token identity
+    on every layout), ``saved`` (> 0: decode rows stopped paying
+    idle-slot pad tokens), and the best-of-two ``tok_s=A>B=baseline``
+    throughput comparison off the row text."""
+    n_req, slots, plen, max_new = (6, 2, 8, 6) if tiny else (12, 4, 32, 16)
+    block_size = 4 if tiny else 16
+    chunk = max(1, plen // 2)
+    cfg, frozen, adapters, qstate = common.build_mode_model(
+        mode, dcfg=common.data_cfg(batch=max(n_req, 4), seq=plen, vocab=512))
+    model = api.QuaffModel(cfg, frozen, adapters, qstate)
+    full = np.asarray(Loader(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=plen,
+        batch_size=n_req)).batch(0)["tokens"])
+    # ragged lengths + staggered budgets: completions desync, slots refill
+    # with fresh prefills mid-decode, and unified dispatches genuinely mix
+    prompts = [full[i][: plen - (i % 3)].tolist() for i in range(n_req)]
+    budgets = [max_new + (i % 3) for i in range(n_req)]
+    opener = full[0][:block_size].tolist()  # block-aligned shared prefix
+
+    layouts = {
+        "contiguous": {},
+        "paged": dict(kv_layout="paged", block_size=block_size,
+                      prefill_chunk=chunk),
+        "paged-int8": dict(kv_layout="paged", kv_dtype="int8",
+                           block_size=block_size, prefill_chunk=chunk),
+        "paged-prefix": dict(kv_layout="paged", block_size=block_size,
+                             prefill_chunk=chunk, prefix_share=True),
+    }
+
+    rows, extra = [], {}
+    extra["workload"] = {"n_requests": n_req, "n_slots": slots,
+                         "prompt_len": plen, "max_new": max_new,
+                         "max_seq_len": plen + block_size + max_new + 2,
+                         "block_size": block_size, "prefill_chunk": chunk,
+                         "staggered_lengths": [len(p) for p in prompts],
+                         "budgets": budgets}
+
+    def serve(work, **over):
+        eng = model.engine(EngineConfig(
+            max_slots=slots, max_seq_len=plen + block_size + max_new + 2,
+            **over), fresh=True)
+        outs = eng.run([GenerationRequest(p, max_new_tokens=b)
+                        for p, b in zip(work, budgets)])
+        return [o.token_ids for o in outs], eng.stats
+
+    # ---- greedy token identity on every layout (also compiles both
+    # dispatch shapes per config, so the timed pair below hits jit caches)
+    parity = {}
+    for name, kv in layouts.items():
+        work = [opener + p for p in prompts] if "prefix" in name else prompts
+        base, _ = serve(work, **kv)
+        got, _ = serve(work, unified_step=True, **kv)
+        parity[name] = base == got
+    all_ok = all(parity.values())
+
+    # ---- timed pair on the paged layout, best-of-two (CI CPU timing is
+    # noisy; the packing win is structural)
+    paged = layouts["paged"]
+
+    def tok_s(st):
+        return st.tokens_per_s
+
+    _, st_b = serve(prompts, **paged)
+    tok_base = max(tok_s(st_b), tok_s(serve(prompts, **paged)[1]))
+    _, st_u = serve(prompts, unified_step=True, **paged)
+    tok_uni = max(tok_s(st_u), tok_s(serve(prompts, unified_step=True,
+                                           **paged)[1]))
+    rows.append((
+        "serving_unified_tokens_s",
+        (st_u.prefill_time_s + st_u.decode_time_s
+         + st_u.unified_time_s) * 1e6,
+        f"parity={all_ok} tok_s={tok_uni:.1f}>{tok_base:.1f}=baseline "
+        f"layouts={','.join(sorted(parity))}"))
+    rows.append((
+        "serving_pad_tokens_saved", 0.0,
+        f"saved={st_u.pad_tokens_saved}>0 mixed={st_u.mixed_batches} "
+        f"dispatches={st_u.unified_dispatches} "
+        f"legacy_decode_pads={st_b.decode_pad_tokens}"))
+    extra["unified_stats"] = st_u.as_dict()
+    extra["baseline_stats"] = st_b.as_dict()
+    extra["parity"] = parity
+    return rows, extra
+
+
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--tiny", action="store_true",
@@ -421,9 +517,15 @@ def main(argv=None):
                    help="emit multi-step + self-speculative decode rows "
                         "(greedy identity fp + int8, acceptance rate, "
                         "dispatch-amortization win)")
+    p.add_argument("--unified-step", action="store_true",
+                   help="emit unified mixed-batch step rows (4-layout "
+                        "greedy identity, pad tokens saved, tokens/s win "
+                        "over the two-dispatch baseline)")
     p.add_argument("--json", metavar="PATH", default=None)
     args = p.parse_args(argv)
-    if args.spec_decode:
+    if args.unified_step:
+        rows, extra = run_unified(mode=args.mode, tiny=args.tiny)
+    elif args.spec_decode:
         rows, extra = run_spec(mode=args.mode, tiny=args.tiny)
     elif args.prefix_share:
         rows, extra = run_prefix(mode=args.mode, tiny=args.tiny)

@@ -14,6 +14,7 @@ from repro.analysis.rules import (
     rpr004_pallas,
     rpr005_scales,
     rpr006_backend,
+    rpr007_sharding,
     rpr009_interpret,
     rpr010_facade,
     rpr011_timing,
@@ -26,6 +27,7 @@ __all__ = [
     "rpr004_pallas",
     "rpr005_scales",
     "rpr006_backend",
+    "rpr007_sharding",
     "rpr009_interpret",
     "rpr010_facade",
     "rpr011_timing",

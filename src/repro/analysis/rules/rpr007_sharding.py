@@ -1,0 +1,184 @@
+"""RPR007 — sharding specs must name real mesh axes (and match arity).
+
+``PartitionSpec`` axis names are stringly typed: ``P("modle", None)`` or
+``P("tensor", None)`` parses, jits, and — because unknown axes only fail
+at ``NamedSharding`` construction against a concrete mesh — can survive
+until a multi-host launch that no unit test exercises. The mesh axis
+vocabulary for this repo is defined once, in ``repro.launch.mesh``
+(``("pod", "data", "model")`` for pod-scale, ``("data", "model")``
+otherwise); every sharding spec anywhere in the tree must draw from it.
+
+Two checks, both project-level (the mesh module is read cross-file):
+
+  * every string-literal axis passed to a ``PartitionSpec(...)`` call
+    (directly or inside a tuple/list entry) must be one of the mesh axis
+    names harvested from ``repro.launch.mesh`` — all-string tuples
+    assigned to (or defaulted into a parameter named) ``axes``. When the
+    mesh module is not part of the analyzed file set, the canonical
+    ``{"pod", "data", "model"}`` vocabulary applies.
+  * ``jax.jit(fn, in_shardings=(...))`` where ``fn`` is a module-local
+    ``def`` must pass exactly one spec per positional parameter — an
+    arity mismatch silently replicates (or crashes at lower time,
+    far from the typo). Skipped when the function takes ``*args``, has
+    parameter defaults, or the jit call sets ``static_argnums`` /
+    ``static_argnames`` (those change the mapping legitimately).
+
+Dynamic spellings — ``P(*axes)``, axis names held in variables, specs
+built by ``runtime.pspec`` rules — are out of lexical reach and pass.
+Suppress a deliberate exception with ``# repro: noqa[RPR007]``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from repro.analysis.context import ModuleContext, ProjectContext
+from repro.analysis.registry import Rule, register
+
+MESH_MODULE = "repro.launch.mesh"
+
+#: fallback vocabulary when ``repro.launch.mesh`` is outside the analyzed
+#: file set (single-file runs, unit-test snippets)
+DEFAULT_AXES = frozenset({"pod", "data", "model"})
+
+
+def _harvest_axes(value: ast.AST, axes: Set[str]) -> None:
+    """Collect every all-string tuple under ``value`` (handles the
+    ``(...) if multi_pod else (...)`` IfExp in make_production_mesh)."""
+    for node in ast.walk(value):
+        if (
+            isinstance(node, ast.Tuple)
+            and node.elts
+            and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, str)
+                for e in node.elts
+            )
+        ):
+            axes.update(e.value for e in node.elts)
+
+
+def _mesh_axes(project: ProjectContext) -> Set[str]:
+    """Axis vocabulary from ``repro.launch.mesh``: all-string tuples bound
+    to a name (or parameter) called ``axes``."""
+    mod = project.module(MESH_MODULE)
+    if mod is None:
+        return set(DEFAULT_AXES)
+    axes: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Assign):
+            if any(
+                isinstance(t, ast.Name) and t.id == "axes"
+                for t in node.targets
+            ):
+                _harvest_axes(node.value, axes)
+        elif isinstance(node, ast.AnnAssign):
+            if (
+                isinstance(node.target, ast.Name)
+                and node.target.id == "axes"
+                and node.value is not None
+            ):
+                _harvest_axes(node.value, axes)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            a = node.args
+            params = a.posonlyargs + a.args
+            for param, default in zip(params[len(params) - len(a.defaults):],
+                                      a.defaults):
+                if param.arg == "axes":
+                    _harvest_axes(default, axes)
+            for param, default in zip(a.kwonlyargs, a.kw_defaults):
+                if param.arg == "axes" and default is not None:
+                    _harvest_axes(default, axes)
+    return axes or set(DEFAULT_AXES)
+
+
+def _literal_axis_names(arg: ast.AST) -> Iterator[ast.Constant]:
+    """String constants used as axis entries of one PartitionSpec arg:
+    the arg itself, or the elements of a tuple/list entry (PartitionSpec
+    accepts ``("data", "model")`` to shard one dim over two axes)."""
+    if isinstance(arg, ast.Constant):
+        if isinstance(arg.value, str):
+            yield arg
+    elif isinstance(arg, (ast.Tuple, ast.List)):
+        for elt in arg.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                yield elt
+
+
+def _local_functions(ctx: ModuleContext):
+    return {
+        f.name: f
+        for f in ctx.tree.body
+        if isinstance(f, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+
+
+@register
+class ShardingSpecConsistency(Rule):
+    rule_id = "RPR007"
+    severity = "error"
+    description = (
+        "PartitionSpec axis names must exist on the repro.launch.mesh "
+        "mesh; jit in_shardings literals must match the function arity"
+    )
+
+    def check_project(self, project: ProjectContext):
+        axes = _mesh_axes(project)
+        shown = ", ".join(sorted(axes))
+        for ctx in project.modules:
+            yield from self._check_axis_names(ctx, axes, shown)
+            yield from self._check_jit_arity(ctx)
+
+    # ---- axis vocabulary -------------------------------------------------
+    def _check_axis_names(self, ctx: ModuleContext, axes, shown):
+        for call in ctx.calls():
+            qn = ctx.call_qualname(call)
+            if qn is None or qn.split(".")[-1] != "PartitionSpec":
+                continue
+            for arg in call.args:
+                for const in _literal_axis_names(arg):
+                    if const.value not in axes:
+                        yield self.finding(
+                            ctx,
+                            const,
+                            f"PartitionSpec axis {const.value!r} is not a "
+                            f"mesh axis (repro.launch.mesh defines: "
+                            f"{shown}) — typo'd axes replicate silently "
+                            "or fail only at multi-host launch",
+                        )
+
+    # ---- in_shardings arity ----------------------------------------------
+    def _check_jit_arity(self, ctx: ModuleContext):
+        local_fns = _local_functions(ctx)
+        for call in ctx.calls():
+            if ctx.call_qualname(call) != "jax.jit" or not call.args:
+                continue
+            kw = next(
+                (k for k in call.keywords if k.arg == "in_shardings"), None)
+            if kw is None or not isinstance(kw.value, (ast.Tuple, ast.List)):
+                continue
+            if any(
+                k.arg in ("static_argnums", "static_argnames")
+                for k in call.keywords
+            ):
+                continue
+            fn_ref = call.args[0]
+            if not isinstance(fn_ref, ast.Name):
+                continue
+            fn = local_fns.get(fn_ref.id)
+            if fn is None:
+                continue
+            a = fn.args
+            if a.vararg is not None or a.defaults:
+                continue
+            n_params = len(a.posonlyargs) + len(a.args)
+            n_specs = len(kw.value.elts)
+            if n_specs != n_params:
+                yield self.finding(
+                    ctx,
+                    kw.value,
+                    f"in_shardings has {n_specs} spec(s) but "
+                    f"{fn_ref.id}() takes {n_params} positional "
+                    "argument(s) — jax pads/truncates nothing; this "
+                    "fails at lower time or silently mis-shards",
+                )

@@ -8,6 +8,11 @@ entry points:
   int4_matmul   int4_matmul_fused — fused unpack-dequant GEMM over packed
                 INT4 weights with group-wise scales (w4a4 and w4a8)
   flash_attention  flash_attention / gqa_flash_attention
+  ragged_attention ragged_attention — ONE flash dispatch over a flattened
+                mixed prefill+decode token stream with per-row offset
+                tables (paged or contiguous KV, in-kernel int8 dequant)
+  ragged_matmul ragged_int4_matmul / ragged_qkv_matmul — the int4 fused
+                GEMM with pad-block skipping + fused q/k/v projection
   ops           jnp-orchestrated full-layer forwards built from the above
   ref           pure-jnp oracles every kernel test compares against
 
@@ -21,6 +26,8 @@ from repro.kernels.int4_matmul import int4_matmul_fused
 from repro.kernels.int4_pack import pack_int4_pallas, unpack_int4_pallas
 from repro.kernels.int8_quant import rowmax, scale_quant
 from repro.kernels.quaff_matmul import quaff_matmul_fused
+from repro.kernels.ragged_attention import ragged_attention
+from repro.kernels.ragged_matmul import ragged_int4_matmul, ragged_qkv_matmul
 
 __all__ = [
     "FORCE_INTERPRET",
@@ -28,6 +35,9 @@ __all__ = [
     "flash_attention",
     "gqa_flash_attention",
     "int4_matmul_fused",
+    "ragged_attention",
+    "ragged_int4_matmul",
+    "ragged_qkv_matmul",
     "pack_int4_pallas",
     "unpack_int4_pallas",
     "rowmax",

@@ -1,0 +1,239 @@
+"""Pallas TPU kernel: ragged flash attention over a flattened token stream.
+
+One dispatch serves PREFILL rows and DECODE rows together (POD-attention
+style). Queries arrive as ONE ragged stream ``(total_tokens, KH, G, hd)``
+with per-row offset tables — ``row_start`` / ``row_len`` locate each row's
+span in the stream, ``cursor`` is how many positions the row already holds
+in its KV pool. A row attends to
+
+  * its pool prefix ``[0, cursor)``, read through the per-row block table
+    (in-kernel int8 dequant under the paged pool's static per-channel K
+    grid + per-token V scales — same layout as
+    ``serving/paged/kernels/paged_attention.py``), and
+  * its OWN span of the step's K/V stream (``k_self`` / ``v_self``),
+    causally masked within the span.
+
+A contiguous (non-paged) slot buffer is the degenerate pool: one page of
+``max_seq_len`` positions per row with an identity block table, so the same
+kernel serves both KV layouts. Decode rows are just ``row_len == 1`` spans;
+dead rows (``row_len == 0``) produce finite don't-care output the caller
+never gathers.
+
+Grid ``(n_rows, KH, pages + 1)``: the first ``pages`` steps stream the pool
+prefix through the online-softmax accumulator (fully-masked pages wash out
+exactly — the first live score zeroes the provisional sums via
+``alpha = exp(-inf - m) = 0``), the final step folds in the causal self
+span and normalizes. The offset tables ride in SMEM via scalar prefetch so
+the K/V BlockSpec index maps can chase the block tables, and the Q/self
+streams are whole-array refs sliced at ``row_start`` with ``pl.ds``.
+
+Routing: ``models.layers`` consults ``REPRO_RAGGED_PALLAS=1`` (read once at
+import, like the paged sibling); the pure-jnp path below
+(``ragged_attention_ref``) is the oracle and the default CPU math.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import interpret_mode
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, rs_ref, rl_ref, cur_ref, q_ref, ks_ref, vs_ref,
+            kp_ref, vp_ref, ksc_ref, vsc_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, pages: int, page_size: int, bq: int, g: int):
+    r, h, p = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    hd = q_ref.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = rs_ref[r]
+    q = q_ref[pl.ds(start, bq), h].astype(jnp.float32)       # (bq, g, hd)
+    qf = q.reshape(bq * g, hd)
+
+    def accumulate(s, v):
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        probs = jnp.exp(s - m_cur)
+        alpha = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(probs, axis=1,
+                                                  keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + probs @ v
+        m_ref[...] = m_cur
+
+    @pl.when(p < pages)
+    def _pool_page():
+        # pool prefix through the block table, dequantized in-register
+        # (unit scales on fp pools make this the identity)
+        k = kp_ref[0, :, 0, :].astype(jnp.float32) * ksc_ref[...]
+        v = vp_ref[0, :, 0, :].astype(jnp.float32) * vsc_ref[0]
+        s = jax.lax.dot_general(
+            qf, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (bq*g, page)
+        pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < cur_ref[r], s, NEG_INF)
+        accumulate(s, v)
+
+    @pl.when(p == pages)
+    def _self_span():
+        ks = ks_ref[pl.ds(start, bq), h].astype(jnp.float32)  # (bq, hd)
+        vs = vs_ref[pl.ds(start, bq), h].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            qf, ks, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # (bq*g, bq)
+        qi = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // g
+        kj = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where((kj <= qi) & (kj < rl_ref[r]), s, NEG_INF)
+        accumulate(s, vs)
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)
+        o_ref[0, 0] = out.reshape(bq, g, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("max_row_len", "interpret"))
+def ragged_attention(
+    q: jnp.ndarray,             # (total_tokens, KH, G, hd) ragged Q stream
+    k_self: jnp.ndarray,        # (total_tokens, KH, hd) this step's keys
+    v_self: jnp.ndarray,        # (total_tokens, KH, hd) this step's values
+    k_pool: jnp.ndarray,        # (n_pages, page, KH, hd) f32 or int8
+    v_pool: jnp.ndarray,        # (n_pages, page, KH, hd) f32 or int8
+    block_tables: jnp.ndarray,  # (n_rows, pages) int32
+    row_start: jnp.ndarray,     # (n_rows,) int32 span start in the stream
+    row_len: jnp.ndarray,       # (n_rows,) int32 span length (0 = dead row)
+    cursor: jnp.ndarray,        # (n_rows,) int32 pool positions already held
+    k_scale=None,               # (KH, hd) f32 static per-channel K grid
+    v_scale=None,               # (n_pages, page, KH) f32 per-token V scales
+    *,
+    max_row_len: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns per-row output ``(n_rows, max_row_len, KH, G, hd)`` f32; the
+    caller gathers position ``i`` of row ``r`` back into its stream slot.
+    Entries past ``row_len`` are don't-care."""
+    interpret = interpret_mode(interpret)
+    total, kh, g, hd = q.shape
+    n_rows, pages = block_tables.shape
+    page_size = k_pool.shape[1]
+    bq = max_row_len
+    # fp pools pass scale=None: resolved at trace time (None is a static
+    # pytree leaf, not a tracer), so dequant becomes the identity
+    if k_scale is None:  # repro: noqa[RPR002] None check is static
+        k_scale = jnp.ones((kh, hd), jnp.float32)
+    if v_scale is None:  # repro: noqa[RPR002] None check is static
+        v_scale = jnp.ones(v_pool.shape[:3], jnp.float32)
+    # pad the streams by one span so any (row_start, bq) slice is in bounds
+    q = jnp.pad(q, ((0, bq), (0, 0), (0, 0), (0, 0)))
+    k_self = jnp.pad(k_self, ((0, bq), (0, 0), (0, 0)))
+    v_self = jnp.pad(v_self, ((0, bq), (0, 0), (0, 0)))
+    # one trash column so the K/V index maps stay in bounds on the self step
+    bt = jnp.concatenate(
+        [block_tables.astype(jnp.int32),
+         jnp.zeros((n_rows, 1), jnp.int32)], axis=1)
+
+    grid = (n_rows, kh, pages + 1)
+    out = pl.pallas_call(
+        functools.partial(_kernel, pages=pages, page_size=page_size,
+                          bq=bq, g=g),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=4,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(q.shape,
+                             lambda r, h, p, bt, rs, rl, cur: (0, 0, 0, 0)),
+                pl.BlockSpec(k_self.shape,
+                             lambda r, h, p, bt, rs, rl, cur: (0, 0, 0)),
+                pl.BlockSpec(v_self.shape,
+                             lambda r, h, p, bt, rs, rl, cur: (0, 0, 0)),
+                pl.BlockSpec(
+                    (1, page_size, 1, hd),
+                    lambda r, h, p, bt, rs, rl, cur: (bt[r, p], 0, h, 0)),
+                pl.BlockSpec(
+                    (1, page_size, 1, hd),
+                    lambda r, h, p, bt, rs, rl, cur: (bt[r, p], 0, h, 0)),
+                pl.BlockSpec((1, hd),
+                             lambda r, h, p, bt, rs, rl, cur: (h, 0)),
+                pl.BlockSpec(
+                    (1, page_size, 1),
+                    lambda r, h, p, bt, rs, rl, cur: (bt[r, p], 0, h)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, bq, g, hd),
+                lambda r, h, p, bt, rs, rl, cur: (r, h, 0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bq * g, 1), jnp.float32),
+                pltpu.VMEM((bq * g, 1), jnp.float32),
+                pltpu.VMEM((bq * g, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_rows, kh, bq, g, hd), jnp.float32),
+        interpret=interpret,
+    )(bt, row_start.astype(jnp.int32), row_len.astype(jnp.int32),
+      cursor.astype(jnp.int32), q, k_self, v_self, k_pool, v_pool,
+      k_scale, v_scale)
+    return out.transpose(0, 2, 1, 3, 4)          # (n_rows, bq, KH, G, hd)
+
+
+def ragged_attention_ref(q, k_self, v_self, k_pool, v_pool, block_tables,
+                         row_start, row_len, cursor,
+                         k_scale=None, v_scale=None, *,
+                         max_row_len: int) -> jnp.ndarray:
+    """Pure-jnp oracle, bit-compatible masking with the kernel (and the
+    default CPU math ``models.layers`` runs without the env flag)."""
+    bq = max_row_len
+    n_rows, pages = block_tables.shape
+    page = k_pool.shape[1]
+    qp = jnp.pad(q, ((0, bq), (0, 0), (0, 0), (0, 0))).astype(jnp.float32)
+    ksp = jnp.pad(k_self, ((0, bq), (0, 0), (0, 0))).astype(jnp.float32)
+    vsp = jnp.pad(v_self, ((0, bq), (0, 0), (0, 0))).astype(jnp.float32)
+    idx = row_start[:, None] + jnp.arange(bq, dtype=jnp.int32)[None, :]
+    qr, ks, vs = qp[idx], ksp[idx], vsp[idx]     # (R, bq, ...)
+
+    kg = k_pool[block_tables].astype(jnp.float32)  # (R, P, page, KH, hd)
+    vg = v_pool[block_tables].astype(jnp.float32)
+    if k_scale is not None:
+        kg = kg * k_scale
+    if v_scale is not None:
+        vg = vg * v_scale[block_tables][..., None]
+    t_ctx = pages * page
+    kh, hd = kg.shape[-2], kg.shape[-1]
+    kf = jnp.concatenate([kg.reshape(n_rows, t_ctx, kh, hd), ks], axis=1)
+    vf = jnp.concatenate([vg.reshape(n_rows, t_ctx, kh, hd), vs], axis=1)
+
+    kpos = jnp.arange(t_ctx + bq, dtype=jnp.int32)           # (Tk,)
+    qi = jnp.arange(bq, dtype=jnp.int32)                     # (bq,)
+    self_j = kpos - t_ctx
+    key_ok = jnp.where(kpos[None, :] < t_ctx,
+                       kpos[None, :] < cursor[:, None],
+                       self_j[None, :] < row_len[:, None])   # (R, Tk)
+    causal = (kpos[None, None, :] < t_ctx) \
+        | (self_j[None, None, :] <= qi[None, :, None])       # (1, bq, Tk)
+    mask = key_ok[:, None, :] & causal                       # (R, bq, Tk)
+
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("rikgh,rjkh->rkgij", qr, kf) * scale
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("rkgij,rjkh->rikgh", probs, vf)
+
+
+def ragged_attention_auto(q, k_self, v_self, k_pool, v_pool, block_tables,
+                          row_start, row_len, cursor,
+                          k_scale=None, v_scale=None, *,
+                          max_row_len: int) -> jnp.ndarray:
+    """Entry point for ``models.layers``: compiled on TPU, interpret
+    elsewhere."""
+    interpret = jax.default_backend() != "tpu"
+    return ragged_attention(q, k_self, v_self, k_pool, v_pool, block_tables,
+                            row_start, row_len, cursor, k_scale, v_scale,
+                            max_row_len=max_row_len, interpret=interpret)

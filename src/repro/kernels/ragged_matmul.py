@@ -1,0 +1,162 @@
+"""Pallas TPU kernel: ragged fused QKV projection over packed INT4 weights.
+
+The unified mixed-batch step (serving) feeds the attention projections one
+flattened ragged token stream padded to a static capacity — the tail past
+``n_tok`` is dead weight a dense GEMM would still pay for. This kernel is
+``kernels/int4_matmul.py`` (same split-half nibble unpack, group-wise
+scales, f32 accumulator) with two additions:
+
+  * ``n_tok`` rides in SMEM via scalar prefetch and gates every compute
+    step with ``pl.when`` — token blocks that are entirely padding skip
+    both integer dots AND the packed-byte unpack, writing zeros instead,
+    so the quantized GEMM genuinely skips pad rows at block granularity;
+  * ``ragged_qkv_matmul`` fuses the q/k/v projections into ONE kernel
+    launch by concatenating their packed carriers along c_out (all three
+    share c_in and the group grid), quantizing the activation stream once.
+
+Rows at or past ``n_tok`` inside a live block are unspecified (they carry
+whatever the padded activations produce); callers never read them. The
+jnp oracle ``ragged_int4_matmul_ref`` computes the dense product for
+parity checks on the live rows.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import fit_block, interpret_mode
+
+
+def _kernel(nt_ref, xlo_ref, xhi_ref, wp_ref, xd_ref, wdlo_ref, wdhi_ref,
+            out_ref, acc_ref, *, k_steps: int, block_t: int):
+    i, kk = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(i * block_t < nt_ref[0])
+    def _compute():
+        p = wp_ref[...].astype(jnp.int32) & 0xFF
+        w_lo = (((p & 0xF) ^ 8) - 8).astype(jnp.int8)          # [0, K/2)
+        w_hi = ((((p >> 4) & 0xF) ^ 8) - 8).astype(jnp.int8)   # [K/2, K)
+        p_lo = jax.lax.dot_general(
+            xlo_ref[...], w_lo, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        p_hi = jax.lax.dot_general(
+            xhi_ref[...], w_hi, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        acc_ref[...] += (p_lo.astype(jnp.float32) * wdlo_ref[...]
+                         + p_hi.astype(jnp.float32) * wdhi_ref[...])
+
+    @pl.when(kk == k_steps - 1)
+    def _epilogue():
+        out_ref[...] = (acc_ref[...] * xd_ref[...]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_n", "block_k",
+                                             "interpret"))
+def ragged_int4_matmul(
+    x_int: jnp.ndarray,     # (T, K) int8 — ragged stream, pad past n_tok
+    w_packed: jnp.ndarray,  # (K/2, N) int8 — two nibbles per byte
+    x_delta: jnp.ndarray,   # (T, 1) f32 per-token step
+    w_delta: jnp.ndarray,   # (G, N) f32 group steps (G == 1: per-OC)
+    n_tok: jnp.ndarray,     # () or (1,) int32 — live rows in the stream
+    *,
+    block_t: int = 128,
+    block_n: int = 128,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    interpret = interpret_mode(interpret)
+    t, k = x_int.shape
+    khalf, n = w_packed.shape
+    assert k == 2 * khalf, (k, khalf)
+    g = w_delta.shape[0]
+    assert k % g == 0, (k, g)
+    gs = k // g
+    bt = fit_block(block_t, t)
+    bn = fit_block(block_n, n)
+    bk = fit_block(block_k, khalf, gs)  # one scale group per (lo|hi) block
+    kh_steps = khalf // bk
+    grid = (t // bt, n // bn, kh_steps)
+    nt = jnp.reshape(n_tok, (1,)).astype(jnp.int32)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=kh_steps, block_t=bt),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bt, bk), lambda i, j, kk, nt: (i, kk)),
+                pl.BlockSpec((bt, bk),
+                             lambda i, j, kk, nt: (i, kk + kh_steps)),
+                pl.BlockSpec((bk, bn), lambda i, j, kk, nt: (kk, j)),
+                pl.BlockSpec((bt, 1), lambda i, j, kk, nt: (i, 0)),
+                pl.BlockSpec((1, bn),
+                             lambda i, j, kk, nt: ((kk * bk) // gs, j)),
+                pl.BlockSpec(
+                    (1, bn),
+                    lambda i, j, kk, nt: ((khalf + kk * bk) // gs, j)),
+            ],
+            out_specs=pl.BlockSpec((bt, bn), lambda i, j, kk, nt: (i, j)),
+            scratch_shapes=[pltpu.VMEM((bt, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((t, n), jnp.float32),
+        interpret=interpret,
+    )(nt, x_int, x_int, w_packed, x_delta, w_delta, w_delta)
+
+
+def ragged_qkv_matmul(
+    x_int: jnp.ndarray,
+    x_delta: jnp.ndarray,
+    w_packed: Sequence[jnp.ndarray],   # q/k/v carriers, each (K/2, N_i)
+    w_delta: Sequence[jnp.ndarray],    # matching (G, N_i) group steps
+    n_tok: jnp.ndarray,
+    *,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, ...]:
+    """One fused ragged GEMM for the q/k/v projections: the packed carriers
+    concatenate along c_out (they share c_in and the scale-group grid), the
+    stream is quantized once by the caller, pad blocks are skipped, and the
+    output splits back into per-projection slabs."""
+    gs = {d.shape[0] for d in w_delta}
+    assert len(gs) == 1, f"q/k/v group grids differ: {gs}"
+    wp = jnp.concatenate(list(w_packed), axis=1)
+    wd = jnp.concatenate(list(w_delta), axis=1)
+    y = ragged_int4_matmul(x_int, wp, x_delta, wd, n_tok,
+                           interpret=interpret)
+    sizes = [p.shape[1] for p in w_packed]
+    splits = []
+    off = 0
+    for s in sizes[:-1]:
+        off += s
+        splits.append(off)
+    return tuple(jnp.split(y, splits, axis=1))
+
+
+def ragged_int4_matmul_ref(x_int, w_packed, x_delta, w_delta) -> jnp.ndarray:
+    """Dense jnp oracle (no pad skipping): unpack both nibbles, group-wise
+    dequant, per-token step. Compare live rows only."""
+    k = x_int.shape[1]
+    p = w_packed.astype(jnp.int32) & 0xFF
+    lo = ((p & 0xF) ^ 8) - 8
+    hi = (((p >> 4) & 0xF) ^ 8) - 8
+    w_int = jnp.concatenate([lo, hi], axis=0).astype(jnp.float32)  # (K, N)
+    g = w_delta.shape[0]
+    w_fp = w_int * jnp.repeat(w_delta, k // g, axis=0)
+    return (x_int.astype(jnp.float32) @ w_fp) * x_delta
+
+
+def ragged_int4_matmul_auto(x_int, w_packed, x_delta, w_delta,
+                            n_tok) -> jnp.ndarray:
+    """Entry point for ``models.layers``: compiled on TPU, interpret
+    elsewhere."""
+    interpret = jax.default_backend() != "tpu"
+    return ragged_int4_matmul(x_int, w_packed, x_delta, w_delta, n_tok,
+                              interpret=interpret)

@@ -216,6 +216,14 @@ def init_attention(key, cfg: ModelConfig, qcfg: QuantConfig, param_dtype):
 _PAGED_PALLAS = os.environ.get(
     "REPRO_PAGED_PALLAS", "").lower() in ("1", "true", "yes")
 
+# Route ragged mixed-batch attention (the unified prefill+decode step) and
+# uniform multi-token paged chunks — spec-decode verify included — through
+# the Pallas ragged flash kernel (kernels/ragged_attention.py), plus the
+# fused ragged QKV GEMM on int4 carriers (kernels/ragged_matmul.py). Same
+# read-once convention as the flags above.
+_RAGGED_PALLAS = os.environ.get(
+    "REPRO_RAGGED_PALLAS", "").lower() in ("1", "true", "yes")
+
 
 def _gqa_scores_softmax_out(q, k, v, mask):
     """q: (B,S,KH,G,hd); k,v: (B,T,KH,hd); mask: broadcastable (B,1,1,S,T)."""
@@ -226,6 +234,128 @@ def _gqa_scores_softmax_out(q, k, v, mask):
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgst,btkh->bskgh", probs, v.astype(jnp.float32))
     return out
+
+
+def _ragged_qkv_proj(x, params, qcfg, ad, pcfg, n_tok, scope, rng_q, rng_v):
+    """Fused ragged QKV for the unified mixed-batch step: when all three
+    projections carry packed-int4 weights, quantize the flattened stream
+    once and run ONE pad-block-skipping GEMM (kernels/ragged_matmul.py) —
+    the same integer math as three ``apply_qlinear`` calls. Returns None to
+    fall back onto the per-projection path (non-int4 carriers)."""
+    from repro.core.int4 import Int4Weights
+    wts = [params[n]["w"] for n in ("wq", "wk", "wv")]
+    if not all(isinstance(w, Int4Weights) for w in wts):
+        return None
+    from repro.core import quant as Q
+    from repro.kernels.ragged_matmul import ragged_qkv_matmul
+    x_bits = 4 if qcfg.mode == "int4" else 8
+    x2d = x.reshape((-1, x.shape[-1]))
+    x_int, x_delta = Q.quantize(x2d, axis=-1, bits=x_bits)
+    ys = ragged_qkv_matmul(
+        x_int, x_delta, [w.w_packed for w in wts],
+        [w.w_delta for w in wts], n_tok,
+        interpret=jax.default_backend() != "tpu")
+    outs = []
+    for y, w in zip(ys, wts):
+        if w.bias is not None:
+            y = y + w.bias.astype(y.dtype)
+        outs.append(y.astype(x.dtype).reshape(x.shape[:-1] + (y.shape[-1],)))
+    q, k, v = outs
+    if ad.get("lora_q") is not None:
+        dropout = pcfg.lora_dropout if rng_q is not None else 0.0
+        q = q + P.apply_lora(x, ad["lora_q"], pcfg.lora_alpha,
+                             pcfg.lora_rank, dropout, rng_q)
+    if ad.get("lora_v") is not None:
+        dropout = pcfg.lora_dropout if rng_v is not None else 0.0
+        v = v + P.apply_lora(x, ad["lora_v"], pcfg.lora_alpha,
+                             pcfg.lora_rank, dropout, rng_v)
+    st = capture_absmax(x) if scope is not None and scope.capture else None
+    return q, k, v, st, st, st
+
+
+def _ragged_mixed_step(q, k, v, cache, positions, cfg, exact_kv_reads):
+    """Unified mixed-batch attention over a flattened ragged stream: rows
+    are located by ``row_start``/``row_len``/``row_ids`` (serving's unified
+    step packs prefill tails and decode slots into one batch), each row
+    attends to its pool prefix ``[0, cursor)`` plus its own causally-masked
+    span. Serves BOTH KV layouts — a contiguous slot buffer is a one-page
+    pool with an identity block table. Pad tokens (past ``n_tok``) scatter
+    out of bounds with ``mode="drop"`` and gather don't-care rows.
+
+    Per-row read-after-write fidelity matches the two-dispatch baseline on
+    int8 pools: prefill spans attend to themselves in fp straight from
+    registers, decode rows read their single token through the quantizer
+    round trip, and ``exact_kv_reads`` (spec verify) round-trips everything.
+
+    Returns (out (1, T, KH, G, hd) f32, new_cache)."""
+    from repro.serving.paged import kvquant as KVQ
+    rs, rl = cache["row_start"], cache["row_len"]            # (R,)
+    rid = cache["row_ids"]                                   # (T,)
+    cur = cache["pos"]                                       # (R,)
+    n_tok = cache["n_tok"]                                   # () int32
+    t_len = q.shape[1]
+    qs, ks, vs = q[0], k[0], v[0]                 # streams (T, ...)
+    tpos = positions[0] if positions.ndim == 2 else positions
+    valid = jnp.arange(t_len, dtype=jnp.int32) < n_tok
+    new_cache = dict(cache)
+    new_cache["pos"] = cur + rl
+    k_scale = v_scale = None
+    if "k_pool" in cache:
+        k_pool, v_pool = cache["k_pool"], cache["v_pool"]
+        bt = cache["block_tables"]                           # (R, P)
+        blk = k_pool.shape[1]
+        page = jnp.where(valid, bt[rid, tpos // blk], k_pool.shape[0])
+        off = tpos % blk
+        quantized = k_pool.dtype == jnp.int8
+        if quantized:
+            qk = KVQ.quantize_k(ks, cache["k_scale"])
+            qv, vsc = KVQ.quantize_v(vs)
+            k_pool = k_pool.at[page, off].set(qk, mode="drop")
+            v_pool = v_pool.at[page, off].set(qv, mode="drop")
+            new_cache["v_scale"] = cache["v_scale"].at[page, off].set(
+                vsc, mode="drop")
+            rt_k = KVQ.dequant_k(qk, cache["k_scale"])
+            rt_v = KVQ.dequant_v(qv, vsc)
+            if exact_kv_reads:
+                ks_eff, vs_eff = rt_k, rt_v
+            else:
+                rt = (rl[rid] == 1)[:, None, None]
+                ks_eff = jnp.where(rt, rt_k, ks)
+                vs_eff = jnp.where(rt, rt_v, vs)
+        else:
+            k_pool = k_pool.at[page, off].set(ks.astype(k_pool.dtype),
+                                              mode="drop")
+            v_pool = v_pool.at[page, off].set(vs.astype(v_pool.dtype),
+                                              mode="drop")
+            ks_eff, vs_eff = ks, vs
+        new_cache.update(k_pool=k_pool, v_pool=v_pool)
+        k_ctx, v_ctx, tables = k_pool, v_pool, bt
+        k_scale = cache.get("k_scale")
+        v_scale = new_cache.get("v_scale")
+    else:
+        buf_k, buf_v = cache["k"], cache["v"]      # (R, S, kh, hd) slots
+        n_rows = buf_k.shape[0]
+        slot = jnp.where(valid, rid, n_rows)
+        buf_k = buf_k.at[slot, tpos].set(ks.astype(buf_k.dtype),
+                                         mode="drop")
+        buf_v = buf_v.at[slot, tpos].set(vs.astype(buf_v.dtype),
+                                         mode="drop")
+        new_cache.update(k=buf_k, v=buf_v)
+        k_ctx, v_ctx = buf_k, buf_v
+        tables = jnp.arange(n_rows, dtype=jnp.int32)[:, None]
+        ks_eff, vs_eff = ks, vs
+    if _RAGGED_PALLAS and not cfg.sliding_window:
+        from repro.kernels.ragged_attention import ragged_attention_auto
+        out_rows = ragged_attention_auto(
+            qs, ks_eff, vs_eff, k_ctx, v_ctx, tables, rs, rl, cur,
+            k_scale, v_scale, max_row_len=t_len)
+    else:
+        from repro.kernels.ragged_attention import ragged_attention_ref
+        out_rows = ragged_attention_ref(
+            qs, ks_eff, vs_eff, k_ctx, v_ctx, tables, rs, rl, cur,
+            k_scale, v_scale, max_row_len=t_len)
+    local = jnp.clip(tpos - cur[rid], 0, t_len - 1)
+    return out_rows[rid, local][None], new_cache
 
 
 def attention(
@@ -255,8 +385,17 @@ def attention(
     if rng is not None:
         rng_q, rng_v = jax.random.split(rng)
 
-    q, st_q = apply_qlinear(x, params["wq"], qcfg, states.get("wq"),
-                            ad.get("lora_q"), pcfg, scope=scope, rng=rng_q)
+    fused_qkv = None
+    if (_RAGGED_PALLAS and cache is not None and kv_override is None
+            and cross_kv is None and "row_start" in cache):
+        fused_qkv = _ragged_qkv_proj(x, params, qcfg, ad, pcfg,
+                                     cache["n_tok"], scope, rng_q, rng_v)
+    if fused_qkv is not None:
+        q, k, v, st_q, st_k, st_v = fused_qkv
+    else:
+        q, st_q = apply_qlinear(x, params["wq"], qcfg, states.get("wq"),
+                                ad.get("lora_q"), pcfg, scope=scope,
+                                rng=rng_q)
     if cross_kv is not None:
         # precomputed cross-attention K/V (enc-dec decode path)
         k, v = cross_kv
@@ -268,10 +407,12 @@ def attention(
                                 use_kind="row", scope=scope)
         return y, None, {"wq": st_q, "wk": None, "wv": None, "wo": st_o}
     kv_in = kv_override if kv_override is not None else x
-    k, st_k = apply_qlinear(kv_in, params["wk"], qcfg, states.get("wk"),
-                            scope=scope)
-    v, st_v = apply_qlinear(kv_in, params["wv"], qcfg, states.get("wv"),
-                            ad.get("lora_v"), pcfg, scope=scope, rng=rng_v)
+    if fused_qkv is None:
+        k, st_k = apply_qlinear(kv_in, params["wk"], qcfg, states.get("wk"),
+                                scope=scope)
+        v, st_v = apply_qlinear(kv_in, params["wv"], qcfg, states.get("wv"),
+                                ad.get("lora_v"), pcfg, scope=scope,
+                                rng=rng_v)
 
     q = hint(q.reshape(bsz, s_len, kh, g, hd), "attn_q")
     k = hint(k.reshape(bsz, kv_in.shape[1], kh, hd), "attn_kv")
@@ -296,6 +437,20 @@ def attention(
         kv_stats = {"k": kv_abs(k), "v": kv_abs(v)}
 
     new_cache = None
+    if cache is not None and kv_override is None and "row_start" in cache:
+        # unified ragged mixed batch (serving's one-dispatch step): prefill
+        # tails and decode slots share this call; _ragged_mixed_step writes
+        # each row's span through its block table (or slot buffer) and
+        # attends pool-prefix + causal self span per row
+        out, new_cache = _ragged_mixed_step(q, k, v, cache, positions, cfg,
+                                            exact_kv_reads)
+        out = out.reshape(bsz, s_len, h * hd).astype(x.dtype)
+        y, st_o = apply_qlinear(out, params["wo"], qcfg, states.get("wo"),
+                                use_kind="row", scope=scope)
+        stats = {"wq": st_q, "wk": st_k, "wv": st_v, "wo": st_o}
+        if kv_stats is not None:
+            stats["kv"] = kv_stats
+        return y, new_cache, stats
     if cache is not None and kv_override is None and "k_pool" in cache:
         # paged (block-pool) path: each of the row's s_len tokens lands at
         # cache position pos+i, which the per-request block table maps to
@@ -334,6 +489,28 @@ def attention(
                 q[:, 0], k_pool, v_pool, bt, pos + 1,
                 new_cache.get("k_scale"), new_cache.get("v_scale"))
             out = out[:, None]                           # (B,1,KH,G,hd)
+        elif _RAGGED_PALLAS and not cfg.sliding_window:
+            # uniform (B, S) paged chunks — prefill groups, decode, and
+            # spec-decode's K+1-row verify batch — are ragged batches with
+            # equal spans: flatten and reuse the unified kernel. The
+            # effective self-stream reproduces the read-after-write rules
+            # below (fp for non-exact prefill, round trip otherwise).
+            from repro.kernels.ragged_attention import ragged_attention_auto
+            if quantized and not (s_len > 1 and not exact_kv_reads):
+                ks_eff = KVQ.dequant_k(qk, cache["k_scale"])
+                vs_eff = KVQ.dequant_v(qv, vsc)
+            else:
+                ks_eff, vs_eff = k, v
+            rs = jnp.arange(bsz, dtype=jnp.int32) * s_len
+            rl = jnp.full((bsz,), s_len, jnp.int32)
+
+            def flat(a):
+                return a.reshape((bsz * s_len,) + a.shape[2:])
+
+            out = ragged_attention_auto(
+                flat(q), flat(ks_eff), flat(vs_eff), k_pool, v_pool, bt,
+                rs, rl, pos, cache.get("k_scale"),
+                new_cache.get("v_scale"), max_row_len=s_len)
         else:
             kg, vg = k_pool[bt], v_pool[bt]              # (B,P,blk,kh,hd)
             if quantized:

@@ -90,6 +90,20 @@ class EngineConfig:
                      target's weight carrier so both passes read one
                      frozen tree. Required when spec_decode=True.
       spec_k         draft tokens per speculation cycle (>= 1).
+
+    Unified mixed-batch step (``train.steps.build_unified_step``):
+      unified_step   ONE ragged dispatch per engine iteration: admitted
+                     prefill tails and live decode slots flatten into a
+                     single packed token stream with per-row offset
+                     tables, so decode rows stop paying a full dispatch
+                     of pad tokens while prefills run. KV-pool families
+                     only (dense/moe/vlm); greedy output is
+                     token-identical to the two-dispatch path. Composes
+                     with both layouts, int8 KV, prefix sharing, and —
+                     prefill side only — decode_steps/spec_decode.
+                     ``prefill_chunk`` bounds each row's tokens per
+                     dispatch (default min(32, max_seq_len)); the stream
+                     is capped at max_slots * chunk tokens.
     """
 
     max_slots: int = 4
@@ -107,6 +121,7 @@ class EngineConfig:
     spec_decode: bool = False
     spec_backend: str = ""
     spec_k: int = 4
+    unified_step: bool = False
 
     def __post_init__(self):
         if self.max_slots < 1:
@@ -133,9 +148,10 @@ class EngineConfig:
         if self.kv_layout != "paged":
             if self.kv_dtype != "fp":
                 raise ValueError("kv_dtype='int8' needs kv_layout='paged'")
-            if self.prefill_chunk:
+            if self.prefill_chunk and not self.unified_step:
                 raise ValueError("chunked prefill (prefill_chunk > 0) needs "
-                                 "kv_layout='paged'")
+                                 "kv_layout='paged' or unified_step=True "
+                                 "(the unified step chunks both layouts)")
             if self.lazy_blocks:
                 raise ValueError("lazy_blocks needs kv_layout='paged'")
             if self.prefix_share:

@@ -80,6 +80,11 @@ def _jit_decode_slots(cfg):
 
 
 @functools.lru_cache(maxsize=64)
+def _jit_unified_step(cfg):
+    return jax.jit(S.build_unified_step(cfg))
+
+
+@functools.lru_cache(maxsize=64)
 def _jit_prefill_slot(cfg, max_seq_len: int):
     return jax.jit(S.build_prefill_slot(cfg, max_seq_len))
 
@@ -223,6 +228,37 @@ class Engine:
         self._step_fn = (_jit_paged_step(cfg) if self._paged is not None
                          else _jit_decode_slots(cfg))
         self._prefill_fn = _jit_prefill_slot(cfg, config.max_seq_len)
+        # unified mixed-batch step: ONE ragged dispatch per iteration over
+        # prefill tails + decode slots (train.steps.build_unified_step).
+        # Family-dependent validation lives here (EngineConfig cannot see
+        # the model): ragged rows are KV-cache rows, causal-global only,
+        # with no prepended virtual-prefix positions.
+        if config.unified_step:
+            if not isinstance(self._pool, (SlotPool, PagedPool)):
+                raise ValueError(
+                    f"unified_step batches ragged KV rows (families "
+                    f"dense/moe/vlm); family={cfg.family!r} decode state "
+                    "is not a KV pool")
+            if cfg.sliding_window:
+                raise ValueError(
+                    "unified_step needs global causal attention; "
+                    "sliding_window layers have no ragged kernel")
+            if self._n_prefix:
+                raise ValueError(
+                    "unified_step does not compose with prompt-PEFT "
+                    "virtual prefix tokens (ragged rows are token-stream "
+                    "positions only)")
+        self._unified_fn = (_jit_unified_step(cfg) if config.unified_step
+                            else None)
+        self._unified_chunk = (config.prefill_chunk
+                               or min(32, config.max_seq_len))
+        # contiguous-layout write cursors for the unified step: SlotPool
+        # keeps cursors on-device and admission normally splices them via
+        # write_prefill — unified admission skips that splice, so the
+        # engine tracks cursors host-side and overrides caches["pos"]
+        # (a freshly acquired slot would otherwise read its previous
+        # occupant's stale cursor)
+        self._cursors = [0] * config.max_slots
         # multi-step scheduled decode / self-speculative decoding
         # (serving.spec): both fold several logical decode steps into one
         # compiled dispatch; speculation additionally needs a KV pool whose
@@ -255,6 +291,7 @@ class Engine:
             scheduled_steps=config.decode_steps,
             spec_decode=config.spec_decode, spec_backend=config.spec_backend,
             spec_k=config.spec_k if config.spec_decode else 0,
+            unified_step=config.unified_step,
             block_size=self._paged.alloc.block_size if self._paged else 0,
             n_blocks=self._paged.alloc.n_blocks if self._paged else 0,
             contiguous_bytes_per_request=(
@@ -297,6 +334,11 @@ class Engine:
                 raise ValueError(
                     "input_embeds requests need kv_layout='contiguous' "
                     "(paged chunked admission feeds token chunks only)")
+            if self.config.unified_step:
+                raise ValueError(
+                    "input_embeds requests cannot ride the unified ragged "
+                    "step (prepended embeddings occupy cache positions "
+                    "outside the token stream)")
             embeds = np.asarray(req.input_embeds, np.float32)
             if embeds.ndim != 2 or embeds.shape[-1] != self.cfg.d_model:
                 raise ValueError(
@@ -356,6 +398,9 @@ class Engine:
         ``decode_steps``-long compiled window, or a draft+verify
         speculation cycle). Returns ``has_work``."""
         self._check_weights_version()
+        if self._unified_fn is not None:
+            self._step_unified()
+            return self.has_work
         if self._paged is not None:
             self._admit_paged()
             self._prefill_paged_chunks()
@@ -607,6 +652,7 @@ class Engine:
         self.stats.decode_steps += 1
         self.stats.decode_dispatches += 1
         self.stats.busy_slot_steps += len(active)
+        self.stats.decode_pad_tokens += self.max_slots - len(active)
 
         for i in active:
             self._pool.advance(i, 1)
@@ -743,6 +789,13 @@ class Engine:
                 "prefill", t0, hist="prefill_s")
             self.stats.prefill_batches += 1
             self.stats.prefill_chunks += len(rows)
+            # same-length grouping keeps the geometry exactly full (each
+            # row takes precisely clen tokens), so this counter stays 0 —
+            # the grouped path's cost is EXTRA DISPATCHES per distinct
+            # length, which the unified step's single ragged call removes
+            self.stats.prefill_pad_tokens += sum(
+                clen - min(clen, self._slots[s].remaining.size)
+                for s in rows)
             for r, slot in enumerate(rows):
                 st = self._slots[slot]
                 self._paged.advance(slot, sx)
@@ -816,10 +869,198 @@ class Engine:
         self.stats.decode_steps += 1
         self.stats.decode_dispatches += 1
         self.stats.busy_slot_steps += len(decoding)
+        self.stats.decode_pad_tokens += self.max_slots - len(decoding)
 
         for i in decoding:
             self._pool.advance(i, 1)
             self._emit_token(self._slots[i], i, int(toks[i]))
+
+    # ------------------------------------------------------------------
+    # unified mixed-batch step: ONE ragged dispatch per iteration
+    # ------------------------------------------------------------------
+    def _step_unified(self):
+        """One engine iteration under ``unified_step=True``: admit, then
+        flatten every runnable row — mid-prefill slots contribute their
+        next chunk, decoding slots their fed-back token — into ONE packed
+        ragged forward (``train.steps.build_unified_step``). Greedy output
+        is token-identical to the two-dispatch path: each request's tokens
+        depend only on its own prefix, and the ragged kernel reproduces
+        the per-row causal masking and int8 read-after-write rules of the
+        separate prefill/decode calls. With spec/multistep decode the
+        unified dispatch carries the PREFILL rows only and the compiled
+        decode window follows — its verify chunks route through the same
+        ragged kernel inside the model."""
+        if self._paged is not None:
+            self._admit_paged()
+        else:
+            self._admit_unified()
+        if self._drafter is not None or self._multistep_fn is not None:
+            self._unified_dispatch(include_decode=False)
+            self._decode_dispatch()
+        else:
+            self._unified_dispatch()
+        if self._paged is not None:
+            self._snapshot_pool_stats()
+
+    def _admit_unified(self):
+        """Contiguous-layout admission WITHOUT the eager whole-prompt
+        prefill: the slot row is reserved and the prompt parks in
+        ``remaining`` — the unified dispatch feeds it chunk by chunk
+        exactly like paged chunked admission."""
+        while self._waiting and self._pool.n_free:
+            st = self._waiting.popleft()
+            slot = self._pool.acquire(self._need_full(st))
+            if st.t_admit == 0.0:
+                st.t_admit = clock.now()
+                self._obs.observe("queue_s", st.t_admit - st.t_submit)
+                self._obs.async_instant("admit", st.request_id)
+            st.remaining = st.pending_tokens()
+            self._cursors[slot] = 0
+            self._slots[slot] = st
+
+    def _row_writable(self, slot: int, n: int) -> bool:
+        """Per-row backpressure for one unified dispatch: lazy tables
+        grow and COW-shared blocks in the write range get private copies,
+        exactly as the legacy paths do per phase — a row failing either
+        sits this dispatch out (row_len 0)."""
+        if self._paged is None:
+            return True
+        if self.lazy_blocks and not self._paged.ensure_capacity(slot, n):
+            self.stats.block_stalls += 1
+            return False
+        if not self._paged.prepare_write(slot, n):
+            self.stats.block_stalls += 1
+            return False
+        return True
+
+    def _advance_row(self, slot: int, n: int):
+        self._pool.advance(slot, n)
+        if self._paged is None:
+            self._cursors[slot] += n
+
+    def _unified_dispatch(self, include_decode: bool = True):
+        """Build and run one packed ragged batch. The stream is
+        token-budget-bounded at ``max_slots * chunk`` positions (chunk =
+        ``prefill_chunk`` or min(32, max_seq_len)) — a static shape, so
+        jit compiles the step ONCE per engine config regardless of the
+        request mix. Rows pack in slot order; row r of the offset tables
+        IS slot r of the gathered caches."""
+        b = self.max_slots
+        chunk = self._unified_chunk
+        prefill_rows: Dict[int, int] = {}
+        decode_rows: List[int] = []
+        stalled: List[int] = []
+        for i, st in enumerate(self._slots):
+            if st is None:
+                continue
+            if not st.decoding:
+                clen = min(chunk, st.remaining.size)
+                if self._row_writable(i, clen):
+                    prefill_rows[i] = clen
+                else:
+                    stalled.append(i)
+            elif include_decode:
+                if self._row_writable(i, 1):
+                    decode_rows.append(i)
+                else:
+                    stalled.append(i)
+        if not prefill_rows and not decode_rows:
+            if stalled and include_decode:
+                # nothing at all can move: free the least-progressed
+                # stream's blocks so the rest unwedge (legacy preemption)
+                self._preempt(min(stalled,
+                                  key=lambda i: self._paged.cursor(i)))
+            return
+        if (self._paged is not None and self._paged.needs_k_seed
+                and prefill_rows):
+            first = min(prefill_rows)
+            self._ensure_k_scales(self._slots[first].remaining)
+
+        decode_set = set(decode_rows)
+        t_cap = b * chunk
+        tokens = np.zeros((1, t_cap), np.int32)
+        positions = np.zeros((1, t_cap), np.int32)
+        row_start = np.zeros((b,), np.int32)
+        row_len = np.zeros((b,), np.int32)
+        row_ids = np.zeros((t_cap,), np.int32)
+        cursors = np.zeros((b,), np.int32)
+        live = [False] * b
+        off = 0
+        for i in range(b):
+            row_start[i] = off
+            n = prefill_rows.get(i, 1 if i in decode_set else 0)
+            if not n:
+                continue
+            st = self._slots[i]
+            cur = (self._paged.cursor(i) if self._paged is not None
+                   else self._cursors[i])
+            cursors[i] = cur
+            live[i] = True
+            row_len[i] = n
+            row_ids[off:off + n] = i
+            # every span writes at its cursor, so RoPE positions are
+            # cursor + local index — for a decode row that equals the
+            # legacy prompt_len + n_generated - 1 feedback position
+            positions[0, off:off + n] = cur + np.arange(n, dtype=np.int32)
+            if i in prefill_rows:
+                tokens[0, off:off + n] = st.remaining[:n]
+            else:
+                tokens[0, off] = st.last_token
+            off += n
+        n_tok = off
+
+        m = self._model
+        t0 = self._obs.phase_begin(
+            "unified", n_prefill=len(prefill_rows),
+            n_decode=len(decode_rows), n_tok=n_tok)
+        if self._paged is not None:
+            self.stats.fragmentation_sum += self._paged.fragmentation()
+            self.stats.fragmentation_samples += 1
+            caches = self._paged.gather_caches(list(range(b)), live=live)
+        else:
+            caches = dict(self._pool.live_assemble(live))
+            caches["pos"] = jnp.asarray(np.broadcast_to(
+                cursors, (self.cfg.n_layers, b)))
+        logits, new_caches = self._unified_fn(
+            m.frozen, self._adapters_no_prefix(), m.quant_state, caches,
+            jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(row_start), jnp.asarray(row_len),
+            jnp.asarray(row_ids), jnp.int32(n_tok))
+        self._pool.update_from(new_caches)
+        self.stats.unified_time_s += self._obs.phase_end(
+            "unified", t0, hist="unified_step_s")
+        self.stats.unified_dispatches += 1
+        self.stats.prefill_chunks += len(prefill_rows)
+        if decode_rows:
+            self.stats.decode_steps += 1
+            self.stats.decode_dispatches += 1
+            self.stats.busy_slot_steps += len(decode_rows)
+            # the legacy decode dispatch is max_slots token-rows wide with
+            # dead/mid-prefill slots riding as pads; the packed stream
+            # carries only the live ones
+            self.stats.pad_tokens_saved += b - len(decode_rows)
+        if prefill_rows and decode_rows:
+            self.stats.mixed_batches += 1
+
+        for i in range(b):
+            st = self._slots[i]
+            if i in prefill_rows:
+                n = prefill_rows[i]
+                self._advance_row(i, n)
+                st.remaining = st.remaining[n:]
+                if st.remaining.size == 0:
+                    st.remaining = None
+                    self.stats.prefills += 1
+                    if self.prefix_share and st.prefix_key is not None:
+                        self._paged.index_insert(i, st.prefix_key)
+                    tok = self._sample_one(logits[i:i + 1], st.req.sampling,
+                                           st.n_generated)
+                    self._emit_token(st, i, tok)
+            elif i in decode_set:
+                self._advance_row(i, 1)
+                tok = self._sample_one(logits[i:i + 1], st.req.sampling,
+                                       st.n_generated)
+                self._emit_token(st, i, tok)
 
     # ------------------------------------------------------------------
     # multi-step scheduled decode / speculative decoding (serving.spec)
@@ -885,6 +1126,7 @@ class Engine:
         self.stats.decode_steps += n
         self.stats.decode_dispatches += 1
         self.stats.busy_slot_steps += int(emits.sum())
+        self.stats.decode_pad_tokens += n * (self.max_slots - len(decoding))
 
         for i in decoding:
             st = self._slots[i]
@@ -964,6 +1206,8 @@ class Engine:
         self.stats.decode_steps += int(rows.max())
         self.stats.decode_dispatches += 2
         self.stats.busy_slot_steps += int(rows.sum())
+        self.stats.decode_pad_tokens += \
+            (k + 1) * (self.max_slots - len(decoding))
         self.stats.draft_tokens += k * len(decoding)
         self.stats.accepted_tokens += int((rows - 1).sum())
 

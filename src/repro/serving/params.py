@@ -163,6 +163,22 @@ class EngineStats:
     draft_tokens: int = 0                   # proposals the drafter made
     accepted_tokens: int = 0                # proposals verification kept
 
+    # dispatch-geometry padding: the LEGACY two-dispatch paths pay one
+    # full-width token row per slot on every decode call (dead slots ride
+    # as pads) and split prefill into same-length groups (pad-free, but
+    # one compiled call per distinct length). ``unified_step=True``
+    # replaces both with ONE ragged dispatch per iteration whose stream
+    # packs only live tokens — ``pad_tokens_saved`` counts the decode pad
+    # rows that packing removed, ``mixed_batches`` the dispatches that
+    # carried prefill AND decode rows together.
+    prefill_pad_tokens: int = 0             # legacy prefill geometry - real
+    decode_pad_tokens: int = 0              # legacy decode geometry - real
+    unified_step: bool = False
+    unified_dispatches: int = 0             # ragged mixed-batch calls issued
+    mixed_batches: int = 0                  # dispatches with both row kinds
+    pad_tokens_saved: int = 0               # decode pads packing removed
+    unified_time_s: float = 0.0
+
     # radix/COW prefix sharing (paged engines with ``prefix_share=True``)
     prefix_share: bool = False
     prefix_queries: int = 0                 # admissions that probed the index
@@ -236,7 +252,8 @@ class EngineStats:
 
     @property
     def tokens_per_s(self) -> float:
-        total = self.prefill_time_s + self.decode_time_s
+        total = (self.prefill_time_s + self.decode_time_s
+                 + self.unified_time_s)
         return self.tokens_generated / max(total, 1e-9)
 
     def as_dict(self) -> dict:
@@ -261,7 +278,17 @@ class EngineStats:
             "tokens_per_s": self.tokens_per_s,
             "kv_layout": self.kv_layout,
             "kv_dtype": self.kv_dtype,
+            "prefill_pad_tokens": self.prefill_pad_tokens,
+            "decode_pad_tokens": self.decode_pad_tokens,
         }
+        if self.unified_step:
+            out.update({
+                "unified_step": self.unified_step,
+                "unified_dispatches": self.unified_dispatches,
+                "mixed_batches": self.mixed_batches,
+                "pad_tokens_saved": self.pad_tokens_saved,
+                "unified_time_s": self.unified_time_s,
+            })
         # telemetry sections key off which pool FEATURES are active (a
         # block pool exists, the prefix index exists), not off layout
         # strings — a spelling drift in ``kv_layout`` can't silently drop

@@ -264,6 +264,43 @@ def build_paged_step(cfg: ModelConfig):
     return paged_step
 
 
+def build_unified_step(cfg: ModelConfig):
+    """unified_step(frozen, adapters, quant_state, caches, tokens,
+    positions, row_start, row_len, row_ids, n_tok) -> (per-row last-token
+    logits (R, vocab), new caches).
+
+    ONE dispatch for a MIXED batch: the engine flattens admitted prefill
+    tails and live decode slots into a ragged token stream ``tokens``
+    (1, T_cap) with absolute ``positions`` (1, T_cap); ``row_start`` /
+    ``row_len`` (R,) locate each row's span, ``row_ids`` (T_cap,) maps
+    stream tokens back to rows, and ``n_tok`` counts the live tokens (the
+    tail is padding the ragged kernels skip). The row tables broadcast over
+    the layer axis so the transformer's cache scan slices them per layer
+    alongside the block tables; ``models.layers`` picks the ragged branch
+    off the ``row_start`` cache key. The per-row sampled logits sit at each
+    row's LAST span position — dead rows (row_len == 0) gather garbage the
+    engine never samples."""
+    def unified_step(frozen, adapters, quant_state, caches, tokens,
+                     positions, row_start, row_len, row_ids, n_tok):
+        nl = cfg.n_layers
+
+        def per_layer(a):
+            return jnp.broadcast_to(a, (nl,) + a.shape)
+
+        merged = dict(caches)
+        merged.update(row_start=per_layer(row_start),
+                      row_len=per_layer(row_len),
+                      row_ids=per_layer(row_ids),
+                      n_tok=jnp.broadcast_to(n_tok, (nl,)))
+        out = M.forward(frozen, adapters, quant_state, tokens, cfg,
+                        caches=merged, positions=positions)
+        new_caches = {key: out.caches[key] for key in caches}
+        idx = jnp.maximum(row_start + row_len - 1, 0)
+        return jnp.take(out.logits[0], idx, axis=0), new_caches
+
+    return unified_step
+
+
 def build_decode_slots(cfg: ModelConfig):
     """decode_slots(frozen, adapters, quant_state, caches, tokens,
     positions, live=None) -> (logits (n_slots, vocab), new_caches) —

@@ -32,7 +32,7 @@ def test_rule_catalogue():
     rules = get_rules()
     assert [r.rule_id for r in rules] == [
         "RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006",
-        "RPR009", "RPR010", "RPR011",
+        "RPR007", "RPR009", "RPR010", "RPR011",
     ]
     assert all(r.severity in ("error", "warning") for r in rules)
     assert all(r.description for r in rules)
@@ -564,6 +564,101 @@ def test_rpr006_unregistered_backend():
     assert len(msgs) == 1 and "never registered" in msgs[0]
 
 
+# ------------------------------------------------------------------ RPR007
+
+
+BAD_AXIS_TYPO = """
+    from jax.sharding import PartitionSpec as P
+
+    SPEC = P("modle", None)
+    NESTED = P(None, ("data", "tensor"))
+"""
+
+GOOD_AXES = """
+    from jax.sharding import PartitionSpec as P
+
+    ROW = P("model", None)
+    BOTH = P("data", ("data", "model"))
+    POD = P("pod", None)
+    DYN = P(*(None,) * 3)
+
+    def spec_for(axis):
+        return P(axis, None)       # variable axis: out of lexical reach
+"""
+
+BAD_JIT_ARITY = """
+    import jax
+
+    def step(state, batch):
+        return state
+
+    jitted = jax.jit(step, in_shardings=(None,))
+"""
+
+GOOD_JIT_ARITY = """
+    import jax
+
+    def step(state, batch):
+        return state
+
+    jitted = jax.jit(step, in_shardings=(None, None))
+    partial_static = jax.jit(step, in_shardings=(None,), static_argnums=(1,))
+"""
+
+BAD_AXIS_NOQA = """
+    from jax.sharding import PartitionSpec as P
+
+    SPEC = P("replica", None)  # repro: noqa[RPR007] foreign-mesh interop
+"""
+
+
+def test_rpr007_axis_typo_flagged():
+    findings = run(BAD_AXIS_TYPO, "RPR007")
+    assert ids(findings) == ["RPR007", "RPR007"]
+    assert "'modle'" in findings[0].message
+    assert "'tensor'" in findings[1].message
+
+
+def test_rpr007_valid_axes_pass():
+    assert run(GOOD_AXES, "RPR007") == []
+
+
+def test_rpr007_jit_arity_mismatch():
+    findings = run(BAD_JIT_ARITY, "RPR007")
+    assert ids(findings) == ["RPR007"]
+    assert "2 positional" in findings[0].message
+
+
+def test_rpr007_jit_arity_ok_and_static_skip():
+    assert run(GOOD_JIT_ARITY, "RPR007") == []
+
+
+def test_rpr007_noqa_suppresses():
+    assert run(BAD_AXIS_NOQA, "RPR007") == []
+
+
+def test_rpr007_mesh_axes_harvested(tmp_path):
+    """The axis vocabulary comes from repro.launch.mesh when analyzed
+    together; names outside the harvested tuples are flagged even if
+    they belong to the fallback vocabulary."""
+    ldir = tmp_path / "src" / "repro" / "launch"
+    ldir.mkdir(parents=True)
+    (ldir / "mesh.py").write_text(textwrap.dedent("""
+        def make_mesh(multi_pod=False, axes=("x", "y")):
+            axes = ("pod", "x", "y") if multi_pod else axes
+            return axes
+    """))
+    (tmp_path / "user.py").write_text(textwrap.dedent("""
+        from jax.sharding import PartitionSpec as P
+
+        A = P("x", ("pod", "y"))
+        B = P("data", None)
+    """))
+    findings, _ = analyze_paths([str(tmp_path)], select=["RPR007"])
+    assert ids(findings) == ["RPR007"]
+    assert "'data'" in findings[0].message
+
+
 # ------------------------------------------------------------------ RPR009
 
 
@@ -913,7 +1008,7 @@ def test_cli_list_rules(capsys):
     assert cli_main(["--list-rules"]) == 0
     out = capsys.readouterr().out
     for rid in ("RPR001", "RPR002", "RPR003", "RPR004", "RPR005", "RPR006",
-                "RPR009", "RPR010", "RPR011"):
+                "RPR007", "RPR009", "RPR010", "RPR011"):
         assert rid in out
 
 

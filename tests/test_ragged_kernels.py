@@ -1,0 +1,152 @@
+"""Ragged kernels (kernels/ragged_attention.py, kernels/ragged_matmul.py):
+interpret-mode parity against the jnp oracles on random ragged geometries —
+mixed prefill/decode rows, len-1 decode rows, dead rows (empty tails), fp
+and int8 pools — plus cross-checks against flash_attention and the dense
+int4 GEMM."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+from repro.kernels.flash_attention import gqa_flash_attention
+from repro.kernels.int4_matmul import int4_matmul_fused
+from repro.kernels.ragged_attention import (
+    ragged_attention,
+    ragged_attention_ref,
+)
+from repro.kernels.ragged_matmul import (
+    ragged_int4_matmul,
+    ragged_int4_matmul_ref,
+    ragged_qkv_matmul,
+)
+
+KEY = jax.random.PRNGKey(7)
+KH, G, HD = 2, 2, 8
+PAGE = 8
+
+
+def _ragged_case(key, rows, pages, int8=False):
+    """rows: [(row_len, cursor), ...] -> full kernel input set. Every row
+    owns ``pages`` distinct pool pages; pool contents are random (positions
+    past each cursor are garbage the masking must ignore)."""
+    n_rows = len(rows)
+    row_len = jnp.asarray([r for r, _ in rows], jnp.int32)
+    cursor = jnp.asarray([c for _, c in rows], jnp.int32)
+    row_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(row_len)[:-1]])
+    total = int(row_len.sum())
+    n_pool = 1 + n_rows * pages                   # page 0 = trash
+    bt = 1 + np.arange(n_rows * pages, dtype=np.int32).reshape(n_rows, pages)
+
+    ks = jax.random.split(key, 6)
+    q = jax.random.normal(ks[0], (max(total, 1), KH, G, HD), jnp.float32)
+    k_self = jax.random.normal(ks[1], (max(total, 1), KH, HD), jnp.float32)
+    v_self = jax.random.normal(ks[2], (max(total, 1), KH, HD), jnp.float32)
+    kp = jax.random.normal(ks[3], (n_pool, PAGE, KH, HD), jnp.float32)
+    vp = jax.random.normal(ks[4], (n_pool, PAGE, KH, HD), jnp.float32)
+    k_scale = v_scale = None
+    if int8:
+        k_scale = jnp.abs(kp).max(axis=(0, 1)) / 127.0 + 1e-6    # (KH, HD)
+        kp = jnp.clip(jnp.round(kp / k_scale), -127, 127).astype(jnp.int8)
+        v_scale = jnp.abs(vp).max(axis=-1) / 127.0 + 1e-6
+        vp = jnp.clip(jnp.round(vp / v_scale[..., None]),
+                      -127, 127).astype(jnp.int8)
+    return (q, k_self, v_self, kp, vp, jnp.asarray(bt),
+            row_start, row_len, cursor, k_scale, v_scale)
+
+
+GEOMETRIES = [
+    # mixed prefill chunks + decode rows
+    [(4, 0), (1, 9), (6, 3), (1, 17)],
+    # all decode (what the old paged kernel served), incl. cursor=0 row
+    [(1, 0), (1, 5), (1, 31), (1, 1)],
+    # dead rows (empty tails) interleaved with live ones
+    [(0, 0), (5, 2), (0, 0), (1, 7), (0, 4)],
+    # lone full prefill row
+    [(8, 0)],
+]
+
+
+@pytest.mark.parametrize("rows", GEOMETRIES)
+@pytest.mark.parametrize("int8", [False, True])
+def test_ragged_attention_matches_ref(rows, int8):
+    args = _ragged_case(KEY, rows, pages=4, int8=int8)
+    bq = max(max(r for r, _ in rows), 1)
+    got = ragged_attention(*args, max_row_len=bq, interpret=True)
+    want = ragged_attention_ref(*args, max_row_len=bq)
+    row_start, row_len = args[6], args[7]
+    for r, (rl, _) in enumerate(rows):
+        np.testing.assert_allclose(got[r, :rl], want[r, :rl],
+                                   rtol=2e-4, atol=2e-5,
+                                   err_msg=f"row {r} of {rows}")
+
+
+def test_ragged_attention_matches_flash_on_fresh_row():
+    # a cursor=0 prefill row is plain causal attention over its own span:
+    # the ragged kernel must agree with the flash-attention kernel
+    s = 16
+    args = _ragged_case(KEY, [(s, 0)], pages=2)
+    q, k_self, v_self = args[0], args[1], args[2]
+    got = ragged_attention(*args, max_row_len=s, interpret=True)
+    want = gqa_flash_attention(q[None], k_self[None], v_self[None],
+                               causal=True, interpret=True)
+    np.testing.assert_allclose(got[0], want[0], rtol=2e-4, atol=2e-5)
+
+
+def test_ragged_attention_decode_row_reads_pool_prefix():
+    # a len-1 decode row with a live prefix must differ from the same row
+    # with the prefix masked off (cursor=0) — the pool pages are being read
+    args = list(_ragged_case(KEY, [(1, 12)], pages=4))
+    with_ctx = ragged_attention(*args, max_row_len=1, interpret=True)
+    args[8] = jnp.zeros_like(args[8])             # cursor -> 0
+    without = ragged_attention(*args, max_row_len=1, interpret=True)
+    assert not np.allclose(np.asarray(with_ctx[0, 0]),
+                           np.asarray(without[0, 0]))
+
+
+def _int4_case(key, t, k, n, group_size):
+    ks = jax.random.split(key, 2)
+    w = jax.random.normal(ks[0], (k, n), jnp.float32)
+    w_int, w_delta = quant.quantize_grouped(w, group_size, bits=4)
+    x = jax.random.normal(ks[1], (t, k), jnp.float32)
+    x_int, x_delta = quant.quantize(x, axis=-1, bits=8)
+    return x_int, quant.pack_int4(w_int), x_delta, w_delta
+
+
+def test_ragged_int4_matmul_matches_ref_and_skips_pad_blocks():
+    t, n_tok = 32, 20
+    x_int, wp, xd, wd = _int4_case(KEY, t, 32, 48, group_size=16)
+    got = ragged_int4_matmul(x_int, wp, xd, wd, jnp.int32(n_tok),
+                             block_t=8, interpret=True)
+    want = ragged_int4_matmul_ref(x_int, wp, xd, wd)
+    np.testing.assert_allclose(got[:n_tok], want[:n_tok],
+                               rtol=1e-5, atol=1e-6)
+    # token blocks entirely past n_tok never ran: exact zeros
+    np.testing.assert_array_equal(np.asarray(got[24:]), 0.0)
+
+
+def test_ragged_int4_matmul_full_stream_matches_dense_kernel():
+    x_int, wp, xd, wd = _int4_case(KEY, 16, 32, 32, group_size=0)
+    ragged = ragged_int4_matmul(x_int, wp, xd, wd, jnp.int32(16),
+                                interpret=True)
+    dense = int4_matmul_fused(x_int, wp, xd, wd, interpret=True)
+    np.testing.assert_allclose(ragged, dense, rtol=1e-6, atol=1e-7)
+
+
+def test_ragged_qkv_matmul_matches_per_projection_dense():
+    d, qd, kvd = 32, 32, 16
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (24, d), jnp.float32)
+    x_int, x_delta = quant.quantize(x, axis=-1, bits=8)
+    packed, deltas = [], []
+    for key, c_out in zip(ks[1:], (qd, kvd, kvd)):
+        w = jax.random.normal(key, (d, c_out), jnp.float32)
+        w_int, w_delta = quant.quantize_grouped(w, 16, bits=4)
+        packed.append(quant.pack_int4(w_int))
+        deltas.append(w_delta)
+    q, k, v = ragged_qkv_matmul(x_int, x_delta, packed, deltas,
+                                jnp.int32(24), interpret=True)
+    for got, wp, wd in zip((q, k, v), packed, deltas):
+        want = ragged_int4_matmul_ref(x_int, wp, x_delta, wd)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)

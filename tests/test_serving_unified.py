@@ -1,0 +1,203 @@
+"""Unified mixed-batch serving step (``EngineConfig(unified_step=True)``).
+
+ONE ragged dispatch per engine iteration flattens admitted prefill tails
+and live decode slots into a packed token stream (train.steps.
+build_unified_step -> models.layers._ragged_mixed_step). These tests pin
+the contract: greedy output token-identical to the legacy two-dispatch
+path on every KV layout (contiguous / paged / paged-int8 / paged-prefix),
+seeded sampling identical, composition with multi-step scheduled decode
+and self-speculative decoding, the pad-packing telemetry actually firing
+on mixed traffic, and the REPRO_RAGGED_PALLAS kernel route (ragged flash
+attention + fused int4 QKV) producing the same stream end to end.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.peft import PEFTConfig
+from repro.data.pipeline import DataConfig, calibration_batches
+from repro.models import layers as L
+from repro.models.config import ModelConfig, QuantConfig
+from repro.serving import Engine, GenerationRequest
+from repro.serving.config import EngineConfig
+from repro.serving.params import SamplingParams
+
+VOCAB = 128
+MAX_NEW = 6
+SEQ = 48
+
+
+def _tiny_cfg(**over):
+    base = dict(
+        name="unified-test", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=VOCAB, head_dim=16,
+        quant=QuantConfig(mode="fp32"),
+        peft=PEFTConfig(method="lora", lora_rank=4))
+    base.update(over)
+    return ModelConfig(**base)
+
+
+def _prepare(mode="quaff", **over):
+    model = api.prepare(_tiny_cfg(**over))
+    model.calibrate(calibration_batches(
+        DataConfig(vocab_size=VOCAB, seq_len=8, batch_size=4), 2))
+    model.convert(mode)
+    return model
+
+
+@pytest.fixture(scope="module")
+def quaff_model():
+    return _prepare("quaff")
+
+
+@pytest.fixture(scope="module")
+def prompts():
+    # staggered lengths, more requests than slots: admission happens
+    # mid-decode, so unified dispatches genuinely mix both row kinds
+    rng = np.random.default_rng(7)
+    return [rng.integers(1, VOCAB, size=n).tolist() for n in (9, 5, 12, 7)]
+
+
+LAYOUTS = {
+    "contiguous": dict(),
+    "paged": dict(kv_layout="paged", block_size=4, prefill_chunk=3),
+    "paged-int8": dict(kv_layout="paged", kv_dtype="int8", block_size=4,
+                       prefill_chunk=3),
+    "paged-prefix": dict(kv_layout="paged", block_size=4, prefill_chunk=4,
+                         prefix_share=True),
+}
+
+
+def _run(model, prompts, sampling=None, **knobs):
+    eng = Engine(model, EngineConfig(max_slots=2, max_seq_len=SEQ, **knobs))
+    # staggered budgets desync completions, so slots free (and refill with
+    # fresh prefills) while their neighbours are still decoding
+    outs = eng.run([
+        GenerationRequest(p, max_new_tokens=MAX_NEW + i,
+                          sampling=sampling or SamplingParams())
+        for i, p in enumerate(prompts)])
+    return [o.token_ids for o in outs], eng.stats
+
+
+# ---------------------------------------------------------------------------
+# greedy token identity vs the two-dispatch baseline, every layout
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("layout", sorted(LAYOUTS))
+def test_unified_greedy_identity(quaff_model, prompts, layout):
+    knobs = LAYOUTS[layout]
+    work = prompts
+    if layout == "paged-prefix":
+        shared = list(range(1, 9))
+        work = [shared + p for p in prompts]
+    base, base_stats = _run(quaff_model, work, **knobs)
+    got, stats = _run(quaff_model, work, unified_step=True, **knobs)
+    assert got == base
+    assert stats.unified_dispatches > 0
+    assert stats.mixed_batches > 0
+    # packing removed the legacy decode pads the baseline actually paid
+    assert stats.pad_tokens_saved > 0
+    assert base_stats.decode_pad_tokens > 0
+    assert stats.requests_completed == len(work)
+
+
+def test_unified_seeded_sampling_identity(quaff_model, prompts):
+    sp = SamplingParams(temperature=0.8, top_k=16, seed=11)
+    base, _ = _run(quaff_model, prompts, sampling=sp, kv_layout="paged",
+                   block_size=4, prefill_chunk=3)
+    got, _ = _run(quaff_model, prompts, sampling=sp, kv_layout="paged",
+                  block_size=4, prefill_chunk=3, unified_step=True)
+    assert got == base
+
+
+# ---------------------------------------------------------------------------
+# composition: multi-step windows and self-speculative decode keep their
+# own compiled decode dispatch; the unified call carries the prefill rows
+# (and spec verify chunks route through the same ragged kernel in-model)
+# ---------------------------------------------------------------------------
+def test_unified_composes_with_multistep(quaff_model, prompts):
+    base, _ = _run(quaff_model, prompts, kv_layout="paged", block_size=4,
+                   prefill_chunk=3)
+    got, stats = _run(quaff_model, prompts, kv_layout="paged", block_size=4,
+                      prefill_chunk=3, decode_steps=3, unified_step=True)
+    assert got == base
+    assert stats.unified_dispatches > 0
+
+
+def test_unified_composes_with_spec_decode(quaff_model, prompts):
+    base, _ = _run(quaff_model, prompts, kv_layout="paged", block_size=4,
+                   prefill_chunk=3)
+    got, stats = _run(quaff_model, prompts, kv_layout="paged", block_size=4,
+                      prefill_chunk=3, spec_decode=True,
+                      spec_backend="quaff@8", spec_k=2, unified_step=True)
+    assert got == base
+    assert stats.draft_tokens > 0
+
+
+# ---------------------------------------------------------------------------
+# REPRO_RAGGED_PALLAS route: the interpret-mode Pallas ragged kernel (and
+# the fused int4 QKV GEMM) must reproduce the stream end to end
+# ---------------------------------------------------------------------------
+def test_unified_ragged_pallas_route(quaff_model, prompts, monkeypatch):
+    base, _ = _run(quaff_model, prompts, kv_layout="paged", block_size=4,
+                   prefill_chunk=3)
+    monkeypatch.setattr(L, "_RAGGED_PALLAS", True)
+    got, _ = _run(quaff_model, prompts, kv_layout="paged", block_size=4,
+                  prefill_chunk=3, unified_step=True)
+    assert got == base
+
+
+def test_unified_fused_int4_qkv_route(prompts, monkeypatch):
+    model = _prepare("int4_w4a8")
+    base, _ = _run(model, prompts, kv_layout="paged", block_size=4,
+                   prefill_chunk=3)
+    monkeypatch.setattr(L, "_RAGGED_PALLAS", True)
+    got, _ = _run(model, prompts, kv_layout="paged", block_size=4,
+                  prefill_chunk=3, unified_step=True)
+    assert got == base
+
+
+# ---------------------------------------------------------------------------
+# validation and telemetry plumbing
+# ---------------------------------------------------------------------------
+def test_unified_rejects_non_kv_and_sliding_window(quaff_model):
+    sw_model = api.prepare(_tiny_cfg(n_layers=4, sliding_window=4,
+                                     global_every=2))
+    with pytest.raises(ValueError, match="sliding_window"):
+        Engine(sw_model, EngineConfig(max_slots=2, max_seq_len=SEQ,
+                                      unified_step=True))
+    from repro.configs import reduced_family_demo
+    ssm_model = api.prepare(dataclasses.replace(
+        reduced_family_demo("ssm"), quant=QuantConfig(mode="fp32")))
+    with pytest.raises(ValueError, match="unified_step"):
+        Engine(ssm_model, EngineConfig(max_slots=2, max_seq_len=SEQ,
+                                       unified_step=True))
+
+
+def test_unified_contiguous_chunking_knob():
+    # prefill_chunk on the contiguous layout is only meaningful under the
+    # unified step (legacy contiguous admission prefills whole prompts)
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        EngineConfig(prefill_chunk=4)
+    cfg = EngineConfig(prefill_chunk=4, unified_step=True)
+    assert cfg.prefill_chunk == 4
+
+
+def test_unified_stats_sections(quaff_model, prompts):
+    _, stats = _run(quaff_model, prompts, kv_layout="paged", block_size=4,
+                    prefill_chunk=3, unified_step=True)
+    d = stats.as_dict()
+    assert d["unified_step"] is True
+    assert d["unified_dispatches"] == stats.unified_dispatches
+    assert d["pad_tokens_saved"] == stats.pad_tokens_saved
+    assert d["mixed_batches"] == stats.mixed_batches
+    assert stats.unified_time_s > 0
+    assert stats.tokens_per_s > 0
+    # legacy runs expose the geometry padding the unified step removes
+    _, legacy = _run(quaff_model, prompts, kv_layout="paged", block_size=4,
+                     prefill_chunk=3)
+    ld = legacy.as_dict()
+    assert ld["decode_pad_tokens"] > 0
+    assert ld["prefill_pad_tokens"] == 0     # same-length grouping is exact
+    assert "unified_dispatches" not in ld
